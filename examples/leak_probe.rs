@@ -1,0 +1,25 @@
+use iiot_fl::runtime::Engine;
+fn rss_mb() -> f64 {
+    let s = std::fs::read_to_string("/proc/self/statm").unwrap();
+    let pages: f64 = s.split_whitespace().nth(1).unwrap().parse().unwrap();
+    pages * 4096.0 / 1e6
+}
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::load(std::path::Path::new("artifacts"), "mlp")?;
+    let meta = engine.meta.clone();
+    let x = vec![0.1f32; meta.train_batch * meta.sample_dim()];
+    let y: Vec<i32> = (0..meta.train_batch as i32).map(|i| i % 10).collect();
+    let mut p = engine.init_params()?;
+    println!("start rss = {:.0} MB", rss_mb());
+    for i in 0..300 {
+        let (np, _) = engine.train_step(&p, &x, &y, 0.01)?;
+        p = np;
+        if i % 100 == 99 { println!("after {} steps rss = {:.0} MB", i+1, rss_mb()); }
+    }
+    // also probe eval + grad paths
+    let xe = vec![0.1f32; meta.eval_batch * meta.sample_dim()];
+    let ye: Vec<i32> = (0..meta.eval_batch as i32).map(|i| i % 10).collect();
+    for i in 0..100 { engine.eval_full(&p, &xe, &ye)?; if i%50==49 { println!("after {} eval_full rss = {:.0} MB", i+1, rss_mb()); } }
+    for i in 0..100 { engine.grad(&p, &x, &y)?; if i%50==49 { println!("after {} grad rss = {:.0} MB", i+1, rss_mb()); } }
+    Ok(())
+}

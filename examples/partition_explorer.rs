@@ -1,0 +1,83 @@
+//! Partition-point explorer: Table II applied to the paper-scale VGG-11.
+//!
+//! For a representative device/gateway pair, sweeps the DNN partition point
+//! l ∈ 0..=L and prints the per-layer cost model outputs the DDSRA
+//! scheduler optimises over: device/gateway training time, energies and
+//! memory footprints (Eq. 1–5). Shows why the optimum moves with the
+//! device's CPU frequency and harvested energy.
+//!
+//! Run: `cargo run --release --example partition_explorer [--cost-model vgg11]`
+
+use iiot_fl::cli::Args;
+use iiot_fl::config::SimConfig;
+use iiot_fl::dnn::models;
+use iiot_fl::energy;
+use iiot_fl::metrics::print_table;
+use iiot_fl::rng::Rng;
+use iiot_fl::topo::Topology;
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv)?;
+    let cfg = SimConfig::default();
+    let name = args.get_or("cost-model", "vgg11");
+    let model = models::by_name(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown cost model {name:?}"))?;
+    let topo = Topology::generate(&cfg, &mut Rng::new(cfg.seed));
+    let dev = &topo.devices[0];
+    let gw = &topo.gateways[dev.gateway];
+    let k = cfg.local_iters;
+    let f_share = gw.freq_max / gw.members.len() as f64;
+
+    println!(
+        "model {}: L = {} layers, {} params, gamma = {:.0} Mbit",
+        model.name,
+        model.depth(),
+        model.params,
+        model.gamma_bits() / 1e6
+    );
+    println!(
+        "device 0: f = {:.2} GHz, batch = {}, mem = {:.1} GB | gateway share f = {:.2} GHz",
+        dev.freq / 1e9,
+        dev.train_batch,
+        dev.mem / 1e9,
+        f_share / 1e9
+    );
+
+    let mut rows = Vec::new();
+    let mut best = (0usize, f64::INFINITY);
+    for l in 0..=model.depth() {
+        let t_dev = energy::device_train_time(dev, &model, l, k);
+        let t_gw = energy::gateway_train_time(gw, dev, &model, l, k, f_share);
+        let e_dev = energy::device_train_energy(dev, &model, l, k);
+        let e_gw = energy::gateway_train_energy(gw, dev, &model, l, k, f_share);
+        let m_dev = model.bottom_mem(l, dev.train_batch as u64);
+        let m_gw = model.top_mem(l, dev.train_batch as u64);
+        let total = t_dev + t_gw;
+        let dev_ok = m_dev <= dev.mem && e_dev <= dev.energy_max;
+        if dev_ok && total < best.1 {
+            best = (l, total);
+        }
+        rows.push(vec![
+            l.to_string(),
+            format!("{t_dev:.2}"),
+            format!("{t_gw:.2}"),
+            format!("{total:.2}"),
+            format!("{e_dev:.2}"),
+            format!("{e_gw:.2}"),
+            format!("{:.0}", m_dev / 1e6),
+            format!("{:.0}", m_gw / 1e6),
+            if dev_ok { "yes".into() } else { "NO".into() },
+        ]);
+    }
+    print_table(
+        &format!("partition sweep (K = {k} local iterations)"),
+        &["l", "t_dev(s)", "t_gw(s)", "total(s)", "e_dev(J)", "e_gw(J)", "memD(MB)", "memG(MB)", "dev-feasible"],
+        &rows,
+    );
+    println!(
+        "\noptimal feasible partition for this pair: l = {} ({:.2}s training / round)",
+        best.0, best.1
+    );
+    Ok(())
+}

@@ -1,0 +1,91 @@
+//! End-to-end validation of the paper's DNN-partition mechanism (§II-B3):
+//! the composed device/gateway step
+//!
+//!   bottom_fwd (device) → top_step (gateway) → bottom_bwd (device)
+//!
+//! executed through three separate AOT artifacts must produce the SAME
+//! updated parameters and loss as the fused train-step artifact. This is
+//! the contract that lets the orchestrator run the fused step while the
+//! cost model simulates the split placement (DESIGN.md
+//! §Scheduling-vs-numerics contract).
+//!
+//! Run: `make artifacts && cargo run --release --example partitioned_step`
+
+use std::path::Path;
+
+use anyhow::Result;
+use iiot_fl::rng::Rng;
+use iiot_fl::runtime::engine::{lit_f32, lit_i32, run_tuple};
+use iiot_fl::runtime::Engine;
+
+// Mirrors python/compile/model.py CNN_BOTTOM_PARAMS / CNN_CUT_ACT_SHAPE.
+const BOTTOM_PARAMS: usize = 4;
+const ACT_SHAPE: [usize; 4] = [64, 8, 8, 32];
+
+fn main() -> Result<()> {
+    let engine = Engine::load(Path::new("artifacts"), "cnn")?;
+    let bottom_fwd = engine.compile_extra("cnn_bottom_fwd")?;
+    let top_step = engine.compile_extra("cnn_top_step")?;
+    let bottom_bwd = engine.compile_extra("cnn_bottom_bwd")?;
+
+    // Random batch.
+    let meta = &engine.meta;
+    let mut rng = Rng::new(7);
+    let xs: Vec<f32> = (0..meta.train_batch * meta.sample_dim())
+        .map(|_| rng.normal() as f32)
+        .collect();
+    let ys: Vec<i32> = (0..meta.train_batch).map(|_| rng.below(10) as i32).collect();
+    let lr = 0.01f32;
+
+    let params = engine.init_params()?;
+    let (fused, fused_loss) = engine.train_step(&params, &xs, &ys, lr)?;
+
+    // --- partitioned execution --------------------------------------
+    let lit_params = |range: std::ops::Range<usize>| -> Result<Vec<xla::Literal>> {
+        range
+            .map(|i| lit_f32(&params[i], &meta.param_shapes[i]))
+            .collect()
+    };
+    // Device: bottom forward.
+    let mut args = lit_params(0..BOTTOM_PARAMS)?;
+    args.push(lit_f32(&xs, &meta.input_train)?);
+    let act = run_tuple(&bottom_fwd, &args)?.remove(0);
+
+    // Gateway: top training step, returns (top'..., d_act, loss).
+    let mut args = lit_params(BOTTOM_PARAMS..params.len())?;
+    args.push(act);
+    args.push(lit_i32(&ys, meta.train_batch)?);
+    args.push(xla::Literal::scalar(lr));
+    let mut top_out = run_tuple(&top_step, &args)?;
+    let loss_lit = top_out.pop().unwrap();
+    let d_act = top_out.pop().unwrap();
+    let part_loss = loss_lit.get_first_element::<f32>()?;
+    let new_top: Vec<Vec<f32>> =
+        top_out.iter().map(|l| l.to_vec::<f32>()).collect::<xla::Result<_>>()?;
+
+    // Device: bottom backward with the gateway's error term.
+    let mut args = lit_params(0..BOTTOM_PARAMS)?;
+    args.push(lit_f32(&xs, &meta.input_train)?);
+    args.push(d_act);
+    args.push(xla::Literal::scalar(lr));
+    let bottom_out = run_tuple(&bottom_bwd, &args)?;
+    let new_bottom: Vec<Vec<f32>> =
+        bottom_out.iter().map(|l| l.to_vec::<f32>()).collect::<xla::Result<_>>()?;
+
+    // --- compare ------------------------------------------------------
+    let partitioned: Vec<Vec<f32>> = new_bottom.into_iter().chain(new_top).collect();
+    let mut max_diff = 0.0f32;
+    for (a, b) in partitioned.iter().zip(&fused) {
+        for (&x, &y) in a.iter().zip(b) {
+            max_diff = max_diff.max((x - y).abs());
+        }
+    }
+    println!("activation shape at cut: {ACT_SHAPE:?}");
+    println!("fused loss       = {fused_loss:.6}");
+    println!("partitioned loss = {part_loss:.6}");
+    println!("max |param diff| = {max_diff:.3e}");
+    anyhow::ensure!((fused_loss - part_loss).abs() < 1e-5, "loss mismatch");
+    anyhow::ensure!(max_diff < 1e-5, "parameter mismatch {max_diff}");
+    println!("OK: device/gateway partitioned step == fused step");
+    Ok(())
+}

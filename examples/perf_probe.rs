@@ -1,0 +1,86 @@
+//! §Perf measurement probe: times every engine entry point on the request
+//! path, including the fused-K local-training artifact vs K single steps.
+//!
+//! Run: `make artifacts && cargo run --release --example perf_probe`
+
+use std::time::Instant;
+
+use iiot_fl::rng::Rng;
+use iiot_fl::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::load(std::path::Path::new("artifacts"), "mlp")?;
+    let meta = engine.meta.clone();
+    let mut rng = Rng::new(1);
+    let dim = meta.sample_dim();
+    let x: Vec<f32> = (0..meta.train_batch * dim).map(|_| rng.normal() as f32).collect();
+    let y: Vec<i32> = (0..meta.train_batch).map(|_| rng.below(10) as i32).collect();
+    let mut p = engine.init_params()?;
+
+    for _ in 0..5 {
+        let (np, _) = engine.train_step(&p, &x, &y, 0.01)?;
+        p = np;
+    }
+    let n = 100;
+    let t0 = Instant::now();
+    for _ in 0..n {
+        let (np, _) = engine.train_step(&p, &x, &y, 0.01)?;
+        p = np;
+    }
+    let single = t0.elapsed().as_secs_f64() / n as f64 * 1e3;
+    println!("train_step (1 step):            {single:.2} ms");
+
+    if let Some(k) = engine.fused_k() {
+        let xs: Vec<f32> = (0..k * meta.train_batch * dim).map(|_| rng.normal() as f32).collect();
+        let ys: Vec<i32> = (0..k * meta.train_batch).map(|_| rng.below(10) as i32).collect();
+        for _ in 0..3 {
+            engine.train_k_steps(&p, &xs, &ys, 0.01)?;
+        }
+        let t0 = Instant::now();
+        let m = 30;
+        for _ in 0..m {
+            let (np, _) = engine.train_k_steps(&p, &xs, &ys, 0.01)?;
+            p = np;
+        }
+        let fused = t0.elapsed().as_secs_f64() / m as f64 * 1e3;
+        println!(
+            "local training K={k}:            fused {fused:.2} ms vs {k}x single {:.2} ms  ({:.2}x)",
+            single * k as f64,
+            single * k as f64 / fused
+        );
+    } else {
+        println!("(fused train_k artifact not built — run `make artifacts`)");
+    }
+
+    let xe: Vec<f32> = (0..meta.eval_batch * dim).map(|_| rng.normal() as f32).collect();
+    let ye: Vec<i32> = (0..meta.eval_batch).map(|_| rng.below(10) as i32).collect();
+    for _ in 0..3 {
+        engine.eval_batch(&p, &xe, &ye)?;
+    }
+    let t0 = Instant::now();
+    for _ in 0..30 {
+        engine.eval_batch(&p, &xe, &ye)?;
+    }
+    println!("eval_batch (literal args):      {:.2} ms", t0.elapsed().as_secs_f64() / 30.0 * 1e3);
+
+    // eval_full reuses device-resident parameter buffers across chunks.
+    let chunks = 8;
+    let xf: Vec<f32> = (0..chunks * meta.eval_batch * dim).map(|_| rng.normal() as f32).collect();
+    let yf: Vec<i32> = (0..chunks * meta.eval_batch).map(|_| rng.below(10) as i32).collect();
+    engine.eval_full(&p, &xf, &yf)?;
+    let t0 = Instant::now();
+    for _ in 0..10 {
+        engine.eval_full(&p, &xf, &yf)?;
+    }
+    println!(
+        "eval_full ({chunks} chunks, buffered): {:.2} ms/chunk",
+        t0.elapsed().as_secs_f64() / 10.0 / chunks as f64 * 1e3
+    );
+
+    let t0 = Instant::now();
+    for _ in 0..30 {
+        engine.grad(&p, &x, &y)?;
+    }
+    println!("grad:                           {:.2} ms", t0.elapsed().as_secs_f64() / 30.0 * 1e3);
+    Ok(())
+}

@@ -1,0 +1,127 @@
+"""AOT export: lower every L2 entry point to HLO *text* artifacts.
+
+Run once by ``make artifacts``; Python is never on the request path. The
+rust runtime (rust/src/runtime) loads these with
+``HloModuleProto::from_text_file`` and executes them on the PJRT CPU client.
+
+HLO text — NOT ``lowered.compile()`` or serialized protos — is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit instruction
+ids which xla_extension 0.5.1 (the version behind the published ``xla``
+crate) rejects; the text parser reassigns ids and round-trips cleanly.
+
+Usage: cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# K baked into the fused local-training artifact (= the paper's K = 5).
+TRAIN_K = 5
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _param_specs(preset: str):
+    return [_spec(p.shape) for p in model.init_params(preset)]
+
+
+def _write(out_dir: str, name: str, lowered) -> None:
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text) / 1e6:.2f} MB)")
+
+
+def export_preset(preset: str, out_dir: str) -> None:
+    print(f"[aot] preset {preset}")
+    params = _param_specs(preset)
+    xt = _spec(model.input_shape(preset, model.TRAIN_BATCH))
+    xe = _spec(model.input_shape(preset, model.EVAL_BATCH))
+    yt = _spec((model.TRAIN_BATCH,), jnp.int32)
+    ye = _spec((model.EVAL_BATCH,), jnp.int32)
+    lr = _spec((), jnp.float32)
+
+    _write(out_dir, f"{preset}_init",
+           jax.jit(lambda: tuple(model.init_params(preset))).lower())
+    _write(out_dir, f"{preset}_train_step",
+           jax.jit(model.train_step(preset)).lower(params, xt, yt, lr))
+    _write(out_dir, f"{preset}_eval",
+           jax.jit(model.eval_batch(preset)).lower(params, xe, ye))
+    _write(out_dir, f"{preset}_grad",
+           jax.jit(model.grad_flat(preset)).lower(params, xt, yt))
+    # Fused K-step local-training artifact (§Perf, L2).
+    k = TRAIN_K
+    xk = _spec((k,) + model.input_shape(preset, model.TRAIN_BATCH))
+    yk = _spec((k, model.TRAIN_BATCH), jnp.int32)
+    _write(out_dir, f"{preset}_train_k{k}",
+           jax.jit(model.train_k_steps(preset, k)).lower(params, xk, yk, lr))
+
+    # Metadata consumed by rust/src/runtime/meta.rs (line-oriented; the rust
+    # side has no JSON dependency offline).
+    meta = os.path.join(out_dir, f"{preset}.meta")
+    with open(meta, "w") as f:
+        f.write(f"preset={preset}\n")
+        f.write(f"train_batch={model.TRAIN_BATCH}\n")
+        f.write(f"eval_batch={model.EVAL_BATCH}\n")
+        f.write(f"num_classes={model.NUM_CLASSES}\n")
+        f.write(f"input_train={'x'.join(map(str, xt.shape))}\n")
+        f.write(f"input_eval={'x'.join(map(str, xe.shape))}\n")
+        f.write(f"param_total={model.param_count(preset)}\n")
+        f.write(f"train_k={TRAIN_K}\n")
+        for p in params:
+            f.write(f"param={'x'.join(map(str, p.shape)) or '1'}\n")
+    print(f"  wrote {meta}")
+
+
+def export_partitioned(out_dir: str) -> None:
+    """The paper's DNN-partition mechanism as three separate artifacts."""
+    print("[aot] cnn partitioned step (cut at pool2)")
+    params = _param_specs("cnn")
+    nb = model.CNN_BOTTOM_PARAMS
+    bottom, top = params[:nb], params[nb:]
+    x = _spec(model.input_shape("cnn", model.TRAIN_BATCH))
+    y = _spec((model.TRAIN_BATCH,), jnp.int32)
+    act = _spec(model.CNN_CUT_ACT_SHAPE)
+    lr = _spec((), jnp.float32)
+
+    _write(out_dir, "cnn_bottom_fwd", jax.jit(model.bottom_fwd).lower(bottom, x))
+    _write(out_dir, "cnn_top_step", jax.jit(model.top_step).lower(top, act, y, lr))
+    _write(out_dir, "cnn_bottom_bwd",
+           jax.jit(model.bottom_bwd).lower(bottom, x, act, lr))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--presets", default="mlp,cnn")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    presets = [p for p in args.presets.split(",") if p]
+    for preset in presets:
+        export_preset(preset, args.out_dir)
+    if "cnn" in presets:
+        export_partitioned(args.out_dir)
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    main()

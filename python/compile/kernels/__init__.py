@@ -1,0 +1,3 @@
+# L1: Pallas kernels for the paper's compute hot-spot (GEMM after im2col).
+from .matmul import matmul, matmul_pallas, vmem_footprint_bytes, mxu_utilization_estimate  # noqa: F401
+from .conv import conv2d_same, im2col  # noqa: F401

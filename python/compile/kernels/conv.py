@@ -1,0 +1,40 @@
+"""Conv2D (SAME, stride 1) via im2col + the L1 Pallas matmul kernel.
+
+The paper's Table II counts convolution FLOPs as 2*B*Ci*Hf*Wf*Co*Ho*Wo for
+forward and gradient calculation — exactly the GEMM FLOPs of the im2col
+formulation used here, so the executable model and the scheduler's cost
+model (rust/src/dnn/cost.rs) count the same work.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .matmul import matmul
+
+
+def im2col(x: jax.Array, kh: int, kw: int) -> jax.Array:
+    """NHWC, SAME padding, stride 1 -> [B, H, W, kh*kw*C] patches.
+
+    Feature ordering is (di, dj, c) with c fastest, matching
+    ``w.reshape(kh*kw*cin, cout)`` for HWIO weights.
+    """
+    b, h, w, c = x.shape
+    ph, pw = kh // 2, kw // 2
+    xp = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
+    cols = [
+        xp[:, i : i + h, j : j + w, :] for i in range(kh) for j in range(kw)
+    ]
+    return jnp.concatenate(cols, axis=-1)
+
+
+def conv2d_same(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: f32[B,H,W,Cin], w: f32[Kh,Kw,Cin,Cout] -> f32[B,H,W,Cout]."""
+    b, h, wd, cin = x.shape
+    kh, kw, cin2, cout = w.shape
+    assert cin == cin2, (x.shape, w.shape)
+    patches = im2col(x, kh, kw).reshape(b * h * wd, kh * kw * cin)
+    w2d = w.reshape(kh * kw * cin, cout)
+    out = matmul(patches, w2d)
+    return out.reshape(b, h, wd, cout)

@@ -1,0 +1,145 @@
+"""L1 Pallas kernel: tiled matmul, the compute hot-spot of the FL workload.
+
+Every FLOP the paper's cost model counts (Table II) is a matmul FLOP after
+im2col: convolution forward / error / gradient calculations and the fully
+connected layers all reduce to GEMM. This kernel is therefore the single
+L1 hot-spot of the whole stack.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): output is tiled in
+``block_m x block_n`` blocks sized for the 128x128 MXU systolic array; the
+K dimension is the innermost grid axis so each output block stays resident
+in VMEM while A/B tiles stream HBM->VMEM via the BlockSpec index maps.
+
+``interpret=True`` is mandatory on this CPU-only image: real-TPU lowering
+emits a Mosaic custom-call the CPU PJRT plugin cannot execute. Interpret
+mode lowers the same schedule to plain HLO (a fori_loop over the grid), so
+the AOT artifact runs on the rust PJRT CPU client.
+
+The backward pass is expressed with the same kernel through a custom VJP
+(dX = dY @ W^T, dW = X^T @ dY), keeping both training directions on the
+Pallas path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default MXU-shaped tile. Overridable for the tiling ablation in
+# python/tests/test_kernel.py and the §Perf sweep.
+DEFAULT_BLOCK = 128
+
+
+def _ceil_to(x: int, b: int) -> int:
+    return ((x + b - 1) // b) * b
+
+
+def _pick_block(dim: int, target: int) -> int:
+    """Largest power of two <= target that is >= min(dim, 8)."""
+    b = 8
+    while b * 2 <= target and b < dim:
+        b *= 2
+    return min(b, target)
+
+
+def _mm_kernel(x_ref, w_ref, o_ref, *, nk: int):
+    """One (i, j, k) grid step: accumulate an MXU-sized partial product.
+
+    The output block is initialised at k == 0 and accumulated across the K
+    grid axis; grid iteration order is row-major so k is innermost and the
+    o_ref block is revisited nk times while staying in VMEM.
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret")
+)
+def matmul_pallas(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    block_m: int = DEFAULT_BLOCK,
+    block_n: int = DEFAULT_BLOCK,
+    block_k: int = DEFAULT_BLOCK,
+    interpret: bool = True,
+) -> jax.Array:
+    """``x @ w`` via the tiled Pallas kernel.
+
+    x: f32[M, K], w: f32[K, N] -> f32[M, N]. Inputs are zero-padded up to
+    block multiples (zero padding is exact for matmul) and the result is
+    sliced back.
+    """
+    if x.ndim != 2 or w.ndim != 2:
+        raise ValueError(f"matmul_pallas expects 2-D operands, got {x.shape} @ {w.shape}")
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2:
+        raise ValueError(f"contracting dims mismatch: {x.shape} @ {w.shape}")
+
+    bm = _pick_block(m, block_m)
+    bn = _pick_block(n, block_n)
+    bk = _pick_block(k, block_k)
+    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+
+    xp = jnp.pad(x.astype(jnp.float32), ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w.astype(jnp.float32), ((0, kp - k), (0, np_ - n)))
+    nk = kp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_mm_kernel, nk=nk),
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Differentiable Pallas matmul: fwd and bwd both run the L1 kernel."""
+    return matmul_pallas(x, w)
+
+
+def _matmul_fwd(x, w):
+    return matmul_pallas(x, w), (x, w)
+
+
+def _matmul_bwd(res, g):
+    x, w = res
+    # dX = dY @ W^T ; dW = X^T @ dY — both GEMMs on the Pallas path.
+    dx = matmul_pallas(g, w.T)
+    dw = matmul_pallas(x.T, g)
+    return dx, dw
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def vmem_footprint_bytes(block_m: int, block_n: int, block_k: int) -> int:
+    """VMEM bytes resident per grid step (f32): A tile + B tile + O tile.
+
+    Used by the §Perf TPU estimate: must stay well under ~16 MiB/core.
+    """
+    return 4 * (block_m * block_k + block_k * block_n + block_m * block_n)
+
+
+def mxu_utilization_estimate(m: int, n: int, k: int, block: int = DEFAULT_BLOCK) -> float:
+    """Fraction of issued MXU MACs that are useful (non-padding) work."""
+    mp, np_, kp = _ceil_to(m, block), _ceil_to(n, block), _ceil_to(k, block)
+    return (m * n * k) / float(mp * np_ * kp)

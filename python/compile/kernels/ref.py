@@ -1,0 +1,29 @@
+"""Pure-jnp oracles for the L1 kernels — the build-time correctness signal.
+
+pytest (python/tests/test_kernel.py) sweeps shapes/dtypes with hypothesis
+and asserts the Pallas kernels match these references to float32 tolerance.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    return jnp.dot(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def conv2d_same_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """lax conv oracle: NHWC x HWIO -> NHWC, SAME padding, stride 1."""
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )

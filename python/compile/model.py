@@ -1,0 +1,229 @@
+"""L2: the FL objective DNNs (JAX fwd/bwd), built on the L1 Pallas kernels.
+
+Two executable presets (see DESIGN.md §Substitutions — the scheduler's cost
+model separately carries the paper-scale VGG-11 layer table):
+
+* ``mlp``  — 3072 -> 64 -> 10 fully connected; fast preset used by rust
+             unit/integration tests and the quickstart example.
+* ``cnn``  — VGG-mini: 3x [conv3x3 + ReLU + maxpool2] then 1024 -> 128 -> 10;
+             the model actually trained by the figure harness.
+
+All dense compute (conv via im2col, FC) routes through kernels.matmul, so
+both fwd and bwd run the Pallas kernel. Parameters travel as a flat, ordered
+list of arrays — the ABI the rust runtime marshals as PJRT literals.
+
+The partitioned step (bottom_fwd / top_step / bottom_bwd) realises the
+paper's DNN-partition mechanism (§II-B3): the device runs the bottom layers
+forward, ships the activation to the gateway, the gateway trains the top
+layers and returns the error term of its first layer, and the device
+back-propagates through the bottom layers. ``examples/partitioned_step``
+verifies the composition is bit-comparable to the fused train step.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv2d_same, matmul
+
+# Static batch shapes baked into the AOT artifacts.
+TRAIN_BATCH = 64
+EVAL_BATCH = 256
+NUM_CLASSES = 10
+IMAGE_SHAPE = (32, 32, 3)
+FLAT_DIM = 32 * 32 * 3
+
+# CNN partition cut for the partitioned artifacts: bottom = conv1+conv2
+# (through pool2), top = conv3 + fc1 + fc2. Pool boundaries are where the
+# paper says DNNs should be cut to minimise the shipped activation (§II-B3b).
+CNN_BOTTOM_PARAMS = 4  # c1w, c1b, c2w, c2b
+CNN_CUT_ACT_SHAPE = (TRAIN_BATCH, 8, 8, 32)
+
+
+# --------------------------------------------------------------------------
+# Parameter initialisation (He-normal for ReLU nets, deterministic seed).
+# --------------------------------------------------------------------------
+
+def _he(key, shape, fan_in):
+    return jax.random.normal(key, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+
+
+def init_params(preset: str, seed: int = 0) -> list[jax.Array]:
+    """Flat ordered parameter list for ``preset`` — the artifact ABI order."""
+    key = jax.random.PRNGKey(seed)
+    if preset == "mlp":
+        k1, k2 = jax.random.split(key)
+        del k2  # final layer is zero-init: initial loss = ln(10), stabler SGD
+        return [
+            _he(k1, (FLAT_DIM, 64), FLAT_DIM),
+            jnp.zeros((64,), jnp.float32),
+            jnp.zeros((64, NUM_CLASSES), jnp.float32),
+            jnp.zeros((NUM_CLASSES,), jnp.float32),
+        ]
+    if preset == "cnn":
+        ks = jax.random.split(key, 5)
+        return [
+            _he(ks[0], (3, 3, 3, 16), 27),
+            jnp.zeros((16,), jnp.float32),
+            _he(ks[1], (3, 3, 16, 32), 144),
+            jnp.zeros((32,), jnp.float32),
+            _he(ks[2], (3, 3, 32, 64), 288),
+            jnp.zeros((64,), jnp.float32),
+            _he(ks[3], (1024, 128), 1024),
+            jnp.zeros((128,), jnp.float32),
+            jnp.zeros((128, NUM_CLASSES), jnp.float32),  # zero-init head
+            jnp.zeros((NUM_CLASSES,), jnp.float32),
+        ]
+    raise ValueError(f"unknown preset {preset!r}")
+
+
+def input_shape(preset: str, batch: int) -> tuple[int, ...]:
+    return (batch, FLAT_DIM) if preset == "mlp" else (batch, *IMAGE_SHAPE)
+
+
+def param_count(preset: str) -> int:
+    return sum(int(p.size) for p in init_params(preset))
+
+
+# --------------------------------------------------------------------------
+# Forward passes
+# --------------------------------------------------------------------------
+
+def _maxpool2(x):
+    b, h, w, c = x.shape
+    return jnp.max(x.reshape(b, h // 2, 2, w // 2, 2, c), axis=(2, 4))
+
+
+def _dense(x, w, b):
+    return matmul(x, w) + b
+
+
+def forward(preset: str, params: list[jax.Array], x: jax.Array) -> jax.Array:
+    """Logits f32[B, 10]."""
+    if preset == "mlp":
+        w1, b1, w2, b2 = params
+        h = jax.nn.relu(_dense(x, w1, b1))
+        return _dense(h, w2, b2)
+    return _cnn_top(params[CNN_BOTTOM_PARAMS:], _cnn_bottom(params[:CNN_BOTTOM_PARAMS], x))
+
+
+def _cnn_bottom(params: list[jax.Array], x: jax.Array) -> jax.Array:
+    """Device-side portion: conv1 -> pool -> conv2 -> pool (B,8,8,32)."""
+    c1w, c1b, c2w, c2b = params
+    h = _maxpool2(jax.nn.relu(conv2d_same(x, c1w) + c1b))
+    return _maxpool2(jax.nn.relu(conv2d_same(h, c2w) + c2b))
+
+
+def _cnn_top(params: list[jax.Array], a: jax.Array) -> jax.Array:
+    """Gateway-side portion: conv3 -> pool -> fc1 -> fc2 logits."""
+    c3w, c3b, f1w, f1b, f2w, f2b = params
+    h = _maxpool2(jax.nn.relu(conv2d_same(a, c3w) + c3b))
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(_dense(h, f1w, f1b))
+    return _dense(h, f2w, f2b)
+
+
+# --------------------------------------------------------------------------
+# Loss / train / eval / gradient probe
+# --------------------------------------------------------------------------
+
+def _xent(logits: jax.Array, y: jax.Array) -> jax.Array:
+    """Mean softmax cross-entropy; y is int32[B]."""
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def loss_fn(preset: str, params: list[jax.Array], x, y) -> jax.Array:
+    return _xent(forward(preset, params, x), y)
+
+
+def train_step(preset: str):
+    """(params..., x, y, lr) -> (params'..., loss): one SGD step."""
+
+    def step(params: list[jax.Array], x, y, lr):
+        loss, grads = jax.value_and_grad(lambda p: loss_fn(preset, p, x, y))(params)
+        new_params = [p - lr * g for p, g in zip(params, grads)]
+        return tuple(new_params) + (loss,)
+
+    return step
+
+
+def train_k_steps(preset: str, k: int):
+    """(params..., xs[k,B,...], ys[k,B], lr) -> (params'..., mean_loss).
+
+    K local SGD iterations fused into ONE artifact (§Perf, L2): the rust
+    coordinator calls this once per scheduled device per round instead of K
+    times, removing K-1 rounds of parameter upload/download marshalling and
+    letting XLA optimize across the unrolled steps.
+    """
+
+    def stepk(params: list[jax.Array], xs, ys, lr):
+        loss_sum = jnp.float32(0.0)
+        for i in range(k):
+            loss, grads = jax.value_and_grad(
+                lambda p: loss_fn(preset, p, xs[i], ys[i])
+            )(params)
+            params = [p - lr * g for p, g in zip(params, grads)]
+            loss_sum = loss_sum + loss
+        return tuple(params) + (loss_sum / k,)
+
+    return stepk
+
+
+def eval_batch(preset: str):
+    """(params..., x, y) -> (sum_loss, num_correct) over one eval batch."""
+
+    def ev(params: list[jax.Array], x, y):
+        logits = forward(preset, params, x)
+        logp = jax.nn.log_softmax(logits)
+        sum_loss = -jnp.sum(jnp.take_along_axis(logp, y[:, None], axis=1))
+        correct = jnp.sum((jnp.argmax(logits, axis=1) == y).astype(jnp.float32))
+        return sum_loss, correct
+
+    return ev
+
+
+def grad_flat(preset: str):
+    """(params..., x, y) -> f32[P]: flattened minibatch gradient.
+
+    Used by the rust side to estimate the paper's sigma_n / delta_n
+    (Assumptions 1-2) that feed the divergence bound Phi_m (Theorem 1).
+    """
+
+    def gf(params: list[jax.Array], x, y):
+        grads = jax.grad(lambda p: loss_fn(preset, p, x, y))(params)
+        return jnp.concatenate([g.ravel() for g in grads])
+
+    return gf
+
+
+# --------------------------------------------------------------------------
+# Partitioned training step (paper §II-B3): device/gateway split at pool2.
+# --------------------------------------------------------------------------
+
+def bottom_fwd(bottom: list[jax.Array], x: jax.Array) -> jax.Array:
+    """Device side, forward: x -> activation shipped to the gateway."""
+    return _cnn_bottom(bottom, x)
+
+
+def top_step(top: list[jax.Array], act: jax.Array, y: jax.Array, lr):
+    """Gateway side: trains the top portion, returns the error term.
+
+    -> (top'..., d_act, loss) where d_act is dL/d(activation), the error of
+    the first gateway-side layer that the device needs for its backward pass.
+    """
+
+    def top_loss(t, a):
+        return _xent(_cnn_top(t, a), y)
+
+    (loss, (gt, ga)) = jax.value_and_grad(top_loss, argnums=(0, 1))(top, act)
+    new_top = [p - lr * g for p, g in zip(top, gt)]
+    return tuple(new_top) + (ga, loss)
+
+
+def bottom_bwd(bottom: list[jax.Array], x: jax.Array, d_act: jax.Array, lr):
+    """Device side, backward: propagate the gateway error, SGD-update."""
+    _, vjp = jax.vjp(lambda b: _cnn_bottom(b, x), bottom)
+    (gb,) = vjp(d_act)
+    return tuple(p - lr * g for p, g in zip(bottom, gb))

@@ -1,0 +1,64 @@
+"""AOT pipeline: HLO text artifacts are well-formed and self-consistent."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_to_hlo_text_smoke():
+    lowered = jax.jit(lambda x: (x * 2.0,)).lower(
+        jax.ShapeDtypeStruct((4,), jnp.float32)
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text and "f32[4]" in text
+
+
+def test_mlp_train_step_hlo_signature():
+    """Entry computation must carry params + x + y + lr and return a tuple —
+    the ABI rust/src/runtime relies on."""
+    lowered = jax.jit(model.train_step("mlp")).lower(
+        [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in model.init_params("mlp")],
+        jax.ShapeDtypeStruct(model.input_shape("mlp", model.TRAIN_BATCH), jnp.float32),
+        jax.ShapeDtypeStruct((model.TRAIN_BATCH,), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text
+    assert f"f32[{model.TRAIN_BATCH},3072]" in text
+    assert f"s32[{model.TRAIN_BATCH}]" in text
+
+
+@pytest.mark.parametrize("preset", ["mlp", "cnn"])
+def test_artifacts_on_disk_if_built(preset):
+    """When `make artifacts` has run, every artifact + meta must be present
+    and the meta param list must match the model."""
+    meta = os.path.join(ART, f"{preset}.meta")
+    if not os.path.exists(meta):
+        pytest.skip("artifacts not built")
+    lines = dict()
+    shapes = []
+    for line in open(meta):
+        k, v = line.strip().split("=", 1)
+        if k == "param":
+            shapes.append(tuple(int(d) for d in v.split("x")))
+        else:
+            lines[k] = v
+    params = model.init_params(preset)
+    assert len(shapes) == len(params)
+    for got, p in zip(shapes, params):
+        assert got == (p.shape or (1,))
+    assert int(lines["param_total"]) == model.param_count(preset)
+    kinds = ["init", "train_step", "eval", "grad"]
+    if "train_k" in lines:
+        kinds.append(f"train_k{lines['train_k']}")
+    for kind in kinds:
+        path = os.path.join(ART, f"{preset}_{kind}.hlo.txt")
+        assert os.path.exists(path), path
+        head = open(path).read(4096)
+        assert "HloModule" in head

@@ -1,0 +1,168 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+This is the CORE correctness signal for the whole stack: every FLOP in the
+AOT artifacts flows through these kernels. hypothesis sweeps shapes, dtypes
+and block sizes; assert_allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv2d_same, im2col, matmul, matmul_pallas
+from compile.kernels.matmul import (
+    _pick_block,
+    mxu_utilization_estimate,
+    vmem_footprint_bytes,
+)
+from compile.kernels.ref import conv2d_same_ref, matmul_ref
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+    return x.astype(dtype)
+
+
+# ----------------------------------------------------------------- matmul
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 150),
+    n=st.integers(1, 130),
+)
+def test_matmul_matches_ref_shapes(m, k, n):
+    x = _rand(m * 7 + 1, (m, k), jnp.float32)
+    w = _rand(n * 13 + 2, (k, n), jnp.float32)
+    np.testing.assert_allclose(
+        matmul_pallas(x, w), matmul_ref(x, w), rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(**SETTINGS)
+@given(
+    bm=st.sampled_from([8, 16, 32, 64, 128]),
+    bn=st.sampled_from([8, 32, 128]),
+    bk=st.sampled_from([8, 32, 128]),
+)
+def test_matmul_block_size_invariance(bm, bn, bk):
+    """The tiling schedule must never change the numbers (the block shape
+    is a pure performance knob; EXPERIMENTS.md §Perf relies on this)."""
+    x = _rand(3, (45, 70), jnp.float32)
+    w = _rand(4, (70, 33), jnp.float32)
+    got = matmul_pallas(x, w, block_m=bm, block_n=bn, block_k=bk)
+    np.testing.assert_allclose(got, matmul_ref(x, w), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_dtypes(dtype):
+    x = _rand(5, (32, 48), dtype)
+    w = _rand(6, (48, 16), dtype)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(matmul_pallas(x, w), dtype=np.float32),
+        np.asarray(matmul_ref(x, w), dtype=np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+def test_matmul_identity():
+    x = _rand(7, (17, 17), jnp.float32)
+    eye = jnp.eye(17)
+    np.testing.assert_allclose(matmul_pallas(x, eye), x, rtol=1e-5, atol=1e-6)
+
+
+def test_matmul_zero():
+    x = jnp.zeros((9, 11))
+    w = _rand(8, (11, 5), jnp.float32)
+    np.testing.assert_allclose(matmul_pallas(x, w), jnp.zeros((9, 5)))
+
+
+def test_matmul_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        matmul_pallas(jnp.zeros((3, 4)), jnp.zeros((5, 6)))
+    with pytest.raises(ValueError):
+        matmul_pallas(jnp.zeros((3,)), jnp.zeros((3, 2)))
+
+
+def test_matmul_custom_vjp_matches_autodiff_of_ref():
+    x = _rand(9, (24, 40), jnp.float32)
+    w = _rand(10, (40, 12), jnp.float32)
+
+    def f_pallas(x, w):
+        return jnp.sum(jnp.sin(matmul(x, w)))
+
+    def f_ref(x, w):
+        return jnp.sum(jnp.sin(matmul_ref(x, w)))
+
+    gx_p, gw_p = jax.grad(f_pallas, argnums=(0, 1))(x, w)
+    gx_r, gw_r = jax.grad(f_ref, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(gx_p, gx_r, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gw_p, gw_r, rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(dim=st.integers(1, 4096), target=st.sampled_from([32, 128, 256]))
+def test_pick_block_invariants(dim, target):
+    b = _pick_block(dim, target)
+    assert 1 <= b <= target
+    assert b & (b - 1) == 0  # power of two
+
+
+def test_vmem_footprint_within_tpu_budget():
+    # 128^3 f32 tiling must fit comfortably in a 16 MiB VMEM core.
+    assert vmem_footprint_bytes(128, 128, 128) < 1 << 20
+
+
+def test_mxu_utilization_estimate_bounds():
+    assert mxu_utilization_estimate(128, 128, 128) == 1.0
+    u = mxu_utilization_estimate(130, 10, 27)
+    assert 0.0 < u < 1.0
+
+
+# ------------------------------------------------------------------- conv
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 4),
+    hw=st.sampled_from([4, 8, 12, 16]),
+    cin=st.integers(1, 8),
+    cout=st.integers(1, 8),
+)
+def test_conv_matches_lax(b, hw, cin, cout):
+    x = _rand(b * 31 + hw, (b, hw, hw, cin), jnp.float32)
+    w = _rand(cin * 17 + cout, (3, 3, cin, cout), jnp.float32)
+    np.testing.assert_allclose(
+        conv2d_same(x, w), conv2d_same_ref(x, w), rtol=1e-4, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("k", [1, 3, 5])
+def test_conv_kernel_sizes(k):
+    x = _rand(11, (2, 10, 10, 3), jnp.float32)
+    w = _rand(12, (k, k, 3, 4), jnp.float32)
+    np.testing.assert_allclose(
+        conv2d_same(x, w), conv2d_same_ref(x, w), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_im2col_feature_order_matches_weight_reshape():
+    """im2col feature ordering must be (di, dj, c) with c fastest so that
+    HWIO weights flatten consistently — the contract conv2d_same relies on."""
+    x = jnp.arange(2 * 4 * 4 * 3, dtype=jnp.float32).reshape(2, 4, 4, 3)
+    p = im2col(x, 3, 3)
+    assert p.shape == (2, 4, 4, 27)
+    # centre tap (di=1, dj=1) of an interior pixel must equal the input.
+    np.testing.assert_allclose(p[:, 1, 1, 4 * 3 : 5 * 3], x[:, 1, 1, :])
+
+
+def test_conv_grad_matches_ref():
+    x = _rand(13, (2, 6, 6, 3), jnp.float32)
+    w = _rand(14, (3, 3, 3, 4), jnp.float32)
+    g_p = jax.grad(lambda w: jnp.sum(conv2d_same(x, w) ** 2))(w)
+    g_r = jax.grad(lambda w: jnp.sum(conv2d_same_ref(x, w) ** 2))(w)
+    np.testing.assert_allclose(g_p, g_r, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,149 @@
+"""L2 correctness: model shapes, training behaviour, partition equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+def _data(preset, batch, seed=0):
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, model.input_shape(preset, batch), jnp.float32)
+    y = jax.random.randint(ky, (batch,), 0, model.NUM_CLASSES)
+    return x, y
+
+
+@pytest.mark.parametrize("preset", ["mlp", "cnn"])
+def test_init_params_shapes_and_determinism(preset):
+    p1 = model.init_params(preset, seed=0)
+    p2 = model.init_params(preset, seed=0)
+    for a, b in zip(p1, p2):
+        np.testing.assert_array_equal(a, b)
+    assert model.param_count(preset) == sum(int(p.size) for p in p1)
+
+
+@pytest.mark.parametrize("preset", ["mlp", "cnn"])
+def test_forward_shapes(preset):
+    p = model.init_params(preset)
+    x, _ = _data(preset, 8)
+    # forward handles any batch (only AOT artifacts bake static batches)
+    logits = model.forward(preset, p, x)
+    assert logits.shape == (8, model.NUM_CLASSES)
+
+
+@pytest.mark.parametrize("preset", ["mlp", "cnn"])
+def test_initial_loss_is_ln10(preset):
+    """Zero-init head -> uniform predictive distribution -> loss = ln 10."""
+    p = model.init_params(preset)
+    x, y = _data(preset, 16)
+    loss = model.loss_fn(preset, p, x, y)
+    np.testing.assert_allclose(loss, np.log(10.0), rtol=1e-5)
+
+
+@pytest.mark.parametrize("preset", ["mlp"])
+def test_train_step_decreases_loss(preset):
+    p = model.init_params(preset)
+    x, y = _data(preset, model.TRAIN_BATCH)
+    step = jax.jit(model.train_step(preset))
+    lr = jnp.float32(0.05)
+    out = step(p, x, y, lr)
+    first = float(out[-1])
+    for _ in range(5):
+        out = step(list(out[:-1]), x, y, lr)
+    assert float(out[-1]) < first
+
+
+def test_train_step_abi_order():
+    """Artifact ABI: outputs are params' (same order) then loss."""
+    p = model.init_params("mlp")
+    x, y = _data("mlp", model.TRAIN_BATCH)
+    out = model.train_step("mlp")(p, x, y, jnp.float32(0.0))
+    assert len(out) == len(p) + 1
+    # lr = 0 must be the identity on parameters.
+    for a, b in zip(out[:-1], p):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_eval_batch_counts():
+    p = model.init_params("mlp")
+    x, y = _data("mlp", model.EVAL_BATCH)
+    sum_loss, correct = model.eval_batch("mlp")(p, x, y)
+    assert 0 <= float(correct) <= model.EVAL_BATCH
+    np.testing.assert_allclose(
+        float(sum_loss) / model.EVAL_BATCH, np.log(10.0), rtol=1e-5
+    )
+
+
+def test_grad_flat_length_and_direction():
+    p = model.init_params("mlp")
+    x, y = _data("mlp", model.TRAIN_BATCH)
+    g = model.grad_flat("mlp")(p, x, y)
+    assert g.shape == (model.param_count("mlp"),)
+    # one SGD step along -g must equal train_step output
+    lr = jnp.float32(0.01)
+    stepped = model.train_step("mlp")(p, x, y, lr)
+    flat_stepped = jnp.concatenate([q.ravel() for q in stepped[:-1]])
+    flat_manual = jnp.concatenate([q.ravel() for q in p]) - lr * g
+    np.testing.assert_allclose(flat_stepped, flat_manual, rtol=1e-5, atol=1e-7)
+
+
+def test_partitioned_step_equals_fused():
+    """The paper's DNN-partition mechanism must be numerically exact:
+    bottom_fwd + top_step + bottom_bwd == fused train_step."""
+    p = model.init_params("cnn")
+    x, y = _data("cnn", model.TRAIN_BATCH, seed=3)
+    lr = jnp.float32(0.01)
+    nb = model.CNN_BOTTOM_PARAMS
+    bottom, top = p[:nb], p[nb:]
+
+    act = model.bottom_fwd(bottom, x)
+    assert act.shape == model.CNN_CUT_ACT_SHAPE
+    tout = model.top_step(top, act, y, lr)
+    new_top, d_act, loss_p = list(tout[:-2]), tout[-2], tout[-1]
+    new_bottom = model.bottom_bwd(bottom, x, d_act, lr)
+
+    fused = model.train_step("cnn")(p, x, y, lr)
+    for a, b in zip(list(new_bottom) + new_top, fused[:-1]):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(loss_p, fused[-1], rtol=1e-6)
+
+
+def test_train_k_steps_equals_sequential_steps():
+    """The fused K-step artifact (§Perf) must be numerically identical to
+    K sequential single-step calls."""
+    k = 3
+    p = model.init_params("mlp")
+    lr = jnp.float32(0.02)
+    kx, ky = jax.random.split(jax.random.PRNGKey(9))
+    xs = jax.random.normal(kx, (k, model.TRAIN_BATCH, model.FLAT_DIM))
+    ys = jax.random.randint(ky, (k, model.TRAIN_BATCH), 0, model.NUM_CLASSES)
+
+    out = model.train_k_steps("mlp", k)(p, xs, ys, lr)
+    fused_params, fused_loss = list(out[:-1]), out[-1]
+
+    seq = p
+    losses = []
+    step = model.train_step("mlp")
+    for i in range(k):
+        o = step(seq, xs[i], ys[i], lr)
+        seq = list(o[:-1])
+        losses.append(o[-1])
+    for a, b in zip(fused_params, seq):
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(fused_loss, np.mean(losses), rtol=1e-6)
+
+
+def test_maxpool2():
+    x = jnp.arange(16, dtype=jnp.float32).reshape(1, 4, 4, 1)
+    out = model._maxpool2(x)
+    np.testing.assert_array_equal(
+        out[0, :, :, 0], jnp.array([[5.0, 7.0], [13.0, 15.0]])
+    )
+
+
+def test_xent_perfect_prediction_is_small():
+    logits = jnp.full((4, 10), -30.0).at[jnp.arange(4), jnp.arange(4)].set(30.0)
+    loss = model._xent(logits, jnp.arange(4))
+    assert float(loss) < 1e-5

@@ -1,0 +1,254 @@
+//! Figure harness: regenerates the data behind every figure in §VII
+//! (Fig. 2–6) plus the Table II view, writing CSVs under results/ and
+//! printing the paper-shaped summaries.
+//!
+//! This is a bench target (custom harness) because it is a long-running
+//! measurement program, not a pass/fail test. Scale knobs via env:
+//!   FIG_ROUNDS      rounds per training run        (default 80)
+//!   FIG_DIV_ROUNDS  rounds for the Fig. 2 divergence runs (default 25)
+//!   FIG_DATASETS    comma list: svhn,cifar         (default both)
+//!   FIG_ONLY        fig2|fig3|fig4|fig5|fig6|table2|all (default all)
+//!
+//! Run: `make artifacts && cargo bench --bench figures`
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::Result;
+use iiot_fl::config::SimConfig;
+use iiot_fl::dnn::models;
+use iiot_fl::fl::participation::{gamma_from_phi, gamma_rates};
+use iiot_fl::fl::{Experiment, RunLog, RunOpts};
+use iiot_fl::metrics::{print_table, write_run_csv, Csv};
+use iiot_fl::sched::{Ddsra, Scheduler};
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env_str(key: &str, default: &str) -> String {
+    std::env::var(key).unwrap_or_else(|_| default.to_string())
+}
+
+fn out(name: &str) -> PathBuf {
+    PathBuf::from("results").join(name)
+}
+
+fn main() -> Result<()> {
+    let rounds = env_usize("FIG_ROUNDS", 80);
+    let div_rounds = env_usize("FIG_DIV_ROUNDS", 25);
+    let datasets: Vec<String> =
+        env_str("FIG_DATASETS", "svhn,cifar").split(',').map(|s| s.to_string()).collect();
+    let only = env_str("FIG_ONLY", "all");
+    let want = |f: &str| only == "all" || only == f;
+
+    if want("table2") {
+        table2();
+    }
+    for ds in &datasets {
+        if want("fig2") {
+            fig2(ds, div_rounds)?;
+        }
+        if want("fig3") || want("fig4") || want("fig5") || want("fig6") {
+            fig3_to_6(ds, rounds)?;
+        }
+    }
+    println!("\nfigure data written under results/");
+    Ok(())
+}
+
+/// Table II: the layer-level cost model, printed for VGG-11.
+fn table2() {
+    let model = models::vgg11_cifar();
+    let rows: Vec<Vec<String>> = model
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(i, l)| {
+            let c = l.cost(100, 4);
+            vec![
+                (i + 1).to_string(),
+                l.short_name().into(),
+                format!("{:.3e}", c.fwd_flops),
+                format!("{:.3e}", c.bwd_flops),
+                format!("{:.1}", c.mem_bytes / 1e6),
+                c.params.to_string(),
+            ]
+        })
+        .collect();
+    print_table(
+        "Table II — VGG-11 layer costs at batch 100 (FLOPs fwd/bwd, memory MB, params)",
+        &["l", "kind", "fwd", "bwd", "mem_MB", "params"],
+        &rows,
+    );
+}
+
+/// Fig. 2: derived Γ_m (Eq. 13 from the Theorem-1 bound) vs the
+/// experimental participation rate (Eq. 13 applied to the MEASURED
+/// divergence ||ŵ_m − v^{K,t}||).
+fn fig2(dataset: &str, rounds: usize) -> Result<()> {
+    println!("\n[fig2] {dataset}: divergence-tracked run ({rounds} rounds)...");
+    let mut cfg = SimConfig::default();
+    cfg.dataset = dataset.into();
+    cfg.rounds = rounds;
+    let exp = Experiment::new(cfg)?;
+
+    let stats = exp.estimate_grad_stats(4)?;
+    let (phis, derived) =
+        gamma_rates(&exp.topo, &stats, exp.cfg.num_channels, exp.cfg.lr, exp.cfg.local_iters);
+
+    // Any scheduler works — divergence is measured for ALL gateways.
+    let mut sched = exp.make_scheduler("round_robin")?;
+    let opts = RunOpts { rounds, eval_every: 0, track_divergence: true, train: true };
+    let log = exp.run(sched.as_mut(), &opts)?;
+    let measured = log.mean_divergence().expect("divergence mode");
+    let experimental = gamma_from_phi(&measured, exp.cfg.num_channels);
+
+    let mut csv = Csv::create(
+        &out(&format!("fig2_{dataset}.csv")),
+        &["gateway", "phi_derived", "gamma_derived", "divergence_measured", "gamma_experimental"],
+    )?;
+    let mut rows = Vec::new();
+    for m in 0..exp.topo.num_gateways() {
+        csv.rowf(&[m as f64, phis[m], derived[m], measured[m], experimental[m]])?;
+        rows.push(vec![
+            format!("gw{m}"),
+            format!("{:.4}", derived[m]),
+            format!("{:.4}", experimental[m]),
+            exp.topo.gateways[m]
+                .members
+                .iter()
+                .map(|&n| exp.shards[n].classes.len().to_string())
+                .collect::<Vec<_>>()
+                .join("/"),
+        ]);
+    }
+    print_table(
+        &format!("Fig.2 ({dataset}) — derived vs experimental participation rate"),
+        &["gateway", "derived", "experimental", "classes/device"],
+        &rows,
+    );
+    Ok(())
+}
+
+/// Figures 3–6 share training runs: one per scheme per dataset.
+/// Fig. 3: participation-rate policy (DDSRA V=0) vs Random vs Round Robin.
+/// Fig. 4: test accuracy, DDSRA (V = 0.01 / 1000 / 10000) vs 4 baselines.
+/// Fig. 5: cumulative training delay for the same schemes.
+/// Fig. 6: per-gateway participation rates for the same schemes.
+fn fig3_to_6(dataset: &str, rounds: usize) -> Result<()> {
+    println!("\n[fig3-6] {dataset}: {rounds} rounds per scheme...");
+    let mut cfg = SimConfig::default();
+    cfg.dataset = dataset.into();
+    cfg.rounds = rounds;
+    let exp = Experiment::new(cfg)?;
+    let stats = exp.estimate_grad_stats(4)?;
+    let (_, gamma) =
+        gamma_rates(&exp.topo, &stats, exp.cfg.num_channels, exp.cfg.lr, exp.cfg.local_iters);
+
+    let opts = RunOpts { rounds, eval_every: 5, track_divergence: false, train: true };
+    let mut logs: BTreeMap<&'static str, RunLog> = BTreeMap::new();
+    let schemes: Vec<(&'static str, Box<dyn Scheduler>)> = vec![
+        ("participation", Box::new(Ddsra::new(0.0, gamma.clone()))),
+        ("ddsra_v0.01", Box::new(Ddsra::new(0.01, gamma.clone()))),
+        ("ddsra_v1000", Box::new(Ddsra::new(1000.0, gamma.clone()))),
+        ("ddsra_v10000", Box::new(Ddsra::new(10000.0, gamma.clone()))),
+        ("random", exp.make_scheduler("random")?),
+        ("round_robin", exp.make_scheduler("round_robin")?),
+        ("loss_driven", exp.make_scheduler("loss_driven")?),
+        ("delay_driven", exp.make_scheduler("delay_driven")?),
+    ];
+    for (label, mut sched) in schemes {
+        let t0 = std::time::Instant::now();
+        let log = exp.run(sched.as_mut(), &opts)?;
+        println!(
+            "  {label:<14} final_acc={:>6.2}%  total_delay={:>8.0}s  wall={:.0}s",
+            log.final_accuracy().unwrap_or(0.0) * 100.0,
+            log.total_delay(),
+            t0.elapsed().as_secs_f64()
+        );
+        write_run_csv(&log, &out(&format!("run_{dataset}_{label}.csv")))?;
+        logs.insert(label, log);
+    }
+
+    // Fig. 3 summary: accuracy of the Γ-policy vs fairness baselines.
+    let acc_rows = |labels: &[&str]| -> Vec<Vec<String>> {
+        labels
+            .iter()
+            .map(|l| {
+                let log = &logs[l];
+                vec![
+                    l.to_string(),
+                    format!("{:.2}%", log.final_accuracy().unwrap_or(0.0) * 100.0),
+                    rounds_to_acc(log, 0.5).map_or("-".into(), |r| r.to_string()),
+                ]
+            })
+            .collect()
+    };
+    print_table(
+        &format!("Fig.3 ({dataset}) — device-specific participation policy vs fairness baselines"),
+        &["scheme", "final acc", "rounds to 50%"],
+        &acc_rows(&["participation", "random", "round_robin"]),
+    );
+
+    let fig4 = ["ddsra_v0.01", "ddsra_v1000", "ddsra_v10000", "random", "round_robin", "loss_driven", "delay_driven"];
+    print_table(
+        &format!("Fig.4 ({dataset}) — test accuracy"),
+        &["scheme", "final acc", "rounds to 50%"],
+        &acc_rows(&fig4),
+    );
+
+    // Fig. 5: cumulative delay.
+    let rows5: Vec<Vec<String>> = fig4
+        .iter()
+        .map(|l| {
+            let log = &logs[l];
+            vec![
+                l.to_string(),
+                format!("{:.0}", log.total_delay()),
+                format!("{:.1}", log.total_delay() / rounds as f64),
+            ]
+        })
+        .collect();
+    print_table(
+        &format!("Fig.5 ({dataset}) — training delay over {rounds} rounds"),
+        &["scheme", "total delay (s)", "avg per round"],
+        &rows5,
+    );
+
+    // Fig. 6: per-gateway participation.
+    let mut csv = Csv::create(
+        &out(&format!("fig6_{dataset}.csv")),
+        &["scheme", "gateway", "selected_rate", "effective_rate"],
+    )?;
+    let mut rows6 = Vec::new();
+    for l in fig4.iter().chain(["participation"].iter()) {
+        let log = &logs[l];
+        for m in 0..exp.topo.num_gateways() {
+            csv.row(&[
+                l.to_string(),
+                m.to_string(),
+                format!("{:.4}", log.participation[m]),
+                format!("{:.4}", log.effective_participation[m]),
+            ])?;
+        }
+        rows6.push(
+            std::iter::once(l.to_string())
+                .chain(log.participation.iter().map(|p| format!("{p:.2}")))
+                .collect::<Vec<_>>(),
+        );
+    }
+    print_table(
+        &format!("Fig.6 ({dataset}) — participation rate per gateway"),
+        &["scheme", "gw0", "gw1", "gw2", "gw3", "gw4", "gw5"],
+        &rows6,
+    );
+    Ok(())
+}
+
+fn rounds_to_acc(log: &RunLog, target: f64) -> Option<usize> {
+    log.records
+        .iter()
+        .find(|r| r.test_acc.is_some_and(|a| a >= target))
+        .map(|r| r.round)
+}

@@ -1,0 +1,126 @@
+//! L3 hot-path microbenchmarks (custom harness — criterion is unavailable
+//! offline). Times the per-round DDSRA solve, its components, and the
+//! Hungarian substrate at growing scales. Used by the §Perf pass in
+//! EXPERIMENTS.md; thresholds are NOT asserted here (bench, not test).
+//!
+//! Run: `cargo bench --bench scheduler`
+
+use std::time::Instant;
+
+use iiot_fl::config::SimConfig;
+use iiot_fl::dnn::models;
+use iiot_fl::energy::EnergyArrivals;
+use iiot_fl::net::ChannelModel;
+use iiot_fl::opt::hungarian_min;
+use iiot_fl::rng::Rng;
+use iiot_fl::sched::latency::plan_cost;
+use iiot_fl::sched::{baselines, Ddsra, RoundCtx, Scheduler};
+use iiot_fl::topo::Topology;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+    // warmup
+    for _ in 0..iters.min(3) {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    let (val, unit) = if per < 1e-3 {
+        (per * 1e6, "µs")
+    } else if per < 1.0 {
+        (per * 1e3, "ms")
+    } else {
+        (per, "s ")
+    };
+    println!("{name:<44} {val:>10.2} {unit}/iter  ({iters} iters)");
+}
+
+fn main() {
+    println!("== scheduler microbenchmarks ==");
+    let cfg = SimConfig::default();
+    let mut rng = Rng::new(42);
+    let topo = Topology::generate(&cfg, &mut rng);
+    let chan = ChannelModel::new(&cfg, &topo, &mut rng);
+    let model = models::vgg11_cifar();
+    let state = chan.draw(&mut rng);
+    let arrivals = EnergyArrivals::draw(&cfg, &mut rng);
+    let ctx = RoundCtx {
+        cfg: &cfg,
+        topo: &topo,
+        model: &model,
+        chan: &chan,
+        state: &state,
+        arrivals: &arrivals,
+        round: 0,
+    };
+
+    bench("channel draw (M x J fading + interference)", 10_000, || {
+        let mut r = Rng::new(1);
+        std::hint::black_box(chan.draw(&mut r));
+    });
+
+    bench("plan_cost (fixed plan, Eq.1-10 evaluation)", 10_000, || {
+        let plan = baselines::fixed_plan(&ctx, 0, 0);
+        std::hint::black_box(plan);
+    });
+
+    bench("DDSRA solve_gateway (BCD l/f/P, one pair)", 2_000, || {
+        std::hint::black_box(Ddsra::solve_gateway(&ctx, 0, 0, 3));
+    });
+
+    let mut ddsra = Ddsra::new(0.01, vec![0.5; cfg.num_gateways]);
+    bench("DDSRA full round (M*J solves + assignment)", 500, || {
+        std::hint::black_box(ddsra.schedule(&ctx));
+    });
+
+    let mut ddsra_par = Ddsra::new(0.01, vec![0.5; cfg.num_gateways]);
+    ddsra_par.parallel = true;
+    bench("DDSRA full round, parallel rows", 500, || {
+        std::hint::black_box(ddsra_par.schedule(&ctx));
+    });
+
+    let mut dd = iiot_fl::sched::DelayDriven;
+    bench("DelayDriven full round (min-max matching)", 2_000, || {
+        std::hint::black_box(dd.schedule(&ctx));
+    });
+
+    // Hungarian scaling (the §V-C complexity claim is O(M^3)).
+    for n in [8usize, 32, 128, 256] {
+        let mut r = Rng::new(n as u64);
+        let cost: Vec<Vec<f64>> =
+            (0..n).map(|_| (0..n).map(|_| r.f64()).collect()).collect();
+        let iters = if n <= 32 { 2000 } else { 50 };
+        bench(&format!("hungarian {n}x{n}"), iters, || {
+            std::hint::black_box(hungarian_min(&cost));
+        });
+    }
+
+    // Larger topologies: scalability of a full DDSRA round (§V-C).
+    for (m, n) in [(12usize, 24usize), (24, 48), (48, 96)] {
+        let mut cfg2 = SimConfig::default();
+        cfg2.num_gateways = m;
+        cfg2.num_devices = n;
+        cfg2.num_channels = 3;
+        let mut r = Rng::new(7);
+        let topo2 = Topology::generate(&cfg2, &mut r);
+        let chan2 = ChannelModel::new(&cfg2, &topo2, &mut r);
+        let st2 = chan2.draw(&mut r);
+        let ar2 = EnergyArrivals::draw(&cfg2, &mut r);
+        let ctx2 = RoundCtx {
+            cfg: &cfg2,
+            topo: &topo2,
+            model: &model,
+            chan: &chan2,
+            state: &st2,
+            arrivals: &ar2,
+            round: 0,
+        };
+        let mut d = Ddsra::new(0.01, vec![0.5; m]);
+        d.parallel = true;
+        bench(&format!("DDSRA round at M={m} N={n} (parallel)"), 100, || {
+            std::hint::black_box(d.schedule(&ctx2));
+        });
+    }
+}

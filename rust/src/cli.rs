@@ -1,0 +1,143 @@
+//! Tiny CLI argument parser (no clap offline): subcommand + `--key value`
+//! flags + repeated `--set cfg_key=value` config overrides.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::config::SimConfig;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    flags: BTreeMap<String, Vec<String>>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Self> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(cmd) = it.peek() {
+            if !cmd.starts_with("--") {
+                args.command = it.next().unwrap().clone();
+            }
+        }
+        while let Some(a) = it.next() {
+            let Some(key) = a.strip_prefix("--") else {
+                bail!("unexpected positional argument {a:?}");
+            };
+            let val = match it.peek() {
+                Some(v) if !v.starts_with("--") => it.next().unwrap().clone(),
+                _ => "true".to_string(),
+            };
+            args.flags.entry(key.to_string()).or_default().push(val);
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn get_all(&self, key: &str) -> &[String] {
+        self.flags.get(key).map_or(&[], |v| v.as_slice())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn parse_num<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("--{key} {v:?}: {e}")),
+        }
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    /// Build a SimConfig: optional `--config file`, then `--set k=v`
+    /// overrides, then well-known direct flags (--rounds, --v, --seed, ...).
+    pub fn sim_config(&self) -> Result<SimConfig> {
+        let mut cfg = match self.get("config") {
+            Some(path) => SimConfig::from_file(std::path::Path::new(path))?,
+            None => SimConfig::default(),
+        };
+        for kv in self.get_all("set") {
+            let Some((k, v)) = kv.split_once('=') else {
+                bail!("--set expects key=value, got {kv:?}");
+            };
+            cfg.set(k.trim(), v.trim())?;
+        }
+        if let Some(r) = self.parse_num::<usize>("rounds")? {
+            cfg.rounds = r;
+        }
+        if let Some(v) = self.parse_num::<f64>("v")? {
+            cfg.lyapunov_v = v;
+        }
+        if let Some(s) = self.parse_num::<u64>("seed")? {
+            cfg.seed = s;
+        }
+        if let Some(d) = self.get("dataset") {
+            cfg.dataset = d.to_string();
+        }
+        if let Some(p) = self.get("preset") {
+            cfg.exec_model = p.to_string();
+        }
+        if let Some(c) = self.get("cost-model") {
+            cfg.cost_model = c.to_string();
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = Args::parse(&sv(&["train", "--rounds", "10", "--verbose"])).unwrap();
+        assert_eq!(a.command, "train");
+        assert_eq!(a.get("rounds"), Some("10"));
+        assert_eq!(a.get("verbose"), Some("true"));
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn set_overrides_config() {
+        let a = Args::parse(&sv(&["train", "--set", "rounds=7", "--set", "lr=0.1"])).unwrap();
+        let cfg = a.sim_config().unwrap();
+        assert_eq!(cfg.rounds, 7);
+        assert_eq!(cfg.lr, 0.1);
+    }
+
+    #[test]
+    fn direct_flags_override() {
+        let a = Args::parse(&sv(&["train", "--v", "1000", "--dataset", "cifar"])).unwrap();
+        let cfg = a.sim_config().unwrap();
+        assert_eq!(cfg.lyapunov_v, 1000.0);
+        assert_eq!(cfg.dataset, "cifar");
+    }
+
+    #[test]
+    fn rejects_positional_after_flags() {
+        assert!(Args::parse(&sv(&["train", "oops"])).is_err());
+        assert!(Args::parse(&sv(&["train", "--set", "nokey"])).unwrap().sim_config().is_err());
+    }
+}

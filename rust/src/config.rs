@@ -1,0 +1,307 @@
+//! Configuration system: every §VII-A experimental constant, loadable from
+//! a minimal key = value config file (TOML subset — no external parser is
+//! available offline) and overridable from the CLI.
+//!
+//! Defaults reproduce the paper's setting exactly: M=6 gateways, N=12
+//! devices (2 per shop floor), J=3 channels, uniform D_n in (0, 2000],
+//! E^D_max = 5 J, E^G_max = 30 J, 2/4 GB memories, K=5 local iterations,
+//! alpha = 0.05 sampling ratio, beta = 0.01 step size, and the channel
+//! constants of §VII-A.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context};
+
+/// All simulation parameters. Units are SI (Hz, W, J, bytes, seconds)
+/// except where a field name says otherwise.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    // ---- topology ----
+    pub num_gateways: usize, // M
+    pub num_devices: usize,  // N (distributed evenly across gateways)
+    pub num_channels: usize, // J
+
+    // ---- devices ----
+    pub dataset_min: usize, // D_n ~ U(dataset_min, dataset_max]
+    pub dataset_max: usize,
+    pub device_energy_max: f64,   // E_n^{D,max} J per round
+    pub device_mem: f64,          // G_n^{D,max} bytes
+    pub device_freq_min: f64,     // f_n^D lower bound (Hz)
+    pub device_freq_max: f64,     // f_n^D upper bound (Hz)
+    pub device_flops_per_cycle: f64, // phi_n^D
+    pub device_kappa: f64,        // v_n^D effective switched capacitance
+
+    // ---- gateways ----
+    pub gw_dist_min: f64,       // d_m ~ U[min,max] meters
+    pub gw_dist_max: f64,
+    pub gw_energy_max: f64,     // E_m^{G,max} J per round
+    pub gw_mem: f64,            // G_m^{G,max} bytes
+    pub gw_freq_max: f64,       // f_m^{G,max} Hz
+    pub gw_freq_min: f64,       // f_m^{G,min} Hz (C6 lower bound)
+    pub gw_flops_per_cycle: f64, // phi_m^G
+    pub gw_kappa: f64,          // v_m^G
+    pub gw_power_max: f64,      // P_m^max W
+
+    // ---- channel ----
+    pub ref_dist: f64,          // d_0 m
+    pub path_loss_exp: f64,     // nu
+    pub bw_up: f64,             // B^u Hz
+    pub bw_down: f64,           // B^d Hz
+    pub noise_psd: f64,         // N_0 W/Hz
+    pub path_loss_const_db: f64, // h_0 dB
+    pub bs_power: f64,          // P^B W
+    /// Std-dev range of the Gaussian co-channel interference amplitude per
+    /// channel ("different variances" across channels in §VII-A); the
+    /// interference power is the squared amplitude.
+    pub interference_amp_min: f64,
+    pub interference_amp_max: f64,
+
+    // ---- FL ----
+    pub local_iters: usize, // K
+    pub sample_ratio: f64,  // alpha: training batch = alpha * D_n
+    pub lr: f64,            // beta
+    pub rounds: usize,      // T
+    pub lyapunov_v: f64,    // V
+
+    // ---- models / data ----
+    /// Cost-model preset the scheduler plans with ("vgg11", "cnn", "mlp").
+    pub cost_model: String,
+    /// Executable preset the runtime trains ("mlp" or "cnn").
+    pub exec_model: String,
+    /// Synthetic dataset flavour: "svhn" (easier) or "cifar" (harder).
+    pub dataset: String,
+    /// Non-IID degree chi (proportion of q_m-class-restricted samples).
+    pub non_iid_degree: f64,
+    /// Test-set size (multiple of the eval batch).
+    pub test_size: usize,
+
+    pub seed: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            num_gateways: 6,
+            num_devices: 12,
+            num_channels: 3,
+            dataset_min: 200,
+            dataset_max: 2000,
+            device_energy_max: 5.0,
+            device_mem: 2.0e9,
+            device_freq_min: 0.1e9,
+            device_freq_max: 1.0e9,
+            device_flops_per_cycle: 16.0,
+            device_kappa: 1e-27,
+            gw_dist_min: 1000.0,
+            gw_dist_max: 2000.0,
+            gw_energy_max: 30.0,
+            gw_mem: 4.0e9,
+            gw_freq_max: 4.0e9,
+            gw_freq_min: 0.1e9,
+            gw_flops_per_cycle: 32.0,
+            gw_kappa: 1e-27,
+            gw_power_max: 0.2,
+            ref_dist: 1.0,
+            path_loss_exp: 2.0,
+            bw_up: 1.0e6,
+            bw_down: 20.0e6,
+            noise_psd: dbm_per_hz_to_w(-174.0),
+            path_loss_const_db: -30.0,
+            bs_power: 1.0,
+            interference_amp_min: 1e-8,
+            interference_amp_max: 1e-7,
+            local_iters: 5,
+            sample_ratio: 0.05,
+            lr: 0.01,
+            rounds: 100,
+            lyapunov_v: 0.01,
+            cost_model: "vgg11".into(),
+            exec_model: "mlp".into(),
+            dataset: "svhn".into(),
+            non_iid_degree: 1.0,
+            test_size: 2048,
+            seed: 2022,
+        }
+    }
+}
+
+/// dBm/Hz -> W/Hz.
+pub fn dbm_per_hz_to_w(dbm: f64) -> f64 {
+    10f64.powf(dbm / 10.0) * 1e-3
+}
+
+/// dB -> linear power ratio.
+pub fn db_to_lin(db: f64) -> f64 {
+    10f64.powf(db / 10.0)
+}
+
+impl SimConfig {
+    /// Devices per gateway (the paper deploys them evenly: 2 per floor).
+    pub fn devices_per_gateway(&self) -> usize {
+        self.num_devices / self.num_gateways
+    }
+
+    /// Linear path-loss constant h_0.
+    pub fn h0_lin(&self) -> f64 {
+        db_to_lin(self.path_loss_const_db)
+    }
+
+    /// Parse `key = value` lines (comments with `#`, blank lines, and
+    /// `[section]` headers permitted and ignored — a TOML subset).
+    pub fn from_str_cfg(text: &str) -> anyhow::Result<Self> {
+        let mut kv = BTreeMap::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() || (line.starts_with('[') && line.ends_with(']')) {
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("config line {}: expected key = value, got {raw:?}", ln + 1);
+            };
+            kv.insert(k.trim().to_string(), v.trim().trim_matches('"').to_string());
+        }
+        let mut cfg = SimConfig::default();
+        for (k, v) in kv {
+            cfg.set(&k, &v)
+                .with_context(|| format!("config key {k:?} = {v:?}"))?;
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path:?}"))?;
+        Self::from_str_cfg(&text)
+    }
+
+    /// Set one field by config-file key. Used by both the parser and the
+    /// CLI `--set key=value` override mechanism.
+    pub fn set(&mut self, key: &str, val: &str) -> anyhow::Result<()> {
+        macro_rules! num {
+            () => {
+                val.parse().map_err(|e| anyhow::anyhow!("parse {val:?}: {e}"))?
+            };
+        }
+        match key {
+            "num_gateways" => self.num_gateways = num!(),
+            "num_devices" => self.num_devices = num!(),
+            "num_channels" => self.num_channels = num!(),
+            "dataset_min" => self.dataset_min = num!(),
+            "dataset_max" => self.dataset_max = num!(),
+            "device_energy_max" => self.device_energy_max = num!(),
+            "device_mem" => self.device_mem = num!(),
+            "device_freq_min" => self.device_freq_min = num!(),
+            "device_freq_max" => self.device_freq_max = num!(),
+            "device_flops_per_cycle" => self.device_flops_per_cycle = num!(),
+            "device_kappa" => self.device_kappa = num!(),
+            "gw_dist_min" => self.gw_dist_min = num!(),
+            "gw_dist_max" => self.gw_dist_max = num!(),
+            "gw_energy_max" => self.gw_energy_max = num!(),
+            "gw_mem" => self.gw_mem = num!(),
+            "gw_freq_max" => self.gw_freq_max = num!(),
+            "gw_freq_min" => self.gw_freq_min = num!(),
+            "gw_flops_per_cycle" => self.gw_flops_per_cycle = num!(),
+            "gw_kappa" => self.gw_kappa = num!(),
+            "gw_power_max" => self.gw_power_max = num!(),
+            "ref_dist" => self.ref_dist = num!(),
+            "path_loss_exp" => self.path_loss_exp = num!(),
+            "bw_up" => self.bw_up = num!(),
+            "bw_down" => self.bw_down = num!(),
+            "noise_psd" => self.noise_psd = num!(),
+            "path_loss_const_db" => self.path_loss_const_db = num!(),
+            "bs_power" => self.bs_power = num!(),
+            "interference_amp_min" => self.interference_amp_min = num!(),
+            "interference_amp_max" => self.interference_amp_max = num!(),
+            "local_iters" => self.local_iters = num!(),
+            "sample_ratio" => self.sample_ratio = num!(),
+            "lr" => self.lr = num!(),
+            "rounds" => self.rounds = num!(),
+            "lyapunov_v" => self.lyapunov_v = num!(),
+            "cost_model" => self.cost_model = val.into(),
+            "exec_model" => self.exec_model = val.into(),
+            "dataset" => self.dataset = val.into(),
+            "non_iid_degree" => self.non_iid_degree = num!(),
+            "test_size" => self.test_size = num!(),
+            "seed" => self.seed = num!(),
+            other => bail!("unknown config key {other:?}"),
+        }
+        Ok(())
+    }
+
+    /// Validate cross-field invariants before a run.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.num_gateways == 0 || self.num_devices == 0 {
+            bail!("topology must be non-empty");
+        }
+        if self.num_devices % self.num_gateways != 0 {
+            bail!(
+                "num_devices ({}) must be divisible by num_gateways ({})",
+                self.num_devices,
+                self.num_gateways
+            );
+        }
+        if self.num_channels > self.num_gateways {
+            bail!("C3 requires J <= M (every channel assigned to a distinct gateway)");
+        }
+        if !(0.0 < self.sample_ratio && self.sample_ratio <= 1.0) {
+            bail!("sample_ratio must be in (0, 1]");
+        }
+        if self.dataset_min == 0 || self.dataset_min > self.dataset_max {
+            bail!("dataset size range invalid");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_section7a() {
+        let c = SimConfig::default();
+        assert_eq!((c.num_gateways, c.num_devices, c.num_channels), (6, 12, 3));
+        assert_eq!(c.local_iters, 5);
+        assert_eq!(c.sample_ratio, 0.05);
+        assert_eq!(c.lr, 0.01);
+        assert_eq!(c.device_flops_per_cycle, 16.0);
+        assert_eq!(c.gw_flops_per_cycle, 32.0);
+        assert!((c.noise_psd - 3.98e-21).abs() < 1e-22);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let cfg = SimConfig::from_str_cfg(
+            "# comment\n[fl]\nrounds = 42\nlyapunov_v = 1000\ndataset = \"cifar\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.rounds, 42);
+        assert_eq!(cfg.lyapunov_v, 1000.0);
+        assert_eq!(cfg.dataset, "cifar");
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(SimConfig::from_str_cfg("what is this").is_err());
+        assert!(SimConfig::from_str_cfg("unknown_key = 3").is_err());
+        assert!(SimConfig::from_str_cfg("rounds = banana").is_err());
+    }
+
+    #[test]
+    fn validate_catches_bad_topology() {
+        let mut c = SimConfig::default();
+        c.num_devices = 13;
+        assert!(c.validate().is_err());
+        let mut c2 = SimConfig::default();
+        c2.num_channels = 7;
+        assert!(c2.validate().is_err());
+    }
+
+    #[test]
+    fn unit_helpers() {
+        assert!((dbm_per_hz_to_w(0.0) - 1e-3).abs() < 1e-12);
+        assert!((db_to_lin(-30.0) - 1e-3).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,11 @@
+//! Synthetic datasets + non-IID sharding (§VII-A substitution — see
+//! DESIGN.md: SVHN/CIFAR-10 cannot be downloaded offline, so we generate
+//! class-conditional image data that preserves the properties the paper's
+//! experiments depend on: per-class structure, non-IID degradation, and
+//! per-device gradient-variance spread).
+
+pub mod shard;
+pub mod synth;
+
+pub use shard::{shard_non_iid, DeviceShard};
+pub use synth::{DatasetFlavor, SynthData};

@@ -1,0 +1,151 @@
+//! Non-IID sharding following [50] (Zhao et al.) as instantiated in
+//! §VII-A: the devices of shop floor m hold data restricted to q_m classes
+//! (chi = 1 means fully q_m-class non-IID; chi < 1 mixes in IID samples).
+//!
+//! q_m is randomly generated per gateway, except gateway 0 which gets the
+//! full class set — reproducing the paper's setup where "each device
+//! associated with the 1-th gateway [has] a local dataset with a wider
+//! variety of the q_m-class non-IID data points" (Fig. 2 discussion).
+
+use crate::config::SimConfig;
+use crate::data::synth::{SynthData, NUM_CLASSES};
+use crate::rng::Rng;
+use crate::topo::Topology;
+
+/// One device's local dataset.
+#[derive(Clone)]
+pub struct DeviceShard {
+    pub device: usize,
+    /// Classes this device's non-IID portion draws from.
+    pub classes: Vec<usize>,
+    /// Flattened images [n * IMG_DIM].
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+}
+
+impl DeviceShard {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+}
+
+/// Shard the synthetic source across all devices per the paper's scheme.
+pub fn shard_non_iid(
+    cfg: &SimConfig,
+    topo: &Topology,
+    data: &SynthData,
+    rng: &mut Rng,
+) -> Vec<DeviceShard> {
+    // Per-gateway class menus.
+    let mut menus: Vec<Vec<usize>> = Vec::with_capacity(topo.num_gateways());
+    for m in 0..topo.num_gateways() {
+        let q_m = if m == 0 {
+            NUM_CLASSES
+        } else {
+            1 + rng.below(NUM_CLASSES)
+        };
+        menus.push(rng.choose_k(NUM_CLASSES, q_m));
+    }
+
+    let all: Vec<usize> = (0..NUM_CLASSES).collect();
+    topo.devices
+        .iter()
+        .map(|dev| {
+            let menu = &menus[dev.gateway];
+            let n = dev.dataset_size;
+            let n_noniid = (cfg.non_iid_degree * n as f64).round() as usize;
+            let (mut images, mut labels) = data.generate(menu, n_noniid, rng);
+            if n_noniid < n {
+                let (xi, yi) = data.generate(&all, n - n_noniid, rng);
+                images.extend(xi);
+                labels.extend(yi);
+            }
+            DeviceShard {
+                device: dev.id,
+                classes: menu.clone(),
+                images,
+                labels,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::DatasetFlavor;
+
+    fn fixtures() -> (SimConfig, Topology, SynthData, Rng) {
+        let cfg = SimConfig::default();
+        let mut rng = Rng::new(11);
+        let topo = Topology::generate(&cfg, &mut rng);
+        let data = SynthData::new(DatasetFlavor::Svhn, &mut rng);
+        (cfg, topo, data, rng)
+    }
+
+    #[test]
+    fn shard_sizes_match_dataset_sizes() {
+        let (cfg, topo, data, mut rng) = fixtures();
+        let shards = shard_non_iid(&cfg, &topo, &data, &mut rng);
+        assert_eq!(shards.len(), topo.num_devices());
+        for (s, d) in shards.iter().zip(&topo.devices) {
+            assert_eq!(s.len(), d.dataset_size);
+            assert_eq!(s.images.len(), d.dataset_size * super::super::synth::IMG_DIM);
+        }
+    }
+
+    #[test]
+    fn gateway0_devices_see_all_classes() {
+        let (cfg, topo, data, mut rng) = fixtures();
+        let shards = shard_non_iid(&cfg, &topo, &data, &mut rng);
+        for &n in &topo.gateways[0].members {
+            assert_eq!(shards[n].classes.len(), NUM_CLASSES);
+        }
+    }
+
+    #[test]
+    fn full_non_iid_restricts_labels_to_menu() {
+        let (cfg, topo, data, mut rng) = fixtures();
+        assert_eq!(cfg.non_iid_degree, 1.0);
+        let shards = shard_non_iid(&cfg, &topo, &data, &mut rng);
+        for s in &shards {
+            for &y in &s.labels {
+                assert!(s.classes.contains(&(y as usize)), "label {y} not in menu");
+            }
+        }
+    }
+
+    #[test]
+    fn devices_on_same_floor_share_menu() {
+        let (cfg, topo, data, mut rng) = fixtures();
+        let shards = shard_non_iid(&cfg, &topo, &data, &mut rng);
+        for g in &topo.gateways {
+            let first = &shards[g.members[0]].classes;
+            for &n in &g.members {
+                assert_eq!(&shards[n].classes, first);
+            }
+        }
+    }
+
+    #[test]
+    fn partial_non_iid_mixes_in_other_classes() {
+        let (mut cfg, topo, data, mut rng) = fixtures();
+        cfg.non_iid_degree = 0.5;
+        let shards = shard_non_iid(&cfg, &topo, &data, &mut rng);
+        // some gateway has a small menu; with chi=0.5 its devices should
+        // hold at least one label outside the menu with high probability.
+        let mut found_outside = false;
+        for s in &shards {
+            if s.classes.len() < NUM_CLASSES {
+                if s.labels.iter().any(|&y| !s.classes.contains(&(y as usize))) {
+                    found_outside = true;
+                }
+            }
+        }
+        assert!(found_outside);
+    }
+}

@@ -1,0 +1,177 @@
+//! Table II: layer-level memory usage and FLOPs for forward + backward
+//! propagation, per layer category (convolution / pooling / fully
+//! connected).
+//!
+//! Notation follows the paper: `B_s` batch size, `S_f` precision bytes,
+//! conv/pool tensors are `H x W x C` with `i` input, `o` output, `f`
+//! filter; FC has input size `S_i`, output size `S_o`.
+
+/// One DNN layer, described only by the hyper-parameters Table II needs.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Layer {
+    /// Convolution with SAME-style geometry (the model zoo fills the
+    /// concrete output sizes, so stride/padding are already resolved).
+    Conv {
+        ci: u64,
+        hi: u64,
+        wi: u64,
+        co: u64,
+        ho: u64,
+        wo: u64,
+        hf: u64,
+        wf: u64,
+    },
+    /// Pooling (max or average — same cost model).
+    Pool {
+        ci: u64,
+        hi: u64,
+        wi: u64,
+        co: u64,
+        ho: u64,
+        wo: u64,
+    },
+    /// Fully connected.
+    Fc { si: u64, so: u64 },
+}
+
+/// Per-layer cost summary for a given batch size and precision.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LayerCost {
+    /// Forward FLOPs for the WHOLE batch (Table II "Forward Propagation").
+    pub fwd_flops: f64,
+    /// Backward FLOPs for the whole batch (error + gradient calculation).
+    pub bwd_flops: f64,
+    /// Memory bytes for parameters + intermediate data (weight, forward
+    /// output, backward error, gradient rows of Table II).
+    pub mem_bytes: f64,
+    /// Parameter count (weights only; used for the model size gamma).
+    pub params: u64,
+}
+
+impl Layer {
+    /// Table II applied to this layer.
+    pub fn cost(&self, batch: u64, sf_bytes: u64) -> LayerCost {
+        let b = batch as f64;
+        let sf = sf_bytes as f64;
+        match *self {
+            Layer::Conv { ci, hi, wi, co, ho, wo, hf, wf } => {
+                let (cif, hif, wif) = (ci as f64, hi as f64, wi as f64);
+                let (cof, hof, wof) = (co as f64, ho as f64, wo as f64);
+                let (hff, wff) = (hf as f64, wf as f64);
+                let fwd = 2.0 * b * cif * hff * wff * cof * hof * wof;
+                // Error calculation (Table II row 2): full-correlation cost
+                // of propagating the error through the filter.
+                let err = 2.0 * b * (2.0 * wff + wff * wof - 2.0)
+                    * (2.0 * hff + hff * hof - 2.0);
+                // Gradient calculation (Table II row 3).
+                let grad = 2.0 * b * cif * hff * wff * cof * hof * wof;
+                let params = ci * hf * wf * co;
+                let mem = sf * (ci * hf * wf * co) as f64      // weight
+                    + sf * b * cof * hof * wof                  // forward output
+                    + sf * b * cif * hif * wif                  // backward error
+                    + sf * (ci * hf * wf * co) as f64; // gradient
+                LayerCost { fwd_flops: fwd, bwd_flops: err + grad, mem_bytes: mem, params }
+            }
+            Layer::Pool { ci, hi, wi, co, ho, wo } => {
+                let (cif, hif, wif) = (ci as f64, hi as f64, wi as f64);
+                let (cof, hof, wof) = (co as f64, ho as f64, wo as f64);
+                let fwd = b * cif * hif * wif;
+                let err = b * cif * hif * wif;
+                let mem = sf * b * cof * hof * wof + sf * b * cif * hif * wif;
+                LayerCost { fwd_flops: fwd, bwd_flops: err, mem_bytes: mem, params: 0 }
+            }
+            Layer::Fc { si, so } => {
+                let (sif, sof) = (si as f64, so as f64);
+                let fwd = 2.0 * b * sif * sof;
+                let err = 2.0 * b * sif * sof;
+                let grad = b * sif * sof;
+                let params = si * so;
+                let mem = sf * (si * so) as f64  // weight
+                    + sf * b * sof               // forward output
+                    + sf * b * sif               // backward error
+                    + sf * (si * so) as f64; // gradient
+                LayerCost { fwd_flops: fwd, bwd_flops: err + grad, mem_bytes: mem, params }
+            }
+        }
+    }
+
+    /// `o_l`: forward FLOPs for ONE sample (paper divides by batch).
+    pub fn o(&self) -> f64 {
+        self.cost(1, 4).fwd_flops
+    }
+
+    /// `o'_l`: backward FLOPs for one sample.
+    pub fn o_prime(&self) -> f64 {
+        self.cost(1, 4).bwd_flops
+    }
+
+    pub fn short_name(&self) -> &'static str {
+        match self {
+            Layer::Conv { .. } => "conv",
+            Layer::Pool { .. } => "pool",
+            Layer::Fc { .. } => "fc",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_fwd_flops_table2() {
+        // 2 * Bs * Ci * Hf * Wf * Co * Ho * Wo
+        let l = Layer::Conv { ci: 3, hi: 32, wi: 32, co: 16, ho: 32, wo: 32, hf: 3, wf: 3 };
+        let c = l.cost(64, 4);
+        assert_eq!(c.fwd_flops, 2.0 * 64.0 * 3.0 * 3.0 * 3.0 * 16.0 * 32.0 * 32.0);
+        assert_eq!(c.params, 3 * 3 * 3 * 16);
+    }
+
+    #[test]
+    fn conv_bwd_is_error_plus_gradient() {
+        let l = Layer::Conv { ci: 3, hi: 8, wi: 8, co: 4, ho: 8, wo: 8, hf: 3, wf: 3 };
+        let b = 2.0;
+        let err = 2.0 * b * (2.0 * 3.0 + 3.0 * 8.0 - 2.0) * (2.0 * 3.0 + 3.0 * 8.0 - 2.0);
+        let grad = 2.0 * b * 3.0 * 3.0 * 3.0 * 4.0 * 8.0 * 8.0;
+        assert_eq!(l.cost(2, 4).bwd_flops, err + grad);
+    }
+
+    #[test]
+    fn conv_memory_table2() {
+        let l = Layer::Conv { ci: 3, hi: 32, wi: 32, co: 16, ho: 32, wo: 32, hf: 3, wf: 3 };
+        let c = l.cost(64, 4);
+        let w = 4.0 * (3 * 3 * 3 * 16) as f64;
+        let out = 4.0 * 64.0 * 16.0 * 32.0 * 32.0;
+        let err = 4.0 * 64.0 * 3.0 * 32.0 * 32.0;
+        assert_eq!(c.mem_bytes, w + out + err + w);
+    }
+
+    #[test]
+    fn pool_costs_table2() {
+        let l = Layer::Pool { ci: 16, hi: 32, wi: 32, co: 16, ho: 16, wo: 16 };
+        let c = l.cost(8, 4);
+        assert_eq!(c.fwd_flops, 8.0 * 16.0 * 32.0 * 32.0);
+        assert_eq!(c.bwd_flops, 8.0 * 16.0 * 32.0 * 32.0);
+        assert_eq!(c.params, 0);
+        assert_eq!(
+            c.mem_bytes,
+            4.0 * 8.0 * 16.0 * 16.0 * 16.0 + 4.0 * 8.0 * 16.0 * 32.0 * 32.0
+        );
+    }
+
+    #[test]
+    fn fc_costs_table2() {
+        let l = Layer::Fc { si: 1024, so: 128 };
+        let c = l.cost(64, 4);
+        assert_eq!(c.fwd_flops, 2.0 * 64.0 * 1024.0 * 128.0);
+        assert_eq!(c.bwd_flops, 2.0 * 64.0 * 1024.0 * 128.0 + 64.0 * 1024.0 * 128.0);
+        assert_eq!(c.params, 1024 * 128);
+    }
+
+    #[test]
+    fn per_sample_o_scales_linearly_with_batch() {
+        let l = Layer::Fc { si: 100, so: 10 };
+        assert_eq!(l.o() * 32.0, l.cost(32, 4).fwd_flops);
+        assert_eq!(l.o_prime() * 32.0, l.cost(32, 4).bwd_flops);
+    }
+}

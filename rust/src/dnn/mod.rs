@@ -1,0 +1,13 @@
+//! Layer-level DNN cost model — the paper's Table II made executable.
+//!
+//! DDSRA never sees tensors: it sees per-layer forward/backward FLOPs
+//! (`o_l`, `o'_l`) and memory footprints (`g_{n,l}`), computed from the
+//! hyper-parameters of each layer exactly as Table II specifies. These
+//! numbers drive the latency (Eq. 1), energy (Eq. 2–3) and memory (Eq. 4–5)
+//! models and hence every scheduling decision.
+
+pub mod layer;
+pub mod models;
+
+pub use layer::{Layer, LayerCost};
+pub use models::ModelSpec;

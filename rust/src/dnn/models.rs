@@ -1,0 +1,229 @@
+//! Model zoo for the scheduler's cost model.
+//!
+//! `vgg11_cifar` is the paper-scale objective DNN (§VII trains VGG-11 on
+//! 32x32 datasets); `vgg_mini` / `mlp` mirror the *executable* presets in
+//! python/compile/model.py so that, in end-to-end runs, the latency/energy
+//! the scheduler simulates corresponds to the network actually trained via
+//! the PJRT artifacts.
+
+use super::layer::Layer;
+
+/// A DNN as the scheduler sees it: an ordered layer list + derived
+/// prefix-sum cost tables. Partition point `l ∈ 0..=L` means the bottom
+/// `l` layers train on the device and the top `L-l` on the gateway (C5).
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    pub layers: Vec<Layer>,
+    /// Per-sample forward+backward FLOPs, cumulative over layers 1..=l.
+    flops_prefix: Vec<f64>,
+    /// Memory bytes per layer for batch=1 (scaled by batch at query time is
+    /// wrong for weights — so we keep both weight and activation parts).
+    weight_bytes: Vec<f64>,
+    act_bytes_per_sample: Vec<f64>,
+    /// Total parameter count.
+    pub params: u64,
+}
+
+impl ModelSpec {
+    pub fn new(name: &str, layers: Vec<Layer>) -> Self {
+        let mut flops_prefix = Vec::with_capacity(layers.len() + 1);
+        flops_prefix.push(0.0);
+        let mut weight_bytes = Vec::with_capacity(layers.len());
+        let mut act_bytes_per_sample = Vec::with_capacity(layers.len());
+        let mut params = 0u64;
+        for l in &layers {
+            let c1 = l.cost(1, 4);
+            flops_prefix.push(flops_prefix.last().unwrap() + c1.fwd_flops + c1.bwd_flops);
+            // Split Table II memory into batch-independent (weight+gradient)
+            // and per-sample (forward output + backward error) parts.
+            let w = 2.0 * 4.0 * c1.params as f64;
+            weight_bytes.push(w);
+            act_bytes_per_sample.push(c1.mem_bytes - w);
+            params += c1.params;
+        }
+        ModelSpec {
+            name: name.to_string(),
+            layers,
+            flops_prefix,
+            weight_bytes,
+            act_bytes_per_sample,
+            params,
+        }
+    }
+
+    /// Number of layers `L`.
+    pub fn depth(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Model size gamma in BITS (f32 parameters) — Eq. 6–8 transmit this.
+    pub fn gamma_bits(&self) -> f64 {
+        self.params as f64 * 32.0
+    }
+
+    /// Per-sample fwd+bwd FLOPs of the bottom `l` layers: Σ_{i<=l}(o_i+o'_i).
+    pub fn bottom_flops(&self, l: usize) -> f64 {
+        self.flops_prefix[l]
+    }
+
+    /// Per-sample fwd+bwd FLOPs of the top `L-l` layers.
+    pub fn top_flops(&self, l: usize) -> f64 {
+        self.flops_prefix[self.depth()] - self.flops_prefix[l]
+    }
+
+    /// Memory bytes `G^D` of the bottom `l` layers at training batch `b`
+    /// (Eq. 4 with Table II entries).
+    pub fn bottom_mem(&self, l: usize, batch: u64) -> f64 {
+        (0..l)
+            .map(|i| self.weight_bytes[i] + self.act_bytes_per_sample[i] * batch as f64)
+            .sum()
+    }
+
+    /// Memory bytes `G^G` of the top `L-l` layers at training batch `b`
+    /// (Eq. 5).
+    pub fn top_mem(&self, l: usize, batch: u64) -> f64 {
+        (l..self.depth())
+            .map(|i| self.weight_bytes[i] + self.act_bytes_per_sample[i] * batch as f64)
+            .sum()
+    }
+}
+
+fn conv(c_in: u64, c_out: u64, hw: u64) -> Layer {
+    Layer::Conv { ci: c_in, hi: hw, wi: hw, co: c_out, ho: hw, wo: hw, hf: 3, wf: 3 }
+}
+
+fn pool(c: u64, hw_in: u64) -> Layer {
+    Layer::Pool { ci: c, hi: hw_in, wi: hw_in, co: c, ho: hw_in / 2, wo: hw_in / 2 }
+}
+
+/// VGG-11 for 32x32 inputs (the paper's objective DNN): 8 conv + 5 pool +
+/// 3 FC = 16 partitionable layers, ~28M parameters.
+pub fn vgg11_cifar() -> ModelSpec {
+    ModelSpec::new(
+        "vgg11",
+        vec![
+            conv(3, 64, 32),
+            pool(64, 32),
+            conv(64, 128, 16),
+            pool(128, 16),
+            conv(128, 256, 8),
+            conv(256, 256, 8),
+            pool(256, 8),
+            conv(256, 512, 4),
+            conv(512, 512, 4),
+            pool(512, 4),
+            conv(512, 512, 2),
+            conv(512, 512, 2),
+            pool(512, 2),
+            Layer::Fc { si: 512, so: 4096 },
+            Layer::Fc { si: 4096, so: 4096 },
+            Layer::Fc { si: 4096, so: 10 },
+        ],
+    )
+}
+
+/// VGG-mini — the executable `cnn` preset (python/compile/model.py).
+pub fn vgg_mini() -> ModelSpec {
+    ModelSpec::new(
+        "cnn",
+        vec![
+            conv(3, 16, 32),
+            pool(16, 32),
+            conv(16, 32, 16),
+            pool(32, 16),
+            conv(32, 64, 8),
+            pool(64, 8),
+            Layer::Fc { si: 1024, so: 128 },
+            Layer::Fc { si: 128, so: 10 },
+        ],
+    )
+}
+
+/// MLP — the executable `mlp` preset.
+pub fn mlp() -> ModelSpec {
+    ModelSpec::new(
+        "mlp",
+        vec![Layer::Fc { si: 3072, so: 64 }, Layer::Fc { si: 64, so: 10 }],
+    )
+}
+
+/// Look up a model spec by preset name.
+pub fn by_name(name: &str) -> Option<ModelSpec> {
+    match name {
+        "vgg11" => Some(vgg11_cifar()),
+        "cnn" => Some(vgg_mini()),
+        "mlp" => Some(mlp()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg11_param_count_plausible() {
+        let m = vgg11_cifar();
+        // conv ~9.2M + fc ~19M
+        assert!(m.params > 27_000_000 && m.params < 30_000_000, "{}", m.params);
+        assert_eq!(m.depth(), 16);
+    }
+
+    #[test]
+    fn cnn_matches_python_preset_params() {
+        // python param_count('cnn'): conv 432+16? weights only here.
+        let m = vgg_mini();
+        let expect = 3 * 3 * 3 * 16 + 3 * 3 * 16 * 32 + 3 * 3 * 32 * 64
+            + 1024 * 128 + 128 * 10;
+        assert_eq!(m.params, expect as u64);
+    }
+
+    #[test]
+    fn prefix_sums_consistent() {
+        let m = vgg11_cifar();
+        let total = m.bottom_flops(m.depth());
+        for l in 0..=m.depth() {
+            let (b, t) = (m.bottom_flops(l), m.top_flops(l));
+            assert!((b + t - total).abs() < 1e-6 * total);
+            assert!(b >= 0.0 && t >= 0.0);
+        }
+        assert_eq!(m.bottom_flops(0), 0.0);
+        assert_eq!(m.top_flops(m.depth()), 0.0);
+    }
+
+    #[test]
+    fn memory_monotone_in_partition_point() {
+        let m = vgg11_cifar();
+        for l in 1..=m.depth() {
+            assert!(m.bottom_mem(l, 100) >= m.bottom_mem(l - 1, 100));
+            assert!(m.top_mem(l, 100) <= m.top_mem(l - 1, 100));
+        }
+    }
+
+    #[test]
+    fn memory_scales_with_batch_for_activations_only() {
+        let m = vgg_mini();
+        let l = m.depth();
+        let small = m.bottom_mem(l, 1);
+        let big = m.bottom_mem(l, 101);
+        // activations grow linearly, weights constant
+        assert!(big > small);
+        let weights = 2.0 * 4.0 * m.params as f64;
+        assert!((big - small) > 0.0 && small > weights);
+    }
+
+    #[test]
+    fn vgg11_device_memory_fits_2gb_at_small_partition() {
+        // Sanity of §VII-A numbers: a 2 GB device can hold the first layers
+        // at batch 100 but not the whole network's activations.
+        let m = vgg11_cifar();
+        assert!(m.bottom_mem(2, 100) < 2.0e9);
+    }
+
+    #[test]
+    fn gamma_bits_is_32x_params() {
+        let m = mlp();
+        assert_eq!(m.gamma_bits(), m.params as f64 * 32.0);
+    }
+}

@@ -1,0 +1,175 @@
+//! Energy model (§III-B/C): harvested-energy arrivals and the training /
+//! transmission consumption formulas (Eq. 2, 3, 8, 9).
+//!
+//! Devices and gateways are battery-operated with energy-harvesting (EH)
+//! components; arrivals are IID uniform in [0, E^max] per round, and each
+//! round's consumption may not exceed that round's arrival (C9, C10).
+
+use crate::config::SimConfig;
+use crate::dnn::ModelSpec;
+use crate::rng::Rng;
+use crate::topo::{Device, Gateway};
+
+/// One round's energy arrivals.
+#[derive(Clone, Debug)]
+pub struct EnergyArrivals {
+    /// E_n^D(t) per device (J).
+    pub device: Vec<f64>,
+    /// E_m^G(t) per gateway (J).
+    pub gateway: Vec<f64>,
+}
+
+impl EnergyArrivals {
+    pub fn draw(cfg: &SimConfig, rng: &mut Rng) -> Self {
+        EnergyArrivals {
+            device: (0..cfg.num_devices)
+                .map(|_| rng.uniform(0.0, cfg.device_energy_max))
+                .collect(),
+            gateway: (0..cfg.num_gateways)
+                .map(|_| rng.uniform(0.0, cfg.gw_energy_max))
+                .collect(),
+        }
+    }
+}
+
+/// Cycles needed on the device for the bottom `l` layers of one local
+/// training pass over `batch` samples: K * batch * Σ(o+o') / phi.
+fn device_cycles(model: &ModelSpec, l: usize, batch: usize, k: usize, phi: f64) -> f64 {
+    k as f64 * batch as f64 * model.bottom_flops(l) / phi
+}
+
+fn gateway_cycles(model: &ModelSpec, l: usize, batch: usize, k: usize, phi: f64) -> f64 {
+    k as f64 * batch as f64 * model.top_flops(l) / phi
+}
+
+/// e_n^{tra,D}(t) (Eq. 2): device-side training energy at partition l.
+pub fn device_train_energy(
+    dev: &Device,
+    model: &ModelSpec,
+    l: usize,
+    k: usize,
+) -> f64 {
+    dev.kappa
+        * device_cycles(model, l, dev.train_batch, k, dev.flops_per_cycle)
+        * dev.freq
+        * dev.freq
+}
+
+/// Device-side training time contribution (the first term of Eq. 1).
+pub fn device_train_time(dev: &Device, model: &ModelSpec, l: usize, k: usize) -> f64 {
+    device_cycles(model, l, dev.train_batch, k, dev.flops_per_cycle) / dev.freq
+}
+
+/// e_m^{tra,G} contribution of one offloaded device (Eq. 3) at gateway
+/// frequency share `f_g`.
+pub fn gateway_train_energy(
+    gw: &Gateway,
+    dev: &Device,
+    model: &ModelSpec,
+    l: usize,
+    k: usize,
+    f_g: f64,
+) -> f64 {
+    gw.kappa
+        * gateway_cycles(model, l, dev.train_batch, k, gw.flops_per_cycle)
+        * f_g
+        * f_g
+}
+
+/// Gateway-side training time for one offloaded device (second term, Eq. 1).
+pub fn gateway_train_time(
+    gw: &Gateway,
+    dev: &Device,
+    model: &ModelSpec,
+    l: usize,
+    k: usize,
+    f_g: f64,
+) -> f64 {
+    if model.top_flops(l) == 0.0 {
+        return 0.0;
+    }
+    gateway_cycles(model, l, dev.train_batch, k, gw.flops_per_cycle) / f_g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::models;
+    use crate::topo::Topology;
+
+    fn fixtures() -> (Topology, ModelSpec) {
+        let cfg = SimConfig::default();
+        let t = Topology::generate(&cfg, &mut Rng::new(1));
+        (t, models::vgg11_cifar())
+    }
+
+    #[test]
+    fn arrivals_within_caps() {
+        let cfg = SimConfig::default();
+        let mut rng = Rng::new(2);
+        for _ in 0..20 {
+            let a = EnergyArrivals::draw(&cfg, &mut rng);
+            assert!(a.device.iter().all(|&e| (0.0..=cfg.device_energy_max).contains(&e)));
+            assert!(a.gateway.iter().all(|&e| (0.0..=cfg.gw_energy_max).contains(&e)));
+        }
+    }
+
+    #[test]
+    fn device_energy_monotone_in_partition_point() {
+        let (t, m) = fixtures();
+        let dev = &t.devices[0];
+        for l in 1..=m.depth() {
+            assert!(
+                device_train_energy(dev, &m, l, 5)
+                    >= device_train_energy(dev, &m, l - 1, 5)
+            );
+        }
+        assert_eq!(device_train_energy(dev, &m, 0, 5), 0.0);
+    }
+
+    #[test]
+    fn full_on_device_vgg11_energy_order_of_magnitude() {
+        // §VII-A sanity: full VGG-11 on-device training at ~0.5 GHz should
+        // cost a few J per round — comparable to E^D_max = 5 J.
+        let (t, m) = fixtures();
+        let dev = &t.devices[0];
+        let e = device_train_energy(dev, &m, m.depth(), 5);
+        assert!(e > 0.05 && e < 500.0, "e = {e}");
+    }
+
+    #[test]
+    fn gateway_time_scales_inverse_frequency() {
+        let (t, m) = fixtures();
+        let gw = &t.gateways[0];
+        let dev = &t.devices[0];
+        let t1 = gateway_train_time(gw, dev, &m, 4, 5, 1.0e9);
+        let t2 = gateway_train_time(gw, dev, &m, 4, 5, 2.0e9);
+        assert!((t1 / t2 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gateway_energy_scales_square_frequency() {
+        let (t, m) = fixtures();
+        let gw = &t.gateways[0];
+        let dev = &t.devices[0];
+        let e1 = gateway_train_energy(gw, dev, &m, 4, 5, 1.0e9);
+        let e2 = gateway_train_energy(gw, dev, &m, 4, 5, 2.0e9);
+        assert!((e2 / e1 - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fully_offloaded_has_zero_device_cost() {
+        let (t, m) = fixtures();
+        let dev = &t.devices[1];
+        assert_eq!(device_train_time(dev, &m, 0, 5), 0.0);
+        assert_eq!(device_train_energy(dev, &m, 0, 5), 0.0);
+    }
+
+    #[test]
+    fn fully_on_device_has_zero_gateway_time() {
+        let (t, m) = fixtures();
+        let gw = &t.gateways[0];
+        let dev = &t.devices[0];
+        assert_eq!(gateway_train_time(gw, dev, &m, m.depth(), 5, 1e9), 0.0);
+    }
+}

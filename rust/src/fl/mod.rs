@@ -1,0 +1,10 @@
+//! Federated learning core: FedAvg aggregation, the §IV device-specific
+//! participation-rate machinery, and the round-loop orchestrator that ties
+//! scheduling, simulation and PJRT execution together.
+
+pub mod orchestrator;
+pub mod participation;
+pub mod vecmath;
+
+pub use orchestrator::{Experiment, RoundRecord, RunLog, RunOpts};
+pub use participation::{gamma_rates, phi_m, GradStats};

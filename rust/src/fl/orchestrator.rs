@@ -1,0 +1,458 @@
+//! The FL orchestrator: owns one experiment (topology, data, channel and
+//! energy processes, PJRT engine) and runs schedulers against it.
+//!
+//! One communication round (§III-A):
+//!   1. draw the block-fading channel state and the EH energy arrivals;
+//!   2. the scheduler picks J gateways + resources (X(t));
+//!   3. feasibility is enforced (C7–C10) — infeasible plans "fail" and
+//!      contribute no update (the baselines' failure mode in §VII-C);
+//!   4. every scheduled device runs K local SGD iterations through the AOT
+//!      train-step artifact (device/gateway placement is simulated by the
+//!      cost model; the partitioned arithmetic is proven identical by
+//!      examples/partitioned_step);
+//!   5. shop-floor FedAvg then global FedAvg (both weight by D̃_n);
+//!   6. periodic evaluation on the IID test set.
+//!
+//! Environment realisations (channels, energy, batch sampling) are drawn
+//! from RNG streams forked from the config seed, NOT from scheduler state,
+//! so different schedulers face identical conditions — paired comparison,
+//! as in the paper's figures.
+
+use anyhow::{Context, Result};
+
+use crate::config::SimConfig;
+use crate::data::synth::{DatasetFlavor, SynthData, IMG_DIM};
+use crate::data::{shard_non_iid, DeviceShard};
+use crate::dnn::models;
+use crate::dnn::ModelSpec;
+use crate::energy::EnergyArrivals;
+use crate::fl::participation::GradStats;
+use crate::fl::vecmath;
+use crate::net::ChannelModel;
+use crate::rng::Rng;
+use crate::runtime::{Engine, Params};
+use crate::sched::latency::plan_cost;
+use crate::sched::{RoundCtx, RoundFeedback, Scheduler};
+use crate::topo::Topology;
+
+/// Options for one scheduler run.
+#[derive(Clone, Debug)]
+pub struct RunOpts {
+    pub rounds: usize,
+    /// Evaluate on the test set every this many rounds (0 = never).
+    pub eval_every: usize,
+    /// Track ||ŵ_m − v^{K,t}|| against a centralized-GD shadow (Fig. 2);
+    /// forces all devices to train each round for measurement.
+    pub track_divergence: bool,
+    /// Execute real training through PJRT. When false, only the
+    /// scheduling/delay simulation runs (used by scheduling-only benches).
+    pub train: bool,
+}
+
+impl Default for RunOpts {
+    fn default() -> Self {
+        RunOpts { rounds: 50, eval_every: 5, track_divergence: false, train: true }
+    }
+}
+
+/// Per-round record (one CSV row in the figure harness).
+#[derive(Clone, Debug)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// τ(t) (Eq. 10) in seconds.
+    pub delay: f64,
+    pub cum_delay: f64,
+    pub selected: Vec<bool>,
+    /// Selected but constraint-violating (update dropped).
+    pub failed: Vec<bool>,
+    /// Mean local training loss over participating devices.
+    pub train_loss: Option<f64>,
+    pub test_loss: Option<f64>,
+    pub test_acc: Option<f64>,
+    /// Measured ||ŵ_m − v^{K,t}|| per gateway (divergence mode only).
+    pub divergence: Option<Vec<f64>>,
+}
+
+/// Full run output.
+#[derive(Clone, Debug)]
+pub struct RunLog {
+    pub scheme: String,
+    pub records: Vec<RoundRecord>,
+    /// Empirical participation rate per gateway: (1/T) Σ_t 1_m^t.
+    pub participation: Vec<f64>,
+    /// Effective participation (selected AND feasible).
+    pub effective_participation: Vec<f64>,
+}
+
+impl RunLog {
+    pub fn final_accuracy(&self) -> Option<f64> {
+        self.records.iter().rev().find_map(|r| r.test_acc)
+    }
+
+    pub fn total_delay(&self) -> f64 {
+        self.records.last().map_or(0.0, |r| r.cum_delay)
+    }
+
+    /// Mean measured divergence per gateway over rounds (Fig. 2).
+    pub fn mean_divergence(&self) -> Option<Vec<f64>> {
+        let rows: Vec<&Vec<f64>> =
+            self.records.iter().filter_map(|r| r.divergence.as_ref()).collect();
+        if rows.is_empty() {
+            return None;
+        }
+        let m = rows[0].len();
+        Some(
+            (0..m)
+                .map(|i| rows.iter().map(|r| r[i]).sum::<f64>() / rows.len() as f64)
+                .collect(),
+        )
+    }
+}
+
+/// One fully-instantiated experiment.
+pub struct Experiment {
+    pub cfg: SimConfig,
+    pub topo: Topology,
+    /// Cost-model DNN the scheduler plans with.
+    pub cost_model: ModelSpec,
+    pub chan: ChannelModel,
+    pub shards: Vec<DeviceShard>,
+    pub test_x: Vec<f32>,
+    pub test_y: Vec<i32>,
+    pub engine: Engine,
+}
+
+impl Experiment {
+    /// Build topology, channels, data and load the PJRT engine.
+    pub fn new(cfg: SimConfig) -> Result<Self> {
+        Self::with_artifacts(cfg, std::path::Path::new("artifacts"))
+    }
+
+    pub fn with_artifacts(cfg: SimConfig, artifacts: &std::path::Path) -> Result<Self> {
+        cfg.validate()?;
+        let mut rng = Rng::new(cfg.seed);
+        let topo = Topology::generate(&cfg, &mut rng.fork(1));
+        let chan = ChannelModel::new(&cfg, &topo, &mut rng.fork(2));
+        let flavor = DatasetFlavor::parse(&cfg.dataset)
+            .with_context(|| format!("unknown dataset {:?}", cfg.dataset))?;
+        let mut data_rng = rng.fork(3);
+        let data = SynthData::new(flavor, &mut data_rng);
+        let shards = shard_non_iid(&cfg, &topo, &data, &mut data_rng);
+        let (test_x, test_y) = data.test_set(cfg.test_size, &mut data_rng);
+        let cost_model = models::by_name(&cfg.cost_model)
+            .with_context(|| format!("unknown cost model {:?}", cfg.cost_model))?;
+        let engine = Engine::load(artifacts, &cfg.exec_model)?;
+        Ok(Experiment { cfg, topo, cost_model, chan, shards, test_x, test_y, engine })
+    }
+
+    /// Construct a scheduler by scheme name. DDSRA variants estimate the
+    /// gradient statistics (§IV) to derive the participation rates Γ_m.
+    ///
+    /// Schemes: "ddsra" (V from config), "participation" (DDSRA with V=0 —
+    /// the pure device-specific participation-rate policy of Fig. 3),
+    /// "random", "round_robin", "loss_driven", "delay_driven".
+    pub fn make_scheduler(&self, scheme: &str) -> Result<Box<dyn Scheduler>> {
+        use crate::fl::participation::gamma_rates;
+        use crate::sched::{Ddsra, DelayDriven, LossDriven, RandomSched, RoundRobin};
+        let gammas = || -> Result<Vec<f64>> {
+            let stats = self.estimate_grad_stats(4)?;
+            Ok(gamma_rates(
+                &self.topo,
+                &stats,
+                self.cfg.num_channels,
+                self.cfg.lr,
+                self.cfg.local_iters,
+            )
+            .1)
+        };
+        Ok(match scheme {
+            "ddsra" => Box::new(Ddsra::new(self.cfg.lyapunov_v, gammas()?)),
+            "participation" => Box::new(Ddsra::new(0.0, gammas()?)),
+            "random" => Box::new(RandomSched::new(self.cfg.seed ^ 0xaa11)),
+            "round_robin" => Box::new(RoundRobin::new()),
+            "loss_driven" => {
+                Box::new(LossDriven::new(self.topo.num_gateways(), self.cfg.seed ^ 0xbb22))
+            }
+            "delay_driven" => Box::new(DelayDriven),
+            other => anyhow::bail!("unknown scheme {other:?}"),
+        })
+    }
+
+    /// Sample a training batch (with replacement) from device n's shard.
+    fn sample_batch(&self, n: usize, rng: &mut Rng) -> (Vec<f32>, Vec<i32>) {
+        let b = self.engine.meta.train_batch;
+        let shard = &self.shards[n];
+        let mut x = Vec::with_capacity(b * IMG_DIM);
+        let mut y = Vec::with_capacity(b);
+        for _ in 0..b {
+            let i = rng.below(shard.len());
+            x.extend_from_slice(&shard.images[i * IMG_DIM..(i + 1) * IMG_DIM]);
+            y.push(shard.labels[i]);
+        }
+        (x, y)
+    }
+
+    /// K local SGD iterations for device n from `start`; returns the
+    /// updated params and the mean local loss.
+    ///
+    /// Uses the fused K-step artifact when its baked K matches the config
+    /// (§Perf: one PJRT call + one parameter round-trip instead of K);
+    /// falls back to K single-step calls otherwise.
+    fn local_train(&self, n: usize, start: &Params, rng: &mut Rng) -> Result<(Params, f64)> {
+        let k = self.cfg.local_iters;
+        if self.engine.fused_k() == Some(k) {
+            let b = self.engine.meta.train_batch;
+            let mut xs = Vec::with_capacity(k * b * IMG_DIM);
+            let mut ys = Vec::with_capacity(k * b);
+            for _ in 0..k {
+                let (x, y) = self.sample_batch(n, rng);
+                xs.extend(x);
+                ys.extend(y);
+            }
+            let (w, loss) = self.engine.train_k_steps(start, &xs, &ys, self.cfg.lr as f32)?;
+            return Ok((w, loss as f64));
+        }
+        let mut w = start.clone();
+        let mut loss_sum = 0.0;
+        for _ in 0..k {
+            let (x, y) = self.sample_batch(n, rng);
+            let (nw, loss) = self.engine.train_step(&w, &x, &y, self.cfg.lr as f32)?;
+            w = nw;
+            loss_sum += loss as f64;
+        }
+        Ok((w, loss_sum / k as f64))
+    }
+
+    /// Estimate σ_n, δ_n, L_n (§IV Assumptions) by gradient probing at the
+    /// current init. `probes` minibatch gradients per device.
+    pub fn estimate_grad_stats(&self, probes: usize) -> Result<GradStats> {
+        let params = self.engine.init_params()?;
+        let mut rng = Rng::new(self.cfg.seed ^ 0x9d0b);
+        let n_dev = self.topo.num_devices();
+        let b = self.engine.meta.train_batch as f64;
+
+        // Per-device mean gradient + per-batch deviations.
+        let mut mean_grads: Vec<Vec<f32>> = Vec::with_capacity(n_dev);
+        let mut batch_grads: Vec<Vec<Vec<f32>>> = Vec::with_capacity(n_dev);
+        for n in 0..n_dev {
+            let gs: Vec<Vec<f32>> = (0..probes)
+                .map(|_| {
+                    let (x, y) = self.sample_batch(n, &mut rng);
+                    self.engine.grad(&params, &x, &y)
+                })
+                .collect::<Result<_>>()?;
+            mean_grads.push(vecmath::mean_flat(&gs));
+            batch_grads.push(gs);
+        }
+
+        // Global gradient: dataset-size-weighted mean (∇F definition).
+        let weighted: Vec<(&[f32], f64)> = (0..n_dev)
+            .map(|n| (mean_grads[n].as_slice(), self.topo.devices[n].dataset_size as f64))
+            .collect();
+        let global = vecmath::weighted_mean_flat(&weighted);
+
+        // σ_n ≈ √B · E_b ||g_b − ∇F_n|| (Assumption 1, minibatch estimator).
+        let sigma: Vec<f64> = (0..n_dev)
+            .map(|n| {
+                let mean_dev: f64 = batch_grads[n]
+                    .iter()
+                    .map(|g| vecmath::flat_l2_diff(g, &mean_grads[n]))
+                    .sum::<f64>()
+                    / probes as f64;
+                b.sqrt() * mean_dev
+            })
+            .collect();
+
+        // δ_n = ||∇F_n − ∇F|| (Assumption 2).
+        let delta: Vec<f64> = (0..n_dev)
+            .map(|n| vecmath::flat_l2_diff(&mean_grads[n], &global))
+            .collect();
+
+        // L_n: finite-difference smoothness probe along a random direction.
+        let mut lsmooth = Vec::with_capacity(n_dev);
+        let eps = 1e-2f32;
+        for n in 0..n_dev {
+            let mut pert = params.clone();
+            let mut dir_norm_sq = 0.0f64;
+            let mut prng = Rng::new(self.cfg.seed ^ (n as u64) << 8 ^ 0x51);
+            for t in pert.iter_mut() {
+                for v in t.iter_mut() {
+                    let d = prng.normal() as f32;
+                    *v += eps * d;
+                    dir_norm_sq += (eps * d) as f64 * (eps * d) as f64;
+                }
+            }
+            let (x, y) = self.sample_batch(n, &mut rng);
+            let g0 = self.engine.grad(&params, &x, &y)?;
+            let g1 = self.engine.grad(&pert, &x, &y)?;
+            let l = vecmath::flat_l2_diff(&g1, &g0) / dir_norm_sq.sqrt();
+            lsmooth.push(l.max(1e-6));
+        }
+
+        Ok(GradStats { sigma, delta, lsmooth })
+    }
+
+    /// Run one scheduler for `opts.rounds` communication rounds.
+    pub fn run(&self, sched: &mut dyn Scheduler, opts: &RunOpts) -> Result<RunLog> {
+        let mm = self.topo.num_gateways();
+        // Environment streams: identical across schedulers (paired runs).
+        let mut chan_rng = Rng::new(self.cfg.seed ^ 0xc4a1);
+        let mut energy_rng = Rng::new(self.cfg.seed ^ 0xe9e1);
+        let mut sample_rng = Rng::new(self.cfg.seed ^ 0x5a3c);
+
+        let mut params = self.engine.init_params()?;
+        let mut records = Vec::with_capacity(opts.rounds);
+        let mut cum_delay = 0.0;
+        let mut sel_counts = vec![0usize; mm];
+        let mut eff_counts = vec![0usize; mm];
+
+        for t in 0..opts.rounds {
+            let state = self.chan.draw(&mut chan_rng);
+            let arrivals = EnergyArrivals::draw(&self.cfg, &mut energy_rng);
+            let ctx = RoundCtx {
+                cfg: &self.cfg,
+                topo: &self.topo,
+                model: &self.cost_model,
+                chan: &self.chan,
+                state: &state,
+                arrivals: &arrivals,
+                round: t,
+            };
+            let decision = sched.schedule(&ctx);
+            let delay = decision.round_delay();
+            cum_delay += delay;
+
+            let mut selected = vec![false; mm];
+            let mut failed = vec![false; mm];
+            let mut avg_loss: Vec<Option<f64>> = vec![None; mm];
+            // (params, weight) updates that survive feasibility.
+            let mut updates: Vec<(Params, f64)> = Vec::new();
+            let mut loss_accum = 0.0;
+            let mut loss_count = 0usize;
+
+            for plan in &decision.plans {
+                let m = plan.gateway;
+                selected[m] = true;
+                sel_counts[m] += 1;
+                let cost = plan_cost(&ctx, plan);
+                if !cost.feasible() {
+                    failed[m] = true;
+                    continue; // "fails to complete local model training"
+                }
+                eff_counts[m] += 1;
+                if opts.train {
+                    let mut floor_loss = 0.0;
+                    let members = &self.topo.gateways[m].members;
+                    for &n in members {
+                        let (w, loss) = self.local_train(n, &params, &mut sample_rng)?;
+                        let weight = self.topo.devices[n].train_batch as f64;
+                        updates.push((w, weight));
+                        floor_loss += loss;
+                        loss_accum += loss;
+                        loss_count += 1;
+                    }
+                    avg_loss[m] = Some(floor_loss / members.len() as f64);
+                }
+            }
+
+            // Divergence measurement (Fig. 2): every device trains from the
+            // current global model; centralized GD shadows on the union.
+            let divergence = if opts.track_divergence && opts.train {
+                Some(self.measure_divergence(&params, &mut sample_rng, &mut avg_loss)?)
+            } else {
+                None
+            };
+
+            // Global FedAvg (Eq. in §III-A step 3). Weighting by D̃_n makes
+            // the two-stage (floor, then BS) aggregation a single weighted
+            // average.
+            if !updates.is_empty() {
+                let refs: Vec<(&Params, f64)> = updates.iter().map(|(p, w)| (p, *w)).collect();
+                params = vecmath::weighted_average(&refs);
+            }
+
+            sched.observe(&RoundFeedback { avg_loss });
+
+            let (test_loss, test_acc) = if opts.eval_every > 0
+                && opts.train
+                && (t % opts.eval_every == opts.eval_every - 1 || t + 1 == opts.rounds)
+            {
+                let (l, a) = self.engine.eval_full(&params, &self.test_x, &self.test_y)?;
+                (Some(l), Some(a))
+            } else {
+                (None, None)
+            };
+
+            records.push(RoundRecord {
+                round: t,
+                delay,
+                cum_delay,
+                selected,
+                failed,
+                train_loss: (loss_count > 0).then(|| loss_accum / loss_count as f64),
+                test_loss,
+                test_acc,
+                divergence,
+            });
+        }
+
+        let t = opts.rounds as f64;
+        Ok(RunLog {
+            scheme: sched.name(),
+            records,
+            participation: sel_counts.iter().map(|&c| c as f64 / t).collect(),
+            effective_participation: eff_counts.iter().map(|&c| c as f64 / t).collect(),
+        })
+    }
+
+    /// Fig. 2 machinery: all devices train locally; a centralized-GD shadow
+    /// runs K steps on the union gradient; returns ||ŵ_m − v^{K,t}|| per
+    /// gateway.
+    fn measure_divergence(
+        &self,
+        params: &Params,
+        rng: &mut Rng,
+        avg_loss: &mut [Option<f64>],
+    ) -> Result<Vec<f64>> {
+        let n_dev = self.topo.num_devices();
+        // Local updates for every device.
+        let mut local: Vec<Params> = Vec::with_capacity(n_dev);
+        let mut losses: Vec<f64> = Vec::with_capacity(n_dev);
+        for n in 0..n_dev {
+            let (w, loss) = self.local_train(n, params, rng)?;
+            local.push(w);
+            losses.push(loss);
+        }
+        // Centralized GD shadow: v ← v − β · ∇F(v), with ∇F estimated as
+        // the dataset-weighted mean of per-device minibatch gradients.
+        let mut v = params.clone();
+        for _ in 0..self.cfg.local_iters {
+            let grads: Vec<Vec<f32>> = (0..n_dev)
+                .map(|n| {
+                    let (x, y) = self.sample_batch(n, rng);
+                    self.engine.grad(&v, &x, &y)
+                })
+                .collect::<Result<_>>()?;
+            let weighted: Vec<(&[f32], f64)> = (0..n_dev)
+                .map(|n| (grads[n].as_slice(), self.topo.devices[n].dataset_size as f64))
+                .collect();
+            let g = vecmath::weighted_mean_flat(&weighted);
+            vecmath::sgd_step_flat(&mut v, &g, self.cfg.lr as f32);
+        }
+        // Per-gateway aggregated model vs the shadow.
+        let mut out = Vec::with_capacity(self.topo.num_gateways());
+        for gw in &self.topo.gateways {
+            let refs: Vec<(&Params, f64)> = gw
+                .members
+                .iter()
+                .map(|&n| (&local[n], self.topo.devices[n].train_batch as f64))
+                .collect();
+            let w_hat = vecmath::weighted_average(&refs);
+            out.push(vecmath::l2_diff(&w_hat, &v));
+            let floor_loss: f64 =
+                gw.members.iter().map(|&n| losses[n]).sum::<f64>() / gw.members.len() as f64;
+            avg_loss[gw.id] = Some(floor_loss);
+        }
+        Ok(out)
+    }
+}

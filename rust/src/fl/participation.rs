@@ -1,0 +1,162 @@
+//! Device-specific participation rate (§IV).
+//!
+//! Theorem 1 bounds the divergence between a shop floor's aggregated model
+//! and the centralized-GD trajectory:
+//!
+//!   Φ_m = Σ_n  (a_{m,n} D̃_n / Σ a D̃) · (σ_n/(L_n √D̃_n) + δ_n/L_n)
+//!         · ((β L_n + 1)^K − 1)                                 (Eq. 12)
+//!
+//! and Eq. 13 turns the Φ's into rates: Γ_m = min(J · (1/Φ_m)/Σ(1/Φ), 1).
+//! Gateways whose devices' data better represent the global distribution
+//! (small σ_n, δ_n) get larger Γ_m — they join more rounds.
+
+use crate::topo::Topology;
+
+/// Per-device gradient statistics estimated from the running model
+/// (Assumptions 1–2 made measurable).
+#[derive(Clone, Debug)]
+pub struct GradStats {
+    /// σ_n: per-sample gradient variance bound.
+    pub sigma: Vec<f64>,
+    /// δ_n: local-vs-global gradient divergence.
+    pub delta: Vec<f64>,
+    /// L_n: smoothness estimate.
+    pub lsmooth: Vec<f64>,
+}
+
+/// Φ_m (Eq. 12) for gateway m.
+pub fn phi_m(
+    topo: &Topology,
+    m: usize,
+    stats: &GradStats,
+    beta: f64,
+    local_iters: usize,
+) -> f64 {
+    let gw = &topo.gateways[m];
+    let total_batch: f64 = gw
+        .members
+        .iter()
+        .map(|&n| topo.devices[n].train_batch as f64)
+        .sum();
+    gw.members
+        .iter()
+        .map(|&n| {
+            let dn = topo.devices[n].train_batch as f64;
+            let ln = stats.lsmooth[n].max(1e-9);
+            let growth = (beta * ln + 1.0).powi(local_iters as i32) - 1.0;
+            (dn / total_batch)
+                * (stats.sigma[n] / (ln * dn.sqrt()) + stats.delta[n] / ln)
+                * growth
+        })
+        .sum()
+}
+
+/// Γ_m for every gateway (Eq. 13) from divergence bounds `phis`.
+pub fn gamma_from_phi(phis: &[f64], num_channels: usize) -> Vec<f64> {
+    let inv: Vec<f64> = phis.iter().map(|&p| 1.0 / p.max(1e-30)).collect();
+    let total: f64 = inv.iter().sum();
+    inv.iter()
+        .map(|&i| (num_channels as f64 * i / total).min(1.0))
+        .collect()
+}
+
+/// Convenience: Φ then Γ for all gateways.
+pub fn gamma_rates(
+    topo: &Topology,
+    stats: &GradStats,
+    num_channels: usize,
+    beta: f64,
+    local_iters: usize,
+) -> (Vec<f64>, Vec<f64>) {
+    let phis: Vec<f64> = (0..topo.num_gateways())
+        .map(|m| phi_m(topo, m, stats, beta, local_iters))
+        .collect();
+    let gammas = gamma_from_phi(&phis, num_channels);
+    (phis, gammas)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::rng::Rng;
+    use crate::topo::Topology;
+
+    fn topo() -> Topology {
+        Topology::generate(&SimConfig::default(), &mut Rng::new(1))
+    }
+
+    fn uniform_stats(n: usize, sigma: f64, delta: f64) -> GradStats {
+        GradStats {
+            sigma: vec![sigma; n],
+            delta: vec![delta; n],
+            lsmooth: vec![1.0; n],
+        }
+    }
+
+    #[test]
+    fn equal_stats_give_equal_gamma() {
+        let t = topo();
+        let s = uniform_stats(12, 1.0, 1.0);
+        let (_, g) = gamma_rates(&t, &s, 3, 0.01, 5);
+        // batch sizes differ per device, so rates are only approximately
+        // equal — but all must lie in (0, 1] and sum <= J (before clipping,
+        // exactly J).
+        assert!(g.iter().all(|&x| x > 0.0 && x <= 1.0));
+        let sum: f64 = g.iter().sum();
+        assert!(sum <= 3.0 + 1e-9);
+    }
+
+    #[test]
+    fn better_distribution_gets_higher_rate() {
+        let t = topo();
+        let mut s = uniform_stats(12, 1.0, 1.0);
+        // gateway 0's devices have much lower divergence
+        for &n in &t.gateways[0].members {
+            s.delta[n] = 0.05;
+            s.sigma[n] = 0.05;
+        }
+        let (phis, g) = gamma_rates(&t, &s, 3, 0.01, 5);
+        for m in 1..6 {
+            assert!(phis[0] < phis[m]);
+            assert!(g[0] >= g[m]);
+        }
+    }
+
+    #[test]
+    fn gamma_clipped_at_one() {
+        // One overwhelmingly good gateway must still have Γ <= 1.
+        let g = gamma_from_phi(&[1e-6, 1.0, 1.0, 1.0, 1.0, 1.0], 3);
+        assert!(g[0] <= 1.0);
+        assert!(g.iter().all(|&x| (0.0..=1.0).contains(&x)));
+    }
+
+    #[test]
+    fn phi_grows_with_local_epochs() {
+        // Theorem 1: divergence increases with K.
+        let t = topo();
+        let s = uniform_stats(12, 1.0, 1.0);
+        let p1 = phi_m(&t, 0, &s, 0.01, 1);
+        let p5 = phi_m(&t, 0, &s, 0.01, 5);
+        let p20 = phi_m(&t, 0, &s, 0.01, 20);
+        assert!(p1 < p5 && p5 < p20);
+    }
+
+    #[test]
+    fn phi_shrinks_with_larger_training_batch() {
+        // Theorem 1: larger D̃_n ⇒ smaller divergence (σ term only).
+        let t = topo();
+        let s = GradStats {
+            sigma: vec![1.0; 12],
+            delta: vec![0.0; 12],
+            lsmooth: vec![1.0; 12],
+        };
+        // scale batch sizes up by cloning topo with bigger sample ratio
+        let mut cfg = SimConfig::default();
+        cfg.sample_ratio = 0.5;
+        let t_big = Topology::generate(&cfg, &mut Rng::new(1));
+        let small = phi_m(&t, 0, &s, 0.01, 5);
+        let big = phi_m(&t_big, 0, &s, 0.01, 5);
+        assert!(big < small, "big {big} small {small}");
+    }
+}

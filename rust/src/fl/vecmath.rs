@@ -1,0 +1,159 @@
+//! Flat-vector arithmetic over model parameters (`Params`): FedAvg,
+//! divergence norms, and manual SGD steps for the centralized-GD shadow
+//! run all reduce to these primitives.
+
+use crate::runtime::Params;
+
+/// ||a - b||_2 across all tensors.
+pub fn l2_diff(a: &Params, b: &Params) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f64;
+    for (ta, tb) in a.iter().zip(b) {
+        debug_assert_eq!(ta.len(), tb.len());
+        for (&x, &y) in ta.iter().zip(tb) {
+            let d = (x - y) as f64;
+            acc += d * d;
+        }
+    }
+    acc.sqrt()
+}
+
+/// ||a||_2 of a flat vector.
+pub fn norm(a: &[f32]) -> f64 {
+    a.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+}
+
+/// ||a - b||_2 of flat vectors.
+pub fn flat_l2_diff(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let d = (x - y) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// Weighted average of parameter sets (FedAvg): Σ w_i p_i / Σ w_i.
+pub fn weighted_average(sets: &[(&Params, f64)]) -> Params {
+    assert!(!sets.is_empty(), "FedAvg over empty participant set");
+    let total: f64 = sets.iter().map(|(_, w)| w).sum();
+    assert!(total > 0.0, "FedAvg weights sum to zero");
+    let proto = sets[0].0;
+    let mut out: Params = proto.iter().map(|t| vec![0.0f32; t.len()]).collect();
+    for (params, w) in sets {
+        let scale = (w / total) as f32;
+        for (o, t) in out.iter_mut().zip(params.iter()) {
+            for (ov, &tv) in o.iter_mut().zip(t) {
+                *ov += scale * tv;
+            }
+        }
+    }
+    out
+}
+
+/// In-place SGD step on params from a flat gradient: p -= lr * g.
+pub fn sgd_step_flat(params: &mut Params, flat_grad: &[f32], lr: f32) {
+    let mut off = 0;
+    for t in params.iter_mut() {
+        for v in t.iter_mut() {
+            *v -= lr * flat_grad[off];
+            off += 1;
+        }
+    }
+    debug_assert_eq!(off, flat_grad.len());
+}
+
+/// Element-wise mean of flat vectors.
+pub fn mean_flat(vs: &[Vec<f32>]) -> Vec<f32> {
+    assert!(!vs.is_empty());
+    let mut out = vec![0.0f32; vs[0].len()];
+    let scale = 1.0 / vs.len() as f32;
+    for v in vs {
+        for (o, &x) in out.iter_mut().zip(v) {
+            *o += scale * x;
+        }
+    }
+    out
+}
+
+/// Weighted mean of flat vectors.
+pub fn weighted_mean_flat(vs: &[(&[f32], f64)]) -> Vec<f32> {
+    assert!(!vs.is_empty());
+    let total: f64 = vs.iter().map(|(_, w)| w).sum();
+    let mut out = vec![0.0f32; vs[0].0.len()];
+    for (v, w) in vs {
+        let s = (w / total) as f32;
+        for (o, &x) in out.iter_mut().zip(v.iter()) {
+            *o += s * x;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(vals: &[&[f32]]) -> Params {
+        vals.iter().map(|v| v.to_vec()).collect()
+    }
+
+    #[test]
+    fn l2_diff_basic() {
+        let a = p(&[&[0.0, 3.0], &[4.0]]);
+        let b = p(&[&[0.0, 0.0], &[0.0]]);
+        assert!((l2_diff(&a, &b) - 5.0).abs() < 1e-12);
+        assert_eq!(l2_diff(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn fedavg_weighted() {
+        let a = p(&[&[0.0]]);
+        let b = p(&[&[10.0]]);
+        let avg = weighted_average(&[(&a, 1.0), (&b, 3.0)]);
+        assert!((avg[0][0] - 7.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fedavg_identity_single() {
+        let a = p(&[&[1.0, 2.0], &[3.0]]);
+        let avg = weighted_average(&[(&a, 5.0)]);
+        assert_eq!(avg, a);
+    }
+
+    #[test]
+    fn fedavg_preserves_convex_hull() {
+        let a = p(&[&[1.0]]);
+        let b = p(&[&[2.0]]);
+        let c = p(&[&[3.0]]);
+        let avg = weighted_average(&[(&a, 1.0), (&b, 1.0), (&c, 1.0)]);
+        assert!(avg[0][0] >= 1.0 && avg[0][0] <= 3.0);
+        assert!((avg[0][0] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sgd_step() {
+        let mut params = p(&[&[1.0, 1.0], &[1.0]]);
+        sgd_step_flat(&mut params, &[1.0, 2.0, 3.0], 0.1);
+        assert!((params[0][0] - 0.9).abs() < 1e-6);
+        assert!((params[0][1] - 0.8).abs() < 1e-6);
+        assert!((params[1][0] - 0.7).abs() < 1e-6);
+    }
+
+    #[test]
+    fn means() {
+        let m = mean_flat(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        assert_eq!(m, vec![2.0, 3.0]);
+        let wm = weighted_mean_flat(&[(&[0.0][..], 1.0), (&[4.0][..], 3.0)]);
+        assert!((wm[0] - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn norms() {
+        assert!((norm(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
+        assert!((flat_l2_diff(&[1.0, 1.0], &[1.0, 2.0]) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,39 @@
+//! # iiot-fl — Low-latency Federated Learning with DNN Partition (DDSRA)
+//!
+//! Full-system reproduction of Deng et al., "Low-latency Federated Learning
+//! with DNN Partition in Distributed Industrial IoT Networks" (2022).
+//!
+//! Layer 3 of the three-layer stack: the rust coordinator owns the FL round
+//! loop, the DDSRA scheduler (Lyapunov drift-plus-penalty + block coordinate
+//! descent + bisection + Hungarian), the wireless/energy/memory simulators,
+//! and the PJRT runtime that executes the AOT-compiled JAX/Pallas artifacts.
+//! Python never runs on the request path.
+//!
+//! Module map (see DESIGN.md for the full system inventory):
+//! - [`dnn`] — layer-level FLOPs/memory model (paper Table II) + model zoo
+//! - [`topo`] — devices / gateways / shop floors / deployment matrix
+//! - [`net`] — block-fading wireless channels (Eq. 6–8)
+//! - [`energy`] — energy-harvesting arrivals + consumption (Eq. 2, 3, 9)
+//! - [`opt`] — Hungarian assignment + scalar bisection substrates
+//! - [`sched`] — DDSRA (§V) and the four baseline schedulers
+//! - [`fl`] — FL orchestration, FedAvg, participation rates (§IV)
+//! - [`data`] — synthetic SVHN/CIFAR-like datasets + non-IID sharding
+//! - [`runtime`] — PJRT CPU client over the AOT HLO artifacts
+//! - [`rng`], [`config`], [`metrics`], [`cli`] — infrastructure
+
+pub mod cli;
+pub mod config;
+pub mod data;
+pub mod dnn;
+pub mod energy;
+pub mod fl;
+pub mod metrics;
+pub mod net;
+pub mod opt;
+pub mod rng;
+pub mod runtime;
+pub mod sched;
+pub mod topo;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

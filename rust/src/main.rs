@@ -1,0 +1,171 @@
+//! iiot-fl — launcher for the DDSRA federated-learning system.
+//!
+//! Subcommands:
+//!   train          run one scheduler for T rounds with real PJRT training
+//!   participation  estimate Γ_m (Eq. 13) for the current config
+//!   info           print the cost-model layer table (Table II view)
+//!
+//! Examples:
+//!   iiot-fl train --scheme ddsra --v 0.01 --rounds 100 --dataset svhn
+//!   iiot-fl train --scheme round_robin --rounds 50 --out results/rr.csv
+//!   iiot-fl participation --dataset cifar
+//!   iiot-fl info --cost-model vgg11
+
+use std::path::Path;
+
+use anyhow::Result;
+use iiot_fl::cli::Args;
+use iiot_fl::dnn::models;
+use iiot_fl::fl::{Experiment, RunOpts};
+use iiot_fl::metrics::{print_table, write_run_csv};
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv)?;
+    match args.command.as_str() {
+        "train" => cmd_train(&args),
+        "participation" => cmd_participation(&args),
+        "info" => cmd_info(&args),
+        "" | "help" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            anyhow::bail!("unknown command {other:?}")
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "iiot-fl — Low-latency FL with DNN Partition (DDSRA)\n\
+         commands: train | participation | info\n\
+         common flags: --rounds N --v V --seed S --dataset svhn|cifar\n\
+         \u{20}                --preset mlp|cnn --cost-model vgg11|cnn|mlp\n\
+         \u{20}                --set key=value (any config key) --config file\n\
+         train flags:  --scheme ddsra|participation|random|round_robin|\n\
+         \u{20}                loss_driven|delay_driven --out results/run.csv\n\
+         \u{20}                --eval-every N --no-train --divergence"
+    );
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = args.sim_config()?;
+    let scheme = args.get_or("scheme", "ddsra").to_string();
+    let exp = Experiment::new(cfg)?;
+    let mut sched = exp.make_scheduler(&scheme)?;
+    let opts = RunOpts {
+        rounds: exp.cfg.rounds,
+        eval_every: args.parse_num::<usize>("eval-every")?.unwrap_or(5),
+        track_divergence: args.has("divergence"),
+        train: !args.has("no-train"),
+    };
+    eprintln!(
+        "[train] scheme={} rounds={} dataset={} exec={} cost={}",
+        sched.name(),
+        opts.rounds,
+        exp.cfg.dataset,
+        exp.cfg.exec_model,
+        exp.cfg.cost_model
+    );
+    let log = exp.run(sched.as_mut(), &opts)?;
+    if let Some(path) = args.get("out") {
+        write_run_csv(&log, Path::new(path))?;
+        eprintln!("[train] wrote {path}");
+    }
+    let rows: Vec<Vec<String>> = log
+        .records
+        .iter()
+        .filter(|r| r.test_acc.is_some() || r.round + 1 == log.records.len())
+        .map(|r| {
+            vec![
+                r.round.to_string(),
+                format!("{:.2}", r.cum_delay),
+                r.train_loss.map_or("-".into(), |v| format!("{v:.4}")),
+                r.test_acc.map_or("-".into(), |v| format!("{:.2}%", v * 100.0)),
+            ]
+        })
+        .collect();
+    print_table(
+        &format!("{} on {}", log.scheme, exp.cfg.dataset),
+        &["round", "cum_delay_s", "train_loss", "test_acc"],
+        &rows,
+    );
+    let prow: Vec<Vec<String>> = (0..exp.topo.num_gateways())
+        .map(|m| {
+            vec![
+                format!("gw{m}"),
+                format!("{:.3}", log.participation[m]),
+                format!("{:.3}", log.effective_participation[m]),
+            ]
+        })
+        .collect();
+    print_table("participation", &["gateway", "selected", "effective"], &prow);
+    Ok(())
+}
+
+fn cmd_participation(args: &Args) -> Result<()> {
+    let cfg = args.sim_config()?;
+    let exp = Experiment::new(cfg)?;
+    let stats = exp.estimate_grad_stats(4)?;
+    let (phis, gammas) = iiot_fl::fl::gamma_rates(
+        &exp.topo,
+        &stats,
+        exp.cfg.num_channels,
+        exp.cfg.lr,
+        exp.cfg.local_iters,
+    );
+    let rows: Vec<Vec<String>> = (0..exp.topo.num_gateways())
+        .map(|m| {
+            let members = &exp.topo.gateways[m].members;
+            vec![
+                format!("gw{m}"),
+                format!("{:.4}", phis[m]),
+                format!("{:.4}", gammas[m]),
+                members
+                    .iter()
+                    .map(|&n| exp.shards[n].classes.len().to_string())
+                    .collect::<Vec<_>>()
+                    .join("/"),
+            ]
+        })
+        .collect();
+    print_table(
+        &format!("device-specific participation rates ({})", exp.cfg.dataset),
+        &["gateway", "phi_m", "gamma_m", "classes"],
+        &rows,
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let cfg = args.sim_config()?;
+    let model = models::by_name(&cfg.cost_model)
+        .ok_or_else(|| anyhow::anyhow!("unknown cost model {:?}", cfg.cost_model))?;
+    let rows: Vec<Vec<String>> = model
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(i, l)| {
+            vec![
+                (i + 1).to_string(),
+                l.short_name().to_string(),
+                format!("{:.3e}", l.o()),
+                format!("{:.3e}", l.o_prime()),
+                format!("{:.1}", l.cost(100, 4).mem_bytes / 1e6),
+            ]
+        })
+        .collect();
+    print_table(
+        &format!(
+            "{} — Table II per-layer costs (batch 100); {} params, gamma = {:.0} Mbit",
+            model.name,
+            model.params,
+            model.gamma_bits() / 1e6
+        ),
+        &["layer", "kind", "o_l (FLOPs)", "o'_l (FLOPs)", "mem (MB)"],
+        &rows,
+    );
+    Ok(())
+}

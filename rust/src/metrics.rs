@@ -1,0 +1,102 @@
+//! CSV emitters for run logs — every figure in the paper is regenerated as
+//! a CSV under `results/` plus a printed table.
+
+use std::fs;
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::fl::RunLog;
+
+/// Minimal CSV writer (no external deps offline).
+pub struct Csv {
+    file: fs::File,
+    cols: usize,
+}
+
+impl Csv {
+    pub fn create(path: &Path, header: &[&str]) -> Result<Self> {
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir).with_context(|| format!("mkdir {dir:?}"))?;
+        }
+        let mut file = fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+        writeln!(file, "{}", header.join(","))?;
+        Ok(Csv { file, cols: header.len() })
+    }
+
+    pub fn row(&mut self, fields: &[String]) -> Result<()> {
+        anyhow::ensure!(fields.len() == self.cols, "row width {} != header {}", fields.len(), self.cols);
+        writeln!(self.file, "{}", fields.join(","))?;
+        Ok(())
+    }
+
+    pub fn rowf(&mut self, fields: &[f64]) -> Result<()> {
+        self.row(&fields.iter().map(|v| format!("{v}")).collect::<Vec<_>>())
+    }
+}
+
+/// Write one run's per-round records.
+pub fn write_run_csv(log: &RunLog, path: &Path) -> Result<()> {
+    let mut csv = Csv::create(
+        path,
+        &["round", "delay", "cum_delay", "train_loss", "test_loss", "test_acc", "num_selected", "num_failed"],
+    )?;
+    for r in &log.records {
+        csv.row(&[
+            r.round.to_string(),
+            format!("{:.6}", r.delay),
+            format!("{:.6}", r.cum_delay),
+            r.train_loss.map_or(String::new(), |v| format!("{v:.6}")),
+            r.test_loss.map_or(String::new(), |v| format!("{v:.6}")),
+            r.test_acc.map_or(String::new(), |v| format!("{v:.6}")),
+            r.selected.iter().filter(|&&s| s).count().to_string(),
+            r.failed.iter().filter(|&&f| f).count().to_string(),
+        ])?;
+    }
+    Ok(())
+}
+
+/// Simple fixed-width table printer for terminal summaries.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n== {title} ==");
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let fmt_row = |cells: &[String]| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths.get(i).copied().unwrap_or(8)))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    println!("{}", fmt_row(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>()));
+    for row in rows {
+        println!("{}", fmt_row(row));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("iiot_fl_csv_test");
+        let path = dir.join("t.csv");
+        let mut c = Csv::create(&path, &["a", "b"]).unwrap();
+        c.rowf(&[1.5, 2.5]).unwrap();
+        c.row(&["x".into(), "y".into()]).unwrap();
+        assert!(c.row(&["only-one".into()]).is_err());
+        drop(c);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1.5,2.5\nx,y\n");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -1,0 +1,209 @@
+//! Block-fading channel model and the Eq. 6–8 delay/energy formulas.
+//!
+//! Channel power gain: h = h0 * rho * (d0 / d_m)^nu with rho ~ Exp(1)
+//! redrawn each communication round (IID block fading: static within a
+//! round, independent across rounds). Co-channel interference is the
+//! squared amplitude of a zero-mean Gaussian whose per-channel std-dev is
+//! drawn once per experiment ("different variances" in §VII-A).
+
+use crate::config::SimConfig;
+use crate::rng::Rng;
+use crate::topo::Topology;
+
+/// Static channel model (distances + constants), draws per-round states.
+#[derive(Clone, Debug)]
+pub struct ChannelModel {
+    /// Large-scale gain per gateway: h0 * (d0/d_m)^nu.
+    large_scale: Vec<f64>,
+    /// Per-channel interference amplitude std-dev (uplink, downlink).
+    intf_amp_up: Vec<f64>,
+    intf_amp_down: Vec<f64>,
+    pub bw_up: f64,
+    pub bw_down: f64,
+    pub noise_psd: f64,
+    pub bs_power: f64,
+}
+
+/// One round's realisation: gains and interference for every (m, j).
+#[derive(Clone, Debug)]
+pub struct ChannelState {
+    /// up_gain[m][j] = h^u_{m,j}(t).
+    pub up_gain: Vec<Vec<f64>>,
+    pub down_gain: Vec<Vec<f64>>,
+    /// Interference POWER i^u_{m,j}(t), i^d_{m,j}(t) (W).
+    pub up_intf: Vec<Vec<f64>>,
+    pub down_intf: Vec<Vec<f64>>,
+}
+
+impl ChannelModel {
+    pub fn new(cfg: &SimConfig, topo: &Topology, rng: &mut Rng) -> Self {
+        let large_scale = topo
+            .gateways
+            .iter()
+            .map(|g| cfg.h0_lin() * (cfg.ref_dist / g.distance).powf(cfg.path_loss_exp))
+            .collect();
+        let draw_amp = |rng: &mut Rng| {
+            (0..cfg.num_channels)
+                .map(|_| rng.uniform(cfg.interference_amp_min, cfg.interference_amp_max))
+                .collect::<Vec<_>>()
+        };
+        ChannelModel {
+            large_scale,
+            intf_amp_up: draw_amp(rng),
+            intf_amp_down: draw_amp(rng),
+            bw_up: cfg.bw_up,
+            bw_down: cfg.bw_down,
+            noise_psd: cfg.noise_psd,
+            bs_power: cfg.bs_power,
+        }
+    }
+
+    /// Draw the block-fading state for one communication round.
+    pub fn draw(&self, rng: &mut Rng) -> ChannelState {
+        let m = self.large_scale.len();
+        let j = self.intf_amp_up.len();
+        let mut mk = |amps: &[f64], fade: bool| -> Vec<Vec<f64>> {
+            (0..m)
+                .map(|mi| {
+                    (0..j)
+                        .map(|ji| {
+                            if fade {
+                                self.large_scale[mi] * rng.exp1()
+                            } else {
+                                let a = amps[ji] * rng.normal();
+                                a * a
+                            }
+                        })
+                        .collect()
+                })
+                .collect()
+        };
+        ChannelState {
+            up_gain: mk(&[], true),
+            down_gain: mk(&[], true),
+            up_intf: mk(&self.intf_amp_up, false),
+            down_intf: mk(&self.intf_amp_down, false),
+        }
+    }
+
+    /// Uplink rate (bits/s) for gateway m on channel j at transmit power p:
+    /// B^u log2(1 + p h / (B^u N0 + i)).
+    pub fn rate_up(&self, st: &ChannelState, m: usize, j: usize, p: f64) -> f64 {
+        let snr = p * st.up_gain[m][j] / (self.bw_up * self.noise_psd + st.up_intf[m][j]);
+        self.bw_up * (1.0 + snr).log2()
+    }
+
+    /// Downlink rate (bits/s) — the BS transmits at P^B (Eq. 6).
+    pub fn rate_down(&self, st: &ChannelState, m: usize, j: usize) -> f64 {
+        let snr = self.bs_power * st.down_gain[m][j]
+            / (self.bw_down * self.noise_psd + st.down_intf[m][j]);
+        self.bw_down * (1.0 + snr).log2()
+    }
+
+    /// tau^down_m (Eq. 6) for model size gamma_bits.
+    pub fn tau_down(&self, st: &ChannelState, m: usize, j: usize, gamma_bits: f64) -> f64 {
+        gamma_bits / self.rate_down(st, m, j)
+    }
+
+    /// tau^up_m (Eq. 7).
+    pub fn tau_up(
+        &self,
+        st: &ChannelState,
+        m: usize,
+        j: usize,
+        p: f64,
+        gamma_bits: f64,
+    ) -> f64 {
+        gamma_bits / self.rate_up(st, m, j, p)
+    }
+
+    /// e^up_m (Eq. 8): transmit power x transmission time.
+    pub fn energy_up(
+        &self,
+        st: &ChannelState,
+        m: usize,
+        j: usize,
+        p: f64,
+        gamma_bits: f64,
+    ) -> f64 {
+        p * self.tau_up(st, m, j, p, gamma_bits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (ChannelModel, ChannelState) {
+        let cfg = SimConfig::default();
+        let mut rng = Rng::new(3);
+        let topo = Topology::generate(&cfg, &mut rng);
+        let model = ChannelModel::new(&cfg, &topo, &mut rng);
+        let st = model.draw(&mut rng);
+        (model, st)
+    }
+
+    #[test]
+    fn rates_positive_and_increasing_in_power() {
+        let (m, st) = setup();
+        for gw in 0..6 {
+            for ch in 0..3 {
+                let r1 = m.rate_up(&st, gw, ch, 0.05);
+                let r2 = m.rate_up(&st, gw, ch, 0.2);
+                assert!(r1 > 0.0 && r2 > r1, "{r1} {r2}");
+            }
+        }
+    }
+
+    #[test]
+    fn uplink_rate_plausible_magnitude() {
+        // §VII-A numbers should give ~Mb/s uplink rates at P^max.
+        let (m, st) = setup();
+        let r = m.rate_up(&st, 0, 0, 0.2);
+        assert!(r > 1e5 && r < 1e9, "rate {r}");
+    }
+
+    #[test]
+    fn tau_and_energy_consistent() {
+        let (m, st) = setup();
+        let gamma = 1e8;
+        let p = 0.1;
+        let tau = m.tau_up(&st, 2, 1, p, gamma);
+        let e = m.energy_up(&st, 2, 1, p, gamma);
+        assert!((e - p * tau).abs() < 1e-12 * e.max(1.0));
+    }
+
+    #[test]
+    fn tau_down_faster_than_up() {
+        // 20 MHz downlink at 1 W vs 1 MHz uplink at 200 mW.
+        let (m, st) = setup();
+        let gamma = 1e8;
+        let mut down = 0.0;
+        let mut up = 0.0;
+        for gw in 0..6 {
+            down += m.tau_down(&st, gw, 0, gamma);
+            up += m.tau_up(&st, gw, 0, 0.2, gamma);
+        }
+        assert!(down < up);
+    }
+
+    #[test]
+    fn block_fading_varies_across_rounds() {
+        let (m, _) = setup();
+        let mut rng = Rng::new(9);
+        let a = m.draw(&mut rng);
+        let b = m.draw(&mut rng);
+        assert_ne!(a.up_gain[0][0], b.up_gain[0][0]);
+    }
+
+    #[test]
+    fn interference_nonnegative() {
+        let (m, st) = setup();
+        let _ = m;
+        for row in &st.up_intf {
+            for &v in row {
+                assert!(v >= 0.0);
+            }
+        }
+    }
+}

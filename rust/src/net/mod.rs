@@ -1,0 +1,7 @@
+//! Wireless communication model (§III-C): IID block-fading channels
+//! between the BS and the gateways, OFDM with J orthogonal channels,
+//! co-channel interference from neighbouring deployments.
+
+pub mod channel;
+
+pub use channel::{ChannelModel, ChannelState};

@@ -1,0 +1,227 @@
+//! Kuhn–Munkres (Hungarian) algorithm, O(n³), for min-cost assignment.
+//!
+//! Used by DDSRA's channel-assignment subproblem (Eq. 26–29): the paper
+//! builds a composite cost Θ_{m,j} (−Q_m for admissible pairs, a huge Ψ for
+//! pairs violating the latency cap VΛ_{m,j} ≤ λ) and assigns each of the J
+//! channels to exactly one gateway.
+//!
+//! This implementation is the classic potentials + augmenting-path variant
+//! over a rows×cols matrix with rows <= cols (we transpose internally when
+//! needed). `hungarian_min` returns, for each row, the assigned column (or
+//! None when rows > cols and the row is left unassigned).
+
+/// Solve min-cost assignment. `cost[r][c]`, rectangular allowed.
+/// Returns (assignment per row, total cost). When rows > cols, exactly
+/// `cols` rows get a column and the rest get `None`.
+pub fn hungarian_min(cost: &[Vec<f64>]) -> (Vec<Option<usize>>, f64) {
+    let rows = cost.len();
+    if rows == 0 {
+        return (vec![], 0.0);
+    }
+    let cols = cost[0].len();
+    debug_assert!(cost.iter().all(|r| r.len() == cols));
+
+    if rows <= cols {
+        let (a, c) = kuhn_munkres(cost, rows, cols);
+        (a.into_iter().map(Some).collect(), c)
+    } else {
+        // Transpose, solve, invert the mapping.
+        let t: Vec<Vec<f64>> = (0..cols)
+            .map(|j| (0..rows).map(|i| cost[i][j]).collect())
+            .collect();
+        let (a, c) = kuhn_munkres(&t, cols, rows);
+        let mut out = vec![None; rows];
+        for (j, i) in a.into_iter().enumerate() {
+            out[i] = Some(j);
+        }
+        (out, c)
+    }
+}
+
+/// Classic O(n²m) potentials algorithm; requires n <= m.
+/// Returns assignment: for each row, its column; plus total cost.
+fn kuhn_munkres(cost: &[Vec<f64>], n: usize, m: usize) -> (Vec<usize>, f64) {
+    const INF: f64 = f64::INFINITY;
+    // 1-indexed potentials as in the standard e-maxx formulation.
+    let mut u = vec![0.0f64; n + 1];
+    let mut v = vec![0.0f64; m + 1];
+    let mut p = vec![0usize; m + 1]; // p[j] = row matched to column j (1-indexed)
+    let mut way = vec![0usize; m + 1];
+
+    for i in 1..=n {
+        p[0] = i;
+        let mut j0 = 0usize;
+        let mut minv = vec![INF; m + 1];
+        let mut used = vec![false; m + 1];
+        loop {
+            used[j0] = true;
+            let i0 = p[j0];
+            let mut delta = INF;
+            let mut j1 = 0usize;
+            for j in 1..=m {
+                if !used[j] {
+                    let cur = cost[i0 - 1][j - 1] - u[i0] - v[j];
+                    if cur < minv[j] {
+                        minv[j] = cur;
+                        way[j] = j0;
+                    }
+                    if minv[j] < delta {
+                        delta = minv[j];
+                        j1 = j;
+                    }
+                }
+            }
+            for j in 0..=m {
+                if used[j] {
+                    u[p[j]] += delta;
+                    v[j] -= delta;
+                } else {
+                    minv[j] -= delta;
+                }
+            }
+            j0 = j1;
+            if p[j0] == 0 {
+                break;
+            }
+        }
+        // Augment along the path.
+        loop {
+            let j1 = way[j0];
+            p[j0] = p[j1];
+            j0 = j1;
+            if j0 == 0 {
+                break;
+            }
+        }
+    }
+
+    let mut assign = vec![usize::MAX; n];
+    let mut total = 0.0;
+    for j in 1..=m {
+        if p[j] != 0 {
+            assign[p[j] - 1] = j - 1;
+            total += cost[p[j] - 1][j - 1];
+        }
+    }
+    (assign, total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    /// Brute-force optimal assignment for validation.
+    fn brute(cost: &[Vec<f64>]) -> f64 {
+        let rows = cost.len();
+        let cols = cost[0].len();
+        let (small, _large, transposed) = if rows <= cols {
+            (rows, cols, false)
+        } else {
+            (cols, rows, true)
+        };
+        let big = if transposed { rows } else { cols };
+        let mut idx: Vec<usize> = (0..big).collect();
+        let mut best = f64::INFINITY;
+        permute(&mut idx, 0, small, &mut |perm| {
+            let mut c = 0.0;
+            for (r, &cc) in perm.iter().take(small).enumerate() {
+                c += if transposed { cost[cc][r] } else { cost[r][cc] };
+            }
+            if c < best {
+                best = c;
+            }
+        });
+        best
+    }
+
+    fn permute(idx: &mut Vec<usize>, k: usize, depth: usize, f: &mut impl FnMut(&[usize])) {
+        if k == depth {
+            f(idx);
+            return;
+        }
+        for i in k..idx.len() {
+            idx.swap(k, i);
+            permute(idx, k + 1, depth, f);
+            idx.swap(k, i);
+        }
+    }
+
+    #[test]
+    fn square_known() {
+        let cost = vec![
+            vec![4.0, 1.0, 3.0],
+            vec![2.0, 0.0, 5.0],
+            vec![3.0, 2.0, 2.0],
+        ];
+        let (a, c) = hungarian_min(&cost);
+        assert_eq!(c, 5.0);
+        let mut cols: Vec<_> = a.iter().map(|x| x.unwrap()).collect();
+        cols.sort_unstable();
+        assert_eq!(cols, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn rectangular_rows_lt_cols() {
+        let cost = vec![vec![10.0, 1.0, 7.0], vec![3.0, 9.0, 4.0]];
+        let (a, c) = hungarian_min(&cost);
+        assert_eq!(c, 4.0);
+        assert_eq!(a[0], Some(1));
+        assert_eq!(a[1], Some(0));
+    }
+
+    #[test]
+    fn rectangular_rows_gt_cols_leaves_rows_unassigned() {
+        // 6 gateways, 3 channels — the paper's shape. Exactly 3 assigned.
+        let cost = vec![
+            vec![5.0, 5.0, 5.0],
+            vec![1.0, 9.0, 9.0],
+            vec![9.0, 1.0, 9.0],
+            vec![9.0, 9.0, 1.0],
+            vec![5.0, 5.0, 5.0],
+            vec![5.0, 5.0, 5.0],
+        ];
+        let (a, c) = hungarian_min(&cost);
+        assert_eq!(c, 3.0);
+        assert_eq!(a.iter().filter(|x| x.is_some()).count(), 3);
+        assert_eq!(a[1], Some(0));
+        assert_eq!(a[2], Some(1));
+        assert_eq!(a[3], Some(2));
+    }
+
+    /// Property test: matches brute force on random instances.
+    #[test]
+    fn matches_brute_force_random() {
+        let mut rng = Rng::new(1234);
+        for case in 0..200 {
+            let rows = 1 + rng.below(5);
+            let cols = 1 + rng.below(5);
+            let cost: Vec<Vec<f64>> = (0..rows)
+                .map(|_| (0..cols).map(|_| (rng.below(100)) as f64).collect())
+                .collect();
+            let (a, c) = hungarian_min(&cost);
+            let b = brute(&cost);
+            assert!(
+                (c - b).abs() < 1e-9,
+                "case {case}: hungarian {c} != brute {b} for {cost:?} ({a:?})"
+            );
+            // Assignment must be a partial injection.
+            let mut used = vec![false; cols];
+            for col in a.iter().flatten() {
+                assert!(!used[*col]);
+                used[*col] = true;
+            }
+        }
+    }
+
+    #[test]
+    fn large_instance_runs() {
+        let mut rng = Rng::new(5);
+        let n = 256;
+        let cost: Vec<Vec<f64>> =
+            (0..n).map(|_| (0..n).map(|_| rng.f64()).collect()).collect();
+        let (a, c) = hungarian_min(&cost);
+        assert_eq!(a.iter().filter(|x| x.is_some()).count(), n);
+        assert!(c >= 0.0 && c < n as f64);
+    }
+}

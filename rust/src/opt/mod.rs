@@ -1,0 +1,10 @@
+//! Optimization substrates used by the DDSRA solver (§V-B):
+//! Hungarian assignment for the channel-assignment subproblem and scalar
+//! bisection / root finding for the frequency- and power-allocation
+//! subproblems.
+
+pub mod hungarian;
+pub mod scalar;
+
+pub use hungarian::hungarian_min;
+pub use scalar::{bisect_decreasing, bisect_root};

@@ -1,0 +1,124 @@
+//! Scalar bisection substrates for the DDSRA inner loops (§V-B).
+//!
+//! The paper solves the partition-point and frequency-allocation
+//! subproblems (Eq. 21, 22) by bisecting on the min-max objective value and
+//! the transmit-power subproblem (Eq. 23–24) by finding the root of a
+//! monotone energy-balance equation. Both primitives live here.
+
+/// Bisect for the smallest `eta` in `[lo, hi]` such that `feasible(eta)`,
+/// assuming feasibility is monotone non-decreasing in `eta` (infeasible
+/// below some threshold, feasible above). Returns `None` if `feasible(hi)`
+/// is false.
+pub fn bisect_decreasing(
+    mut lo: f64,
+    mut hi: f64,
+    tol: f64,
+    max_iter: usize,
+    mut feasible: impl FnMut(f64) -> bool,
+) -> Option<f64> {
+    if !feasible(hi) {
+        return None;
+    }
+    if feasible(lo) {
+        return Some(lo);
+    }
+    for _ in 0..max_iter {
+        if hi - lo <= tol * (1.0 + hi.abs()) {
+            break;
+        }
+        let mid = 0.5 * (lo + hi);
+        if feasible(mid) {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    Some(hi)
+}
+
+/// Find a root of a continuous function `f` on `[lo, hi]` with
+/// `f(lo) <= 0 <= f(hi)` or `f(lo) >= 0 >= f(hi)` by bisection.
+/// Returns `None` if the signs do not bracket a root.
+pub fn bisect_root(
+    mut lo: f64,
+    mut hi: f64,
+    tol: f64,
+    max_iter: usize,
+    mut f: impl FnMut(f64) -> f64,
+) -> Option<f64> {
+    let (flo, fhi) = (f(lo), f(hi));
+    if flo == 0.0 {
+        return Some(lo);
+    }
+    if fhi == 0.0 {
+        return Some(hi);
+    }
+    if flo.signum() == fhi.signum() {
+        return None;
+    }
+    let rising = flo < 0.0;
+    for _ in 0..max_iter {
+        if hi - lo <= tol * (1.0 + hi.abs()) {
+            break;
+        }
+        let mid = 0.5 * (lo + hi);
+        let fm = f(mid);
+        if (fm > 0.0) == rising {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    Some(0.5 * (lo + hi))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn bisect_decreasing_finds_threshold() {
+        // feasible iff eta >= 3.7
+        let got = bisect_decreasing(0.0, 10.0, 1e-9, 200, |e| e >= 3.7).unwrap();
+        assert!((got - 3.7).abs() < 1e-6, "{got}");
+    }
+
+    #[test]
+    fn bisect_decreasing_infeasible() {
+        assert!(bisect_decreasing(0.0, 1.0, 1e-9, 100, |_| false).is_none());
+    }
+
+    #[test]
+    fn bisect_decreasing_trivially_feasible() {
+        assert_eq!(bisect_decreasing(2.0, 9.0, 1e-9, 100, |_| true), Some(2.0));
+    }
+
+    #[test]
+    fn bisect_root_quadratic() {
+        let r = bisect_root(0.0, 10.0, 1e-12, 200, |x| x * x - 2.0).unwrap();
+        assert!((r - 2f64.sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bisect_root_decreasing_fn() {
+        let r = bisect_root(0.0, 10.0, 1e-12, 200, |x| 5.0 - x).unwrap();
+        assert!((r - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bisect_root_no_bracket() {
+        assert!(bisect_root(0.0, 1.0, 1e-9, 100, |x| x + 1.0).is_none());
+    }
+
+    /// Property: for random monotone thresholds, bisection recovers them.
+    #[test]
+    fn property_random_thresholds() {
+        let mut rng = Rng::new(99);
+        for _ in 0..200 {
+            let t = rng.uniform(0.1, 9.9);
+            let got = bisect_decreasing(0.0, 10.0, 1e-10, 200, |e| e >= t).unwrap();
+            assert!((got - t).abs() < 1e-5, "t={t} got={got}");
+        }
+    }
+}

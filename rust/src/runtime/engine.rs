@@ -1,0 +1,250 @@
+//! The PJRT execution engine: one compiled executable per artifact.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax >= 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects in proto
+//! form; the text parser reassigns ids (see DESIGN.md and aot.py).
+//!
+//! Parameters live in the coordinator as `Params = Vec<Vec<f32>>` (one flat
+//! buffer per tensor, in artifact ABI order) so that FedAvg, divergence
+//! norms and the centralized-GD shadow run are plain vector arithmetic.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::meta::ModelMeta;
+
+/// Model parameters as flat per-tensor buffers (artifact ABI order).
+pub type Params = Vec<Vec<f32>>;
+
+/// Loads and runs one preset's artifact family.
+pub struct Engine {
+    client: PjRtClient,
+    pub meta: ModelMeta,
+    dir: PathBuf,
+    init: PjRtLoadedExecutable,
+    train: PjRtLoadedExecutable,
+    /// Fused K-step local-training artifact (§Perf): one call per local
+    /// training instead of K, eliminating K−1 parameter round-trips.
+    train_k: Option<PjRtLoadedExecutable>,
+    eval: PjRtLoadedExecutable,
+    grad: PjRtLoadedExecutable,
+}
+
+impl Engine {
+    /// Compile the init/train/eval/grad artifacts for `preset`.
+    pub fn load(artifacts_dir: &Path, preset: &str) -> Result<Self> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let meta = ModelMeta::load(&artifacts_dir.join(format!("{preset}.meta")))?;
+        let compile = |name: &str| -> Result<PjRtLoadedExecutable> {
+            compile_artifact(&client, &artifacts_dir.join(format!("{preset}_{name}.hlo.txt")))
+        };
+        let train_k = if meta.train_k > 0
+            && artifacts_dir
+                .join(format!("{preset}_train_k{}.hlo.txt", meta.train_k))
+                .exists()
+        {
+            Some(compile(&format!("train_k{}", meta.train_k))?)
+        } else {
+            None
+        };
+        Ok(Engine {
+            init: compile("init")?,
+            train: compile("train_step")?,
+            train_k,
+            eval: compile("eval")?,
+            grad: compile("grad")?,
+            dir: artifacts_dir.to_path_buf(),
+            client,
+            meta,
+        })
+    }
+
+    /// K of the fused local-training artifact, if loaded.
+    pub fn fused_k(&self) -> Option<usize> {
+        self.train_k.as_ref().map(|_| self.meta.train_k)
+    }
+
+    /// Compile an arbitrary extra artifact from the same directory (used by
+    /// the partitioned-step example).
+    pub fn compile_extra(&self, name: &str) -> Result<PjRtLoadedExecutable> {
+        compile_artifact(&self.client, &self.dir.join(format!("{name}.hlo.txt")))
+    }
+
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+
+    // ------------------------------------------------------------ marshal
+
+    fn param_literals(&self, params: &Params) -> Result<Vec<Literal>> {
+        if params.len() != self.meta.param_shapes.len() {
+            bail!("expected {} param tensors, got {}", self.meta.param_shapes.len(), params.len());
+        }
+        params
+            .iter()
+            .zip(&self.meta.param_shapes)
+            .map(|(buf, shape)| lit_f32(buf, shape))
+            .collect()
+    }
+
+    fn unpack_params(&self, lits: &[Literal]) -> Result<Params> {
+        lits.iter().map(|l| l.to_vec::<f32>().map_err(Into::into)).collect()
+    }
+
+    // ------------------------------------------------------------ entry points
+
+    /// Seeded parameter initialisation (runs the `init` artifact).
+    pub fn init_params(&self) -> Result<Params> {
+        let out = run_tuple(&self.init, &[])?;
+        self.unpack_params(&out)
+    }
+
+    /// One SGD step: (params, x[train_batch], y, lr) -> (params', loss).
+    pub fn train_step(
+        &self,
+        params: &Params,
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+    ) -> Result<(Params, f32)> {
+        let mut args = self.param_literals(params)?;
+        args.push(lit_f32(x, &self.meta.input_train)?);
+        args.push(lit_i32(y, self.meta.train_batch)?);
+        args.push(Literal::scalar(lr));
+        let out = run_tuple(&self.train, &args)?;
+        let (loss_lit, param_lits) = out.split_last().context("empty train output")?;
+        let loss = loss_lit.get_first_element::<f32>()?;
+        Ok((self.unpack_params(param_lits)?, loss))
+    }
+
+    /// K fused SGD steps: (params, xs[K·train_batch·dim], ys[K·train_batch],
+    /// lr) -> (params', mean loss). Requires the fused artifact.
+    pub fn train_k_steps(
+        &self,
+        params: &Params,
+        xs: &[f32],
+        ys: &[i32],
+        lr: f32,
+    ) -> Result<(Params, f32)> {
+        let exe = self.train_k.as_ref().context("fused train_k artifact not loaded")?;
+        let k = self.meta.train_k;
+        let mut xshape = vec![k];
+        xshape.extend_from_slice(&self.meta.input_train);
+        let mut args = self.param_literals(params)?;
+        args.push(lit_f32(xs, &xshape)?);
+        if ys.len() != k * self.meta.train_batch {
+            bail!("train_k labels: {} != {}", ys.len(), k * self.meta.train_batch);
+        }
+        args.push(Literal::vec1(ys).reshape(&[k as i64, self.meta.train_batch as i64])?);
+        args.push(Literal::scalar(lr));
+        let out = run_tuple(exe, &args)?;
+        let (loss_lit, param_lits) = out.split_last().context("empty train_k output")?;
+        Ok((self.unpack_params(param_lits)?, loss_lit.get_first_element::<f32>()?))
+    }
+
+    /// One eval batch: -> (sum_loss, num_correct).
+    pub fn eval_batch(&self, params: &Params, x: &[f32], y: &[i32]) -> Result<(f64, f64)> {
+        let mut args = self.param_literals(params)?;
+        args.push(lit_f32(x, &self.meta.input_eval)?);
+        args.push(lit_i32(y, self.meta.eval_batch)?);
+        let out = run_tuple(&self.eval, &args)?;
+        Ok((
+            out[0].get_first_element::<f32>()? as f64,
+            out[1].get_first_element::<f32>()? as f64,
+        ))
+    }
+
+    /// Evaluate over a whole test set (len divisible by eval_batch);
+    /// returns (mean loss, accuracy).
+    ///
+    /// §Perf: parameters are uploaded to device buffers ONCE and reused
+    /// across all chunks via `execute_b` (the test set spans several
+    /// batches, and the 0.8 MB parameter upload dominated per-chunk cost).
+    pub fn eval_full(&self, params: &Params, x: &[f32], y: &[i32]) -> Result<(f64, f64)> {
+        let b = self.meta.eval_batch;
+        let dim = self.meta.sample_dim();
+        if y.len() % b != 0 || x.len() != y.len() * dim {
+            bail!("test set size {} not divisible by eval batch {b}", y.len());
+        }
+        if params.len() != self.meta.param_shapes.len() {
+            bail!("expected {} param tensors", self.meta.param_shapes.len());
+        }
+        let pbufs: Vec<xla::PjRtBuffer> = params
+            .iter()
+            .zip(&self.meta.param_shapes)
+            .map(|(buf, shape)| self.client.buffer_from_host_buffer::<f32>(buf, shape, None))
+            .collect::<xla::Result<_>>()?;
+        let (mut loss, mut correct) = (0.0, 0.0);
+        for c in 0..y.len() / b {
+            let xb = self.client.buffer_from_host_buffer::<f32>(
+                &x[c * b * dim..(c + 1) * b * dim],
+                &self.meta.input_eval,
+                None,
+            )?;
+            let yb = self
+                .client
+                .buffer_from_host_buffer::<i32>(&y[c * b..(c + 1) * b], &[b], None)?;
+            let mut args: Vec<&xla::PjRtBuffer> = pbufs.iter().collect();
+            args.push(&xb);
+            args.push(&yb);
+            let out = self.eval.execute_b(&args)?[0][0].to_literal_sync()?.to_tuple()?;
+            loss += out[0].get_first_element::<f32>()? as f64;
+            correct += out[1].get_first_element::<f32>()? as f64;
+        }
+        let n = y.len() as f64;
+        Ok((loss / n, correct / n))
+    }
+
+    /// Flat minibatch gradient (sigma/delta probes for §IV).
+    pub fn grad(&self, params: &Params, x: &[f32], y: &[i32]) -> Result<Vec<f32>> {
+        let mut args = self.param_literals(params)?;
+        args.push(lit_f32(x, &self.meta.input_train)?);
+        args.push(lit_i32(y, self.meta.train_batch)?);
+        let out = run_tuple(&self.grad, &args)?;
+        Ok(out[0].to_vec::<f32>()?)
+    }
+}
+
+/// Compile one HLO-text artifact.
+pub fn compile_artifact(client: &PjRtClient, path: &Path) -> Result<PjRtLoadedExecutable> {
+    let proto = HloModuleProto::from_text_file(path)
+        .with_context(|| format!("parsing HLO text {path:?} (run `make artifacts`?)"))?;
+    let comp = XlaComputation::from_proto(&proto);
+    client.compile(&comp).with_context(|| format!("compiling {path:?}"))
+}
+
+/// Execute and unpack the 1-element-replica tuple output.
+///
+/// NOTE: arguments are uploaded to Rust-owned `PjRtBuffer`s and passed via
+/// `execute_b`. The crate's `execute::<Literal>` path leaks its internal
+/// input buffers (~1.6 MB per train step, enough to OOM a long figure
+/// run); buffers created here are freed on drop.
+pub fn run_tuple(exe: &PjRtLoadedExecutable, args: &[Literal]) -> Result<Vec<Literal>> {
+    let client = exe.client();
+    let bufs: Vec<xla::PjRtBuffer> = args
+        .iter()
+        .map(|lit| client.buffer_from_host_literal(None, lit))
+        .collect::<xla::Result<_>>()?;
+    let result = exe.execute_b(&bufs)?[0][0].to_literal_sync()?;
+    Ok(result.to_tuple()?)
+}
+
+/// f32 literal with the given dims.
+pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<Literal> {
+    let expect: usize = shape.iter().product();
+    if data.len() != expect {
+        bail!("literal size {} != shape {:?}", data.len(), shape);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(Literal::vec1(data).reshape(&dims)?)
+}
+
+/// rank-1 i32 literal.
+pub fn lit_i32(data: &[i32], len: usize) -> Result<Literal> {
+    if data.len() != len {
+        bail!("label literal size {} != {len}", data.len());
+    }
+    Ok(Literal::vec1(data))
+}

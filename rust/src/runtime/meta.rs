@@ -1,0 +1,125 @@
+//! Parser for the line-oriented `<preset>.meta` files emitted by
+//! python/compile/aot.py (we have no JSON dependency offline).
+
+use std::path::Path;
+
+use anyhow::{bail, Context};
+
+/// Shapes and sizes of one model preset's artifact family.
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub preset: String,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub num_classes: usize,
+    /// Training input shape, e.g. [64, 3072] or [64, 32, 32, 3].
+    pub input_train: Vec<usize>,
+    pub input_eval: Vec<usize>,
+    pub param_total: usize,
+    /// K baked into the fused `train_k` artifact (0 = artifact absent).
+    pub train_k: usize,
+    /// Per-parameter tensor shapes, in artifact ABI order.
+    pub param_shapes: Vec<Vec<usize>>,
+}
+
+impl ModelMeta {
+    pub fn parse(text: &str) -> anyhow::Result<Self> {
+        let mut preset = String::new();
+        let (mut train_batch, mut eval_batch, mut num_classes, mut param_total) =
+            (0usize, 0usize, 0usize, 0usize);
+        let mut train_k = 0usize;
+        let mut input_train = Vec::new();
+        let mut input_eval = Vec::new();
+        let mut param_shapes = Vec::new();
+
+        let parse_shape = |v: &str| -> anyhow::Result<Vec<usize>> {
+            v.split('x')
+                .map(|d| d.parse::<usize>().context("shape dim"))
+                .collect()
+        };
+
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("bad meta line: {line:?}");
+            };
+            match k {
+                "preset" => preset = v.to_string(),
+                "train_batch" => train_batch = v.parse()?,
+                "eval_batch" => eval_batch = v.parse()?,
+                "num_classes" => num_classes = v.parse()?,
+                "input_train" => input_train = parse_shape(v)?,
+                "input_eval" => input_eval = parse_shape(v)?,
+                "param_total" => param_total = v.parse()?,
+                "train_k" => train_k = v.parse()?,
+                "param" => param_shapes.push(parse_shape(v)?),
+                other => bail!("unknown meta key {other:?}"),
+            }
+        }
+        if preset.is_empty() || param_shapes.is_empty() || train_batch == 0 {
+            bail!("incomplete meta file");
+        }
+        let meta = ModelMeta {
+            preset,
+            train_batch,
+            eval_batch,
+            num_classes,
+            input_train,
+            input_eval,
+            param_total,
+            train_k,
+            param_shapes,
+        };
+        let sum: usize = meta.param_shapes.iter().map(|s| s.iter().product::<usize>()).sum();
+        if sum != meta.param_total {
+            bail!("param_total {} != sum of shapes {}", meta.param_total, sum);
+        }
+        Ok(meta)
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path:?}"))?;
+        Self::parse(&text)
+    }
+
+    /// Per-sample feature count of the training input.
+    pub fn sample_dim(&self) -> usize {
+        self.input_train[1..].iter().product()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "preset=mlp\ntrain_batch=64\neval_batch=256\nnum_classes=10\n\
+input_train=64x3072\ninput_eval=256x3072\nparam_total=197322\n\
+param=3072x64\nparam=64\nparam=64x10\nparam=10\n";
+
+    #[test]
+    fn parses_sample() {
+        let m = ModelMeta::parse(SAMPLE).unwrap();
+        assert_eq!(m.preset, "mlp");
+        assert_eq!(m.train_batch, 64);
+        assert_eq!(m.param_shapes.len(), 4);
+        assert_eq!(m.param_shapes[0], vec![3072, 64]);
+        assert_eq!(m.sample_dim(), 3072);
+        assert_eq!(m.param_total, 3072 * 64 + 64 + 64 * 10 + 10);
+    }
+
+    #[test]
+    fn rejects_inconsistent_total() {
+        let bad = SAMPLE.replace("197322", "5");
+        assert!(ModelMeta::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(ModelMeta::parse("nonsense").is_err());
+        assert!(ModelMeta::parse("").is_err());
+    }
+}

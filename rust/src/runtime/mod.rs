@@ -1,0 +1,11 @@
+//! PJRT runtime (request path): loads the AOT HLO-text artifacts produced
+//! by `make artifacts` and executes them on the PJRT CPU client.
+//!
+//! Python is never on this path — the artifacts are compiled once at
+//! `Engine::load` and executed from the FL round loop.
+
+pub mod engine;
+pub mod meta;
+
+pub use engine::{Engine, Params};
+pub use meta::ModelMeta;

@@ -1,0 +1,124 @@
+//! The Λ latency model (Eq. 18) and the per-plan cost/feasibility
+//! evaluation used by every scheduler.
+//!
+//! Λ_{m,j}(t) = max_n [device-side + gateway-side training time]   (Eq. 1)
+//!            + τ^down_{m,j}                                        (Eq. 6)
+//!            + τ^up_{m,j}(P_m)                                     (Eq. 7)
+//!
+//! Feasibility covers C7–C10: device/gateway memory (Eq. 4–5) and
+//! device/gateway per-round harvested-energy budgets (Eq. 2, 3, 9).
+
+use crate::energy;
+use crate::sched::{GatewayPlan, RoundCtx};
+
+/// Sentinel delay for infeasible configurations.
+pub const INFEASIBLE: f64 = 1e18;
+
+/// Constraint violations for a plan (baselines run with fixed resources
+/// and may violate them — the orchestrator then drops the update, exactly
+/// the "training failure" behaviour the paper attributes to the baselines).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Violation {
+    /// C7: device n's bottom layers exceed its memory.
+    DeviceMem(usize),
+    /// C8: offloaded top layers exceed the gateway memory.
+    GatewayMem,
+    /// C9 (device part, paper C9/C10'): device training energy exceeds
+    /// this round's arrival.
+    DeviceEnergy(usize),
+    /// C10: gateway training + uplink energy exceeds this round's arrival.
+    GatewayEnergy,
+}
+
+/// Fully-evaluated cost of a gateway plan.
+#[derive(Clone, Debug)]
+pub struct PlanCost {
+    /// max_n per-device training time (Eq. 1, inner max).
+    pub train_time: f64,
+    pub tau_down: f64,
+    pub tau_up: f64,
+    /// e^{tra,D}_n per member device.
+    pub device_energy: Vec<f64>,
+    /// e^G_m = e^{tra,G}_m + e^up_m (Eq. 9).
+    pub gateway_energy: f64,
+    /// G^D_n per member device.
+    pub device_mem: Vec<f64>,
+    /// G^G_m.
+    pub gateway_mem: f64,
+    pub violations: Vec<Violation>,
+}
+
+impl PlanCost {
+    /// Λ_{m,j} = training + downlink + uplink.
+    pub fn lambda(&self) -> f64 {
+        self.train_time + self.tau_down + self.tau_up
+    }
+
+    pub fn feasible(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+/// Evaluate one gateway plan against the round's channel/energy state.
+pub fn plan_cost(ctx: &RoundCtx, plan: &GatewayPlan) -> PlanCost {
+    let m = plan.gateway;
+    let gw = &ctx.topo.gateways[m];
+    let k = ctx.cfg.local_iters;
+    let model = ctx.model;
+    let gamma = model.gamma_bits();
+
+    let mut train_time: f64 = 0.0;
+    let mut device_energy = Vec::with_capacity(gw.members.len());
+    let mut device_mem = Vec::with_capacity(gw.members.len());
+    let mut gw_train_energy = 0.0;
+    let mut gw_mem = 0.0;
+    let mut violations = Vec::new();
+
+    for (i, &n) in gw.members.iter().enumerate() {
+        let dev = &ctx.topo.devices[n];
+        let l = plan.partition[i];
+        let f_g = plan.freq[i];
+
+        let t_dev = energy::device_train_time(dev, model, l, k);
+        let t_gw = energy::gateway_train_time(gw, dev, model, l, k, f_g);
+        train_time = train_time.max(t_dev + t_gw);
+
+        let e_dev = energy::device_train_energy(dev, model, l, k);
+        if e_dev > ctx.arrivals.device[n] {
+            violations.push(Violation::DeviceEnergy(n));
+        }
+        device_energy.push(e_dev);
+
+        let g_dev = model.bottom_mem(l, dev.train_batch as u64);
+        if g_dev > dev.mem {
+            violations.push(Violation::DeviceMem(n));
+        }
+        device_mem.push(g_dev);
+
+        gw_train_energy += energy::gateway_train_energy(gw, dev, model, l, k, f_g);
+        gw_mem += model.top_mem(l, dev.train_batch as u64);
+    }
+
+    if gw_mem > gw.mem {
+        violations.push(Violation::GatewayMem);
+    }
+
+    let tau_down = ctx.chan.tau_down(ctx.state, m, plan.channel, gamma);
+    let tau_up = ctx.chan.tau_up(ctx.state, m, plan.channel, plan.power, gamma);
+    let e_up = ctx.chan.energy_up(ctx.state, m, plan.channel, plan.power, gamma);
+    let gateway_energy = gw_train_energy + e_up;
+    if gateway_energy > ctx.arrivals.gateway[m] {
+        violations.push(Violation::GatewayEnergy);
+    }
+
+    PlanCost {
+        train_time,
+        tau_down,
+        tau_up,
+        device_energy,
+        gateway_energy,
+        device_mem,
+        gateway_mem: gw_mem,
+        violations,
+    }
+}

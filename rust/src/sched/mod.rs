@@ -1,0 +1,85 @@
+//! Device scheduling and resource allocation (§V): the DDSRA algorithm and
+//! the four baseline schedulers, sharing the Λ latency model (Eq. 18) and
+//! the feasibility checks (C4–C10).
+
+pub mod baselines;
+pub mod ddsra;
+pub mod latency;
+
+pub use baselines::{DelayDriven, LossDriven, RandomSched, RoundRobin};
+pub use ddsra::Ddsra;
+pub use latency::{plan_cost, PlanCost, Violation, INFEASIBLE};
+
+use crate::config::SimConfig;
+use crate::dnn::ModelSpec;
+use crate::energy::EnergyArrivals;
+use crate::net::{ChannelModel, ChannelState};
+use crate::topo::Topology;
+
+/// Everything a scheduler may observe at the start of round t.
+pub struct RoundCtx<'a> {
+    pub cfg: &'a SimConfig,
+    pub topo: &'a Topology,
+    /// Cost-model DNN (the objective DNN the scheduler plans for).
+    pub model: &'a ModelSpec,
+    pub chan: &'a ChannelModel,
+    pub state: &'a ChannelState,
+    pub arrivals: &'a EnergyArrivals,
+    pub round: usize,
+}
+
+/// Resource allocation for one selected gateway in one round:
+/// X(t) = [I(t), l(t), P(t), f^G(t)] restricted to gateway m.
+#[derive(Clone, Debug)]
+pub struct GatewayPlan {
+    pub gateway: usize,
+    /// Assigned channel j (I_{m,j} = 1).
+    pub channel: usize,
+    /// Uplink transmit power P_m(t) (W).
+    pub power: f64,
+    /// DNN partition point l_n(t) per member device (aligned with
+    /// `topo.gateways[m].members`).
+    pub partition: Vec<usize>,
+    /// Gateway frequency share f^G_{m,n}(t) per member device (Hz).
+    pub freq: Vec<f64>,
+    /// Λ_{m,j}(t): this gateway's total round delay (Eq. 18).
+    pub lambda: f64,
+}
+
+/// A full scheduling decision for one round.
+#[derive(Clone, Debug, Default)]
+pub struct Decision {
+    pub plans: Vec<GatewayPlan>,
+}
+
+impl Decision {
+    /// 1_m^t: was gateway m selected?
+    pub fn selected(&self, m: usize) -> bool {
+        self.plans.iter().any(|p| p.gateway == m)
+    }
+
+    /// τ(t) (Eq. 10): the round delay is the max over selected gateways.
+    pub fn round_delay(&self) -> f64 {
+        self.plans.iter().map(|p| p.lambda).fold(0.0, f64::max)
+    }
+}
+
+/// Post-round feedback for adaptive schedulers (Loss-Driven uses the
+/// observed local losses; DDSRA updates its virtual queues internally).
+#[derive(Clone, Debug)]
+pub struct RoundFeedback {
+    /// Average local training loss per gateway, where observed this round.
+    pub avg_loss: Vec<Option<f64>>,
+}
+
+/// The scheduler interface: one decision per communication round.
+pub trait Scheduler {
+    fn name(&self) -> String;
+    fn schedule(&mut self, ctx: &RoundCtx) -> Decision;
+    fn observe(&mut self, _fb: &RoundFeedback) {}
+    /// Virtual queue lengths (DDSRA only) — exposed for the Theorem-2
+    /// trade-off experiments.
+    fn queues(&self) -> Option<&[f64]> {
+        None
+    }
+}

@@ -1,0 +1,180 @@
+//! Two-tier IIoT topology (§III-A): N end devices deployed across M shop
+//! floors, one edge gateway per floor, a base station on top.
+//!
+//! The deployment matrix `a_{n,m}` is realised as `Device::gateway` plus
+//! the per-gateway member lists — both views the paper uses.
+
+use crate::config::SimConfig;
+use crate::rng::Rng;
+
+/// Static attributes of one end device (drawn once per experiment).
+#[derive(Clone, Debug)]
+pub struct Device {
+    pub id: usize,
+    /// Shop floor / gateway index m with a_{n,m} = 1.
+    pub gateway: usize,
+    /// Local dataset size D_n.
+    pub dataset_size: usize,
+    /// Training batch size \tilde{D}_n = ceil(alpha * D_n).
+    pub train_batch: usize,
+    /// CPU frequency f_n^D (Hz) — fixed per the paper (devices do not DVFS;
+    /// only the gateway frequency f^G_{m,n} is optimized).
+    pub freq: f64,
+    /// FLOPs per clock cycle phi_n^D.
+    pub flops_per_cycle: f64,
+    /// Effective switched capacitance v_n^D.
+    pub kappa: f64,
+    /// Memory size G_n^{D,max} bytes.
+    pub mem: f64,
+    /// Energy-arrival cap E_n^{D,max} (J); arrivals ~ U[0, cap] per round.
+    pub energy_max: f64,
+}
+
+/// Static attributes of one edge gateway.
+#[derive(Clone, Debug)]
+pub struct Gateway {
+    pub id: usize,
+    /// Devices on this shop floor (indices into `Topology::devices`).
+    pub members: Vec<usize>,
+    /// Distance to the BS d_m (m).
+    pub distance: f64,
+    pub freq_max: f64,
+    pub freq_min: f64,
+    pub flops_per_cycle: f64,
+    pub kappa: f64,
+    pub mem: f64,
+    pub energy_max: f64,
+    pub power_max: f64,
+}
+
+/// The full two-tier deployment.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub devices: Vec<Device>,
+    pub gateways: Vec<Gateway>,
+}
+
+impl Topology {
+    /// Draw a deployment from the config's distributions (§VII-A).
+    pub fn generate(cfg: &SimConfig, rng: &mut Rng) -> Self {
+        let per = cfg.devices_per_gateway();
+        let mut devices = Vec::with_capacity(cfg.num_devices);
+        let mut gateways = Vec::with_capacity(cfg.num_gateways);
+        for m in 0..cfg.num_gateways {
+            let members = (0..per).map(|i| m * per + i).collect::<Vec<_>>();
+            gateways.push(Gateway {
+                id: m,
+                members: members.clone(),
+                distance: rng.uniform(cfg.gw_dist_min, cfg.gw_dist_max),
+                freq_max: cfg.gw_freq_max,
+                freq_min: cfg.gw_freq_min,
+                flops_per_cycle: cfg.gw_flops_per_cycle,
+                kappa: cfg.gw_kappa,
+                mem: cfg.gw_mem,
+                energy_max: cfg.gw_energy_max,
+                power_max: cfg.gw_power_max,
+            });
+            for n in members {
+                let d = cfg.dataset_min
+                    + rng.below(cfg.dataset_max - cfg.dataset_min + 1);
+                devices.push(Device {
+                    id: n,
+                    gateway: m,
+                    dataset_size: d,
+                    train_batch: ((cfg.sample_ratio * d as f64).ceil() as usize).max(1),
+                    freq: rng.uniform(cfg.device_freq_min, cfg.device_freq_max),
+                    flops_per_cycle: cfg.device_flops_per_cycle,
+                    kappa: cfg.device_kappa,
+                    mem: cfg.device_mem,
+                    energy_max: cfg.device_energy_max,
+                });
+            }
+        }
+        Topology { devices, gateways }
+    }
+
+    pub fn num_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn num_gateways(&self) -> usize {
+        self.gateways.len()
+    }
+
+    /// a_{n,m} as a predicate.
+    pub fn deployed(&self, n: usize, m: usize) -> bool {
+        self.devices[n].gateway == m
+    }
+
+    /// Total training-data weight of a shop floor: D_m = Σ_n a_{n,m} D̃_n.
+    pub fn floor_batch_weight(&self, m: usize) -> f64 {
+        self.gateways[m]
+            .members
+            .iter()
+            .map(|&n| self.devices[n].train_batch as f64)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn topo() -> Topology {
+        let cfg = SimConfig::default();
+        Topology::generate(&cfg, &mut Rng::new(1))
+    }
+
+    #[test]
+    fn deployment_matrix_rows_sum_to_one() {
+        let t = topo();
+        // every device deployed with exactly one gateway
+        for d in &t.devices {
+            assert_eq!(
+                (0..t.num_gateways()).filter(|&m| t.deployed(d.id, m)).count(),
+                1
+            );
+        }
+    }
+
+    #[test]
+    fn paper_shape_6_gateways_2_devices_each() {
+        let t = topo();
+        assert_eq!(t.num_gateways(), 6);
+        assert_eq!(t.num_devices(), 12);
+        for g in &t.gateways {
+            assert_eq!(g.members.len(), 2);
+            for &n in &g.members {
+                assert_eq!(t.devices[n].gateway, g.id);
+            }
+        }
+    }
+
+    #[test]
+    fn attribute_ranges_match_config() {
+        let cfg = SimConfig::default();
+        let t = topo();
+        for d in &t.devices {
+            assert!(d.dataset_size >= cfg.dataset_min && d.dataset_size <= cfg.dataset_max);
+            assert!(d.freq >= cfg.device_freq_min && d.freq <= cfg.device_freq_max);
+            assert_eq!(
+                d.train_batch,
+                ((cfg.sample_ratio * d.dataset_size as f64).ceil() as usize).max(1)
+            );
+        }
+        for g in &t.gateways {
+            assert!(g.distance >= cfg.gw_dist_min && g.distance <= cfg.gw_dist_max);
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic_in_seed() {
+        let cfg = SimConfig::default();
+        let a = Topology::generate(&cfg, &mut Rng::new(7));
+        let b = Topology::generate(&cfg, &mut Rng::new(7));
+        for (x, y) in a.devices.iter().zip(&b.devices) {
+            assert_eq!(x.dataset_size, y.dataset_size);
+            assert_eq!(x.freq, y.freq);
+        }
+    }
+}

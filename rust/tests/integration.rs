@@ -1,0 +1,199 @@
+//! Integration tests over the full stack: PJRT runtime + orchestrator +
+//! schedulers, exercising the real AOT artifacts (`make artifacts` first —
+//! tests skip gracefully when artifacts are absent so `cargo test` works
+//! in a fresh checkout).
+
+use std::path::Path;
+
+use iiot_fl::config::SimConfig;
+use iiot_fl::fl::{Experiment, RunOpts};
+use iiot_fl::runtime::Engine;
+
+fn artifacts() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("mlp.meta").exists() {
+        Some(p)
+    } else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn mlp_cfg() -> SimConfig {
+    let mut cfg = SimConfig::default();
+    cfg.exec_model = "mlp".into();
+    cfg.cost_model = "vgg11".into();
+    cfg.test_size = 512; // 2 eval batches
+    cfg.dataset_max = 600; // small shards keep tests fast
+    cfg
+}
+
+#[test]
+fn engine_init_train_eval_grad_roundtrip() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::load(dir, "mlp").unwrap();
+    let meta = engine.meta.clone();
+
+    let params = engine.init_params().unwrap();
+    assert_eq!(params.len(), meta.param_shapes.len());
+    let total: usize = params.iter().map(|p| p.len()).sum();
+    assert_eq!(total, meta.param_total);
+
+    // init must be deterministic (seeded in the artifact)
+    let params2 = engine.init_params().unwrap();
+    assert_eq!(params, params2);
+
+    let dim = meta.sample_dim();
+    let x = vec![0.1f32; meta.train_batch * dim];
+    let y: Vec<i32> = (0..meta.train_batch as i32).map(|i| i % 10).collect();
+
+    // lr = 0 is the identity
+    let (same, loss0) = engine.train_step(&params, &x, &y, 0.0).unwrap();
+    assert_eq!(same, params);
+    assert!((loss0 - 10f32.ln()).abs() < 1e-4, "zero-head init loss must be ln 10");
+
+    // a real step changes params and the gradient agrees with the step
+    let (stepped, _) = engine.train_step(&params, &x, &y, 0.01).unwrap();
+    assert_ne!(stepped, params);
+    let g = engine.grad(&params, &x, &y).unwrap();
+    assert_eq!(g.len(), meta.param_total);
+    let mut manual = params.clone();
+    iiot_fl::fl::vecmath::sgd_step_flat(&mut manual, &g, 0.01);
+    let diff = iiot_fl::fl::vecmath::l2_diff(&manual, &stepped);
+    assert!(diff < 1e-4, "grad/train_step disagree: {diff}");
+
+    // eval on a uniform predictor: loss = ln 10, accuracy near chance
+    let xe = vec![0.1f32; meta.eval_batch * dim];
+    let ye: Vec<i32> = (0..meta.eval_batch as i32).map(|i| i % 10).collect();
+    let (l, acc) = engine.eval_batch(&params, &xe, &ye).unwrap();
+    assert!((l / meta.eval_batch as f64 - 10f64.ln()).abs() < 1e-4);
+    assert!(acc <= meta.eval_batch as f64);
+}
+
+#[test]
+fn experiment_runs_every_scheme_one_round() {
+    let Some(_) = artifacts() else { return };
+    let mut cfg = mlp_cfg();
+    cfg.rounds = 2;
+    let exp = Experiment::new(cfg).unwrap();
+    let opts = RunOpts { rounds: 2, eval_every: 2, track_divergence: false, train: true };
+    for scheme in ["ddsra", "participation", "random", "round_robin", "loss_driven", "delay_driven"] {
+        let mut sched = exp.make_scheduler(scheme).unwrap();
+        let log = exp.run(sched.as_mut(), &opts).unwrap();
+        assert_eq!(log.records.len(), 2, "{scheme}");
+        assert!(log.records[1].cum_delay >= log.records[0].delay, "{scheme}");
+        assert!(log.records.last().unwrap().test_acc.is_some(), "{scheme}");
+        // J channels -> at most J gateways selected per round
+        for r in &log.records {
+            assert!(
+                r.selected.iter().filter(|&&s| s).count() <= exp.cfg.num_channels,
+                "{scheme}"
+            );
+        }
+    }
+}
+
+#[test]
+fn runs_are_deterministic_and_paired_across_schedulers() {
+    let Some(_) = artifacts() else { return };
+    let mut cfg = mlp_cfg();
+    cfg.rounds = 3;
+    let exp = Experiment::new(cfg.clone()).unwrap();
+    let opts = RunOpts { rounds: 3, eval_every: 3, track_divergence: false, train: true };
+
+    // Same scheme twice: identical trajectories.
+    let mut s1 = exp.make_scheduler("round_robin").unwrap();
+    let mut s2 = exp.make_scheduler("round_robin").unwrap();
+    let a = exp.run(s1.as_mut(), &opts).unwrap();
+    let b = exp.run(s2.as_mut(), &opts).unwrap();
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        assert_eq!(ra.delay, rb.delay);
+        assert_eq!(ra.test_acc, rb.test_acc);
+        assert_eq!(ra.train_loss, rb.train_loss);
+    }
+
+    // Different schemes: identical channel/energy environment means a
+    // gateway selected by both in round t sees the same Λ inputs; we check
+    // the cheaper invariant that the experiment itself is reproducible
+    // from the seed.
+    let exp2 = Experiment::new(cfg).unwrap();
+    let mut s3 = exp2.make_scheduler("round_robin").unwrap();
+    let c = exp2.run(s3.as_mut(), &opts).unwrap();
+    for (ra, rc) in a.records.iter().zip(&c.records) {
+        assert_eq!(ra.delay, rc.delay);
+        assert_eq!(ra.test_acc, rc.test_acc);
+    }
+}
+
+#[test]
+fn divergence_mode_produces_per_gateway_divergence() {
+    let Some(_) = artifacts() else { return };
+    let mut cfg = mlp_cfg();
+    cfg.rounds = 2;
+    let exp = Experiment::new(cfg).unwrap();
+    let mut sched = exp.make_scheduler("round_robin").unwrap();
+    let opts = RunOpts { rounds: 2, eval_every: 0, track_divergence: true, train: true };
+    let log = exp.run(sched.as_mut(), &opts).unwrap();
+    let mean = log.mean_divergence().unwrap();
+    assert_eq!(mean.len(), exp.topo.num_gateways());
+    assert!(mean.iter().all(|&d| d.is_finite() && d > 0.0), "{mean:?}");
+}
+
+#[test]
+fn grad_stats_reflect_non_iid_structure() {
+    let Some(_) = artifacts() else { return };
+    let exp = Experiment::new(mlp_cfg()).unwrap();
+    let stats = exp.estimate_grad_stats(4).unwrap();
+    assert!(stats.sigma.iter().all(|&s| s.is_finite() && s >= 0.0));
+    assert!(stats.delta.iter().all(|&d| d.is_finite() && d >= 0.0));
+    assert!(stats.lsmooth.iter().all(|&l| l > 0.0));
+    // Gateway 0's devices hold all 10 classes; their local gradient should
+    // be closer to the global one than the most-skewed device's.
+    let d0: f64 = exp.topo.gateways[0]
+        .members
+        .iter()
+        .map(|&n| stats.delta[n])
+        .sum::<f64>()
+        / exp.topo.gateways[0].members.len() as f64;
+    let worst = stats
+        .delta
+        .iter()
+        .cloned()
+        .fold(0.0f64, f64::max);
+    assert!(d0 < worst, "gw0 delta {d0} should be below the max {worst}");
+}
+
+#[test]
+fn ddsra_learning_beats_chance_quickly() {
+    let Some(_) = artifacts() else { return };
+    let mut cfg = mlp_cfg();
+    cfg.rounds = 12;
+    let exp = Experiment::new(cfg).unwrap();
+    let mut sched = exp.make_scheduler("ddsra").unwrap();
+    let opts = RunOpts { rounds: 12, eval_every: 12, track_divergence: false, train: true };
+    let log = exp.run(sched.as_mut(), &opts).unwrap();
+    let acc = log.final_accuracy().unwrap();
+    assert!(acc > 0.12, "accuracy {acc} not above chance after 12 rounds");
+    // loss must decrease
+    let first = log.records.iter().find_map(|r| r.train_loss).unwrap();
+    let last = log.records.iter().rev().find_map(|r| r.train_loss).unwrap();
+    assert!(last < first, "loss {first} -> {last}");
+}
+
+#[test]
+fn cnn_engine_smoke() {
+    let Some(dir) = artifacts() else { return };
+    if !dir.join("cnn.meta").exists() {
+        eprintln!("SKIP: cnn artifacts not built");
+        return;
+    }
+    let engine = Engine::load(dir, "cnn").unwrap();
+    let meta = engine.meta.clone();
+    assert_eq!(meta.input_train, vec![64, 32, 32, 3]);
+    let params = engine.init_params().unwrap();
+    let x = vec![0.05f32; meta.train_batch * meta.sample_dim()];
+    let y: Vec<i32> = (0..meta.train_batch as i32).map(|i| i % 10).collect();
+    let (next, loss) = engine.train_step(&params, &x, &y, 0.01).unwrap();
+    assert!((loss - 10f32.ln()).abs() < 1e-4);
+    assert_ne!(next, params);
+}
