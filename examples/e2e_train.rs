@@ -9,9 +9,10 @@
 //! Phase 2: a short VGG-mini (cnn preset) leg — 2 rounds on a reduced
 //! topology — proving the conv/Pallas artifact path composes identically
 //! (the cnn train step is ~300x more FLOPs, so the long run uses the MLP).
+//! The cnn preset has no native implementation, so phase 2 is skipped with
+//! a notice unless the `pjrt` feature + artifacts are available.
 //!
-//! Run: `make artifacts && cargo run --release --example e2e_train
-//!       [--rounds 150] [--skip-cnn]`
+//! Run: `cargo run --release --example e2e_train [--rounds 150] [--skip-cnn]`
 
 use std::path::Path;
 
@@ -71,7 +72,13 @@ fn main() -> anyhow::Result<()> {
         cfg.num_channels = 1;
         cfg.dataset_max = 400; // small shards -> small train batches
         cfg.test_size = 256;
-        let exp = Experiment::new(cfg)?;
+        let exp = match Experiment::new(cfg) {
+            Ok(exp) => exp,
+            Err(e) => {
+                eprintln!("[e2e] phase 2 skipped: {e}");
+                return Ok(());
+            }
+        };
         let mut sched = exp.make_scheduler("ddsra")?;
         eprintln!("[e2e] phase 2: 2 rounds of VGG-mini through the conv/Pallas artifacts");
         let log = exp.run(

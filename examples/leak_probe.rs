@@ -1,4 +1,4 @@
-use iiot_fl::runtime::Engine;
+use iiot_fl::runtime::{Backend, Engine};
 fn rss_mb() -> f64 {
     let s = std::fs::read_to_string("/proc/self/statm").unwrap();
     let pages: f64 = s.split_whitespace().nth(1).unwrap().parse().unwrap();

@@ -16,7 +16,7 @@ use std::path::Path;
 use anyhow::Result;
 use iiot_fl::rng::Rng;
 use iiot_fl::runtime::engine::{lit_f32, lit_i32, run_tuple};
-use iiot_fl::runtime::Engine;
+use iiot_fl::runtime::{Backend, Engine};
 
 // Mirrors python/compile/model.py CNN_BOTTOM_PARAMS / CNN_CUT_ACT_SHAPE.
 const BOTTOM_PARAMS: usize = 4;

@@ -6,7 +6,7 @@
 use std::time::Instant;
 
 use iiot_fl::rng::Rng;
-use iiot_fl::runtime::Engine;
+use iiot_fl::runtime::{Backend, Engine};
 
 fn main() -> anyhow::Result<()> {
     let engine = Engine::load(std::path::Path::new("artifacts"), "mlp")?;

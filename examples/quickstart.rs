@@ -3,9 +3,13 @@
 //! Builds the paper's default IIoT deployment (6 shop floors, 12 devices,
 //! 3 channels), derives the device-specific participation rates Γ_m from
 //! gradient probes (§IV), runs 10 communication rounds of DDSRA with real
-//! PJRT training of the MLP preset, and prints the learning curve.
+//! training of the MLP preset, and prints the learning curve.
 //!
-//! Run: `make artifacts && cargo run --release --example quickstart`
+//! Needs NO artifacts: the pure-Rust NativeBackend trains the MLP out of
+//! the box. (With `--features pjrt` and `make artifacts`, the same run
+//! executes through the PJRT engine instead.)
+//!
+//! Run: `cargo run --release --example quickstart`
 
 use iiot_fl::config::SimConfig;
 use iiot_fl::fl::{Experiment, RunOpts};

@@ -8,7 +8,8 @@
 //!   * the participation-rate deficit Σ_m max(Γ_m − rate_m, 0)
 //!     (should INCREASE with V).
 //!
-//! Run: `make artifacts && cargo run --release --example tradeoff_v [--rounds 300]`
+//! Run: `cargo run --release --example tradeoff_v [--rounds 300]`
+//! (no artifacts needed — scheduling-only, Γ from the native backend)
 
 use iiot_fl::cli::Args;
 use iiot_fl::config::SimConfig;
@@ -36,7 +37,6 @@ fn main() -> anyhow::Result<()> {
 
     let opts = RunOpts { rounds, eval_every: 0, track_divergence: false, train: false };
     let mut rows = Vec::new();
-    let mut prev_delay = f64::INFINITY;
     for &v in &[0.01, 1.0, 100.0, 1e4, 1e6] {
         let mut sched = Ddsra::new(v, gamma.clone());
         let log = exp.run(&mut sched, &opts)?;
@@ -52,7 +52,6 @@ fn main() -> anyhow::Result<()> {
             format!("{deficit:.3}"),
             log.participation.iter().map(|p| format!("{p:.2}")).collect::<Vec<_>>().join(" "),
         ]);
-        prev_delay = prev_delay.min(avg_delay);
     }
     print_table(
         &format!("Theorem 2 trade-off over {rounds} rounds"),

@@ -61,9 +61,14 @@ fn main() {
         std::hint::black_box(chan.draw(&mut r));
     });
 
-    bench("plan_cost (fixed plan, Eq.1-10 evaluation)", 10_000, || {
+    bench("fixed_plan construction (incl. one plan_cost)", 10_000, || {
         let plan = baselines::fixed_plan(&ctx, 0, 0);
         std::hint::black_box(plan);
+    });
+
+    let fixed = baselines::fixed_plan(&ctx, 0, 0);
+    bench("plan_cost (Eq.1-10 evaluation only)", 10_000, || {
+        std::hint::black_box(plan_cost(&ctx, &fixed));
     });
 
     bench("DDSRA solve_gateway (BCD l/f/P, one pair)", 2_000, || {

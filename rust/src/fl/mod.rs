@@ -1,6 +1,6 @@
 //! Federated learning core: FedAvg aggregation, the §IV device-specific
 //! participation-rate machinery, and the round-loop orchestrator that ties
-//! scheduling, simulation and PJRT execution together.
+//! scheduling, simulation and backend execution together.
 
 pub mod orchestrator;
 pub mod participation;

@@ -1,15 +1,16 @@
 //! The FL orchestrator: owns one experiment (topology, data, channel and
-//! energy processes, PJRT engine) and runs schedulers against it.
+//! energy processes, execution backend) and runs schedulers against it.
 //!
 //! One communication round (§III-A):
 //!   1. draw the block-fading channel state and the EH energy arrivals;
 //!   2. the scheduler picks J gateways + resources (X(t));
 //!   3. feasibility is enforced (C7–C10) — infeasible plans "fail" and
 //!      contribute no update (the baselines' failure mode in §VII-C);
-//!   4. every scheduled device runs K local SGD iterations through the AOT
-//!      train-step artifact (device/gateway placement is simulated by the
-//!      cost model; the partitioned arithmetic is proven identical by
-//!      examples/partitioned_step);
+//!   4. every scheduled device runs K local SGD iterations through the
+//!      execution backend — the pure-Rust `NativeBackend` by default, the
+//!      AOT train-step artifact under the `pjrt` feature (device/gateway
+//!      placement is simulated by the cost model; the partitioned
+//!      arithmetic is proven identical by examples/partitioned_step);
 //!   5. shop-floor FedAvg then global FedAvg (both weight by D̃_n);
 //!   6. periodic evaluation on the IID test set.
 //!
@@ -30,7 +31,7 @@ use crate::fl::participation::GradStats;
 use crate::fl::vecmath;
 use crate::net::ChannelModel;
 use crate::rng::Rng;
-use crate::runtime::{Engine, Params};
+use crate::runtime::{make_backend, Backend, Params};
 use crate::sched::latency::plan_cost;
 use crate::sched::{RoundCtx, RoundFeedback, Scheduler};
 use crate::topo::Topology;
@@ -44,7 +45,7 @@ pub struct RunOpts {
     /// Track ||ŵ_m − v^{K,t}|| against a centralized-GD shadow (Fig. 2);
     /// forces all devices to train each round for measurement.
     pub track_divergence: bool,
-    /// Execute real training through PJRT. When false, only the
+    /// Execute real training through the backend. When false, only the
     /// scheduling/delay simulation runs (used by scheduling-only benches).
     pub train: bool,
 }
@@ -119,11 +120,12 @@ pub struct Experiment {
     pub shards: Vec<DeviceShard>,
     pub test_x: Vec<f32>,
     pub test_y: Vec<i32>,
-    pub engine: Engine,
+    pub engine: Box<dyn Backend>,
 }
 
 impl Experiment {
-    /// Build topology, channels, data and load the PJRT engine.
+    /// Build topology, channels, data and the execution backend (native by
+    /// default; PJRT artifacts under `artifacts/` when feature-enabled).
     pub fn new(cfg: SimConfig) -> Result<Self> {
         Self::with_artifacts(cfg, std::path::Path::new("artifacts"))
     }
@@ -141,7 +143,7 @@ impl Experiment {
         let (test_x, test_y) = data.test_set(cfg.test_size, &mut data_rng);
         let cost_model = models::by_name(&cfg.cost_model)
             .with_context(|| format!("unknown cost model {:?}", cfg.cost_model))?;
-        let engine = Engine::load(artifacts, &cfg.exec_model)?;
+        let engine = make_backend(artifacts, &cfg.exec_model)?;
         Ok(Experiment { cfg, topo, cost_model, chan, shards, test_x, test_y, engine })
     }
 
@@ -180,7 +182,7 @@ impl Experiment {
 
     /// Sample a training batch (with replacement) from device n's shard.
     fn sample_batch(&self, n: usize, rng: &mut Rng) -> (Vec<f32>, Vec<i32>) {
-        let b = self.engine.meta.train_batch;
+        let b = self.engine.meta().train_batch;
         let shard = &self.shards[n];
         let mut x = Vec::with_capacity(b * IMG_DIM);
         let mut y = Vec::with_capacity(b);
@@ -201,7 +203,7 @@ impl Experiment {
     fn local_train(&self, n: usize, start: &Params, rng: &mut Rng) -> Result<(Params, f64)> {
         let k = self.cfg.local_iters;
         if self.engine.fused_k() == Some(k) {
-            let b = self.engine.meta.train_batch;
+            let b = self.engine.meta().train_batch;
             let mut xs = Vec::with_capacity(k * b * IMG_DIM);
             let mut ys = Vec::with_capacity(k * b);
             for _ in 0..k {
@@ -229,7 +231,7 @@ impl Experiment {
         let params = self.engine.init_params()?;
         let mut rng = Rng::new(self.cfg.seed ^ 0x9d0b);
         let n_dev = self.topo.num_devices();
-        let b = self.engine.meta.train_batch as f64;
+        let b = self.engine.meta().train_batch as f64;
 
         // Per-device mean gradient + per-batch deviations.
         let mut mean_grads: Vec<Vec<f32>> = Vec::with_capacity(n_dev);

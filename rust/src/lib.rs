@@ -6,8 +6,18 @@
 //! Layer 3 of the three-layer stack: the rust coordinator owns the FL round
 //! loop, the DDSRA scheduler (Lyapunov drift-plus-penalty + block coordinate
 //! descent + bisection + Hungarian), the wireless/energy/memory simulators,
-//! and the PJRT runtime that executes the AOT-compiled JAX/Pallas artifacts.
+//! and a pluggable execution backend that runs the actual training.
 //! Python never runs on the request path.
+//!
+//! # Execution backends
+//!
+//! Training/evaluation go through the [`runtime::Backend`] trait:
+//! - default build: [`runtime::NativeBackend`], a pure-Rust dense
+//!   forward/backward + SGD implementation of the `mlp` preset — the whole
+//!   stack builds, trains and is tested with **zero native dependencies**;
+//! - feature `pjrt`: [`runtime::Engine`] executes the AOT-compiled
+//!   JAX/Pallas HLO artifacts on the PJRT CPU client (requires the `xla`
+//!   crate to be supplied — see Cargo.toml — plus `make artifacts`).
 //!
 //! Module map (see DESIGN.md for the full system inventory):
 //! - [`dnn`] — layer-level FLOPs/memory model (paper Table II) + model zoo
@@ -18,7 +28,7 @@
 //! - [`sched`] — DDSRA (§V) and the four baseline schedulers
 //! - [`fl`] — FL orchestration, FedAvg, participation rates (§IV)
 //! - [`data`] — synthetic SVHN/CIFAR-like datasets + non-IID sharding
-//! - [`runtime`] — PJRT CPU client over the AOT HLO artifacts
+//! - [`runtime`] — the [`runtime::Backend`] trait + native/PJRT engines
 //! - [`rng`], [`config`], [`metrics`], [`cli`] — infrastructure
 
 pub mod cli;

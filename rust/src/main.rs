@@ -1,7 +1,8 @@
 //! iiot-fl — launcher for the DDSRA federated-learning system.
 //!
 //! Subcommands:
-//!   train          run one scheduler for T rounds with real PJRT training
+//!   train          run one scheduler for T rounds with real training
+//!                  (pure-Rust NativeBackend; PJRT with --features pjrt)
 //!   participation  estimate Γ_m (Eq. 13) for the current config
 //!   info           print the cost-model layer table (Table II view)
 //!

@@ -214,6 +214,85 @@ mod tests {
         }
     }
 
+    /// Eq. 28–29 shape: composite cost Θ with −Q_m for admissible pairs and
+    /// a huge Ψ penalty for inadmissible ones. When an admissible perfect
+    /// matching of the channels exists, the solver must find one without
+    /// paying Ψ, and it must serve the longest queues.
+    #[test]
+    fn psi_penalty_composite_assignment() {
+        const PSI: f64 = 1e15;
+        let queues = [10.0, 2.0, 8.0, 1.0, 9.0, 0.5];
+        // gw1 admissible only on channel 2; gw3 admissible nowhere.
+        let admissible = [
+            [true, true, true],
+            [false, false, true],
+            [true, true, false],
+            [false, false, false],
+            [true, false, true],
+            [true, true, true],
+        ];
+        let cost: Vec<Vec<f64>> = (0..6)
+            .map(|m| {
+                (0..3)
+                    .map(|j| if admissible[m][j] { -queues[m] } else { PSI })
+                    .collect()
+            })
+            .collect();
+        let (assign, total) = hungarian_min(&cost);
+        assert!(total < PSI / 2.0, "admissible matching exists but Ψ was paid");
+        // Exactly J = 3 rows assigned, channels distinct, admissible only.
+        let picks: Vec<(usize, usize)> = assign
+            .iter()
+            .enumerate()
+            .filter_map(|(m, a)| a.map(|j| (m, j)))
+            .collect();
+        assert_eq!(picks.len(), 3);
+        let mut chs: Vec<_> = picks.iter().map(|&(_, j)| j).collect();
+        chs.sort_unstable();
+        assert_eq!(chs, vec![0, 1, 2]);
+        for &(m, j) in &picks {
+            assert!(admissible[m][j], "inadmissible pair ({m},{j}) selected");
+        }
+        // Optimal total is serving the three longest admissible queues:
+        // gw0 (10), gw4 (9), gw2 (8) — fits: gw2 on ch1, gw4 on ch2|0, gw0 rest.
+        assert!((total - (-27.0)).abs() < 1e-9, "total {total}");
+        assert_eq!(assign[3], None, "fully-inadmissible gateway must stay unassigned");
+    }
+
+    /// When no admissible perfect matching exists, the minimum cost must
+    /// include at least one Ψ — the DDSRA λ-sweep uses `total >= Ψ/2` as
+    /// its rejection test.
+    #[test]
+    fn psi_penalty_reports_no_admissible_matching() {
+        const PSI: f64 = 1e15;
+        // Channel 1 is inadmissible for every gateway.
+        let cost: Vec<Vec<f64>> = (0..4)
+            .map(|m| vec![-(m as f64), PSI, -(m as f64)])
+            .collect();
+        let (_, total) = hungarian_min(&cost);
+        assert!(total >= PSI / 2.0);
+    }
+
+    #[test]
+    fn one_by_one_and_single_column() {
+        let (a, c) = hungarian_min(&[vec![3.5]]);
+        assert_eq!(a, vec![Some(0)]);
+        assert_eq!(c, 3.5);
+        // 3 rows, 1 column: only the cheapest row is assigned.
+        let (a, c) = hungarian_min(&[vec![5.0], vec![1.0], vec![2.0]]);
+        assert_eq!(c, 1.0);
+        assert_eq!(a, vec![None, Some(0), None]);
+    }
+
+    #[test]
+    fn negative_costs_supported() {
+        // Queue-composite costs are negative; optimum picks most-negative.
+        let cost = vec![vec![-5.0, -1.0], vec![-2.0, -4.0]];
+        let (a, c) = hungarian_min(&cost);
+        assert_eq!(c, -9.0);
+        assert_eq!(a, vec![Some(0), Some(1)]);
+    }
+
     #[test]
     fn large_instance_runs() {
         let mut rng = Rng::new(5);

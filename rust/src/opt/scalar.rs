@@ -111,6 +111,64 @@ mod tests {
         assert!(bisect_root(0.0, 1.0, 1e-9, 100, |x| x + 1.0).is_none());
     }
 
+    #[test]
+    fn bisect_root_exact_at_endpoints() {
+        // f(lo) == 0 and f(hi) == 0 short-circuit without iterating.
+        assert_eq!(bisect_root(2.0, 9.0, 1e-9, 100, |x| x - 2.0), Some(2.0));
+        assert_eq!(bisect_root(0.0, 4.0, 1e-9, 100, |x| x - 4.0), Some(4.0));
+    }
+
+    #[test]
+    fn bisect_root_degenerate_bracket() {
+        // lo == hi with a sign: no bracket, must refuse rather than loop.
+        assert!(bisect_root(1.0, 1.0, 1e-9, 100, |x| x - 0.5).is_none());
+        // Same-sign negative bracket is also rejected.
+        assert!(bisect_root(0.0, 1.0, 1e-9, 100, |x| -x - 1.0).is_none());
+    }
+
+    #[test]
+    fn bisect_root_respects_iteration_cap() {
+        // One iteration still returns a point inside the bracket.
+        let r = bisect_root(0.0, 8.0, 0.0, 1, |x| x - 3.0).unwrap();
+        assert!((0.0..=8.0).contains(&r));
+    }
+
+    #[test]
+    fn bisect_root_energy_balance_shape() {
+        // The Eq. 23–24 P-step solves g(P) = c1·log2(1 + c2·P) − P = 0 with
+        // g(0+) > 0 and g(Pmax) < 0; the recovered root must satisfy g ≈ 0.
+        let (c1, c2) = (0.05, 400.0);
+        let g = |p: f64| c1 * (1.0 + c2 * p).log2() - p;
+        assert!(g(1e-12) > 0.0 && g(1.0) < 0.0);
+        let p = bisect_root(1e-12, 1.0, 1e-12, 200, g).unwrap();
+        assert!(g(p).abs() < 1e-6, "g({p}) = {}", g(p));
+        assert!(p > 0.0 && p < 1.0);
+    }
+
+    #[test]
+    fn bisect_decreasing_threshold_at_bounds() {
+        // Threshold exactly at hi: feasible(hi) holds, answer near hi.
+        let got = bisect_decreasing(0.0, 5.0, 1e-9, 200, |e| e >= 5.0).unwrap();
+        assert!((got - 5.0).abs() < 1e-6, "{got}");
+        // Degenerate interval, feasible: returns lo immediately.
+        assert_eq!(bisect_decreasing(3.0, 3.0, 1e-9, 100, |e| e >= 1.0), Some(3.0));
+        // Degenerate interval, infeasible: None.
+        assert!(bisect_decreasing(3.0, 3.0, 1e-9, 100, |_| false).is_none());
+    }
+
+    #[test]
+    fn bisect_decreasing_result_is_always_feasible() {
+        // The returned eta itself must satisfy the predicate (the f-step
+        // allocates frequencies AT the returned θ, so feasibility of the
+        // answer — not just proximity to the threshold — is load-bearing).
+        let mut rng = Rng::new(4242);
+        for _ in 0..100 {
+            let t = rng.uniform(0.5, 9.5);
+            let got = bisect_decreasing(0.0, 10.0, 1e-6, 100, |e| e >= t).unwrap();
+            assert!(got >= t, "returned infeasible eta {got} for threshold {t}");
+        }
+    }
+
     /// Property: for random monotone thresholds, bisection recovers them.
     #[test]
     fn property_random_thresholds() {

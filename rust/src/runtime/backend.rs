@@ -1,0 +1,114 @@
+//! The pluggable execution backend: everything the FL orchestrator needs
+//! from a training runtime, abstracted over *how* the numerics run.
+//!
+//! Two implementations:
+//! * [`crate::runtime::NativeBackend`] — pure-Rust dense forward/backward +
+//!   SGD for the `mlp` preset. Zero native dependencies; the default.
+//! * [`crate::runtime::Engine`] (feature `pjrt`) — the PJRT CPU client over
+//!   the AOT HLO artifacts compiled by python/compile/aot.py.
+//!
+//! Parameters live in the coordinator as `Params = Vec<Vec<f32>>` (one flat
+//! buffer per tensor, in artifact ABI order) so that FedAvg, divergence
+//! norms and the centralized-GD shadow run are plain vector arithmetic
+//! regardless of backend.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::meta::ModelMeta;
+
+/// Model parameters as flat per-tensor buffers (artifact ABI order).
+pub type Params = Vec<Vec<f32>>;
+
+/// One model preset's training/evaluation runtime.
+pub trait Backend {
+    /// Shapes and sizes of the preset this backend executes.
+    fn meta(&self) -> &ModelMeta;
+
+    /// K of the fused local-training entry point, if one is available.
+    fn fused_k(&self) -> Option<usize> {
+        None
+    }
+
+    /// Seeded, deterministic parameter initialisation.
+    fn init_params(&self) -> Result<Params>;
+
+    /// One SGD step: (params, x[train_batch·dim], y[train_batch], lr)
+    /// -> (params', mean batch loss).
+    fn train_step(&self, params: &Params, x: &[f32], y: &[i32], lr: f32)
+        -> Result<(Params, f32)>;
+
+    /// K fused SGD steps: (params, xs[K·train_batch·dim], ys[K·train_batch],
+    /// lr) -> (params', mean loss). Only when [`Backend::fused_k`] is Some.
+    fn train_k_steps(
+        &self,
+        _params: &Params,
+        _xs: &[f32],
+        _ys: &[i32],
+        _lr: f32,
+    ) -> Result<(Params, f32)> {
+        anyhow::bail!("backend for {:?} has no fused train_k entry point", self.meta().preset)
+    }
+
+    /// One eval batch: -> (sum of per-sample losses, number correct).
+    fn eval_batch(&self, params: &Params, x: &[f32], y: &[i32]) -> Result<(f64, f64)>;
+
+    /// Evaluate a whole test set (len divisible by `eval_batch`);
+    /// returns (mean loss, accuracy).
+    fn eval_full(&self, params: &Params, x: &[f32], y: &[i32]) -> Result<(f64, f64)> {
+        let b = self.meta().eval_batch;
+        let dim = self.meta().sample_dim();
+        if y.len() % b != 0 {
+            anyhow::bail!("test set size {} not divisible by eval batch {b}", y.len());
+        }
+        if x.len() != y.len() * dim {
+            anyhow::bail!("test inputs {} != {} labels x dim {dim}", x.len(), y.len());
+        }
+        let (mut loss, mut correct) = (0.0, 0.0);
+        for c in 0..y.len() / b {
+            let (l, n_ok) =
+                self.eval_batch(params, &x[c * b * dim..(c + 1) * b * dim], &y[c * b..(c + 1) * b])?;
+            loss += l;
+            correct += n_ok;
+        }
+        let n = y.len() as f64;
+        Ok((loss / n, correct / n))
+    }
+
+    /// Flat minibatch gradient (sigma/delta probes for §IV), length
+    /// `meta().param_total`.
+    fn grad(&self, params: &Params, x: &[f32], y: &[i32]) -> Result<Vec<f32>>;
+}
+
+/// Construct the best available backend for `preset`.
+///
+/// With the `pjrt` feature enabled AND compiled artifacts present under
+/// `artifacts_dir`, the PJRT engine is used; otherwise the pure-Rust
+/// [`crate::runtime::NativeBackend`] serves the `mlp` preset. Presets with
+/// no native implementation (`cnn`) require the PJRT path.
+pub fn make_backend(artifacts_dir: &Path, preset: &str) -> Result<Box<dyn Backend>> {
+    #[cfg(feature = "pjrt")]
+    {
+        if artifacts_dir.join(format!("{preset}.meta")).exists() {
+            return Ok(Box::new(super::engine::Engine::load(artifacts_dir, preset)?));
+        }
+    }
+    let _ = artifacts_dir;
+    match preset {
+        "mlp" => {
+            // A pjrt build reaching this point means the artifacts are
+            // missing — say so instead of silently swapping the numerics.
+            #[cfg(feature = "pjrt")]
+            eprintln!(
+                "[runtime] no compiled artifacts under {artifacts_dir:?} — \
+                 falling back to the pure-Rust native mlp backend"
+            );
+            Ok(Box::new(super::native::NativeBackend::mlp()))
+        }
+        other => anyhow::bail!(
+            "preset {other:?} needs the `pjrt` feature and compiled artifacts \
+             (the native backend implements \"mlp\")"
+        ),
+    }
+}

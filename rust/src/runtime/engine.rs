@@ -1,22 +1,21 @@
-//! The PJRT execution engine: one compiled executable per artifact.
+//! The PJRT execution engine (feature `pjrt`): one compiled executable per
+//! artifact, implementing [`Backend`] over the AOT HLO artifacts.
 //!
 //! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax >= 0.5
 //! emits 64-bit instruction ids that xla_extension 0.5.1 rejects in proto
 //! form; the text parser reassigns ids (see DESIGN.md and aot.py).
 //!
-//! Parameters live in the coordinator as `Params = Vec<Vec<f32>>` (one flat
-//! buffer per tensor, in artifact ABI order) so that FedAvg, divergence
-//! norms and the centralized-GD shadow run are plain vector arithmetic.
+//! NOTE: the `xla` crate is not on crates.io; enabling this feature
+//! requires adding a vendored checkout of xla-rs under [dependencies]
+//! in Cargo.toml (e.g. `xla = { path = "../xla-rs" }`).
 
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
+use super::backend::{Backend, Params};
 use super::meta::ModelMeta;
-
-/// Model parameters as flat per-tensor buffers (artifact ABI order).
-pub type Params = Vec<Vec<f32>>;
 
 /// Loads and runs one preset's artifact family.
 pub struct Engine {
@@ -61,11 +60,6 @@ impl Engine {
         })
     }
 
-    /// K of the fused local-training artifact, if loaded.
-    pub fn fused_k(&self) -> Option<usize> {
-        self.train_k.as_ref().map(|_| self.meta.train_k)
-    }
-
     /// Compile an arbitrary extra artifact from the same directory (used by
     /// the partitioned-step example).
     pub fn compile_extra(&self, name: &str) -> Result<PjRtLoadedExecutable> {
@@ -92,17 +86,26 @@ impl Engine {
     fn unpack_params(&self, lits: &[Literal]) -> Result<Params> {
         lits.iter().map(|l| l.to_vec::<f32>().map_err(Into::into)).collect()
     }
+}
 
-    // ------------------------------------------------------------ entry points
+impl Backend for Engine {
+    fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    /// K of the fused local-training artifact, if loaded.
+    fn fused_k(&self) -> Option<usize> {
+        self.train_k.as_ref().map(|_| self.meta.train_k)
+    }
 
     /// Seeded parameter initialisation (runs the `init` artifact).
-    pub fn init_params(&self) -> Result<Params> {
+    fn init_params(&self) -> Result<Params> {
         let out = run_tuple(&self.init, &[])?;
         self.unpack_params(&out)
     }
 
     /// One SGD step: (params, x[train_batch], y, lr) -> (params', loss).
-    pub fn train_step(
+    fn train_step(
         &self,
         params: &Params,
         x: &[f32],
@@ -121,7 +124,7 @@ impl Engine {
 
     /// K fused SGD steps: (params, xs[K·train_batch·dim], ys[K·train_batch],
     /// lr) -> (params', mean loss). Requires the fused artifact.
-    pub fn train_k_steps(
+    fn train_k_steps(
         &self,
         params: &Params,
         xs: &[f32],
@@ -145,7 +148,7 @@ impl Engine {
     }
 
     /// One eval batch: -> (sum_loss, num_correct).
-    pub fn eval_batch(&self, params: &Params, x: &[f32], y: &[i32]) -> Result<(f64, f64)> {
+    fn eval_batch(&self, params: &Params, x: &[f32], y: &[i32]) -> Result<(f64, f64)> {
         let mut args = self.param_literals(params)?;
         args.push(lit_f32(x, &self.meta.input_eval)?);
         args.push(lit_i32(y, self.meta.eval_batch)?);
@@ -162,7 +165,7 @@ impl Engine {
     /// §Perf: parameters are uploaded to device buffers ONCE and reused
     /// across all chunks via `execute_b` (the test set spans several
     /// batches, and the 0.8 MB parameter upload dominated per-chunk cost).
-    pub fn eval_full(&self, params: &Params, x: &[f32], y: &[i32]) -> Result<(f64, f64)> {
+    fn eval_full(&self, params: &Params, x: &[f32], y: &[i32]) -> Result<(f64, f64)> {
         let b = self.meta.eval_batch;
         let dim = self.meta.sample_dim();
         if y.len() % b != 0 || x.len() != y.len() * dim {
@@ -198,7 +201,7 @@ impl Engine {
     }
 
     /// Flat minibatch gradient (sigma/delta probes for §IV).
-    pub fn grad(&self, params: &Params, x: &[f32], y: &[i32]) -> Result<Vec<f32>> {
+    fn grad(&self, params: &Params, x: &[f32], y: &[i32]) -> Result<Vec<f32>> {
         let mut args = self.param_literals(params)?;
         args.push(lit_f32(x, &self.meta.input_train)?);
         args.push(lit_i32(y, self.meta.train_batch)?);

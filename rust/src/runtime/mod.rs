@@ -1,11 +1,23 @@
-//! PJRT runtime (request path): loads the AOT HLO-text artifacts produced
-//! by `make artifacts` and executes them on the PJRT CPU client.
+//! Execution runtime (request path), behind the pluggable [`Backend`]
+//! trait: the orchestrator trains and evaluates through `Box<dyn Backend>`
+//! and never sees which engine runs the numerics.
 //!
-//! Python is never on this path — the artifacts are compiled once at
-//! `Engine::load` and executed from the FL round loop.
+//! * Default build: [`NativeBackend`] — pure-Rust MLP training, no
+//!   artifacts, no native libraries.
+//! * Feature `pjrt`: [`Engine`] loads the AOT HLO-text artifacts produced
+//!   by `make artifacts` and executes them on the PJRT CPU client (Python
+//!   is never on this path — artifacts compile once at `Engine::load`).
+//!
+//! [`make_backend`] picks the best available implementation per preset.
 
+pub mod backend;
+#[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod meta;
+pub mod native;
 
-pub use engine::{Engine, Params};
+pub use backend::{make_backend, Backend, Params};
+#[cfg(feature = "pjrt")]
+pub use engine::Engine;
 pub use meta::ModelMeta;
+pub use native::NativeBackend;

@@ -38,7 +38,7 @@ pub struct Ddsra {
     pub queues: Vec<f64>,
     /// BCD outer iterations for the (l, f, P) subproblem.
     pub bcd_iters: usize,
-    /// Run the per-(m,j) Λ solves on parallel threads (§V-C scalability).
+    /// Run the per-(m,j) Λ solves on the rayon pool (§V-C scalability).
     pub parallel: bool,
 }
 
@@ -274,7 +274,11 @@ impl Ddsra {
             let cost = plan_cost(ctx, &plan);
             if cost.feasible() {
                 plan.lambda = cost.lambda();
-                if best.as_ref().map_or(true, |b| plan.lambda < b.lambda) {
+                let improves = match &best {
+                    None => true,
+                    Some(b) => plan.lambda < b.lambda,
+                };
+                if improves {
                     best = Some(plan);
                 }
             }
@@ -290,19 +294,11 @@ impl Ddsra {
             (0..jj).map(|j| Self::solve_gateway(ctx, m, j, self.bcd_iters)).collect()
         };
         if self.parallel {
-            // §V-C: the MJ subproblems are independent — solve M rows on
-            // scoped threads.
-            let mut rows: Vec<Option<Vec<Option<GatewayPlan>>>> = (0..mm).map(|_| None).collect();
-            std::thread::scope(|s| {
-                let mut handles = Vec::new();
-                for m in 0..mm {
-                    handles.push((m, s.spawn(move || solve_row(m))));
-                }
-                for (m, h) in handles {
-                    rows[m] = Some(h.join().expect("solver thread panicked"));
-                }
-            });
-            rows.into_iter().map(|r| r.unwrap()).collect()
+            // §V-C: the MJ subproblems are independent — solve the M rows
+            // on the rayon pool. Ordering is preserved by into_par_iter, so
+            // the result is identical to the serial path.
+            use rayon::prelude::*;
+            (0..mm).into_par_iter().map(solve_row).collect()
         } else {
             (0..mm).map(solve_row).collect()
         }

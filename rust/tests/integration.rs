@@ -1,23 +1,13 @@
-//! Integration tests over the full stack: PJRT runtime + orchestrator +
-//! schedulers, exercising the real AOT artifacts (`make artifacts` first —
-//! tests skip gracefully when artifacts are absent so `cargo test` works
-//! in a fresh checkout).
-
-use std::path::Path;
+//! Integration tests over the full stack: execution backend + orchestrator
+//! + schedulers. They run UNCONDITIONALLY against the pure-Rust
+//! `NativeBackend` — a fresh checkout with no Python artifacts and no XLA
+//! native libraries exercises real multi-round train/aggregate/eval here.
+//! The PJRT-artifact variants live behind the `pjrt` feature (module
+//! `pjrt_artifacts` at the bottom).
 
 use iiot_fl::config::SimConfig;
 use iiot_fl::fl::{Experiment, RunOpts};
-use iiot_fl::runtime::Engine;
-
-fn artifacts() -> Option<&'static Path> {
-    let p = Path::new("artifacts");
-    if p.join("mlp.meta").exists() {
-        Some(p)
-    } else {
-        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
-        None
-    }
-}
+use iiot_fl::runtime::{make_backend, Backend, NativeBackend};
 
 fn mlp_cfg() -> SimConfig {
     let mut cfg = SimConfig::default();
@@ -29,17 +19,28 @@ fn mlp_cfg() -> SimConfig {
 }
 
 #[test]
-fn engine_init_train_eval_grad_roundtrip() {
-    let Some(dir) = artifacts() else { return };
-    let engine = Engine::load(dir, "mlp").unwrap();
-    let meta = engine.meta.clone();
+fn make_backend_falls_back_to_native_without_artifacts() {
+    // No artifacts/ directory exists in a fresh checkout: the mlp preset
+    // must still produce a working backend.
+    let b = make_backend(std::path::Path::new("artifacts"), "mlp").unwrap();
+    assert_eq!(b.meta().preset, "mlp");
+    assert!(b.init_params().is_ok());
+    // cnn has no native implementation.
+    #[cfg(not(feature = "pjrt"))]
+    assert!(make_backend(std::path::Path::new("artifacts"), "cnn").is_err());
+}
+
+#[test]
+fn backend_init_train_eval_grad_roundtrip() {
+    let engine = NativeBackend::mlp();
+    let meta = engine.meta().clone();
 
     let params = engine.init_params().unwrap();
     assert_eq!(params.len(), meta.param_shapes.len());
     let total: usize = params.iter().map(|p| p.len()).sum();
     assert_eq!(total, meta.param_total);
 
-    // init must be deterministic (seeded in the artifact)
+    // init must be deterministic (seeded in the backend)
     let params2 = engine.init_params().unwrap();
     assert_eq!(params, params2);
 
@@ -72,7 +73,6 @@ fn engine_init_train_eval_grad_roundtrip() {
 
 #[test]
 fn experiment_runs_every_scheme_one_round() {
-    let Some(_) = artifacts() else { return };
     let mut cfg = mlp_cfg();
     cfg.rounds = 2;
     let exp = Experiment::new(cfg).unwrap();
@@ -95,7 +95,6 @@ fn experiment_runs_every_scheme_one_round() {
 
 #[test]
 fn runs_are_deterministic_and_paired_across_schedulers() {
-    let Some(_) = artifacts() else { return };
     let mut cfg = mlp_cfg();
     cfg.rounds = 3;
     let exp = Experiment::new(cfg.clone()).unwrap();
@@ -112,10 +111,7 @@ fn runs_are_deterministic_and_paired_across_schedulers() {
         assert_eq!(ra.train_loss, rb.train_loss);
     }
 
-    // Different schemes: identical channel/energy environment means a
-    // gateway selected by both in round t sees the same Λ inputs; we check
-    // the cheaper invariant that the experiment itself is reproducible
-    // from the seed.
+    // A re-built experiment from the same config seed reproduces the run.
     let exp2 = Experiment::new(cfg).unwrap();
     let mut s3 = exp2.make_scheduler("round_robin").unwrap();
     let c = exp2.run(s3.as_mut(), &opts).unwrap();
@@ -127,7 +123,6 @@ fn runs_are_deterministic_and_paired_across_schedulers() {
 
 #[test]
 fn divergence_mode_produces_per_gateway_divergence() {
-    let Some(_) = artifacts() else { return };
     let mut cfg = mlp_cfg();
     cfg.rounds = 2;
     let exp = Experiment::new(cfg).unwrap();
@@ -141,7 +136,6 @@ fn divergence_mode_produces_per_gateway_divergence() {
 
 #[test]
 fn grad_stats_reflect_non_iid_structure() {
-    let Some(_) = artifacts() else { return };
     let exp = Experiment::new(mlp_cfg()).unwrap();
     let stats = exp.estimate_grad_stats(4).unwrap();
     assert!(stats.sigma.iter().all(|&s| s.is_finite() && s >= 0.0));
@@ -155,17 +149,15 @@ fn grad_stats_reflect_non_iid_structure() {
         .map(|&n| stats.delta[n])
         .sum::<f64>()
         / exp.topo.gateways[0].members.len() as f64;
-    let worst = stats
-        .delta
-        .iter()
-        .cloned()
-        .fold(0.0f64, f64::max);
+    let worst = stats.delta.iter().cloned().fold(0.0f64, f64::max);
     assert!(d0 < worst, "gw0 delta {d0} should be below the max {worst}");
 }
 
+/// The acceptance-criteria test: genuine multi-round federated training
+/// through the NativeBackend — train loss must DECREASE and test accuracy
+/// must beat 10-class chance, with no artifacts anywhere.
 #[test]
-fn ddsra_learning_beats_chance_quickly() {
-    let Some(_) = artifacts() else { return };
+fn ddsra_native_training_learns() {
     let mut cfg = mlp_cfg();
     cfg.rounds = 12;
     let exp = Experiment::new(cfg).unwrap();
@@ -180,20 +172,75 @@ fn ddsra_learning_beats_chance_quickly() {
     assert!(last < first, "loss {first} -> {last}");
 }
 
-#[test]
-fn cnn_engine_smoke() {
-    let Some(dir) = artifacts() else { return };
-    if !dir.join("cnn.meta").exists() {
-        eprintln!("SKIP: cnn artifacts not built");
-        return;
+// ---------------------------------------------------------------------------
+// PJRT artifact variants: identical scenarios through the XLA engine.
+// Only built with `--features pjrt`; skip gracefully when `make artifacts`
+// has not been run.
+// ---------------------------------------------------------------------------
+
+#[cfg(feature = "pjrt")]
+mod pjrt_artifacts {
+    use super::*;
+    use iiot_fl::runtime::Engine;
+    use std::path::Path;
+
+    fn artifacts() -> Option<&'static Path> {
+        let p = Path::new("artifacts");
+        if p.join("mlp.meta").exists() {
+            Some(p)
+        } else {
+            eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+            None
+        }
     }
-    let engine = Engine::load(dir, "cnn").unwrap();
-    let meta = engine.meta.clone();
-    assert_eq!(meta.input_train, vec![64, 32, 32, 3]);
-    let params = engine.init_params().unwrap();
-    let x = vec![0.05f32; meta.train_batch * meta.sample_dim()];
-    let y: Vec<i32> = (0..meta.train_batch as i32).map(|i| i % 10).collect();
-    let (next, loss) = engine.train_step(&params, &x, &y, 0.01).unwrap();
-    assert!((loss - 10f32.ln()).abs() < 1e-4);
-    assert_ne!(next, params);
+
+    #[test]
+    fn pjrt_engine_roundtrip() {
+        let Some(dir) = artifacts() else { return };
+        let engine = Engine::load(dir, "mlp").unwrap();
+        let meta = engine.meta().clone();
+
+        let params = engine.init_params().unwrap();
+        assert_eq!(params.len(), meta.param_shapes.len());
+        assert_eq!(engine.init_params().unwrap(), params);
+
+        let dim = meta.sample_dim();
+        let x = vec![0.1f32; meta.train_batch * dim];
+        let y: Vec<i32> = (0..meta.train_batch as i32).map(|i| i % 10).collect();
+        let (same, loss0) = engine.train_step(&params, &x, &y, 0.0).unwrap();
+        assert_eq!(same, params);
+        assert!((loss0 - 10f32.ln()).abs() < 1e-4);
+        let (stepped, _) = engine.train_step(&params, &x, &y, 0.01).unwrap();
+        assert_ne!(stepped, params);
+    }
+
+    #[test]
+    fn pjrt_experiment_trains() {
+        let Some(dir) = artifacts() else { return };
+        let mut cfg = mlp_cfg();
+        cfg.rounds = 2;
+        let exp = Experiment::with_artifacts(cfg, dir).unwrap();
+        let mut sched = exp.make_scheduler("round_robin").unwrap();
+        let opts = RunOpts { rounds: 2, eval_every: 2, track_divergence: false, train: true };
+        let log = exp.run(sched.as_mut(), &opts).unwrap();
+        assert!(log.records.last().unwrap().test_acc.is_some());
+    }
+
+    #[test]
+    fn cnn_engine_smoke() {
+        let Some(dir) = artifacts() else { return };
+        if !dir.join("cnn.meta").exists() {
+            eprintln!("SKIP: cnn artifacts not built");
+            return;
+        }
+        let engine = Engine::load(dir, "cnn").unwrap();
+        let meta = engine.meta().clone();
+        assert_eq!(meta.input_train, vec![64, 32, 32, 3]);
+        let params = engine.init_params().unwrap();
+        let x = vec![0.05f32; meta.train_batch * meta.sample_dim()];
+        let y: Vec<i32> = (0..meta.train_batch as i32).map(|i| i % 10).collect();
+        let (next, loss) = engine.train_step(&params, &x, &y, 0.01).unwrap();
+        assert!((loss - 10f32.ln()).abs() < 1e-4);
+        assert_ne!(next, params);
+    }
 }

@@ -1,0 +1,88 @@
+//! Deterministic-replay guarantee: two `Experiment::run` invocations built
+//! from the same `SimConfig` seed must produce BYTE-identical round logs —
+//! bit-for-bit equal floats, not approximately equal. This pins down
+//! `rng.rs` stream forking and protects future parallelism work (the rayon
+//! DDSRA path must not perturb results either).
+
+use iiot_fl::config::SimConfig;
+use iiot_fl::fl::participation::gamma_rates;
+use iiot_fl::fl::{Experiment, RunLog, RunOpts};
+use iiot_fl::sched::Ddsra;
+
+fn cfg() -> SimConfig {
+    let mut cfg = SimConfig::default();
+    cfg.exec_model = "mlp".into();
+    cfg.test_size = 512;
+    cfg.dataset_max = 500;
+    cfg.rounds = 3;
+    cfg
+}
+
+/// Render every field of every round record with exact bit patterns.
+fn serialize(log: &RunLog) -> String {
+    let bits = |v: f64| format!("{:016x}", v.to_bits());
+    let opt = |v: Option<f64>| v.map_or("-".into(), bits);
+    let mut out = String::new();
+    out.push_str(&log.scheme);
+    out.push('\n');
+    for r in &log.records {
+        out.push_str(&format!(
+            "{}|{}|{}|{:?}|{:?}|{}|{}|{}|{:?}\n",
+            r.round,
+            bits(r.delay),
+            bits(r.cum_delay),
+            r.selected,
+            r.failed,
+            opt(r.train_loss),
+            opt(r.test_loss),
+            opt(r.test_acc),
+            r.divergence.as_ref().map(|d| d.iter().map(|&v| bits(v)).collect::<Vec<_>>()),
+        ));
+    }
+    for p in log.participation.iter().chain(&log.effective_participation) {
+        out.push_str(&bits(*p));
+        out.push('\n');
+    }
+    out
+}
+
+#[test]
+fn same_seed_same_bytes() {
+    let opts = RunOpts { rounds: 3, eval_every: 3, track_divergence: false, train: true };
+    let mut logs = Vec::new();
+    for _ in 0..2 {
+        let exp = Experiment::new(cfg()).unwrap();
+        let mut sched = exp.make_scheduler("ddsra").unwrap();
+        logs.push(serialize(&exp.run(sched.as_mut(), &opts).unwrap()));
+    }
+    assert_eq!(logs[0], logs[1], "replay with identical SimConfig diverged");
+}
+
+#[test]
+fn different_seed_different_bytes() {
+    let opts = RunOpts { rounds: 3, eval_every: 3, track_divergence: false, train: true };
+    let run = |seed: u64| {
+        let mut c = cfg();
+        c.seed = seed;
+        let exp = Experiment::new(c).unwrap();
+        let mut sched = exp.make_scheduler("round_robin").unwrap();
+        serialize(&exp.run(sched.as_mut(), &opts).unwrap())
+    };
+    assert_ne!(run(1), run(2), "seed must influence the trajectory");
+}
+
+#[test]
+fn parallel_ddsra_replays_serial_run_exactly() {
+    let opts = RunOpts { rounds: 3, eval_every: 3, track_divergence: false, train: true };
+    let gamma_for = |exp: &Experiment| {
+        let stats = exp.estimate_grad_stats(4).unwrap();
+        gamma_rates(&exp.topo, &stats, exp.cfg.num_channels, exp.cfg.lr, exp.cfg.local_iters).1
+    };
+    let run = |parallel: bool| {
+        let exp = Experiment::new(cfg()).unwrap();
+        let mut sched = Ddsra::new(exp.cfg.lyapunov_v, gamma_for(&exp));
+        sched.parallel = parallel;
+        serialize(&exp.run(&mut sched, &opts).unwrap())
+    };
+    assert_eq!(run(false), run(true), "rayon-parallel DDSRA diverged from serial");
+}

@@ -1,0 +1,221 @@
+//! Scheduler invariant tests (scheduling-only, no training):
+//!
+//! * the DDSRA virtual-queue update (Eq. 14) is exactly
+//!   Q_m(t+1) = max(Q_m(t) − 1_m(t) + Γ_m, 0) — hence non-negative — and
+//!   the queues drain under full participation (J = M);
+//! * every `Decision` from all five schedulers assigns each channel to at
+//!   most one gateway and each gateway at most one channel, within bounds;
+//! * DDSRA only emits plans satisfying ALL memory/energy feasibility
+//!   constraints; the fixed-resource baselines at least never violate the
+//!   device-side memory bound their partition clamp guarantees.
+
+use iiot_fl::config::SimConfig;
+use iiot_fl::dnn::models;
+use iiot_fl::dnn::ModelSpec;
+use iiot_fl::energy::EnergyArrivals;
+use iiot_fl::net::ChannelModel;
+use iiot_fl::rng::Rng;
+use iiot_fl::sched::latency::{plan_cost, Violation};
+use iiot_fl::sched::{
+    Ddsra, Decision, DelayDriven, LossDriven, RandomSched, RoundCtx, RoundRobin, Scheduler,
+};
+use iiot_fl::topo::Topology;
+
+struct World {
+    cfg: SimConfig,
+    topo: Topology,
+    model: ModelSpec,
+    chan: ChannelModel,
+}
+
+fn world(cfg: SimConfig, seed: u64) -> (World, Rng) {
+    let mut rng = Rng::new(seed);
+    let topo = Topology::generate(&cfg, &mut rng);
+    let chan = ChannelModel::new(&cfg, &topo, &mut rng);
+    (World { cfg, topo, model: models::vgg11_cifar(), chan }, rng)
+}
+
+fn ctx<'a>(
+    w: &'a World,
+    state: &'a iiot_fl::net::ChannelState,
+    arrivals: &'a EnergyArrivals,
+    round: usize,
+) -> RoundCtx<'a> {
+    RoundCtx {
+        cfg: &w.cfg,
+        topo: &w.topo,
+        model: &w.model,
+        chan: &w.chan,
+        state,
+        arrivals,
+        round,
+    }
+}
+
+/// Channel-uniqueness (C2/C3) + index/resource bounds for any decision.
+fn assert_decision_well_formed(w: &World, dec: &Decision) {
+    let mm = w.topo.num_gateways();
+    let jj = w.cfg.num_channels;
+    assert!(dec.plans.len() <= jj, "more plans than channels");
+    let mut gws: Vec<_> = dec.plans.iter().map(|p| p.gateway).collect();
+    let mut chs: Vec<_> = dec.plans.iter().map(|p| p.channel).collect();
+    gws.sort_unstable();
+    chs.sort_unstable();
+    let (gl, cl) = (gws.len(), chs.len());
+    gws.dedup();
+    chs.dedup();
+    assert_eq!(gws.len(), gl, "gateway selected twice");
+    assert_eq!(chs.len(), cl, "channel assigned twice");
+    for p in &dec.plans {
+        assert!(p.gateway < mm && p.channel < jj);
+        let gw = &w.topo.gateways[p.gateway];
+        assert_eq!(p.partition.len(), gw.members.len());
+        assert_eq!(p.freq.len(), gw.members.len());
+        assert!(p.power > 0.0 && p.power <= gw.power_max + 1e-12, "power {}", p.power);
+        for (&l, &f) in p.partition.iter().zip(&p.freq) {
+            assert!(l <= w.model.depth(), "partition point {l} beyond depth");
+            assert!(f >= 0.0 && f.is_finite());
+        }
+    }
+}
+
+#[test]
+fn ddsra_queue_update_is_exactly_eq14_and_nonnegative() {
+    let (w, mut rng) = world(SimConfig::default(), 21);
+    let gamma = vec![0.9, 0.7, 0.5, 0.4, 0.3, 0.2];
+    let mut d = Ddsra::new(10.0, gamma.clone());
+    for t in 0..20 {
+        let before = d.queues.clone();
+        let state = w.chan.draw(&mut rng);
+        let arr = EnergyArrivals::draw(&w.cfg, &mut rng);
+        let c = ctx(&w, &state, &arr, t);
+        let dec = d.schedule(&c);
+        for m in 0..w.topo.num_gateways() {
+            let served = if dec.selected(m) { 1.0 } else { 0.0 };
+            let expected = (before[m] - served + gamma[m]).max(0.0);
+            assert!(
+                (d.queues[m] - expected).abs() < 1e-12,
+                "round {t} gw {m}: queue {} != Eq.14 value {expected}",
+                d.queues[m]
+            );
+            assert!(d.queues[m] >= 0.0);
+        }
+    }
+}
+
+#[test]
+fn ddsra_queues_drain_under_full_participation() {
+    // J = M: every gateway can hold a channel every round, so with
+    // Γ_m < 1 the queues must stay pinned near zero instead of growing
+    // ~ t·Γ_m as they would without service.
+    let mut cfg = SimConfig::default();
+    cfg.num_channels = cfg.num_gateways; // J = M = 6 (C3 still holds)
+    let (w, mut rng) = world(cfg, 22);
+    let rounds = 30;
+    let gamma = vec![0.3; 6];
+    let mut d = Ddsra::new(0.0, gamma.clone());
+    for t in 0..rounds {
+        let state = w.chan.draw(&mut rng);
+        let arr = EnergyArrivals::draw(&w.cfg, &mut rng);
+        let c = ctx(&w, &state, &arr, t);
+        let _ = d.schedule(&c);
+        for (m, &q) in d.queues.iter().enumerate() {
+            assert!(q >= 0.0 && q.is_finite());
+            assert!(
+                q < 2.0,
+                "round {t}: queue {m} = {q} not draining under full participation"
+            );
+        }
+    }
+    let accumulated = rounds as f64 * gamma[0];
+    let total: f64 = d.queues.iter().sum();
+    assert!(total < accumulated / 2.0, "queues {:?} accumulated instead of draining", d.queues);
+}
+
+#[test]
+fn all_five_schedulers_emit_well_formed_decisions() {
+    let (w, mut rng) = world(SimConfig::default(), 23);
+    let mm = w.topo.num_gateways();
+    let mut scheds: Vec<Box<dyn Scheduler>> = vec![
+        Box::new(Ddsra::new(SimConfig::default().lyapunov_v, vec![0.5; mm])),
+        Box::new(RandomSched::new(7)),
+        Box::new(RoundRobin::new()),
+        Box::new(LossDriven::new(mm, 8)),
+        Box::new(DelayDriven),
+    ];
+    for t in 0..5 {
+        let state = w.chan.draw(&mut rng);
+        let arr = EnergyArrivals::draw(&w.cfg, &mut rng);
+        let c = ctx(&w, &state, &arr, t);
+        for s in &mut scheds {
+            let dec = s.schedule(&c);
+            assert_decision_well_formed(&w, &dec);
+            // Round delay is the max selected Λ (Eq. 10).
+            let max_l = dec.plans.iter().map(|p| p.lambda).fold(0.0, f64::max);
+            assert_eq!(dec.round_delay(), max_l);
+        }
+    }
+}
+
+#[test]
+fn ddsra_plans_satisfy_all_memory_and_energy_constraints() {
+    let (w, mut rng) = world(SimConfig::default(), 24);
+    let mut d = Ddsra::new(100.0, vec![0.6; 6]);
+    let mut seen_plans = 0usize;
+    for t in 0..10 {
+        let state = w.chan.draw(&mut rng);
+        let arr = EnergyArrivals::draw(&w.cfg, &mut rng);
+        let c = ctx(&w, &state, &arr, t);
+        let dec = d.schedule(&c);
+        for plan in &dec.plans {
+            let cost = plan_cost(&c, plan);
+            assert!(
+                cost.feasible(),
+                "round {t} gw {}: DDSRA plan violates {:?}",
+                plan.gateway,
+                cost.violations
+            );
+            // Spot-check the raw budgets behind the feasibility verdict.
+            let gw = &w.topo.gateways[plan.gateway];
+            assert!(cost.gateway_mem <= gw.mem);
+            assert!(cost.gateway_energy <= arr.gateway[plan.gateway]);
+            for (i, &n) in gw.members.iter().enumerate() {
+                assert!(cost.device_mem[i] <= w.topo.devices[n].mem);
+                assert!(cost.device_energy[i] <= arr.device[n]);
+            }
+            seen_plans += 1;
+        }
+    }
+    assert!(seen_plans > 0, "DDSRA never produced a plan in 10 rounds");
+}
+
+#[test]
+fn baseline_plans_never_violate_device_memory() {
+    // The fixed-resource baselines may exceed ENERGY budgets (their §VII-C
+    // failure mode, dropped by the orchestrator) but their partition clamp
+    // guarantees the device-side memory bound always holds.
+    let (w, mut rng) = world(SimConfig::default(), 25);
+    let mm = w.topo.num_gateways();
+    let mut scheds: Vec<Box<dyn Scheduler>> = vec![
+        Box::new(RandomSched::new(9)),
+        Box::new(RoundRobin::new()),
+        Box::new(LossDriven::new(mm, 10)),
+        Box::new(DelayDriven),
+    ];
+    for t in 0..5 {
+        let state = w.chan.draw(&mut rng);
+        let arr = EnergyArrivals::draw(&w.cfg, &mut rng);
+        let c = ctx(&w, &state, &arr, t);
+        for s in &mut scheds {
+            for plan in &s.schedule(&c).plans {
+                let cost = plan_cost(&c, plan);
+                for v in &cost.violations {
+                    assert!(
+                        !matches!(v, Violation::DeviceMem(_)),
+                        "baseline emitted device-memory violation {v:?}"
+                    );
+                }
+            }
+        }
+    }
+}
