@@ -7,10 +7,11 @@
 //! recorded in EXPERIMENTS.md.
 //!
 //! Phase 2: a short VGG-mini (cnn preset) leg — 2 rounds on a reduced
-//! topology — proving the conv/Pallas artifact path composes identically
-//! (the cnn train step is ~300x more FLOPs, so the long run uses the MLP).
-//! The cnn preset has no native implementation, so phase 2 is skipped with
-//! a notice unless the `pjrt` feature + artifacts are available.
+//! topology — proving the conv path composes with the FL stack (the cnn
+//! train step is ~300x more FLOPs, so the long run uses the MLP). The cnn
+//! preset runs NATIVELY on the layer-graph engine (rayon-parallel conv
+//! fwd/bwd), so phase 2 needs no artifacts; with `--features pjrt` and
+//! compiled artifacts it runs through the PJRT engine instead.
 //!
 //! Run: `cargo run --release --example e2e_train [--rounds 150] [--skip-cnn]`
 
@@ -72,15 +73,9 @@ fn main() -> anyhow::Result<()> {
         cfg.num_channels = 1;
         cfg.dataset_max = 400; // small shards -> small train batches
         cfg.test_size = 256;
-        let exp = match Experiment::new(cfg) {
-            Ok(exp) => exp,
-            Err(e) => {
-                eprintln!("[e2e] phase 2 skipped: {e}");
-                return Ok(());
-            }
-        };
+        let exp = Experiment::new(cfg)?;
         let mut sched = exp.make_scheduler("ddsra")?;
-        eprintln!("[e2e] phase 2: 2 rounds of VGG-mini through the conv/Pallas artifacts");
+        eprintln!("[e2e] phase 2: 2 rounds of VGG-mini through the native conv engine");
         let log = exp.run(
             sched.as_mut(),
             &RunOpts { rounds: 2, eval_every: 1, track_divergence: false, train: true },

@@ -5,9 +5,10 @@
 //! gradient probes (§IV), runs 10 communication rounds of DDSRA with real
 //! training of the MLP preset, and prints the learning curve.
 //!
-//! Needs NO artifacts: the pure-Rust NativeBackend trains the MLP out of
-//! the box. (With `--features pjrt` and `make artifacts`, the same run
-//! executes through the PJRT engine instead.)
+//! Needs NO artifacts: the pure-Rust layer-graph NativeBackend trains the
+//! MLP out of the box — swap `exec_model` to "cnn" for native VGG-mini
+//! conv training. (With `--features pjrt` and `make artifacts`, the same
+//! run executes through the PJRT engine instead.)
 //!
 //! Run: `cargo run --release --example quickstart`
 

@@ -1,0 +1,69 @@
+//! Native layer-graph engine throughput (custom harness — criterion is
+//! unavailable offline): `train_step` / `eval_batch` / `grad` for the mlp
+//! and cnn presets, seeding the perf trajectory of the rayon fwd/bwd path.
+//! Thresholds are NOT asserted (bench, not test).
+//!
+//! Run: `cargo bench --bench runtime`
+
+use std::time::Instant;
+
+use iiot_fl::rng::Rng;
+use iiot_fl::runtime::{Backend, NativeBackend};
+
+fn batch(rng: &mut Rng, n: usize, dim: usize) -> (Vec<f32>, Vec<i32>) {
+    let x: Vec<f32> = (0..n * dim).map(|_| rng.normal() as f32 * 0.5).collect();
+    let y: Vec<i32> = (0..n).map(|_| rng.below(10) as i32).collect();
+    (x, y)
+}
+
+/// Times `f` and prints per-iter latency plus samples/s throughput.
+fn bench<F: FnMut()>(name: &str, iters: usize, samples_per_iter: usize, mut f: F) {
+    for _ in 0..iters.min(2) {
+        f(); // warmup
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    let (val, unit) = if per < 1e-3 {
+        (per * 1e6, "µs")
+    } else if per < 1.0 {
+        (per * 1e3, "ms")
+    } else {
+        (per, "s ")
+    };
+    println!(
+        "{name:<40} {val:>10.2} {unit}/iter  {:>12.0} samples/s  ({iters} iters)",
+        samples_per_iter as f64 / per
+    );
+}
+
+fn main() {
+    println!("== native layer-graph engine throughput ==");
+    let presets: Vec<(&str, NativeBackend, usize)> =
+        vec![("mlp", NativeBackend::mlp(), 100), ("cnn", NativeBackend::cnn(), 5)];
+    for (name, be, iters) in &presets {
+        let iters = *iters;
+        let meta = be.meta().clone();
+        println!(
+            "\n-- {name}: {} params, train batch {}, eval batch {} --",
+            meta.param_total, meta.train_batch, meta.eval_batch
+        );
+        let mut rng = Rng::new(0xbe0c);
+        let params = be.init_params().unwrap();
+        let dim = meta.sample_dim();
+        let (xt, yt) = batch(&mut rng, meta.train_batch, dim);
+        let (xe, ye) = batch(&mut rng, meta.eval_batch, dim);
+
+        bench(&format!("{name} train_step (fwd+bwd+sgd)"), iters, meta.train_batch, || {
+            be.train_step(&params, &xt, &yt, 0.01).unwrap();
+        });
+        bench(&format!("{name} grad (fwd+bwd)"), iters, meta.train_batch, || {
+            be.grad(&params, &xt, &yt).unwrap();
+        });
+        bench(&format!("{name} eval_batch (fwd)"), iters * 2, meta.eval_batch, || {
+            be.eval_batch(&params, &xe, &ye).unwrap();
+        });
+    }
+}

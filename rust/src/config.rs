@@ -67,7 +67,8 @@ pub struct SimConfig {
     // ---- models / data ----
     /// Cost-model preset the scheduler plans with ("vgg11", "cnn", "mlp").
     pub cost_model: String,
-    /// Executable preset the runtime trains ("mlp" or "cnn").
+    /// Executable preset the runtime trains ("mlp" or "cnn"); both run
+    /// natively on the layer-graph engine, no artifacts required.
     pub exec_model: String,
     /// Synthetic dataset flavour: "svhn" (easier) or "cifar" (harder).
     pub dataset: String,
@@ -250,6 +251,18 @@ impl SimConfig {
         if self.dataset_min == 0 || self.dataset_min > self.dataset_max {
             bail!("dataset size range invalid");
         }
+        if !matches!(self.exec_model.as_str(), "mlp" | "cnn") {
+            bail!(
+                "exec_model {:?} is not an executable preset (\"mlp\" or \"cnn\")",
+                self.exec_model
+            );
+        }
+        if crate::dnn::models::by_name(&self.cost_model).is_none() {
+            bail!(
+                "cost_model {:?} is not in the model zoo (\"vgg11\", \"cnn\", \"mlp\")",
+                self.cost_model
+            );
+        }
         Ok(())
     }
 }
@@ -296,6 +309,18 @@ mod tests {
         assert!(c.validate().is_err());
         let mut c2 = SimConfig::default();
         c2.num_channels = 7;
+        assert!(c2.validate().is_err());
+    }
+
+    #[test]
+    fn validate_checks_model_presets() {
+        let mut c = SimConfig::default();
+        c.exec_model = "cnn".into();
+        c.validate().unwrap();
+        c.exec_model = "vgg11".into(); // cost-model-only, not executable
+        assert!(c.validate().is_err());
+        let mut c2 = SimConfig::default();
+        c2.cost_model = "resnet".into();
         assert!(c2.validate().is_err());
     }
 

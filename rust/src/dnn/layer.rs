@@ -6,7 +6,28 @@
 //! conv/pool tensors are `H x W x C` with `i` input, `o` output, `f`
 //! filter; FC has input size `S_i`, output size `S_o`.
 
-/// One DNN layer, described only by the hyper-parameters Table II needs.
+/// Activation applied after a layer. Executable hyperparameter only: the
+/// Table II cost model ignores it (elementwise FLOPs are negligible), but
+/// the native layer-graph engine needs it to build the runnable network
+/// from the same description the scheduler plans with.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Activation {
+    Relu,
+    /// No activation (the logits head).
+    Linear,
+}
+
+/// Pooling flavour. Table II costs max and average pooling identically;
+/// the executable engine implements max pooling.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PoolKind {
+    Max,
+    Avg,
+}
+
+/// One DNN layer: the hyper-parameters Table II needs, plus the
+/// executable ones (activation, pool flavour) the runtime needs to build
+/// the same network it costs.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Layer {
     /// Convolution with SAME-style geometry (the model zoo fills the
@@ -20,8 +41,9 @@ pub enum Layer {
         wo: u64,
         hf: u64,
         wf: u64,
+        act: Activation,
     },
-    /// Pooling (max or average — same cost model).
+    /// Pooling.
     Pool {
         ci: u64,
         hi: u64,
@@ -29,9 +51,10 @@ pub enum Layer {
         co: u64,
         ho: u64,
         wo: u64,
+        kind: PoolKind,
     },
     /// Fully connected.
-    Fc { si: u64, so: u64 },
+    Fc { si: u64, so: u64, act: Activation },
 }
 
 /// Per-layer cost summary for a given batch size and precision.
@@ -54,7 +77,7 @@ impl Layer {
         let b = batch as f64;
         let sf = sf_bytes as f64;
         match *self {
-            Layer::Conv { ci, hi, wi, co, ho, wo, hf, wf } => {
+            Layer::Conv { ci, hi, wi, co, ho, wo, hf, wf, .. } => {
                 let (cif, hif, wif) = (ci as f64, hi as f64, wi as f64);
                 let (cof, hof, wof) = (co as f64, ho as f64, wo as f64);
                 let (hff, wff) = (hf as f64, wf as f64);
@@ -72,7 +95,7 @@ impl Layer {
                     + sf * (ci * hf * wf * co) as f64; // gradient
                 LayerCost { fwd_flops: fwd, bwd_flops: err + grad, mem_bytes: mem, params }
             }
-            Layer::Pool { ci, hi, wi, co, ho, wo } => {
+            Layer::Pool { ci, hi, wi, co, ho, wo, .. } => {
                 let (cif, hif, wif) = (ci as f64, hi as f64, wi as f64);
                 let (cof, hof, wof) = (co as f64, ho as f64, wo as f64);
                 let fwd = b * cif * hif * wif;
@@ -80,7 +103,7 @@ impl Layer {
                 let mem = sf * b * cof * hof * wof + sf * b * cif * hif * wif;
                 LayerCost { fwd_flops: fwd, bwd_flops: err, mem_bytes: mem, params: 0 }
             }
-            Layer::Fc { si, so } => {
+            Layer::Fc { si, so, .. } => {
                 let (sif, sof) = (si as f64, so as f64);
                 let fwd = 2.0 * b * sif * sof;
                 let err = 2.0 * b * sif * sof;
@@ -112,6 +135,27 @@ impl Layer {
             Layer::Fc { .. } => "fc",
         }
     }
+
+    /// Per-sample input element count when this layer is executed
+    /// (H·W·C for spatial layers, S_i for fully connected).
+    pub fn in_len(&self) -> usize {
+        match *self {
+            Layer::Conv { ci, hi, wi, .. } | Layer::Pool { ci, hi, wi, .. } => {
+                (ci * hi * wi) as usize
+            }
+            Layer::Fc { si, .. } => si as usize,
+        }
+    }
+
+    /// Per-sample output element count when this layer is executed.
+    pub fn out_len(&self) -> usize {
+        match *self {
+            Layer::Conv { co, ho, wo, .. } | Layer::Pool { co, ho, wo, .. } => {
+                (co * ho * wo) as usize
+            }
+            Layer::Fc { so, .. } => so as usize,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -121,7 +165,7 @@ mod tests {
     #[test]
     fn conv_fwd_flops_table2() {
         // 2 * Bs * Ci * Hf * Wf * Co * Ho * Wo
-        let l = Layer::Conv { ci: 3, hi: 32, wi: 32, co: 16, ho: 32, wo: 32, hf: 3, wf: 3 };
+        let l = Layer::Conv { ci: 3, hi: 32, wi: 32, co: 16, ho: 32, wo: 32, hf: 3, wf: 3, act: Activation::Relu };
         let c = l.cost(64, 4);
         assert_eq!(c.fwd_flops, 2.0 * 64.0 * 3.0 * 3.0 * 3.0 * 16.0 * 32.0 * 32.0);
         assert_eq!(c.params, 3 * 3 * 3 * 16);
@@ -129,7 +173,7 @@ mod tests {
 
     #[test]
     fn conv_bwd_is_error_plus_gradient() {
-        let l = Layer::Conv { ci: 3, hi: 8, wi: 8, co: 4, ho: 8, wo: 8, hf: 3, wf: 3 };
+        let l = Layer::Conv { ci: 3, hi: 8, wi: 8, co: 4, ho: 8, wo: 8, hf: 3, wf: 3, act: Activation::Relu };
         let b = 2.0;
         let err = 2.0 * b * (2.0 * 3.0 + 3.0 * 8.0 - 2.0) * (2.0 * 3.0 + 3.0 * 8.0 - 2.0);
         let grad = 2.0 * b * 3.0 * 3.0 * 3.0 * 4.0 * 8.0 * 8.0;
@@ -138,7 +182,7 @@ mod tests {
 
     #[test]
     fn conv_memory_table2() {
-        let l = Layer::Conv { ci: 3, hi: 32, wi: 32, co: 16, ho: 32, wo: 32, hf: 3, wf: 3 };
+        let l = Layer::Conv { ci: 3, hi: 32, wi: 32, co: 16, ho: 32, wo: 32, hf: 3, wf: 3, act: Activation::Relu };
         let c = l.cost(64, 4);
         let w = 4.0 * (3 * 3 * 3 * 16) as f64;
         let out = 4.0 * 64.0 * 16.0 * 32.0 * 32.0;
@@ -148,7 +192,7 @@ mod tests {
 
     #[test]
     fn pool_costs_table2() {
-        let l = Layer::Pool { ci: 16, hi: 32, wi: 32, co: 16, ho: 16, wo: 16 };
+        let l = Layer::Pool { ci: 16, hi: 32, wi: 32, co: 16, ho: 16, wo: 16, kind: PoolKind::Max };
         let c = l.cost(8, 4);
         assert_eq!(c.fwd_flops, 8.0 * 16.0 * 32.0 * 32.0);
         assert_eq!(c.bwd_flops, 8.0 * 16.0 * 32.0 * 32.0);
@@ -161,7 +205,7 @@ mod tests {
 
     #[test]
     fn fc_costs_table2() {
-        let l = Layer::Fc { si: 1024, so: 128 };
+        let l = Layer::Fc { si: 1024, so: 128, act: Activation::Relu };
         let c = l.cost(64, 4);
         assert_eq!(c.fwd_flops, 2.0 * 64.0 * 1024.0 * 128.0);
         assert_eq!(c.bwd_flops, 2.0 * 64.0 * 1024.0 * 128.0 + 64.0 * 1024.0 * 128.0);
@@ -169,8 +213,21 @@ mod tests {
     }
 
     #[test]
+    fn executable_element_counts() {
+        let conv =
+            Layer::Conv { ci: 3, hi: 32, wi: 32, co: 16, ho: 32, wo: 32, hf: 3, wf: 3, act: Activation::Relu };
+        assert_eq!(conv.in_len(), 3 * 32 * 32);
+        assert_eq!(conv.out_len(), 16 * 32 * 32);
+        let pool = Layer::Pool { ci: 16, hi: 32, wi: 32, co: 16, ho: 16, wo: 16, kind: PoolKind::Max };
+        assert_eq!(pool.in_len(), 16 * 32 * 32);
+        assert_eq!(pool.out_len(), 16 * 16 * 16);
+        let fc = Layer::Fc { si: 1024, so: 128, act: Activation::Linear };
+        assert_eq!((fc.in_len(), fc.out_len()), (1024, 128));
+    }
+
+    #[test]
     fn per_sample_o_scales_linearly_with_batch() {
-        let l = Layer::Fc { si: 100, so: 10 };
+        let l = Layer::Fc { si: 100, so: 10, act: Activation::Linear };
         assert_eq!(l.o() * 32.0, l.cost(32, 4).fwd_flops);
         assert_eq!(l.o_prime() * 32.0, l.cost(32, 4).bwd_flops);
     }

@@ -9,5 +9,5 @@
 pub mod layer;
 pub mod models;
 
-pub use layer::{Layer, LayerCost};
+pub use layer::{Activation, Layer, LayerCost, PoolKind};
 pub use models::ModelSpec;

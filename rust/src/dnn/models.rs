@@ -6,7 +6,7 @@
 //! the scheduler simulates corresponds to the network actually trained via
 //! the PJRT artifacts.
 
-use super::layer::Layer;
+use super::layer::{Activation, Layer, PoolKind};
 
 /// A DNN as the scheduler sees it: an ordered layer list + derived
 /// prefix-sum cost tables. Partition point `l ∈ 0..=L` means the bottom
@@ -87,14 +87,50 @@ impl ModelSpec {
             .map(|i| self.weight_bytes[i] + self.act_bytes_per_sample[i] * batch as f64)
             .sum()
     }
+
+    /// Per-sample input tensor shape when this model is executed
+    /// ([H, W, C] channels-last for conv-front models, [S_i] for flat
+    /// ones) — what the native layer-graph engine and the artifact ABI
+    /// both consume.
+    pub fn exec_input_shape(&self) -> Vec<usize> {
+        match self.layers.first() {
+            Some(&Layer::Conv { ci, hi, wi, .. }) | Some(&Layer::Pool { ci, hi, wi, .. }) => {
+                vec![hi as usize, wi as usize, ci as usize]
+            }
+            Some(&Layer::Fc { si, .. }) => vec![si as usize],
+            None => Vec::new(),
+        }
+    }
 }
 
 fn conv(c_in: u64, c_out: u64, hw: u64) -> Layer {
-    Layer::Conv { ci: c_in, hi: hw, wi: hw, co: c_out, ho: hw, wo: hw, hf: 3, wf: 3 }
+    Layer::Conv {
+        ci: c_in,
+        hi: hw,
+        wi: hw,
+        co: c_out,
+        ho: hw,
+        wo: hw,
+        hf: 3,
+        wf: 3,
+        act: Activation::Relu,
+    }
 }
 
 fn pool(c: u64, hw_in: u64) -> Layer {
-    Layer::Pool { ci: c, hi: hw_in, wi: hw_in, co: c, ho: hw_in / 2, wo: hw_in / 2 }
+    Layer::Pool {
+        ci: c,
+        hi: hw_in,
+        wi: hw_in,
+        co: c,
+        ho: hw_in / 2,
+        wo: hw_in / 2,
+        kind: PoolKind::Max,
+    }
+}
+
+fn fc(si: u64, so: u64, act: Activation) -> Layer {
+    Layer::Fc { si, so, act }
 }
 
 /// VGG-11 for 32x32 inputs (the paper's objective DNN): 8 conv + 5 pool +
@@ -116,9 +152,9 @@ pub fn vgg11_cifar() -> ModelSpec {
             conv(512, 512, 2),
             conv(512, 512, 2),
             pool(512, 2),
-            Layer::Fc { si: 512, so: 4096 },
-            Layer::Fc { si: 4096, so: 4096 },
-            Layer::Fc { si: 4096, so: 10 },
+            fc(512, 4096, Activation::Relu),
+            fc(4096, 4096, Activation::Relu),
+            fc(4096, 10, Activation::Linear),
         ],
     )
 }
@@ -134,8 +170,8 @@ pub fn vgg_mini() -> ModelSpec {
             pool(32, 16),
             conv(32, 64, 8),
             pool(64, 8),
-            Layer::Fc { si: 1024, so: 128 },
-            Layer::Fc { si: 128, so: 10 },
+            fc(1024, 128, Activation::Relu),
+            fc(128, 10, Activation::Linear),
         ],
     )
 }
@@ -144,7 +180,7 @@ pub fn vgg_mini() -> ModelSpec {
 pub fn mlp() -> ModelSpec {
     ModelSpec::new(
         "mlp",
-        vec![Layer::Fc { si: 3072, so: 64 }, Layer::Fc { si: 64, so: 10 }],
+        vec![fc(3072, 64, Activation::Relu), fc(64, 10, Activation::Linear)],
     )
 }
 
@@ -225,5 +261,35 @@ mod tests {
     fn gamma_bits_is_32x_params() {
         let m = mlp();
         assert_eq!(m.gamma_bits(), m.params as f64 * 32.0);
+    }
+
+    #[test]
+    fn executable_presets_have_relu_bodies_and_linear_heads() {
+        for m in [vgg11_cifar(), vgg_mini(), mlp()] {
+            let fcs: Vec<&Layer> =
+                m.layers.iter().filter(|l| matches!(l, Layer::Fc { .. })).collect();
+            assert!(!fcs.is_empty(), "{}", m.name);
+            // Every FC except the last is ReLU; the head is linear.
+            for (i, l) in fcs.iter().enumerate() {
+                let Layer::Fc { act, .. } = l else { unreachable!() };
+                let expect =
+                    if i + 1 == fcs.len() { Activation::Linear } else { Activation::Relu };
+                assert_eq!(*act, expect, "{} fc {i}", m.name);
+            }
+            for l in &m.layers {
+                match l {
+                    Layer::Conv { act, .. } => assert_eq!(*act, Activation::Relu),
+                    Layer::Pool { kind, .. } => assert_eq!(*kind, PoolKind::Max),
+                    Layer::Fc { .. } => {}
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn exec_input_shapes() {
+        assert_eq!(vgg_mini().exec_input_shape(), vec![32, 32, 3]);
+        assert_eq!(vgg11_cifar().exec_input_shape(), vec![32, 32, 3]);
+        assert_eq!(mlp().exec_input_shape(), vec![3072]);
     }
 }

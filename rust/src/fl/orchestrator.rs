@@ -7,10 +7,11 @@
 //!   3. feasibility is enforced (C7–C10) — infeasible plans "fail" and
 //!      contribute no update (the baselines' failure mode in §VII-C);
 //!   4. every scheduled device runs K local SGD iterations through the
-//!      execution backend — the pure-Rust `NativeBackend` by default, the
-//!      AOT train-step artifact under the `pjrt` feature (device/gateway
-//!      placement is simulated by the cost model; the partitioned
-//!      arithmetic is proven identical by examples/partitioned_step);
+//!      execution backend — the pure-Rust layer-graph `NativeBackend` by
+//!      default (`mlp` and `cnn` presets), the AOT train-step artifact
+//!      under the `pjrt` feature (device/gateway placement is simulated by
+//!      the cost model; the partitioned arithmetic is proven identical by
+//!      examples/partitioned_step);
 //!   5. shop-floor FedAvg then global FedAvg (both weight by D̃_n);
 //!   6. periodic evaluation on the IID test set.
 //!
@@ -144,6 +145,15 @@ impl Experiment {
         let cost_model = models::by_name(&cfg.cost_model)
             .with_context(|| format!("unknown cost model {:?}", cfg.cost_model))?;
         let engine = make_backend(artifacts, &cfg.exec_model)?;
+        // Shards store flat 32·32·3 images; every executable preset (the
+        // flat mlp and the NHWC cnn) must consume exactly that geometry.
+        if engine.meta().sample_dim() != IMG_DIM {
+            anyhow::bail!(
+                "backend {:?} consumes {} features per sample, data provides {IMG_DIM}",
+                engine.meta().preset,
+                engine.meta().sample_dim()
+            );
+        }
         Ok(Experiment { cfg, topo, cost_model, chan, shards, test_x, test_y, engine })
     }
 

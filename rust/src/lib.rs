@@ -12,9 +12,11 @@
 //! # Execution backends
 //!
 //! Training/evaluation go through the [`runtime::Backend`] trait:
-//! - default build: [`runtime::NativeBackend`], a pure-Rust dense
-//!   forward/backward + SGD implementation of the `mlp` preset — the whole
-//!   stack builds, trains and is tested with **zero native dependencies**;
+//! - default build: [`runtime::NativeBackend`], a pure-Rust layer-graph
+//!   engine (composable dense/conv/pool/relu ops, rayon-parallel batches)
+//!   compiled from the scheduler's own [`dnn::ModelSpec`] descriptions —
+//!   the `mlp` AND `cnn` (VGG-mini) presets build, train and are tested
+//!   with **zero native dependencies**;
 //! - feature `pjrt`: [`runtime::Engine`] executes the AOT-compiled
 //!   JAX/Pallas HLO artifacts on the PJRT CPU client (requires the `xla`
 //!   crate to be supplied — see Cargo.toml — plus `make artifacts`).

@@ -2,8 +2,9 @@
 //! from a training runtime, abstracted over *how* the numerics run.
 //!
 //! Two implementations:
-//! * [`crate::runtime::NativeBackend`] — pure-Rust dense forward/backward +
-//!   SGD for the `mlp` preset. Zero native dependencies; the default.
+//! * [`crate::runtime::NativeBackend`] — the pure-Rust layer-graph engine
+//!   (rayon-parallel forward/backward + SGD) for the `mlp` and `cnn`
+//!   presets. Zero native dependencies; the default.
 //! * [`crate::runtime::Engine`] (feature `pjrt`) — the PJRT CPU client over
 //!   the AOT HLO artifacts compiled by python/compile/aot.py.
 //!
@@ -54,23 +55,54 @@ pub trait Backend {
     /// One eval batch: -> (sum of per-sample losses, number correct).
     fn eval_batch(&self, params: &Params, x: &[f32], y: &[i32]) -> Result<(f64, f64)>;
 
-    /// Evaluate a whole test set (len divisible by `eval_batch`);
-    /// returns (mean loss, accuracy).
+    /// One eval batch of ARBITRARY size (the trailing remainder of a test
+    /// set not divisible by `eval_batch`). Backends with shape-flexible
+    /// numerics (the native layer-graph engine) return `Some`; backends
+    /// whose shapes are baked in at compile time (the AOT PJRT artifacts)
+    /// keep the default `None`, and `eval_full` then rejects ragged sets.
+    fn eval_partial_batch(
+        &self,
+        _params: &Params,
+        _x: &[f32],
+        _y: &[i32],
+    ) -> Result<Option<(f64, f64)>> {
+        Ok(None)
+    }
+
+    /// Evaluate a whole test set; returns (mean loss, accuracy). Runs
+    /// `eval_batch`-sized chunks, then a final partial batch for any
+    /// remainder via [`Backend::eval_partial_batch`] — so test sets need
+    /// not be divisible by `eval_batch` on backends that support it.
     fn eval_full(&self, params: &Params, x: &[f32], y: &[i32]) -> Result<(f64, f64)> {
         let b = self.meta().eval_batch;
         let dim = self.meta().sample_dim();
-        if y.len() % b != 0 {
-            anyhow::bail!("test set size {} not divisible by eval batch {b}", y.len());
+        if y.is_empty() {
+            anyhow::bail!("empty test set");
         }
         if x.len() != y.len() * dim {
             anyhow::bail!("test inputs {} != {} labels x dim {dim}", x.len(), y.len());
         }
         let (mut loss, mut correct) = (0.0, 0.0);
-        for c in 0..y.len() / b {
+        let full = y.len() / b;
+        for c in 0..full {
             let (l, n_ok) =
                 self.eval_batch(params, &x[c * b * dim..(c + 1) * b * dim], &y[c * b..(c + 1) * b])?;
             loss += l;
             correct += n_ok;
+        }
+        if y.len() % b != 0 {
+            match self.eval_partial_batch(params, &x[full * b * dim..], &y[full * b..])? {
+                Some((l, n_ok)) => {
+                    loss += l;
+                    correct += n_ok;
+                }
+                None => anyhow::bail!(
+                    "test set size {} not divisible by eval batch {b}, and the {:?} \
+                     backend cannot run partial batches",
+                    y.len(),
+                    self.meta().preset
+                ),
+            }
         }
         let n = y.len() as f64;
         Ok((loss / n, correct / n))
@@ -85,8 +117,9 @@ pub trait Backend {
 ///
 /// With the `pjrt` feature enabled AND compiled artifacts present under
 /// `artifacts_dir`, the PJRT engine is used; otherwise the pure-Rust
-/// [`crate::runtime::NativeBackend`] serves the `mlp` preset. Presets with
-/// no native implementation (`cnn`) require the PJRT path.
+/// [`crate::runtime::NativeBackend`] layer-graph engine serves the preset.
+/// Both executable presets — `mlp` AND `cnn` (VGG-mini) — run natively
+/// from a fresh checkout; only unknown presets fail.
 pub fn make_backend(artifacts_dir: &Path, preset: &str) -> Result<Box<dyn Backend>> {
     #[cfg(feature = "pjrt")]
     {
@@ -95,20 +128,20 @@ pub fn make_backend(artifacts_dir: &Path, preset: &str) -> Result<Box<dyn Backen
         }
     }
     let _ = artifacts_dir;
-    match preset {
-        "mlp" => {
-            // A pjrt build reaching this point means the artifacts are
-            // missing — say so instead of silently swapping the numerics.
-            #[cfg(feature = "pjrt")]
-            eprintln!(
-                "[runtime] no compiled artifacts under {artifacts_dir:?} — \
-                 falling back to the pure-Rust native mlp backend"
-            );
-            Ok(Box::new(super::native::NativeBackend::mlp()))
-        }
+    let native = match preset {
+        "mlp" => super::native::NativeBackend::mlp(),
+        "cnn" => super::native::NativeBackend::cnn(),
         other => anyhow::bail!(
-            "preset {other:?} needs the `pjrt` feature and compiled artifacts \
-             (the native backend implements \"mlp\")"
+            "unknown preset {other:?}: the native layer-graph engine implements \
+             \"mlp\" and \"cnn\""
         ),
-    }
+    };
+    // A pjrt build reaching this point means the artifacts are missing —
+    // say so instead of silently swapping the numerics.
+    #[cfg(feature = "pjrt")]
+    eprintln!(
+        "[runtime] no compiled artifacts under {artifacts_dir:?} — \
+         falling back to the pure-Rust native {preset:?} backend"
+    );
+    Ok(Box::new(native))
 }

@@ -2,8 +2,12 @@
 //! trait: the orchestrator trains and evaluates through `Box<dyn Backend>`
 //! and never sees which engine runs the numerics.
 //!
-//! * Default build: [`NativeBackend`] — pure-Rust MLP training, no
-//!   artifacts, no native libraries.
+//! * Default build: [`NativeBackend`] — the pure-Rust layer-graph engine
+//!   (`native/{ops,graph}`): a composable op library (dense, conv2d,
+//!   max-pool, relu, flatten, softmax-xent) compiled from the scheduler's
+//!   own `dnn::ModelSpec` descriptions, with rayon-parallel batches. Both
+//!   executable presets (`mlp`, `cnn`) train with no artifacts and no
+//!   native libraries.
 //! * Feature `pjrt`: [`Engine`] loads the AOT HLO-text artifacts produced
 //!   by `make artifacts` and executes them on the PJRT CPU client (Python
 //!   is never on this path — artifacts compile once at `Engine::load`).
@@ -20,4 +24,4 @@ pub use backend::{make_backend, Backend, Params};
 #[cfg(feature = "pjrt")]
 pub use engine::Engine;
 pub use meta::ModelMeta;
-pub use native::NativeBackend;
+pub use native::{LayerGraph, NativeBackend};

@@ -1,0 +1,618 @@
+//! `LayerGraph`: composes the op library into one executable network.
+//!
+//! The graph is compiled from the same `dnn::ModelSpec` the scheduler's
+//! cost model plans with — one source of truth for both the FLOPs/memory
+//! the scheduler simulates and the tensors the runtime actually trains.
+//! The graph owns every offset: the per-sample activation arena, each
+//! op's block inside the flat gradient vector, and the ABI parameter
+//! tensor order (weights-then-bias per parameterized op, ops in layer
+//! order — exactly the artifact family's ABI).
+//!
+//! The batch dimension of [`LayerGraph::fwd_bwd`] fans out over rayon;
+//! every reduction is order-preserving (the loss folds in sample order,
+//! and each gradient coordinate sums its per-sample contributions in
+//! sample order), so results are byte-identical to the serial loop
+//! regardless of worker count — the deterministic-replay guarantee.
+
+use anyhow::{bail, Result};
+use rayon::prelude::*;
+
+use crate::dnn::layer::{Activation, Layer, PoolKind};
+use crate::dnn::ModelSpec;
+use crate::rng::Rng;
+
+use super::super::backend::Params;
+use super::ops::{Conv2d, Dense, Flatten, MaxPool2d, Op, Relu, SoftmaxXent};
+
+/// Chunk width of the rayon ordered gradient reduction (coordinates per
+/// task; the sum over samples inside a chunk runs in sample order).
+const GRAD_CHUNK: usize = 8192;
+
+/// Per-sample tensor shape flowing between layers.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Shape {
+    /// (h, w, c) channels-last.
+    Spatial(usize, usize, usize),
+    Flat(usize),
+}
+
+impl Shape {
+    fn len(self) -> usize {
+        match self {
+            Shape::Spatial(h, w, c) => h * w * c,
+            Shape::Flat(n) => n,
+        }
+    }
+}
+
+/// An executable DNN: ops + offset bookkeeping + softmax-xent head.
+pub struct LayerGraph {
+    ops: Vec<Box<dyn Op>>,
+    /// (start, len) of each op's parameter block in the flat gradient.
+    param_off: Vec<(usize, usize)>,
+    /// (first ABI tensor index, tensor count) per op.
+    tensor_off: Vec<(usize, usize)>,
+    /// ABI parameter tensor shapes (concatenated op `param_shapes`).
+    param_shapes: Vec<Vec<usize>>,
+    param_total: usize,
+    /// Activation-arena offset of each op's output.
+    act_off: Vec<usize>,
+    act_total: usize,
+    /// Largest activation length (backward scratch size).
+    max_act: usize,
+    /// Index of the zero-initialised head (last op with parameters).
+    head_idx: usize,
+    in_len: usize,
+    /// Per-sample input tensor shape ([H, W, C] or [S]).
+    input_shape: Vec<usize>,
+    classes: usize,
+    head: SoftmaxXent,
+}
+
+impl LayerGraph {
+    /// Compile `spec` into an executable graph with a `classes`-way
+    /// softmax cross-entropy head. Fails when a layer's geometry is not
+    /// natively executable: only SAME stride-1 odd-kernel convolutions,
+    /// non-overlapping max pools, and dense layers are implemented.
+    pub fn from_spec(spec: &ModelSpec, classes: usize) -> Result<Self> {
+        let Some(first) = spec.layers.first() else {
+            bail!("model {:?} has no layers", spec.name);
+        };
+        let mut cur = match *first {
+            Layer::Conv { ci, hi, wi, .. } | Layer::Pool { ci, hi, wi, .. } => {
+                Shape::Spatial(hi as usize, wi as usize, ci as usize)
+            }
+            Layer::Fc { si, .. } => Shape::Flat(si as usize),
+        };
+        let in_len = cur.len();
+        let input_shape = spec.exec_input_shape();
+
+        let mut ops: Vec<Box<dyn Op>> = Vec::new();
+        for (li, layer) in spec.layers.iter().enumerate() {
+            match *layer {
+                Layer::Conv { ci, hi, wi, co, ho, wo, hf, wf, act } => {
+                    let (ci, hi, wi) = (ci as usize, hi as usize, wi as usize);
+                    let (co, ho, wo) = (co as usize, ho as usize, wo as usize);
+                    let (hf, wf) = (hf as usize, wf as usize);
+                    if cur != Shape::Spatial(hi, wi, ci) {
+                        bail!(
+                            "{} layer {li}: conv input {hi}x{wi}x{ci} does not chain \
+                             (previous output is {cur:?})",
+                            spec.name
+                        );
+                    }
+                    if ho != hi || wo != wi {
+                        bail!(
+                            "{} layer {li}: only SAME stride-1 convolutions run natively \
+                             ({hi}x{wi} -> {ho}x{wo})",
+                            spec.name
+                        );
+                    }
+                    if hf % 2 == 0 || wf % 2 == 0 {
+                        bail!(
+                            "{} layer {li}: SAME padding needs odd kernels, got {hf}x{wf}",
+                            spec.name
+                        );
+                    }
+                    ops.push(Box::new(Conv2d { ci, co, h: hi, w: wi, kh: hf, kw: wf }));
+                    if act == Activation::Relu {
+                        ops.push(Box::new(Relu { n: ho * wo * co }));
+                    }
+                    cur = Shape::Spatial(ho, wo, co);
+                }
+                Layer::Pool { ci, hi, wi, co, ho, wo, kind } => {
+                    let (ci, hi, wi) = (ci as usize, hi as usize, wi as usize);
+                    let (co, ho, wo) = (co as usize, ho as usize, wo as usize);
+                    if cur != Shape::Spatial(hi, wi, ci) {
+                        bail!(
+                            "{} layer {li}: pool input {hi}x{wi}x{ci} does not chain \
+                             (previous output is {cur:?})",
+                            spec.name
+                        );
+                    }
+                    if co != ci {
+                        bail!("{} layer {li}: pooling must preserve channels", spec.name);
+                    }
+                    if kind != PoolKind::Max {
+                        bail!("{} layer {li}: only max pooling runs natively", spec.name);
+                    }
+                    if ho == 0 || wo == 0 || hi % ho != 0 || wi % wo != 0 {
+                        bail!(
+                            "{} layer {li}: pool {hi}x{wi} -> {ho}x{wo} is not an \
+                             integer non-overlapping window",
+                            spec.name
+                        );
+                    }
+                    ops.push(Box::new(MaxPool2d {
+                        c: ci,
+                        hi,
+                        wi,
+                        kh: hi / ho,
+                        kw: wi / wo,
+                    }));
+                    cur = Shape::Spatial(ho, wo, co);
+                }
+                Layer::Fc { si, so, act } => {
+                    let (si, so) = (si as usize, so as usize);
+                    if let Shape::Spatial(h, w, c) = cur {
+                        ops.push(Box::new(Flatten { n: h * w * c }));
+                        cur = Shape::Flat(h * w * c);
+                    }
+                    if cur != Shape::Flat(si) {
+                        bail!(
+                            "{} layer {li}: fc input {si} does not chain \
+                             (previous output is {cur:?})",
+                            spec.name
+                        );
+                    }
+                    ops.push(Box::new(Dense { si, so }));
+                    if act == Activation::Relu {
+                        ops.push(Box::new(Relu { n: so }));
+                    }
+                    cur = Shape::Flat(so);
+                }
+            }
+        }
+        if cur != Shape::Flat(classes) {
+            bail!(
+                "{}: the final layer must emit {classes} logits, got {cur:?}",
+                spec.name
+            );
+        }
+
+        let mut param_off = Vec::with_capacity(ops.len());
+        let mut tensor_off = Vec::with_capacity(ops.len());
+        let mut param_shapes: Vec<Vec<usize>> = Vec::new();
+        let mut act_off = Vec::with_capacity(ops.len());
+        let (mut ptot, mut atot) = (0usize, 0usize);
+        let mut max_act = in_len;
+        let mut head_idx = usize::MAX;
+        for (i, op) in ops.iter().enumerate() {
+            let shapes = op.param_shapes();
+            let len: usize = shapes.iter().map(|s| s.iter().product::<usize>()).sum();
+            param_off.push((ptot, len));
+            tensor_off.push((param_shapes.len(), shapes.len()));
+            if !shapes.is_empty() {
+                head_idx = i;
+            }
+            param_shapes.extend(shapes);
+            ptot += len;
+            act_off.push(atot);
+            atot += op.out_len();
+            max_act = max_act.max(op.out_len());
+        }
+        if head_idx == usize::MAX {
+            bail!("{}: no parameterized layers", spec.name);
+        }
+        Ok(LayerGraph {
+            ops,
+            param_off,
+            tensor_off,
+            param_shapes,
+            param_total: ptot,
+            act_off,
+            act_total: atot,
+            max_act,
+            head_idx,
+            in_len,
+            input_shape,
+            classes,
+            head: SoftmaxXent { classes },
+        })
+    }
+
+    pub fn param_total(&self) -> usize {
+        self.param_total
+    }
+
+    pub fn param_shapes(&self) -> &[Vec<usize>] {
+        &self.param_shapes
+    }
+
+    pub fn in_len(&self) -> usize {
+        self.in_len
+    }
+
+    pub fn input_shape(&self) -> &[usize] {
+        &self.input_shape
+    }
+
+    pub fn num_ops(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// Deterministic init: ONE RNG stream walks the ops in ABI order —
+    /// He-normal weights, zero biases, and a zero-init head (the last
+    /// parameterized op), so the initial loss is exactly ln C.
+    pub fn init_params(&self, seed: u64) -> Params {
+        let mut rng = Rng::new(seed);
+        let mut out: Params = Vec::with_capacity(self.param_shapes.len());
+        for (i, op) in self.ops.iter().enumerate() {
+            let tensors = if i == self.head_idx {
+                op.init_params(None)
+            } else {
+                op.init_params(Some(&mut rng))
+            };
+            out.extend(tensors);
+        }
+        out
+    }
+
+    /// This op's parameter tensors as slices (ABI order).
+    fn op_params<'a>(&self, params: &'a Params, i: usize) -> Vec<&'a [f32]> {
+        let (t0, tn) = self.tensor_off[i];
+        params[t0..t0 + tn].iter().map(|t| t.as_slice()).collect()
+    }
+
+    /// One sample: forward through the arena, loss head, and — when
+    /// `grad_scale` is `Some(1/B)` — backward into a fresh flat gradient.
+    fn fwd_bwd_sample(
+        &self,
+        params: &Params,
+        xs: &[f32],
+        label: usize,
+        grad_scale: Option<f32>,
+    ) -> (f64, bool, Option<Vec<f32>>) {
+        let nops = self.ops.len();
+        let mut acts = vec![0.0f32; self.act_total];
+        for (i, op) in self.ops.iter().enumerate() {
+            let (prev, cur) = acts.split_at_mut(self.act_off[i]);
+            let input: &[f32] = if i == 0 { xs } else { &prev[self.act_off[i - 1]..] };
+            let pv = self.op_params(params, i);
+            op.forward(&pv, input, &mut cur[..op.out_len()]);
+        }
+        let logits =
+            &acts[self.act_off[nops - 1]..self.act_off[nops - 1] + self.classes];
+        let mut dz = vec![0.0f32; self.classes];
+        let (loss, ok) = self.head.loss_grad(logits, label, grad_scale, &mut dz);
+        if grad_scale.is_none() {
+            return (loss, ok, None);
+        }
+
+        let mut g = vec![0.0f32; self.param_total];
+        let mut dy_buf = vec![0.0f32; self.max_act];
+        let mut dx_buf = vec![0.0f32; self.max_act];
+        dy_buf[..self.classes].copy_from_slice(&dz);
+        for i in (0..nops).rev() {
+            let op = &self.ops[i];
+            let pv = self.op_params(params, i);
+            let (po, pl) = self.param_off[i];
+            let dp = &mut g[po..po + pl];
+            if i == 0 {
+                op.backward(&pv, xs, &dy_buf[..op.out_len()], None, dp);
+            } else {
+                let off = self.act_off[i - 1];
+                let input = &acts[off..off + op.in_len()];
+                op.backward(
+                    &pv,
+                    input,
+                    &dy_buf[..op.out_len()],
+                    Some(&mut dx_buf[..op.in_len()]),
+                    dp,
+                );
+                std::mem::swap(&mut dy_buf, &mut dx_buf);
+            }
+        }
+        (loss, ok, Some(g))
+    }
+
+    /// Batched forward (+ optional backward): returns the summed
+    /// per-sample loss, the argmax-correct count, and — when requested —
+    /// the flat gradient of the MEAN loss. Samples fan out over rayon;
+    /// reductions preserve sample order, so the result is independent of
+    /// the worker count and byte-identical to a serial run.
+    pub fn fwd_bwd(
+        &self,
+        params: &Params,
+        x: &[f32],
+        y: &[i32],
+        want_grad: bool,
+    ) -> (f64, usize, Option<Vec<f32>>) {
+        let b = y.len();
+        let grad_scale = want_grad.then_some(1.0f32 / b as f32);
+        let per_sample: Vec<(f64, bool, Option<Vec<f32>>)> = (0..b)
+            .into_par_iter()
+            .map(|s| {
+                self.fwd_bwd_sample(
+                    params,
+                    &x[s * self.in_len..(s + 1) * self.in_len],
+                    y[s] as usize,
+                    grad_scale,
+                )
+            })
+            .collect();
+
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0usize;
+        for r in &per_sample {
+            loss_sum += r.0;
+            correct += r.1 as usize;
+        }
+        let grad = if want_grad {
+            let gs: Vec<&Vec<f32>> = per_sample
+                .iter()
+                .map(|r| r.2.as_ref().expect("per-sample gradient present"))
+                .collect();
+            let mut g = vec![0.0f32; self.param_total];
+            g.par_chunks_mut(GRAD_CHUNK).enumerate().for_each(|(ci, chunk)| {
+                let base = ci * GRAD_CHUNK;
+                for gsample in &gs {
+                    for (k, dst) in chunk.iter_mut().enumerate() {
+                        *dst += gsample[base + k];
+                    }
+                }
+            });
+            Some(g)
+        } else {
+            None
+        };
+        (loss_sum, correct, grad)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::models;
+
+    /// A small conv net whose cost-model description doubles as the
+    /// executable description — the single-source-of-truth property.
+    fn tiny_cnn_spec() -> ModelSpec {
+        ModelSpec::new(
+            "tiny",
+            vec![
+                Layer::Conv {
+                    ci: 2,
+                    hi: 6,
+                    wi: 6,
+                    co: 3,
+                    ho: 6,
+                    wo: 6,
+                    hf: 3,
+                    wf: 3,
+                    act: Activation::Relu,
+                },
+                Layer::Pool {
+                    ci: 3,
+                    hi: 6,
+                    wi: 6,
+                    co: 3,
+                    ho: 3,
+                    wo: 3,
+                    kind: PoolKind::Max,
+                },
+                Layer::Fc { si: 27, so: 10, act: Activation::Linear },
+            ],
+        )
+    }
+
+    #[test]
+    fn builds_executable_presets_from_the_model_zoo() {
+        let mlp = LayerGraph::from_spec(&models::mlp(), 10).unwrap();
+        assert_eq!(mlp.param_total(), 3072 * 64 + 64 + 64 * 10 + 10);
+        assert_eq!(mlp.in_len(), 3072);
+        assert_eq!(mlp.input_shape(), &[3072]);
+        // dense, relu, dense
+        assert_eq!(mlp.num_ops(), 3);
+
+        let cnn = LayerGraph::from_spec(&models::vgg_mini(), 10).unwrap();
+        assert_eq!(cnn.in_len(), 32 * 32 * 3);
+        assert_eq!(cnn.input_shape(), &[32, 32, 3]);
+        // 3x (conv, relu, pool) + flatten + dense + relu + dense
+        assert_eq!(cnn.num_ops(), 13);
+        // The ABI order and totals match python/compile/model.py.
+        assert_eq!(
+            cnn.param_shapes(),
+            &[
+                vec![3, 3, 3, 16],
+                vec![16],
+                vec![3, 3, 16, 32],
+                vec![32],
+                vec![3, 3, 32, 64],
+                vec![64],
+                vec![1024, 128],
+                vec![128],
+                vec![128, 10],
+                vec![10],
+            ]
+        );
+        assert_eq!(cnn.param_total(), models::vgg_mini().params as usize + 16 + 32 + 64 + 128 + 10);
+    }
+
+    #[test]
+    fn vgg11_compiles_too() {
+        // The paper-scale objective DNN is also executable in principle.
+        let g = LayerGraph::from_spec(&models::vgg11_cifar(), 10).unwrap();
+        assert_eq!(g.param_total(), {
+            let m = models::vgg11_cifar();
+            // weights + biases (one bias per conv/fc output channel)
+            m.params as usize
+                + (64 + 128 + 256 + 256 + 512 + 512 + 512 + 512)
+                + (4096 + 4096 + 10)
+        });
+    }
+
+    #[test]
+    fn rejects_unchainable_and_inexecutable_specs() {
+        // Mismatched fc width.
+        let bad = ModelSpec::new(
+            "bad",
+            vec![
+                Layer::Fc { si: 10, so: 5, act: Activation::Relu },
+                Layer::Fc { si: 6, so: 10, act: Activation::Linear },
+            ],
+        );
+        assert!(LayerGraph::from_spec(&bad, 10).is_err());
+        // Wrong head width.
+        let bad2 = ModelSpec::new(
+            "bad2",
+            vec![Layer::Fc { si: 10, so: 7, act: Activation::Linear }],
+        );
+        assert!(LayerGraph::from_spec(&bad2, 10).is_err());
+        // Average pooling is cost-model-only.
+        let bad3 = ModelSpec::new(
+            "bad3",
+            vec![
+                Layer::Pool { ci: 1, hi: 4, wi: 4, co: 1, ho: 2, wo: 2, kind: PoolKind::Avg },
+                Layer::Fc { si: 4, so: 10, act: Activation::Linear },
+            ],
+        );
+        assert!(LayerGraph::from_spec(&bad3, 10).is_err());
+        // Strided conv is not executable.
+        let bad4 = ModelSpec::new(
+            "bad4",
+            vec![
+                Layer::Conv {
+                    ci: 1,
+                    hi: 8,
+                    wi: 8,
+                    co: 1,
+                    ho: 4,
+                    wo: 4,
+                    hf: 3,
+                    wf: 3,
+                    act: Activation::Relu,
+                },
+                Layer::Fc { si: 16, so: 10, act: Activation::Linear },
+            ],
+        );
+        assert!(LayerGraph::from_spec(&bad4, 10).is_err());
+    }
+
+    #[test]
+    fn init_is_deterministic_with_zero_head() {
+        let g = LayerGraph::from_spec(&tiny_cnn_spec(), 10).unwrap();
+        let p1 = g.init_params(42);
+        let p2 = g.init_params(42);
+        assert_eq!(p1, p2);
+        assert_ne!(p1[0], g.init_params(43)[0]);
+        // Head (last dense) is zero-initialised, conv weights are not.
+        assert!(p1[0].iter().any(|&v| v != 0.0));
+        assert!(p1[2].iter().all(|&v| v == 0.0));
+        assert!(p1[3].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn zero_head_loss_is_ln10_and_grad_checks_through_the_whole_graph() {
+        let g = LayerGraph::from_spec(&tiny_cnn_spec(), 10).unwrap();
+        let mut p = g.init_params(7);
+        // Perturb the head so gradients flow through every layer.
+        let mut rng = Rng::new(8);
+        let b = 4usize;
+        let (loss0, _, _) = {
+            let x: Vec<f32> =
+                (0..b * g.in_len()).map(|_| (rng.normal() * 0.5) as f32).collect();
+            let y: Vec<i32> = (0..b).map(|_| (rng.below(10)) as i32).collect();
+            g.fwd_bwd(&p, &x, &y, false)
+        };
+        assert!((loss0 / b as f64 - 10f64.ln()).abs() < 1e-6);
+
+        // Perturb the head (dense w/b, tensors 2 and 3) so gradients flow
+        // through conv and pool as well.
+        for v in p[2].iter_mut().chain(p[3].iter_mut()) {
+            *v = (rng.normal() * 0.2) as f32;
+        }
+        let x: Vec<f32> =
+            (0..b * g.in_len()).map(|_| (rng.normal() * 0.8) as f32).collect();
+        let y: Vec<i32> = (0..b).map(|i| (i % 10) as i32).collect();
+        let (_, _, grad) = g.fwd_bwd(&p, &x, &y, true);
+        let grad = grad.unwrap();
+        assert_eq!(grad.len(), g.param_total());
+
+        let mean_loss = |p: &Params| -> f64 {
+            let (l, _, _) = g.fwd_bwd(p, &x, &y, false);
+            l / b as f64
+        };
+        // Probe a few coordinates in every tensor (conv w/b, fc w/b).
+        let mut flat_base = vec![0usize; p.len()];
+        for t in 1..p.len() {
+            flat_base[t] = flat_base[t - 1] + p[t - 1].len();
+        }
+        let probes = [(0usize, 1usize), (0, 17), (1, 2), (2, 5), (2, 40), (3, 1)];
+        let eps = 1e-2f32;
+        for (t, i) in probes {
+            let mut hi = p.clone();
+            hi[t][i] += eps;
+            let mut lo = p.clone();
+            lo[t][i] -= eps;
+            let num = (mean_loss(&hi) - mean_loss(&lo)) / (2.0 * eps as f64);
+            let ana = grad[flat_base[t] + i] as f64;
+            assert!(
+                (num - ana).abs() < 2e-3 + 0.05 * ana.abs(),
+                "tensor {t} idx {i}: numeric {num} vs analytic {ana}"
+            );
+        }
+    }
+
+    #[test]
+    fn batch_reduction_is_independent_of_worker_count() {
+        // Run the same batch through differently-sized rayon pools: the
+        // ordered reduction must make the results bit-identical.
+        let g = LayerGraph::from_spec(&tiny_cnn_spec(), 10).unwrap();
+        let mut p = g.init_params(3);
+        let mut rng = Rng::new(4);
+        for v in p[2].iter_mut().chain(p[3].iter_mut()) {
+            *v = (rng.normal() * 0.2) as f32;
+        }
+        let b = 16usize;
+        let x: Vec<f32> = (0..b * g.in_len()).map(|_| (rng.normal() * 0.7) as f32).collect();
+        let y: Vec<i32> = (0..b).map(|i| (i % 10) as i32).collect();
+
+        let (l0, c0, g0) = g.fwd_bwd(&p, &x, &y, true);
+        for threads in [1usize, 3] {
+            let pool = rayon::ThreadPoolBuilder::new().num_threads(threads).build().unwrap();
+            let (l, c, gg) = pool.install(|| g.fwd_bwd(&p, &x, &y, true));
+            assert_eq!(l.to_bits(), l0.to_bits(), "{threads} threads");
+            assert_eq!(c, c0);
+            let (a, b2) = (gg.unwrap(), g0.clone().unwrap());
+            assert_eq!(a.len(), b2.len());
+            for (i, (va, vb)) in a.iter().zip(&b2).enumerate() {
+                assert_eq!(va.to_bits(), vb.to_bits(), "grad[{i}] differs");
+            }
+        }
+    }
+
+    #[test]
+    fn training_the_tiny_graph_reduces_loss() {
+        let g = LayerGraph::from_spec(&tiny_cnn_spec(), 10).unwrap();
+        let mut p = g.init_params(5);
+        let mut rng = Rng::new(6);
+        let b = 8usize;
+        let x: Vec<f32> = (0..b * g.in_len()).map(|_| (rng.normal() * 0.8) as f32).collect();
+        let y: Vec<i32> = (0..b).map(|_| rng.below(10) as i32).collect();
+        let first = g.fwd_bwd(&p, &x, &y, false).0 / b as f64;
+        for _ in 0..30 {
+            let (_, _, grad) = g.fwd_bwd(&p, &x, &y, true);
+            let grad = grad.unwrap();
+            let mut off = 0usize;
+            for t in p.iter_mut() {
+                for v in t.iter_mut() {
+                    *v -= 0.5 * grad[off];
+                    off += 1;
+                }
+            }
+        }
+        let last = g.fwd_bwd(&p, &x, &y, false).0 / b as f64;
+        assert!(last < first - 0.5, "memorising one batch: {first} -> {last}");
+    }
+}

@@ -1,0 +1,639 @@
+//! Pure-Rust execution backend: a composable layer-graph engine over flat
+//! `Vec<f32>` buffers. No PJRT, no artifacts, no native libraries — every
+//! executable preset trains end-to-end on a fresh checkout.
+//!
+//! Structure:
+//! * [`ops`] — the op library (`Dense`, `Conv2d`, `MaxPool2d`, `ReLU`,
+//!   `Flatten`, softmax cross-entropy), each a uniform
+//!   forward/backward/param_shapes implementation;
+//! * [`graph`] — [`LayerGraph`], which compiles a `dnn::ModelSpec` (the
+//!   SAME description the scheduler's Table II cost model uses) into an op
+//!   chain and owns all offset bookkeeping;
+//! * this module — [`NativeBackend`], the [`Backend`] implementation: the
+//!   `mlp` (3072 → 64 ReLU → 10) and `cnn` (VGG-mini:
+//!   3× [conv3x3 + ReLU + maxpool2] → 1024 → 128 → 10) presets.
+//!
+//! The ABI matches the artifact family exactly: parameters travel
+//! weights-then-bias per layer in layer order, `train_step` returns the
+//! loss at the *pre-step* parameters (like `jax.value_and_grad`),
+//! `eval_batch` returns (sum loss, num correct), and `grad` returns the
+//! flat concatenated minibatch gradient. For `mlp`, the graph engine is
+//! bit-identical to the fused dense backend it replaced (He-normal hidden
+//! init, zero head, identical accumulation order) — the golden test below
+//! pins that with a verbatim copy of the retired implementation.
+
+pub mod graph;
+pub mod ops;
+
+use anyhow::{bail, Result};
+
+use super::backend::{Backend, Params};
+use super::meta::ModelMeta;
+use crate::dnn::{models, ModelSpec};
+
+pub use graph::LayerGraph;
+
+/// Batch shapes shared by every native preset (python/compile/model.py
+/// bakes the same ones into the AOT artifacts).
+pub const TRAIN_BATCH: usize = 64;
+pub const EVAL_BATCH: usize = 256;
+pub const NUM_CLASSES: usize = 10;
+
+/// Dependency-free layer-graph runtime.
+pub struct NativeBackend {
+    meta: ModelMeta,
+    graph: LayerGraph,
+    init_seed: u64,
+}
+
+impl NativeBackend {
+    /// The `mlp` preset with the default deterministic init seed.
+    pub fn mlp() -> Self {
+        Self::mlp_seeded(0x6d6c70) // "mlp"
+    }
+
+    /// Same preset, custom init seed (distinct seeds give distinct inits,
+    /// each individually deterministic).
+    pub fn mlp_seeded(init_seed: u64) -> Self {
+        Self::from_spec(&models::mlp(), init_seed).expect("mlp preset is executable")
+    }
+
+    /// The `cnn` (VGG-mini) preset with the default init seed.
+    pub fn cnn() -> Self {
+        Self::cnn_seeded(0x636e6e) // "cnn"
+    }
+
+    pub fn cnn_seeded(init_seed: u64) -> Self {
+        Self::from_spec(&models::vgg_mini(), init_seed).expect("cnn preset is executable")
+    }
+
+    /// Compile any executable `ModelSpec` into a backend — the spec is the
+    /// single source of truth shared with the scheduler's cost model.
+    pub fn from_spec(spec: &ModelSpec, init_seed: u64) -> Result<Self> {
+        let graph = LayerGraph::from_spec(spec, NUM_CLASSES)?;
+        let mut input_train = vec![TRAIN_BATCH];
+        input_train.extend_from_slice(graph.input_shape());
+        let mut input_eval = vec![EVAL_BATCH];
+        input_eval.extend_from_slice(graph.input_shape());
+        let meta = ModelMeta {
+            preset: spec.name.clone(),
+            train_batch: TRAIN_BATCH,
+            eval_batch: EVAL_BATCH,
+            num_classes: NUM_CLASSES,
+            input_train,
+            input_eval,
+            param_total: graph.param_total(),
+            train_k: 0,
+            param_shapes: graph.param_shapes().to_vec(),
+        };
+        Ok(NativeBackend { meta, graph, init_seed })
+    }
+
+    fn check_params(&self, params: &Params) -> Result<()> {
+        if params.len() != self.meta.param_shapes.len() {
+            bail!(
+                "expected {} param tensors, got {}",
+                self.meta.param_shapes.len(),
+                params.len()
+            );
+        }
+        for (buf, shape) in params.iter().zip(&self.meta.param_shapes) {
+            let expect: usize = shape.iter().product();
+            if buf.len() != expect {
+                bail!("param tensor size {} != shape {shape:?}", buf.len());
+            }
+        }
+        Ok(())
+    }
+
+    /// Validate per-sample geometry and labels for an arbitrary-size batch.
+    fn check_samples(&self, x: &[f32], y: &[i32]) -> Result<()> {
+        if y.is_empty() {
+            bail!("empty batch");
+        }
+        let dim = self.graph.in_len();
+        if x.len() != y.len() * dim {
+            bail!("input size {} != {}x{dim}", x.len(), y.len());
+        }
+        let classes = self.meta.num_classes as i32;
+        for &c in y {
+            if !(0..classes).contains(&c) {
+                bail!("label {c} outside 0..{classes}");
+            }
+        }
+        Ok(())
+    }
+
+    fn check_batch(&self, x: &[f32], y: &[i32], batch: usize) -> Result<()> {
+        if y.len() != batch {
+            bail!("label batch {} != expected {batch}", y.len());
+        }
+        self.check_samples(x, y)
+    }
+}
+
+impl Backend for NativeBackend {
+    fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    fn init_params(&self) -> Result<Params> {
+        Ok(self.graph.init_params(self.init_seed))
+    }
+
+    fn train_step(
+        &self,
+        params: &Params,
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+    ) -> Result<(Params, f32)> {
+        self.check_params(params)?;
+        self.check_batch(x, y, self.meta.train_batch)?;
+        let (loss_sum, _, grad) = self.graph.fwd_bwd(params, x, y, true);
+        let g = grad.expect("gradient requested");
+        let mut new = params.clone();
+        let mut off = 0usize;
+        for t in new.iter_mut() {
+            for v in t.iter_mut() {
+                *v -= lr * g[off];
+                off += 1;
+            }
+        }
+        Ok((new, (loss_sum / y.len() as f64) as f32))
+    }
+
+    fn eval_batch(&self, params: &Params, x: &[f32], y: &[i32]) -> Result<(f64, f64)> {
+        self.check_params(params)?;
+        self.check_batch(x, y, self.meta.eval_batch)?;
+        let (loss_sum, correct, _) = self.graph.fwd_bwd(params, x, y, false);
+        Ok((loss_sum, correct as f64))
+    }
+
+    fn eval_partial_batch(
+        &self,
+        params: &Params,
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<Option<(f64, f64)>> {
+        self.check_params(params)?;
+        self.check_samples(x, y)?;
+        let (loss_sum, correct, _) = self.graph.fwd_bwd(params, x, y, false);
+        Ok(Some((loss_sum, correct as f64)))
+    }
+
+    fn grad(&self, params: &Params, x: &[f32], y: &[i32]) -> Result<Vec<f32>> {
+        self.check_params(params)?;
+        self.check_batch(x, y, self.meta.train_batch)?;
+        let (_, _, grad) = self.graph.fwd_bwd(params, x, y, true);
+        Ok(grad.expect("gradient requested"))
+    }
+}
+
+#[cfg(test)]
+mod golden {
+    //! Byte-exact oracle: the pre-refactor fused mlp backend, kept
+    //! VERBATIM as a test-only reference. The layer-graph engine must
+    //! reproduce its numerics bit for bit — init stream, forward, loss,
+    //! gradient accumulation order, and SGD update alike.
+
+    use crate::rng::Rng;
+    use crate::runtime::backend::Params;
+
+    pub const INPUT_DIM: usize = 3072;
+    pub const HIDDEN: usize = 64;
+    pub const CLASSES: usize = 10;
+
+    pub const O_W1: usize = 0;
+    pub const O_B1: usize = INPUT_DIM * HIDDEN;
+    pub const O_W2: usize = O_B1 + HIDDEN;
+    pub const O_B2: usize = O_W2 + HIDDEN * CLASSES;
+    pub const PARAM_TOTAL: usize = O_B2 + CLASSES;
+
+    pub fn init(seed: u64) -> Params {
+        let mut rng = Rng::new(seed);
+        let scale = (2.0 / INPUT_DIM as f64).sqrt();
+        let w1: Vec<f32> =
+            (0..INPUT_DIM * HIDDEN).map(|_| (rng.normal() * scale) as f32).collect();
+        vec![
+            w1,
+            vec![0.0; HIDDEN],
+            vec![0.0; HIDDEN * CLASSES],
+            vec![0.0; CLASSES],
+        ]
+    }
+
+    pub fn fwd_bwd(
+        params: &Params,
+        x: &[f32],
+        y: &[i32],
+        want_grad: bool,
+    ) -> (f64, usize, Option<Vec<f32>>) {
+        let b = y.len();
+        let (w1, b1, w2, b2) = (&params[0], &params[1], &params[2], &params[3]);
+        let inv_b = 1.0f32 / b as f32;
+        let mut grad = if want_grad { Some(vec![0.0f32; PARAM_TOTAL]) } else { None };
+
+        let mut pre = vec![0.0f32; HIDDEN];
+        let mut act = vec![0.0f32; HIDDEN];
+        let mut z = vec![0.0f32; CLASSES];
+        let mut dz = vec![0.0f32; CLASSES];
+        let mut dh = vec![0.0f32; HIDDEN];
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0usize;
+
+        for s in 0..b {
+            let xs = &x[s * INPUT_DIM..(s + 1) * INPUT_DIM];
+
+            pre.copy_from_slice(b1);
+            for i in 0..INPUT_DIM {
+                let xi = xs[i];
+                if xi != 0.0 {
+                    let row = &w1[i * HIDDEN..(i + 1) * HIDDEN];
+                    for j in 0..HIDDEN {
+                        pre[j] += xi * row[j];
+                    }
+                }
+            }
+            for j in 0..HIDDEN {
+                act[j] = pre[j].max(0.0);
+            }
+
+            z.copy_from_slice(b2);
+            for j in 0..HIDDEN {
+                let aj = act[j];
+                if aj != 0.0 {
+                    let row = &w2[j * CLASSES..(j + 1) * CLASSES];
+                    for k in 0..CLASSES {
+                        z[k] += aj * row[k];
+                    }
+                }
+            }
+
+            let label = y[s] as usize;
+            let zmax = z.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+            let mut expsum = 0.0f32;
+            for k in 0..CLASSES {
+                dz[k] = (z[k] - zmax).exp();
+                expsum += dz[k];
+            }
+            loss_sum += (expsum.ln() + zmax - z[label]) as f64;
+
+            let mut best = 0usize;
+            for k in 1..CLASSES {
+                if z[k] > z[best] {
+                    best = k;
+                }
+            }
+            if best == label {
+                correct += 1;
+            }
+
+            if let Some(g) = grad.as_mut() {
+                for k in 0..CLASSES {
+                    dz[k] *= inv_b / expsum;
+                }
+                dz[label] -= inv_b;
+
+                for j in 0..HIDDEN {
+                    let aj = act[j];
+                    let row = &w2[j * CLASSES..(j + 1) * CLASSES];
+                    let mut acc = 0.0f32;
+                    for k in 0..CLASSES {
+                        acc += row[k] * dz[k];
+                        g[O_W2 + j * CLASSES + k] += aj * dz[k];
+                    }
+                    dh[j] = if pre[j] > 0.0 { acc } else { 0.0 };
+                }
+                for k in 0..CLASSES {
+                    g[O_B2 + k] += dz[k];
+                }
+
+                for i in 0..INPUT_DIM {
+                    let xi = xs[i];
+                    if xi != 0.0 {
+                        let row = &mut g[O_W1 + i * HIDDEN..O_W1 + (i + 1) * HIDDEN];
+                        for j in 0..HIDDEN {
+                            row[j] += xi * dh[j];
+                        }
+                    }
+                }
+                for j in 0..HIDDEN {
+                    g[O_B1 + j] += dh[j];
+                }
+            }
+        }
+        (loss_sum, correct, grad)
+    }
+
+    pub fn train_step(params: &Params, x: &[f32], y: &[i32], lr: f32) -> (Params, f32) {
+        let (loss_sum, _, grad) = fwd_bwd(params, x, y, true);
+        let g = grad.expect("gradient requested");
+        let mut new = params.clone();
+        let mut off = 0usize;
+        for t in new.iter_mut() {
+            for v in t.iter_mut() {
+                *v -= lr * g[off];
+                off += 1;
+            }
+        }
+        (new, (loss_sum / y.len() as f64) as f32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::golden::{CLASSES, HIDDEN, INPUT_DIM, O_B1, O_B2, O_W1, O_W2, PARAM_TOTAL};
+    use super::*;
+    use crate::rng::Rng;
+
+    fn batch(seed: u64, n: usize) -> (Vec<f32>, Vec<i32>) {
+        let mut rng = Rng::new(seed);
+        let x: Vec<f32> = (0..n * INPUT_DIM).map(|_| rng.normal() as f32 * 0.5).collect();
+        let y: Vec<i32> = (0..n).map(|_| rng.below(CLASSES) as i32).collect();
+        (x, y)
+    }
+
+    fn assert_bits_eq(a: &Params, b: &Params, what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: tensor count");
+        for (t, (ta, tb)) in a.iter().zip(b).enumerate() {
+            assert_eq!(ta.len(), tb.len(), "{what}: tensor {t} len");
+            for (i, (va, vb)) in ta.iter().zip(tb).enumerate() {
+                assert_eq!(
+                    va.to_bits(),
+                    vb.to_bits(),
+                    "{what}: tensor {t} idx {i}: {va} vs {vb}"
+                );
+            }
+        }
+    }
+
+    /// THE refactor-pinning test: the layer-graph mlp must be bit-identical
+    /// to the retired fused implementation — init, losses, gradients, and
+    /// parameters after several SGD steps.
+    #[test]
+    fn mlp_graph_matches_fused_reference_bit_for_bit() {
+        for seed in [0x6d6c70u64, 7, 12345] {
+            let b = NativeBackend::mlp_seeded(seed);
+            let mut p = b.init_params().unwrap();
+            let mut rp = golden::init(seed);
+            assert_bits_eq(&p, &rp, "init");
+
+            for step in 0..4u32 {
+                let (x, y) = batch(seed ^ u64::from(step) << 16, 64);
+                let (np, loss) = b.train_step(&p, &x, &y, 0.05).unwrap();
+                let (nrp, rloss) = golden::train_step(&rp, &x, &y, 0.05);
+                assert_eq!(loss.to_bits(), rloss.to_bits(), "loss at step {step}");
+                assert_bits_eq(&np, &nrp, "params after step");
+                p = np;
+                rp = nrp;
+            }
+
+            // Gradient and eval parity at the trained point.
+            let (x, y) = batch(seed ^ 0xabcd, 64);
+            let g = b.grad(&p, &x, &y).unwrap();
+            let rg = golden::fwd_bwd(&rp, &x, &y, true).2.unwrap();
+            assert_eq!(g.len(), rg.len());
+            for (i, (va, vb)) in g.iter().zip(&rg).enumerate() {
+                assert_eq!(va.to_bits(), vb.to_bits(), "grad[{i}]");
+            }
+            let (xe, ye) = batch(seed ^ 0xef01, 256);
+            let (le, ce) = b.eval_batch(&p, &xe, &ye).unwrap();
+            let (rl, rc, _) = golden::fwd_bwd(&rp, &xe, &ye, false);
+            assert_eq!(le.to_bits(), rl.to_bits(), "eval loss");
+            assert_eq!(ce as usize, rc, "eval correct");
+        }
+    }
+
+    #[test]
+    fn meta_matches_python_preset() {
+        let b = NativeBackend::mlp();
+        let m = b.meta();
+        assert_eq!(m.preset, "mlp");
+        assert_eq!((m.train_batch, m.eval_batch, m.num_classes), (64, 256, 10));
+        assert_eq!(m.param_total, 3072 * 64 + 64 + 64 * 10 + 10);
+        assert_eq!(m.sample_dim(), 3072);
+        assert_eq!(m.input_train, vec![64, 3072]);
+    }
+
+    #[test]
+    fn cnn_meta_matches_python_preset() {
+        let b = NativeBackend::cnn();
+        let m = b.meta();
+        assert_eq!(m.preset, "cnn");
+        assert_eq!((m.train_batch, m.eval_batch, m.num_classes), (64, 256, 10));
+        assert_eq!(m.input_train, vec![64, 32, 32, 3]);
+        assert_eq!(m.sample_dim(), 3072);
+        // python param_count('cnn') = weights + biases over the 5 layers.
+        let expect = (432 + 16) + (4608 + 32) + (18432 + 64) + (131072 + 128) + (1280 + 10);
+        assert_eq!(m.param_total, expect);
+        assert_eq!(m.param_shapes[0], vec![3, 3, 3, 16]);
+        assert_eq!(m.param_shapes[8], vec![128, 10]);
+    }
+
+    #[test]
+    fn init_is_deterministic_and_zero_headed() {
+        let b = NativeBackend::mlp();
+        let p1 = b.init_params().unwrap();
+        let p2 = b.init_params().unwrap();
+        assert_eq!(p1, p2);
+        assert!(p1[2].iter().all(|&v| v == 0.0));
+        assert!(p1[3].iter().all(|&v| v == 0.0));
+        assert!(p1[0].iter().any(|&v| v != 0.0));
+        // Different seeds give different hidden features.
+        let p3 = NativeBackend::mlp_seeded(99).init_params().unwrap();
+        assert_ne!(p1[0], p3[0]);
+    }
+
+    #[test]
+    fn cnn_init_is_deterministic_he_body_zero_head() {
+        let b = NativeBackend::cnn();
+        let p1 = b.init_params().unwrap();
+        assert_eq!(p1, b.init_params().unwrap());
+        // Conv + fc1 weights are He-normal, every bias and the head zero.
+        for t in [0usize, 2, 4, 6] {
+            assert!(p1[t].iter().any(|&v| v != 0.0), "tensor {t}");
+        }
+        for t in [1usize, 3, 5, 7, 8, 9] {
+            assert!(p1[t].iter().all(|&v| v == 0.0), "tensor {t}");
+        }
+    }
+
+    #[test]
+    fn initial_loss_is_ln10_and_zero_lr_is_identity() {
+        let b = NativeBackend::mlp();
+        let p = b.init_params().unwrap();
+        let (x, y) = batch(1, 64);
+        let (same, loss) = b.train_step(&p, &x, &y, 0.0).unwrap();
+        assert_eq!(same, p);
+        assert!((loss - 10f32.ln()).abs() < 1e-5, "loss {loss}");
+    }
+
+    #[test]
+    fn cnn_initial_loss_is_ln10_and_sgd_reduces_it() {
+        let b = NativeBackend::cnn();
+        let mut p = b.init_params().unwrap();
+        let (x, y) = batch(11, 64);
+        let (_, first) = b.train_step(&p, &x, &y, 0.0).unwrap();
+        assert!((first - 10f32.ln()).abs() < 1e-5, "zero-head cnn loss {first}");
+        for _ in 0..4 {
+            let (np, _) = b.train_step(&p, &x, &y, 0.1).unwrap();
+            p = np;
+        }
+        let (_, last) = b.train_step(&p, &x, &y, 0.0).unwrap();
+        assert!(
+            (last as f64) < first as f64 - 0.01,
+            "cnn loss should fall from ln 10: {first} -> {last}"
+        );
+    }
+
+    #[test]
+    fn grad_matches_finite_differences() {
+        let b = NativeBackend::mlp();
+        let mut p = b.init_params().unwrap();
+        // Perturb the head so gradients flow through both layers.
+        let mut rng = Rng::new(7);
+        for v in p[2].iter_mut().chain(p[3].iter_mut()) {
+            *v = (rng.normal() * 0.1) as f32;
+        }
+        let (x, y) = batch(2, 64);
+        let g = b.grad(&p, &x, &y).unwrap();
+        assert_eq!(g.len(), PARAM_TOTAL);
+
+        let loss_at = |params: &Params| -> f64 {
+            let (_, l) = b.train_step(params, &x, &y, 0.0).unwrap();
+            l as f64
+        };
+        // Probe a few coordinates in every tensor.
+        let probes = [
+            (0usize, 0usize),     // w1[0,0]
+            (0, 5 * HIDDEN + 3),  // w1[5,3]
+            (1, 2),               // b1[2]
+            (2, 7),               // w2[0,7]
+            (2, 4 * CLASSES + 1), // w2[4,1]
+            (3, 6),               // b2[6]
+        ];
+        let offsets = [O_W1, O_B1, O_W2, O_B2];
+        let eps = 1e-2f32;
+        for (t, i) in probes {
+            let mut hi = p.clone();
+            hi[t][i] += eps;
+            let mut lo = p.clone();
+            lo[t][i] -= eps;
+            let num = (loss_at(&hi) - loss_at(&lo)) / (2.0 * eps as f64);
+            let ana = g[offsets[t] + i] as f64;
+            assert!(
+                (num - ana).abs() < 1e-3 + 0.05 * ana.abs(),
+                "tensor {t} idx {i}: numeric {num} vs analytic {ana}"
+            );
+        }
+    }
+
+    #[test]
+    fn train_step_equals_manual_sgd_on_grad() {
+        let b = NativeBackend::mlp();
+        let p = b.init_params().unwrap();
+        let (x, y) = batch(3, 64);
+        let (stepped, _) = b.train_step(&p, &x, &y, 0.01).unwrap();
+        let g = b.grad(&p, &x, &y).unwrap();
+        let mut manual = p.clone();
+        let mut off = 0;
+        for t in manual.iter_mut() {
+            for v in t.iter_mut() {
+                *v -= 0.01 * g[off];
+                off += 1;
+            }
+        }
+        assert_eq!(manual, stepped);
+    }
+
+    #[test]
+    fn sgd_reduces_loss_on_separable_batch() {
+        let b = NativeBackend::mlp();
+        let mut p = b.init_params().unwrap();
+        // One fixed batch: repeated steps must drive its loss down fast.
+        let (x, y) = batch(4, 64);
+        let (_, first) = b.train_step(&p, &x, &y, 0.0).unwrap();
+        for _ in 0..30 {
+            let (np, _) = b.train_step(&p, &x, &y, 0.1).unwrap();
+            p = np;
+        }
+        let (_, last) = b.train_step(&p, &x, &y, 0.0).unwrap();
+        assert!(
+            last < first - 0.5,
+            "memorising one batch should cut the loss: {first} -> {last}"
+        );
+    }
+
+    #[test]
+    fn eval_batch_sums_and_counts() {
+        let b = NativeBackend::mlp();
+        let p = b.init_params().unwrap();
+        let (x, y) = batch(5, 256);
+        let (loss_sum, correct) = b.eval_batch(&p, &x, &y).unwrap();
+        // Zero head: per-sample loss is exactly ln 10.
+        assert!((loss_sum / 256.0 - 10f64.ln()).abs() < 1e-5);
+        assert!((0.0..=256.0).contains(&correct));
+    }
+
+    #[test]
+    fn eval_full_chunks_consistently() {
+        let b = NativeBackend::mlp();
+        let p = b.init_params().unwrap();
+        let (x, y) = batch(6, 512);
+        let (mean_loss, acc) = b.eval_full(&p, &x, &y).unwrap();
+        assert!((mean_loss - 10f64.ln()).abs() < 1e-5);
+        assert!((0.0..=1.0).contains(&acc));
+    }
+
+    #[test]
+    fn eval_full_handles_a_trailing_partial_batch() {
+        let b = NativeBackend::mlp();
+        let p = b.init_params().unwrap();
+        // 612 = 2 full eval batches of 256 + a remainder of 100.
+        let (x, y) = batch(9, 612);
+        let (mean_loss, acc) = b.eval_full(&p, &x, &y).unwrap();
+        assert!((mean_loss - 10f64.ln()).abs() < 1e-5);
+        assert!((0.0..=1.0).contains(&acc));
+        // The composition equals full batches + the manual partial tail.
+        let dim = b.meta().sample_dim();
+        let (mut loss, mut correct) = (0.0, 0.0);
+        for c in 0..2 {
+            let (l, n) = b
+                .eval_batch(&p, &x[c * 256 * dim..(c + 1) * 256 * dim], &y[c * 256..(c + 1) * 256])
+                .unwrap();
+            loss += l;
+            correct += n;
+        }
+        let (l, n) = b
+            .eval_partial_batch(&p, &x[512 * dim..], &y[512..])
+            .unwrap()
+            .expect("native backends run partial batches");
+        loss += l;
+        correct += n;
+        assert_eq!((loss / 612.0).to_bits(), mean_loss.to_bits());
+        assert_eq!((correct / 612.0).to_bits(), acc.to_bits());
+        // Tiny test sets (below one eval batch) also work.
+        let (x1, y1) = batch(10, 3);
+        let (ml, a) = b.eval_full(&p, &x1, &y1).unwrap();
+        assert!((ml - 10f64.ln()).abs() < 1e-5);
+        assert!((0.0..=1.0).contains(&a));
+    }
+
+    #[test]
+    fn rejects_malformed_inputs() {
+        let b = NativeBackend::mlp();
+        let p = b.init_params().unwrap();
+        let (x, y) = batch(8, 64);
+        assert!(b.train_step(&p, &x[..10], &y, 0.1).is_err());
+        assert!(b.train_step(&p, &x, &y[..10], 0.1).is_err());
+        let bad_y: Vec<i32> = vec![11; 64];
+        assert!(b.train_step(&p, &x, &bad_y, 0.1).is_err());
+        let mut bad_p = p.clone();
+        bad_p[0].pop();
+        assert!(b.train_step(&bad_p, &x, &y, 0.1).is_err());
+        // Mismatched x/y still fails on the ragged eval path.
+        assert!(b.eval_full(&p, &x[..100], &y[..10]).is_err());
+        assert!(b.eval_partial_batch(&p, &x[..100], &y[..10]).is_err());
+    }
+}

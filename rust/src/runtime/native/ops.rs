@@ -1,0 +1,692 @@
+//! The op library of the native layer-graph engine.
+//!
+//! Each op is one executable DNN layer over flat `f32` buffers in
+//! per-sample channels-last (NHWC) layout — the same layout the PJRT
+//! artifact family uses, so parameters and activations stay
+//! interchangeable between engines. Ops expose a uniform
+//! forward / backward / param_shapes interface; `super::graph::LayerGraph`
+//! composes them and owns every offset.
+//!
+//! `backward` consumes the op's *input* activation (cached by the graph
+//! during the forward pass) and the upstream error `dy`, accumulates this
+//! op's parameter gradients into `dp` (its tensors concatenated flat, ABI
+//! order), and — except at the graph input, where `dx` is `None` — writes
+//! the downstream error into `dx` (every element; ops that scatter, like
+//! max-pool, zero-fill first).
+//!
+//! Numerics note: the Dense loops (bias copy, zero-input skip, k-order
+//! accumulation) reproduce the retired fused mlp backend instruction for
+//! instruction, so the graph engine is bit-identical to it — the golden
+//! test in `super::tests` pins this.
+
+use crate::rng::Rng;
+
+/// One executable layer.
+pub trait Op: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Per-sample input element count.
+    fn in_len(&self) -> usize;
+
+    /// Per-sample output element count.
+    fn out_len(&self) -> usize;
+
+    /// Parameter tensor shapes in ABI order; empty for param-free ops.
+    fn param_shapes(&self) -> Vec<Vec<usize>> {
+        Vec::new()
+    }
+
+    /// Deterministic parameter init: He-normal weights drawn from `rng`,
+    /// zero biases. `None` requests the zero-init head (all-zero logits at
+    /// init, so the initial loss is exactly ln C).
+    fn init_params(&self, _rng: Option<&mut Rng>) -> Vec<Vec<f32>> {
+        Vec::new()
+    }
+
+    /// Per-sample forward. `params` holds this op's tensors (ABI order);
+    /// `out` has exactly `out_len()` elements and is fully written.
+    fn forward(&self, params: &[&[f32]], x: &[f32], out: &mut [f32]);
+
+    /// Per-sample backward; see the module docs for the contract.
+    fn backward(
+        &self,
+        params: &[&[f32]],
+        x: &[f32],
+        dy: &[f32],
+        dx: Option<&mut [f32]>,
+        dp: &mut [f32],
+    );
+}
+
+/// He-normal weight buffer: `normal() * sqrt(2 / fan_in)`, drawn
+/// sequentially so the init stream is deterministic per graph seed.
+fn he_normal(rng: &mut Rng, n: usize, fan_in: usize) -> Vec<f32> {
+    let scale = (2.0 / fan_in as f64).sqrt();
+    (0..n).map(|_| (rng.normal() * scale) as f32).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Dense
+// ---------------------------------------------------------------------------
+
+/// Fully connected: `out = x · W + b`, `W` row-major `[si, so]`.
+pub struct Dense {
+    pub si: usize,
+    pub so: usize,
+}
+
+impl Op for Dense {
+    fn name(&self) -> &'static str {
+        "dense"
+    }
+
+    fn in_len(&self) -> usize {
+        self.si
+    }
+
+    fn out_len(&self) -> usize {
+        self.so
+    }
+
+    fn param_shapes(&self) -> Vec<Vec<usize>> {
+        vec![vec![self.si, self.so], vec![self.so]]
+    }
+
+    fn init_params(&self, rng: Option<&mut Rng>) -> Vec<Vec<f32>> {
+        let w = match rng {
+            Some(rng) => he_normal(rng, self.si * self.so, self.si),
+            None => vec![0.0; self.si * self.so],
+        };
+        vec![w, vec![0.0; self.so]]
+    }
+
+    fn forward(&self, params: &[&[f32]], x: &[f32], out: &mut [f32]) {
+        let (w, b) = (params[0], params[1]);
+        out.copy_from_slice(b);
+        for i in 0..self.si {
+            let xi = x[i];
+            if xi != 0.0 {
+                let row = &w[i * self.so..(i + 1) * self.so];
+                for j in 0..self.so {
+                    out[j] += xi * row[j];
+                }
+            }
+        }
+    }
+
+    fn backward(
+        &self,
+        params: &[&[f32]],
+        x: &[f32],
+        dy: &[f32],
+        dx: Option<&mut [f32]>,
+        dp: &mut [f32],
+    ) {
+        let w = params[0];
+        let (dw, db) = dp.split_at_mut(self.si * self.so);
+        if let Some(dx) = dx {
+            for i in 0..self.si {
+                let row = &w[i * self.so..(i + 1) * self.so];
+                let mut acc = 0.0f32;
+                for j in 0..self.so {
+                    acc += row[j] * dy[j];
+                }
+                dx[i] = acc;
+            }
+        }
+        for i in 0..self.si {
+            let xi = x[i];
+            if xi != 0.0 {
+                let drow = &mut dw[i * self.so..(i + 1) * self.so];
+                for j in 0..self.so {
+                    drow[j] += xi * dy[j];
+                }
+            }
+        }
+        for j in 0..self.so {
+            db[j] += dy[j];
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Conv2d (SAME padding, stride 1, odd kernel, HWIO weights)
+// ---------------------------------------------------------------------------
+
+/// 2-D convolution over an `h x w x ci` channels-last input, producing
+/// `h x w x co` (SAME padding, stride 1). Weights are HWIO
+/// `[kh, kw, ci, co]` — the JAX/artifact convention.
+pub struct Conv2d {
+    pub ci: usize,
+    pub co: usize,
+    pub h: usize,
+    pub w: usize,
+    pub kh: usize,
+    pub kw: usize,
+}
+
+impl Conv2d {
+    /// (output-row range, input-row delta) for kernel row `kr`: SAME
+    /// padding clips positions whose input row falls off the image.
+    #[inline]
+    fn row_range(&self, kr: usize) -> (usize, usize) {
+        let ph = (self.kh - 1) / 2;
+        let lo = ph.saturating_sub(kr);
+        let hi = (self.h + ph).saturating_sub(kr).min(self.h);
+        (lo, hi)
+    }
+
+    #[inline]
+    fn col_range(&self, kc: usize) -> (usize, usize) {
+        let pw = (self.kw - 1) / 2;
+        let lo = pw.saturating_sub(kc);
+        let hi = (self.w + pw).saturating_sub(kc).min(self.w);
+        (lo, hi)
+    }
+}
+
+impl Op for Conv2d {
+    fn name(&self) -> &'static str {
+        "conv2d"
+    }
+
+    fn in_len(&self) -> usize {
+        self.h * self.w * self.ci
+    }
+
+    fn out_len(&self) -> usize {
+        self.h * self.w * self.co
+    }
+
+    fn param_shapes(&self) -> Vec<Vec<usize>> {
+        vec![vec![self.kh, self.kw, self.ci, self.co], vec![self.co]]
+    }
+
+    fn init_params(&self, rng: Option<&mut Rng>) -> Vec<Vec<f32>> {
+        let n = self.kh * self.kw * self.ci * self.co;
+        let w = match rng {
+            Some(rng) => he_normal(rng, n, self.kh * self.kw * self.ci),
+            None => vec![0.0; n],
+        };
+        vec![w, vec![0.0; self.co]]
+    }
+
+    fn forward(&self, params: &[&[f32]], x: &[f32], out: &mut [f32]) {
+        let (wt, b) = (params[0], params[1]);
+        let (w, ci, co) = (self.w, self.ci, self.co);
+        let (ph, pw) = ((self.kh - 1) / 2, (self.kw - 1) / 2);
+        for p in 0..self.h * w {
+            out[p * co..(p + 1) * co].copy_from_slice(b);
+        }
+        for kr in 0..self.kh {
+            let (oh_lo, oh_hi) = self.row_range(kr);
+            for kc in 0..self.kw {
+                let (ow_lo, ow_hi) = self.col_range(kc);
+                let wbase = (kr * self.kw + kc) * ci * co;
+                for oh in oh_lo..oh_hi {
+                    let ih = oh + kr - ph;
+                    for ow in ow_lo..ow_hi {
+                        let iw = ow + kc - pw;
+                        let xoff = (ih * w + iw) * ci;
+                        let ooff = (oh * w + ow) * co;
+                        for ic in 0..ci {
+                            let xv = x[xoff + ic];
+                            if xv != 0.0 {
+                                let wrow = &wt[wbase + ic * co..wbase + (ic + 1) * co];
+                                let orow = &mut out[ooff..ooff + co];
+                                for oc in 0..co {
+                                    orow[oc] += xv * wrow[oc];
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    fn backward(
+        &self,
+        params: &[&[f32]],
+        x: &[f32],
+        dy: &[f32],
+        mut dx: Option<&mut [f32]>,
+        dp: &mut [f32],
+    ) {
+        let wt = params[0];
+        let (w, ci, co) = (self.w, self.ci, self.co);
+        let (ph, pw) = ((self.kh - 1) / 2, (self.kw - 1) / 2);
+        let (dwt, db) = dp.split_at_mut(self.kh * self.kw * ci * co);
+        for p in 0..self.h * w {
+            let dyrow = &dy[p * co..(p + 1) * co];
+            for oc in 0..co {
+                db[oc] += dyrow[oc];
+            }
+        }
+        if let Some(dx) = dx.as_deref_mut() {
+            dx.fill(0.0);
+        }
+        for kr in 0..self.kh {
+            let (oh_lo, oh_hi) = self.row_range(kr);
+            for kc in 0..self.kw {
+                let (ow_lo, ow_hi) = self.col_range(kc);
+                let wbase = (kr * self.kw + kc) * ci * co;
+                for oh in oh_lo..oh_hi {
+                    let ih = oh + kr - ph;
+                    for ow in ow_lo..ow_hi {
+                        let iw = ow + kc - pw;
+                        let xoff = (ih * w + iw) * ci;
+                        let ooff = (oh * w + ow) * co;
+                        let dyrow = &dy[ooff..ooff + co];
+                        match dx.as_deref_mut() {
+                            Some(dx) => {
+                                for ic in 0..ci {
+                                    let xv = x[xoff + ic];
+                                    let wrow = &wt[wbase + ic * co..wbase + (ic + 1) * co];
+                                    let mut acc = 0.0f32;
+                                    if xv != 0.0 {
+                                        let drow =
+                                            &mut dwt[wbase + ic * co..wbase + (ic + 1) * co];
+                                        for oc in 0..co {
+                                            let d = dyrow[oc];
+                                            acc += wrow[oc] * d;
+                                            drow[oc] += xv * d;
+                                        }
+                                    } else {
+                                        for oc in 0..co {
+                                            acc += wrow[oc] * dyrow[oc];
+                                        }
+                                    }
+                                    dx[xoff + ic] += acc;
+                                }
+                            }
+                            None => {
+                                for ic in 0..ci {
+                                    let xv = x[xoff + ic];
+                                    if xv != 0.0 {
+                                        let drow =
+                                            &mut dwt[wbase + ic * co..wbase + (ic + 1) * co];
+                                        for oc in 0..co {
+                                            drow[oc] += xv * dyrow[oc];
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MaxPool2d (non-overlapping windows)
+// ---------------------------------------------------------------------------
+
+/// Max pooling with a `kh x kw` window and equal stride (non-overlapping),
+/// per channel, over an `hi x wi x c` channels-last input.
+pub struct MaxPool2d {
+    pub c: usize,
+    pub hi: usize,
+    pub wi: usize,
+    pub kh: usize,
+    pub kw: usize,
+}
+
+impl MaxPool2d {
+    fn ho(&self) -> usize {
+        self.hi / self.kh
+    }
+
+    fn wo(&self) -> usize {
+        self.wi / self.kw
+    }
+}
+
+impl Op for MaxPool2d {
+    fn name(&self) -> &'static str {
+        "maxpool2d"
+    }
+
+    fn in_len(&self) -> usize {
+        self.hi * self.wi * self.c
+    }
+
+    fn out_len(&self) -> usize {
+        self.ho() * self.wo() * self.c
+    }
+
+    fn forward(&self, _params: &[&[f32]], x: &[f32], out: &mut [f32]) {
+        let (ho, wo, c) = (self.ho(), self.wo(), self.c);
+        for oh in 0..ho {
+            for ow in 0..wo {
+                for ch in 0..c {
+                    let mut m = f32::NEG_INFINITY;
+                    for ih in oh * self.kh..(oh + 1) * self.kh {
+                        for iw in ow * self.kw..(ow + 1) * self.kw {
+                            let v = x[(ih * self.wi + iw) * c + ch];
+                            if v > m {
+                                m = v;
+                            }
+                        }
+                    }
+                    out[(oh * wo + ow) * c + ch] = m;
+                }
+            }
+        }
+    }
+
+    fn backward(
+        &self,
+        _params: &[&[f32]],
+        x: &[f32],
+        dy: &[f32],
+        dx: Option<&mut [f32]>,
+        _dp: &mut [f32],
+    ) {
+        let Some(dx) = dx else { return };
+        dx.fill(0.0);
+        let (ho, wo, c) = (self.ho(), self.wo(), self.c);
+        for oh in 0..ho {
+            for ow in 0..wo {
+                for ch in 0..c {
+                    // Route to the first-in-scan-order argmax (ties go to
+                    // the earliest cell); windows don't overlap, so plain
+                    // assignment is enough.
+                    let (mut bi, mut bv) = (0usize, f32::NEG_INFINITY);
+                    for ih in oh * self.kh..(oh + 1) * self.kh {
+                        for iw in ow * self.kw..(ow + 1) * self.kw {
+                            let idx = (ih * self.wi + iw) * c + ch;
+                            if x[idx] > bv {
+                                bv = x[idx];
+                                bi = idx;
+                            }
+                        }
+                    }
+                    dx[bi] = dy[(oh * wo + ow) * c + ch];
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ReLU / Flatten
+// ---------------------------------------------------------------------------
+
+/// Elementwise `max(x, 0)`.
+pub struct Relu {
+    pub n: usize,
+}
+
+impl Op for Relu {
+    fn name(&self) -> &'static str {
+        "relu"
+    }
+
+    fn in_len(&self) -> usize {
+        self.n
+    }
+
+    fn out_len(&self) -> usize {
+        self.n
+    }
+
+    fn forward(&self, _params: &[&[f32]], x: &[f32], out: &mut [f32]) {
+        for i in 0..self.n {
+            out[i] = x[i].max(0.0);
+        }
+    }
+
+    fn backward(
+        &self,
+        _params: &[&[f32]],
+        x: &[f32],
+        dy: &[f32],
+        dx: Option<&mut [f32]>,
+        _dp: &mut [f32],
+    ) {
+        let Some(dx) = dx else { return };
+        for i in 0..self.n {
+            dx[i] = if x[i] > 0.0 { dy[i] } else { 0.0 };
+        }
+    }
+}
+
+/// Shape-only bridge from spatial NHWC to flat features. Channels-last
+/// row-major flattening means the buffer is already in FC order, so this
+/// is a plain copy.
+pub struct Flatten {
+    pub n: usize,
+}
+
+impl Op for Flatten {
+    fn name(&self) -> &'static str {
+        "flatten"
+    }
+
+    fn in_len(&self) -> usize {
+        self.n
+    }
+
+    fn out_len(&self) -> usize {
+        self.n
+    }
+
+    fn forward(&self, _params: &[&[f32]], x: &[f32], out: &mut [f32]) {
+        out.copy_from_slice(x);
+    }
+
+    fn backward(
+        &self,
+        _params: &[&[f32]],
+        _x: &[f32],
+        dy: &[f32],
+        dx: Option<&mut [f32]>,
+        _dp: &mut [f32],
+    ) {
+        if let Some(dx) = dx {
+            dx.copy_from_slice(dy);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Softmax cross-entropy head
+// ---------------------------------------------------------------------------
+
+/// The loss head: stable log-softmax cross-entropy over C logits, argmax
+/// correctness, and (optionally) the mean-loss logit gradient. Same
+/// arithmetic, in the same order, as the retired fused mlp backend — the
+/// golden test depends on that.
+pub struct SoftmaxXent {
+    pub classes: usize,
+}
+
+impl SoftmaxXent {
+    /// Returns (per-sample loss, argmax == label). When `inv_b` is
+    /// `Some(1/B)`, additionally writes dL/dz of the MEAN batch loss into
+    /// `dz` (matching `jax.grad` of a batch-averaged cross-entropy).
+    pub fn loss_grad(
+        &self,
+        z: &[f32],
+        label: usize,
+        inv_b: Option<f32>,
+        dz: &mut [f32],
+    ) -> (f64, bool) {
+        let c = self.classes;
+        let zmax = z.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+        let mut expsum = 0.0f32;
+        for k in 0..c {
+            dz[k] = (z[k] - zmax).exp();
+            expsum += dz[k];
+        }
+        let loss = (expsum.ln() + zmax - z[label]) as f64;
+        let mut best = 0usize;
+        for k in 1..c {
+            if z[k] > z[best] {
+                best = k;
+            }
+        }
+        if let Some(inv_b) = inv_b {
+            // dL/dz = (softmax - onehot) / B.
+            let scale = inv_b / expsum;
+            for k in 0..c {
+                dz[k] *= scale;
+            }
+            dz[label] -= inv_b;
+        }
+        (loss, best == label)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn normal_vec(rng: &mut Rng, n: usize, scale: f64) -> Vec<f32> {
+        (0..n).map(|_| (rng.normal() * scale) as f32).collect()
+    }
+
+    /// Finite-difference check of `backward` against `forward` under the
+    /// probe loss L = Σ_i c_i · out_i (so dL/dout = c). Probes every
+    /// parameter coordinate and every input coordinate.
+    fn fd_check(op: &dyn Op, params: &[Vec<f32>], x: &[f32], tol: f64) {
+        let mut rng = Rng::new(0x9d);
+        let c = normal_vec(&mut rng, op.out_len(), 1.0);
+        let loss = |params: &[Vec<f32>], x: &[f32]| -> f64 {
+            let pv: Vec<&[f32]> = params.iter().map(|p| p.as_slice()).collect();
+            let mut out = vec![0.0f32; op.out_len()];
+            op.forward(&pv, x, &mut out);
+            out.iter().zip(&c).map(|(&o, &w)| o as f64 * w as f64).sum()
+        };
+
+        let ptotal: usize = params.iter().map(|p| p.len()).sum();
+        let pv: Vec<&[f32]> = params.iter().map(|p| p.as_slice()).collect();
+        let mut dp = vec![0.0f32; ptotal];
+        let mut dx = vec![0.0f32; op.in_len()];
+        op.backward(&pv, x, &c, Some(&mut dx), &mut dp);
+
+        let eps = 1e-2f32;
+        let check = |num: f64, ana: f64, what: &str| {
+            assert!(
+                (num - ana).abs() < tol + 0.02 * ana.abs(),
+                "{} {what}: numeric {num} vs analytic {ana}",
+                op.name()
+            );
+        };
+        // Parameter coordinates.
+        let mut flat = 0usize;
+        for (t, tensor) in params.iter().enumerate() {
+            for i in 0..tensor.len() {
+                let mut hi = params.to_vec();
+                hi[t][i] += eps;
+                let mut lo = params.to_vec();
+                lo[t][i] -= eps;
+                let num = (loss(&hi, x) - loss(&lo, x)) / (2.0 * eps as f64);
+                check(num, dp[flat] as f64, &format!("param[{t}][{i}]"));
+                flat += 1;
+            }
+        }
+        // Input coordinates.
+        for i in 0..x.len() {
+            let mut hi = x.to_vec();
+            hi[i] += eps;
+            let mut lo = x.to_vec();
+            lo[i] -= eps;
+            let num = (loss(params, &hi) - loss(params, &lo)) / (2.0 * eps as f64);
+            check(num, dx[i] as f64, &format!("x[{i}]"));
+        }
+    }
+
+    #[test]
+    fn dense_finite_difference() {
+        let op = Dense { si: 7, so: 5 };
+        let mut rng = Rng::new(1);
+        let params = op.init_params(Some(&mut rng));
+        let x = normal_vec(&mut rng, 7, 0.8);
+        fd_check(&op, &params, &x, 2e-3);
+    }
+
+    #[test]
+    fn conv2d_finite_difference() {
+        let op = Conv2d { ci: 2, co: 3, h: 4, w: 4, kh: 3, kw: 3 };
+        let mut rng = Rng::new(2);
+        let mut params = op.init_params(Some(&mut rng));
+        // Non-zero bias so db is exercised away from the init point.
+        params[1] = normal_vec(&mut rng, 3, 0.5);
+        let x = normal_vec(&mut rng, op.in_len(), 0.8);
+        fd_check(&op, &params, &x, 5e-3);
+    }
+
+    #[test]
+    fn maxpool_finite_difference_and_routing() {
+        let op = MaxPool2d { c: 2, hi: 4, wi: 4, kh: 2, kw: 2 };
+        // Deterministic input with well-separated values (min gap 0.1 >>
+        // 2*eps) so the finite difference never flips an argmax.
+        let x: Vec<f32> = (0..op.in_len()).map(|i| ((i * 37) % 101) as f32 * 0.1).collect();
+        fd_check(&op, &[], &x, 2e-3);
+
+        // Forward picks the window max.
+        let mut out = vec![0.0f32; op.out_len()];
+        op.forward(&[], &x, &mut out);
+        for (o, &v) in out.iter().enumerate() {
+            assert!(x.contains(&v), "out[{o}]={v} not an input value");
+        }
+    }
+
+    #[test]
+    fn relu_finite_difference() {
+        let op = Relu { n: 8 };
+        // Stay away from the kink at 0 (|x| >= 0.15 > eps).
+        let x: Vec<f32> = (0..8).map(|i| (i as f32 - 3.5) * 0.3).collect();
+        fd_check(&op, &[], &x, 2e-3);
+    }
+
+    #[test]
+    fn flatten_is_identity() {
+        let op = Flatten { n: 6 };
+        let x: Vec<f32> = vec![1.0, -2.0, 3.0, 0.0, 5.5, -0.5];
+        let mut out = vec![0.0f32; 6];
+        op.forward(&[], &x, &mut out);
+        assert_eq!(out, x);
+        let dy: Vec<f32> = vec![0.1, 0.2, 0.3, 0.4, 0.5, 0.6];
+        let mut dx = vec![0.0f32; 6];
+        op.backward(&[], &x, &dy, Some(&mut dx), &mut []);
+        assert_eq!(dx, dy);
+    }
+
+    #[test]
+    fn softmax_xent_zero_logits_is_ln_c() {
+        let head = SoftmaxXent { classes: 10 };
+        let z = vec![0.0f32; 10];
+        let mut dz = vec![0.0f32; 10];
+        let (loss, _) = head.loss_grad(&z, 3, Some(1.0), &mut dz);
+        assert!((loss - 10f64.ln()).abs() < 1e-6, "loss {loss}");
+        // Gradient sums to zero and is negative only at the label.
+        let sum: f32 = dz.iter().sum();
+        assert!(sum.abs() < 1e-6);
+        for (k, &d) in dz.iter().enumerate() {
+            if k == 3 {
+                assert!(d < 0.0);
+            } else {
+                assert!(d > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn conv_init_uses_kernel_fan_in() {
+        // fan_in = kh*kw*ci = 27 for the cnn's first conv; the He std is
+        // sqrt(2/27) ~ 0.27 — check the sample std lands near it.
+        let op = Conv2d { ci: 3, co: 16, h: 8, w: 8, kh: 3, kw: 3 };
+        let mut rng = Rng::new(3);
+        let p = op.init_params(Some(&mut rng));
+        assert_eq!(p[0].len(), 3 * 3 * 3 * 16);
+        assert!(p[1].iter().all(|&v| v == 0.0));
+        let n = p[0].len() as f64;
+        let var: f64 = p[0].iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / n;
+        assert!((var - 2.0 / 27.0).abs() < 0.02, "var {var}");
+    }
+}

@@ -19,15 +19,20 @@ fn mlp_cfg() -> SimConfig {
 }
 
 #[test]
-fn make_backend_falls_back_to_native_without_artifacts() {
-    // No artifacts/ directory exists in a fresh checkout: the mlp preset
-    // must still produce a working backend.
-    let b = make_backend(std::path::Path::new("artifacts"), "mlp").unwrap();
-    assert_eq!(b.meta().preset, "mlp");
-    assert!(b.init_params().is_ok());
-    // cnn has no native implementation.
-    #[cfg(not(feature = "pjrt"))]
-    assert!(make_backend(std::path::Path::new("artifacts"), "cnn").is_err());
+fn make_backend_serves_both_presets_natively_without_artifacts() {
+    // No artifacts/ directory exists in a fresh checkout: both executable
+    // presets must still produce working backends from the layer-graph
+    // engine.
+    for preset in ["mlp", "cnn"] {
+        let b = make_backend(std::path::Path::new("artifacts"), preset).unwrap();
+        assert_eq!(b.meta().preset, preset);
+        assert!(b.init_params().is_ok());
+    }
+    // Only unknown presets error now.
+    let err = make_backend(std::path::Path::new("artifacts"), "resnet")
+        .err()
+        .expect("unknown presets must fail");
+    assert!(err.to_string().contains("unknown preset"), "{err}");
 }
 
 #[test]
@@ -151,6 +156,51 @@ fn grad_stats_reflect_non_iid_structure() {
         / exp.topo.gateways[0].members.len() as f64;
     let worst = stats.delta.iter().cloned().fold(0.0f64, f64::max);
     assert!(d0 < worst, "gw0 delta {d0} should be below the max {worst}");
+}
+
+/// The conv acceptance test: multi-round federated training of the
+/// VGG-mini `cnn` preset through the native layer-graph engine — no
+/// artifacts, no pjrt. The training loss must decrease from ln 10 (the
+/// zero-head init) and evaluation must handle a test set that is NOT a
+/// multiple of the eval batch (a trailing partial batch).
+#[test]
+fn cnn_native_training_loss_decreases_from_ln10() {
+    let mut cfg = SimConfig::default();
+    cfg.exec_model = "cnn".into();
+    cfg.cost_model = "cnn".into(); // the scheduler plans the net it trains
+    cfg.num_gateways = 1;
+    cfg.num_devices = 1;
+    cfg.num_channels = 1;
+    cfg.local_iters = 3;
+    cfg.lr = 0.1; // head-driven early descent is fast and low-noise
+    cfg.dataset_max = 400;
+    cfg.test_size = 128; // < eval_batch 256: exercises the partial path
+    cfg.rounds = 2;
+    // Generous energy budgets: the baseline's fixed plan must stay
+    // feasible every round, so both rounds really train.
+    cfg.device_energy_max = 500.0;
+    cfg.gw_energy_max = 5000.0;
+    let exp = Experiment::new(cfg).unwrap();
+    let mut sched = exp.make_scheduler("round_robin").unwrap();
+    let opts = RunOpts { rounds: 2, eval_every: 2, track_divergence: false, train: true };
+    let log = exp.run(sched.as_mut(), &opts).unwrap();
+    assert_eq!(log.records.len(), 2);
+    assert!(
+        log.records.iter().all(|r| !r.failed[0]),
+        "fixed plan should stay feasible with generous energy budgets"
+    );
+
+    // Round 0's mean local loss starts at the exact zero-head ln 10.
+    let first = log.records[0].train_loss.unwrap();
+    let last = log.records[1].train_loss.unwrap();
+    let ln10 = 10f64.ln();
+    assert!(first <= ln10 + 1e-3, "first-round loss {first} must start at ln 10");
+    assert!(last < first - 0.01, "cnn loss must decrease: {first} -> {last}");
+
+    // Eval ran on the 128-sample (partial-batch) test set.
+    let acc = log.records[1].test_acc.unwrap();
+    assert!((0.0..=1.0).contains(&acc));
+    assert!(log.records[1].test_loss.unwrap().is_finite());
 }
 
 /// The acceptance-criteria test: genuine multi-round federated training

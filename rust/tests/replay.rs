@@ -71,6 +71,37 @@ fn different_seed_different_bytes() {
     assert_ne!(run(1), run(2), "seed must influence the trajectory");
 }
 
+/// The rayon-parallel batch forward/backward of the layer-graph engine
+/// must not perturb results either: two cnn (VGG-mini) runs from the same
+/// seed are byte-identical, conv path and partial-batch eval included.
+#[test]
+fn cnn_native_runs_replay_byte_identically() {
+    let mut c = SimConfig::default();
+    c.exec_model = "cnn".into();
+    c.cost_model = "cnn".into();
+    c.num_gateways = 1;
+    c.num_devices = 1;
+    c.num_channels = 1;
+    c.local_iters = 2;
+    c.dataset_max = 400;
+    c.test_size = 128; // trailing partial eval batch
+    c.rounds = 2;
+    // Keep the baseline plan feasible so real conv training (the rayon
+    // fwd/bwd path) is what gets replayed, not just scheduling.
+    c.device_energy_max = 500.0;
+    c.gw_energy_max = 5000.0;
+    let opts = RunOpts { rounds: 2, eval_every: 2, track_divergence: false, train: true };
+    let mut logs = Vec::new();
+    for _ in 0..2 {
+        let exp = Experiment::new(c.clone()).unwrap();
+        let mut sched = exp.make_scheduler("round_robin").unwrap();
+        let log = exp.run(sched.as_mut(), &opts).unwrap();
+        assert!(log.records.iter().any(|r| r.train_loss.is_some()), "cnn must train");
+        logs.push(serialize(&log));
+    }
+    assert_eq!(logs[0], logs[1], "cnn replay with identical SimConfig diverged");
+}
+
 #[test]
 fn parallel_ddsra_replays_serial_run_exactly() {
     let opts = RunOpts { rounds: 3, eval_every: 3, track_divergence: false, train: true };
