@@ -1,4 +1,5 @@
-//! Partition-point explorer: Table II applied to the paper-scale VGG-11.
+//! Partition-point explorer: Table II applied to the paper-scale VGG-11,
+//! cross-checked against the split-execution runtime.
 //!
 //! For a representative device/gateway pair, sweeps the DNN partition point
 //! l ∈ 0..=L and prints the per-layer cost model outputs the DDSRA
@@ -6,7 +7,14 @@
 //! memory footprints (Eq. 1–5). Shows why the optimum moves with the
 //! device's CPU frequency and harvested energy.
 //!
-//! Run: `cargo run --release --example partition_explorer [--cost-model vgg11]`
+//! The `act@cut` column is MEASURED, not modeled: each cut point is
+//! compiled into the real split-execution runtime
+//! (`runtime::PartitionedBackend`) and the column reports the size of the
+//! smashed-activation tensor the device half actually emits for one
+//! training batch — the communication payload the paper's uplink terms
+//! assume. (The cut gradient flowing back is the same size.)
+//!
+//! Run: `cargo run --release --example partition_explorer -- [--cost-model vgg11]`
 
 use iiot_fl::cli::Args;
 use iiot_fl::config::SimConfig;
@@ -14,6 +22,7 @@ use iiot_fl::dnn::models;
 use iiot_fl::energy;
 use iiot_fl::metrics::print_table;
 use iiot_fl::rng::Rng;
+use iiot_fl::runtime::PartitionedBackend;
 use iiot_fl::topo::Topology;
 
 fn main() -> anyhow::Result<()> {
@@ -53,6 +62,15 @@ fn main() -> anyhow::Result<()> {
         let e_gw = energy::gateway_train_energy(gw, dev, &model, l, k, f_share);
         let m_dev = model.bottom_mem(l, dev.train_batch as u64);
         let m_gw = model.top_mem(l, dev.train_batch as u64);
+        // Measured at the executable cut: bytes of the per-batch smashed
+        // activation the compiled device half really produces.
+        let act_mb = match PartitionedBackend::from_spec(&model, l, 0) {
+            Ok(split) => {
+                let bytes = split.cut_activation_elems() * 4 * dev.train_batch;
+                format!("{:.2}", bytes as f64 / 1e6)
+            }
+            Err(_) => "n/a".into(), // spec not natively executable
+        };
         let total = t_dev + t_gw;
         let dev_ok = m_dev <= dev.mem && e_dev <= dev.energy_max;
         if dev_ok && total < best.1 {
@@ -67,12 +85,24 @@ fn main() -> anyhow::Result<()> {
             format!("{e_gw:.2}"),
             format!("{:.0}", m_dev / 1e6),
             format!("{:.0}", m_gw / 1e6),
+            act_mb,
             if dev_ok { "yes".into() } else { "NO".into() },
         ]);
     }
     print_table(
         &format!("partition sweep (K = {k} local iterations)"),
-        &["l", "t_dev(s)", "t_gw(s)", "total(s)", "e_dev(J)", "e_gw(J)", "memD(MB)", "memG(MB)", "dev-feasible"],
+        &[
+            "l",
+            "t_dev(s)",
+            "t_gw(s)",
+            "total(s)",
+            "e_dev(J)",
+            "e_gw(J)",
+            "memD(MB)",
+            "memG(MB)",
+            "act@cut(MB)",
+            "dev-feasible",
+        ],
         &rows,
     );
     println!(

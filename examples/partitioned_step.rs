@@ -1,91 +1,81 @@
-//! End-to-end validation of the paper's DNN-partition mechanism (§II-B3):
+//! End-to-end validation of the paper's DNN-partition mechanism (§II-B):
 //! the composed device/gateway step
 //!
-//!   bottom_fwd (device) → top_step (gateway) → bottom_bwd (device)
+//!   device fwd → smashed activation ⇡ → gateway fwd+loss+bwd
+//!             → cut gradient ⇣ → device bwd
 //!
-//! executed through three separate AOT artifacts must produce the SAME
-//! updated parameters and loss as the fused train-step artifact. This is
-//! the contract that lets the orchestrator run the fused step while the
-//! cost model simulates the split placement (DESIGN.md
-//! §Scheduling-vs-numerics contract).
+//! executed through the REAL split-execution runtime
+//! (`runtime::PartitionedBackend`) must produce byte-identical updated
+//! parameters, losses, eval metrics and gradients to the fused
+//! layer-graph engine — at EVERY legal cut point of the chosen preset.
+//! Exits non-zero on any mismatch, so it doubles as a smoke check in
+//! scripts.
 //!
-//! Run: `make artifacts && cargo run --release --example partitioned_step`
+//! Run: `cargo run --release --example partitioned_step -- [--preset cnn]`
+//!      (default preset: mlp; no artifacts, no `pjrt` feature needed)
 
-use std::path::Path;
-
-use anyhow::Result;
+use anyhow::{ensure, Result};
+use iiot_fl::cli::Args;
+use iiot_fl::dnn::models;
 use iiot_fl::rng::Rng;
-use iiot_fl::runtime::engine::{lit_f32, lit_i32, run_tuple};
-use iiot_fl::runtime::{Backend, Engine};
-
-// Mirrors python/compile/model.py CNN_BOTTOM_PARAMS / CNN_CUT_ACT_SHAPE.
-const BOTTOM_PARAMS: usize = 4;
-const ACT_SHAPE: [usize; 4] = [64, 8, 8, 32];
+use iiot_fl::runtime::{Backend, NativeBackend, PartitionedBackend};
 
 fn main() -> Result<()> {
-    let engine = Engine::load(Path::new("artifacts"), "cnn")?;
-    let bottom_fwd = engine.compile_extra("cnn_bottom_fwd")?;
-    let top_step = engine.compile_extra("cnn_top_step")?;
-    let bottom_bwd = engine.compile_extra("cnn_bottom_bwd")?;
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv)?;
+    let preset = args.get_or("preset", "mlp");
+    let fused: NativeBackend = match preset {
+        "mlp" => NativeBackend::mlp(),
+        "cnn" => NativeBackend::cnn(),
+        other => anyhow::bail!("unknown executable preset {other:?} (mlp|cnn)"),
+    };
+    let depth = models::by_name(preset).expect("executable presets are in the zoo").depth();
+    let meta = fused.meta().clone();
 
-    // Random batch.
-    let meta = &engine.meta;
+    // One deterministic batch + the fused reference step.
     let mut rng = Rng::new(7);
     let xs: Vec<f32> = (0..meta.train_batch * meta.sample_dim())
         .map(|_| rng.normal() as f32)
         .collect();
     let ys: Vec<i32> = (0..meta.train_batch).map(|_| rng.below(10) as i32).collect();
     let lr = 0.01f32;
+    let params = fused.init_params()?;
+    let (fused_next, fused_loss) = fused.train_step(&params, &xs, &ys, lr)?;
 
-    let params = engine.init_params()?;
-    let (fused, fused_loss) = engine.train_step(&params, &xs, &ys, lr)?;
+    println!("preset {preset}: L = {depth} layers, {} params", meta.param_total);
+    println!("fused loss = {fused_loss:.6}\n");
+    println!("{:>4} {:>12} {:>14} {:>10}", "cut", "act@cut", "split loss", "match");
 
-    // --- partitioned execution --------------------------------------
-    let lit_params = |range: std::ops::Range<usize>| -> Result<Vec<xla::Literal>> {
-        range
-            .map(|i| lit_f32(&params[i], &meta.param_shapes[i]))
-            .collect()
-    };
-    // Device: bottom forward.
-    let mut args = lit_params(0..BOTTOM_PARAMS)?;
-    args.push(lit_f32(&xs, &meta.input_train)?);
-    let act = run_tuple(&bottom_fwd, &args)?.remove(0);
-
-    // Gateway: top training step, returns (top'..., d_act, loss).
-    let mut args = lit_params(BOTTOM_PARAMS..params.len())?;
-    args.push(act);
-    args.push(lit_i32(&ys, meta.train_batch)?);
-    args.push(xla::Literal::scalar(lr));
-    let mut top_out = run_tuple(&top_step, &args)?;
-    let loss_lit = top_out.pop().unwrap();
-    let d_act = top_out.pop().unwrap();
-    let part_loss = loss_lit.get_first_element::<f32>()?;
-    let new_top: Vec<Vec<f32>> =
-        top_out.iter().map(|l| l.to_vec::<f32>()).collect::<xla::Result<_>>()?;
-
-    // Device: bottom backward with the gateway's error term.
-    let mut args = lit_params(0..BOTTOM_PARAMS)?;
-    args.push(lit_f32(&xs, &meta.input_train)?);
-    args.push(d_act);
-    args.push(xla::Literal::scalar(lr));
-    let bottom_out = run_tuple(&bottom_bwd, &args)?;
-    let new_bottom: Vec<Vec<f32>> =
-        bottom_out.iter().map(|l| l.to_vec::<f32>()).collect::<xla::Result<_>>()?;
-
-    // --- compare ------------------------------------------------------
-    let partitioned: Vec<Vec<f32>> = new_bottom.into_iter().chain(new_top).collect();
-    let mut max_diff = 0.0f32;
-    for (a, b) in partitioned.iter().zip(&fused) {
-        for (&x, &y) in a.iter().zip(b) {
-            max_diff = max_diff.max((x - y).abs());
+    for cut in 0..=depth {
+        let split = PartitionedBackend::preset(preset, cut)?;
+        ensure!(
+            split.init_params()? == params,
+            "cut {cut}: split init diverged from fused init"
+        );
+        let (split_next, split_loss) = split.train_step(&params, &xs, &ys, lr)?;
+        ensure!(
+            split_loss.to_bits() == fused_loss.to_bits(),
+            "cut {cut}: loss {split_loss} != fused {fused_loss}"
+        );
+        for (t, (a, b)) in split_next.iter().zip(&fused_next).enumerate() {
+            for (i, (va, vb)) in a.iter().zip(b).enumerate() {
+                ensure!(
+                    va.to_bits() == vb.to_bits(),
+                    "cut {cut}: param tensor {t} idx {i}: {va} != {vb}"
+                );
+            }
         }
+        println!(
+            "{:>4} {:>9} KiB {:>14.6} {:>10}",
+            cut,
+            split.cut_activation_elems() * 4 * meta.train_batch / 1024,
+            split_loss,
+            "bit-exact"
+        );
     }
-    println!("activation shape at cut: {ACT_SHAPE:?}");
-    println!("fused loss       = {fused_loss:.6}");
-    println!("partitioned loss = {part_loss:.6}");
-    println!("max |param diff| = {max_diff:.3e}");
-    anyhow::ensure!((fused_loss - part_loss).abs() < 1e-5, "loss mismatch");
-    anyhow::ensure!(max_diff < 1e-5, "parameter mismatch {max_diff}");
-    println!("OK: device/gateway partitioned step == fused step");
+    println!(
+        "\nOK: device/gateway split step == fused step at every cut of {preset} \
+         (params, loss byte-identical)"
+    );
     Ok(())
 }

@@ -1,14 +1,17 @@
 //! Native layer-graph engine throughput (custom harness — criterion is
 //! unavailable offline): `train_step` / `eval_batch` / `grad` for the mlp
-//! and cnn presets, seeding the perf trajectory of the rayon fwd/bwd path.
-//! Thresholds are NOT asserted (bench, not test).
+//! and cnn presets, seeding the perf trajectory of the rayon fwd/bwd path,
+//! PLUS fused-vs-split step time across every cut point of each preset —
+//! the split-execution exchange overhead (double arena walk + cut-tensor
+//! copies) made visible. Thresholds are NOT asserted (bench, not test).
 //!
 //! Run: `cargo bench --bench runtime`
 
 use std::time::Instant;
 
+use iiot_fl::dnn::models;
 use iiot_fl::rng::Rng;
-use iiot_fl::runtime::{Backend, NativeBackend};
+use iiot_fl::runtime::{Backend, NativeBackend, PartitionedBackend};
 
 fn batch(rng: &mut Rng, n: usize, dim: usize) -> (Vec<f32>, Vec<i32>) {
     let x: Vec<f32> = (0..n * dim).map(|_| rng.normal() as f32 * 0.5).collect();
@@ -65,5 +68,31 @@ fn main() {
         bench(&format!("{name} eval_batch (fwd)"), iters * 2, meta.eval_batch, || {
             be.eval_batch(&params, &xe, &ye).unwrap();
         });
+    }
+
+    println!("\n== fused vs split train_step across cut points ==");
+    for (name, be, iters) in &presets {
+        let iters = *iters;
+        let meta = be.meta().clone();
+        let depth = models::by_name(name).unwrap().depth();
+        let mut rng = Rng::new(0x5b117);
+        let params = be.init_params().unwrap();
+        let (xt, yt) = batch(&mut rng, meta.train_batch, meta.sample_dim());
+        println!("\n-- {name}: L = {depth} layers --");
+        bench(&format!("{name} fused train_step"), iters, meta.train_batch, || {
+            be.train_step(&params, &xt, &yt, 0.01).unwrap();
+        });
+        for cut in 0..=depth {
+            let split = PartitionedBackend::preset(name, cut).unwrap();
+            let kib = split.cut_activation_elems() * 4 * meta.train_batch / 1024;
+            bench(
+                &format!("{name} split train_step l={cut} (act {kib} KiB)"),
+                iters,
+                meta.train_batch,
+                || {
+                    split.train_step(&params, &xt, &yt, 0.01).unwrap();
+                },
+            );
+        }
     }
 }

@@ -96,6 +96,9 @@ impl Args {
         if let Some(c) = self.get("cost-model") {
             cfg.cost_model = c.to_string();
         }
+        if self.has("execute-partition") {
+            cfg.execute_partition = true;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -133,6 +136,24 @@ mod tests {
         let cfg = a.sim_config().unwrap();
         assert_eq!(cfg.lyapunov_v, 1000.0);
         assert_eq!(cfg.dataset, "cifar");
+    }
+
+    #[test]
+    fn execute_partition_flag_flips_the_config() {
+        let a = Args::parse(&sv(&[
+            "train",
+            "--execute-partition",
+            "--preset",
+            "mlp",
+            "--cost-model",
+            "mlp",
+        ]))
+        .unwrap();
+        let cfg = a.sim_config().unwrap();
+        assert!(cfg.execute_partition);
+        // Mismatched cost/exec models are rejected at validation.
+        let bad = Args::parse(&sv(&["train", "--execute-partition"])).unwrap();
+        assert!(bad.sim_config().is_err());
     }
 
     #[test]

@@ -70,6 +70,16 @@ pub struct SimConfig {
     /// Executable preset the runtime trains ("mlp" or "cnn"); both run
     /// natively on the layer-graph engine, no artifacts required.
     pub exec_model: String,
+    /// Execute training SPLIT at the DNN partition point each scheduler
+    /// plan selects (§II-B): device half / gateway half with an
+    /// activation-forward, gradient-backward exchange at the cut. Requires
+    /// `cost_model == exec_model` so the planned cut indexes the executed
+    /// network. Off = the fused engine runs and the partition is
+    /// cost-model-only (the pre-split behaviour). On the native engine
+    /// (the default build) the two modes are byte-identical; a pjrt build
+    /// with compiled artifacts refuses the flag rather than mix PJRT
+    /// eval/init with native split training.
+    pub execute_partition: bool,
     /// Synthetic dataset flavour: "svhn" (easier) or "cifar" (harder).
     pub dataset: String,
     /// Non-IID degree chi (proportion of q_m-class-restricted samples).
@@ -119,6 +129,7 @@ impl Default for SimConfig {
             lyapunov_v: 0.01,
             cost_model: "vgg11".into(),
             exec_model: "mlp".into(),
+            execute_partition: false,
             dataset: "svhn".into(),
             non_iid_degree: 1.0,
             test_size: 2048,
@@ -221,6 +232,15 @@ impl SimConfig {
             "lyapunov_v" => self.lyapunov_v = num!(),
             "cost_model" => self.cost_model = val.into(),
             "exec_model" => self.exec_model = val.into(),
+            // The first boolean key: accept both bool literals and the
+            // 0/1 style every numeric neighbor uses.
+            "execute_partition" => {
+                self.execute_partition = match val {
+                    "true" | "1" => true,
+                    "false" | "0" => false,
+                    other => bail!("expected true/false/1/0, got {other:?}"),
+                }
+            }
             "dataset" => self.dataset = val.into(),
             "non_iid_degree" => self.non_iid_degree = num!(),
             "test_size" => self.test_size = num!(),
@@ -261,6 +281,15 @@ impl SimConfig {
             bail!(
                 "cost_model {:?} is not in the model zoo (\"vgg11\", \"cnn\", \"mlp\")",
                 self.cost_model
+            );
+        }
+        if self.execute_partition && self.cost_model != self.exec_model {
+            bail!(
+                "execute_partition requires cost_model == exec_model (got {:?} vs {:?}): \
+                 the partition point the scheduler picks must index the network that \
+                 actually executes",
+                self.cost_model,
+                self.exec_model
             );
         }
         Ok(())
@@ -322,6 +351,27 @@ mod tests {
         let mut c2 = SimConfig::default();
         c2.cost_model = "resnet".into();
         assert!(c2.validate().is_err());
+    }
+
+    #[test]
+    fn execute_partition_requires_matching_models() {
+        let mut c = SimConfig::default();
+        c.execute_partition = true; // cost vgg11 vs exec mlp
+        assert!(c.validate().is_err());
+        c.cost_model = "mlp".into();
+        c.validate().unwrap();
+        let cfg = SimConfig::from_str_cfg(
+            "execute_partition = true\ncost_model = \"cnn\"\nexec_model = \"cnn\"\n",
+        )
+        .unwrap();
+        assert!(cfg.execute_partition);
+        cfg.validate().unwrap();
+        // The 0/1 style of every other config key works too.
+        let c1 = SimConfig::from_str_cfg("execute_partition = 1\n").unwrap();
+        assert!(c1.execute_partition);
+        let c0 = SimConfig::from_str_cfg("execute_partition = 0\n").unwrap();
+        assert!(!c0.execute_partition);
+        assert!(SimConfig::from_str_cfg("execute_partition = maybe\n").is_err());
     }
 
     #[test]

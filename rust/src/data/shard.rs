@@ -3,8 +3,8 @@
 //! (chi = 1 means fully q_m-class non-IID; chi < 1 mixes in IID samples).
 //!
 //! q_m is randomly generated per gateway, except gateway 0 which gets the
-//! full class set — reproducing the paper's setup where "each device
-//! associated with the 1-th gateway [has] a local dataset with a wider
+//! full class set — reproducing the paper's setup where each device
+//! associated with the 1-th gateway has "a local dataset with a wider
 //! variety of the q_m-class non-IID data points" (Fig. 2 discussion).
 
 use crate::config::SimConfig;

@@ -66,7 +66,7 @@ impl SynthData {
     }
 
     /// Generate `n` samples of the given classes (cycled), returning
-    /// (images [n*IMG_DIM], labels [n]).
+    /// (images `[n*IMG_DIM]`, labels `[n]`).
     pub fn generate(
         &self,
         classes: &[usize],

@@ -89,7 +89,7 @@ impl ModelSpec {
     }
 
     /// Per-sample input tensor shape when this model is executed
-    /// ([H, W, C] channels-last for conv-front models, [S_i] for flat
+    /// (`[H, W, C]` channels-last for conv-front models, `[S_i]` for flat
     /// ones) — what the native layer-graph engine and the artifact ABI
     /// both consume.
     pub fn exec_input_shape(&self) -> Vec<usize> {

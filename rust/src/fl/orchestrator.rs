@@ -9,9 +9,16 @@
 //!   4. every scheduled device runs K local SGD iterations through the
 //!      execution backend — the pure-Rust layer-graph `NativeBackend` by
 //!      default (`mlp` and `cnn` presets), the AOT train-step artifact
-//!      under the `pjrt` feature (device/gateway placement is simulated by
-//!      the cost model; the partitioned arithmetic is proven identical by
-//!      examples/partitioned_step);
+//!      under the `pjrt` feature. With `execute_partition` set, each
+//!      device's step instead runs through the split-execution
+//!      `PartitionedBackend` at EXACTLY the partition point l_n the
+//!      scheduler chose for it this round (`GatewayPlan::partition`):
+//!      device half forward → smashed-activation upload → gateway half
+//!      forward/backward → cut-gradient download → device half backward.
+//!      Split and fused execution are byte-identical at every cut point
+//!      (pinned by rust/tests/partition.rs and examples/partitioned_step),
+//!      so turning the flag on changes WHERE the layers run, never the
+//!      numbers;
 //!   5. shop-floor FedAvg then global FedAvg (both weight by D̃_n);
 //!   6. periodic evaluation on the IID test set.
 //!
@@ -32,7 +39,7 @@ use crate::fl::participation::GradStats;
 use crate::fl::vecmath;
 use crate::net::ChannelModel;
 use crate::rng::Rng;
-use crate::runtime::{make_backend, Backend, Params};
+use crate::runtime::{make_backend, make_partitioned_stack, Backend, Params, PartitionedBackend};
 use crate::sched::latency::plan_cost;
 use crate::sched::{RoundCtx, RoundFeedback, Scheduler};
 use crate::topo::Topology;
@@ -122,6 +129,11 @@ pub struct Experiment {
     pub test_x: Vec<f32>,
     pub test_y: Vec<i32>,
     pub engine: Box<dyn Backend>,
+    /// Split-execution backends indexed by partition point `l ∈ 0..=L`
+    /// (built only when `cfg.execute_partition`; empty otherwise). The
+    /// round loop dispatches device n's local step to
+    /// `partitioned[plan.partition[n]]`.
+    pub partitioned: Vec<PartitionedBackend>,
 }
 
 impl Experiment {
@@ -154,7 +166,33 @@ impl Experiment {
                 engine.meta().sample_dim()
             );
         }
-        Ok(Experiment { cfg, topo, cost_model, chan, shards, test_x, test_y, engine })
+        // Split-execution stack: one PartitionedBackend per legal cut of
+        // the executed model. cfg.validate() already pinned
+        // cost_model == exec_model, so the scheduler's partition indices
+        // map 1:1 onto this stack.
+        //
+        // The stack is NATIVE numerics. When the pjrt feature would select
+        // the PJRT engine for eval/init (artifacts present — mirroring
+        // make_backend's choice), refuse to mix the two engines: PJRT and
+        // native agree only approximately, which would silently break the
+        // split-vs-fused byte-parity story.
+        #[cfg(feature = "pjrt")]
+        if cfg.execute_partition
+            && artifacts.join(format!("{}.meta", cfg.exec_model)).exists()
+        {
+            anyhow::bail!(
+                "execute_partition runs the native split stack, but compiled PJRT \
+                 artifacts for {:?} would drive init/eval: remove the artifacts (or \
+                 build without --features pjrt) so one engine owns the numerics",
+                cfg.exec_model
+            );
+        }
+        let partitioned = if cfg.execute_partition {
+            make_partitioned_stack(&cfg.exec_model)?
+        } else {
+            Vec::new()
+        };
+        Ok(Experiment { cfg, topo, cost_model, chan, shards, test_x, test_y, engine, partitioned })
     }
 
     /// Construct a scheduler by scheme name. DDSRA variants estimate the
@@ -207,13 +245,37 @@ impl Experiment {
     /// K local SGD iterations for device n from `start`; returns the
     /// updated params and the mean local loss.
     ///
-    /// Uses the fused K-step artifact when its baked K matches the config
-    /// (§Perf: one PJRT call + one parameter round-trip instead of K);
-    /// falls back to K single-step calls otherwise.
-    fn local_train(&self, n: usize, start: &Params, rng: &mut Rng) -> Result<(Params, f64)> {
+    /// `cut` is the DNN partition point the scheduler chose for this
+    /// device this round: with `execute_partition` on, the K steps run
+    /// through the split device/gateway backend at that cut (the paper's
+    /// §II-B training flow); otherwise — and for cut-less callers like the
+    /// divergence probe — the fused engine runs.
+    ///
+    /// The fused engine may batch the K steps into one call when its baked
+    /// fused-K matches the config (§Perf: one PJRT call + one parameter
+    /// round-trip instead of K); split backends always run K single steps.
+    fn local_train(
+        &self,
+        n: usize,
+        cut: Option<usize>,
+        start: &Params,
+        rng: &mut Rng,
+    ) -> Result<(Params, f64)> {
         let k = self.cfg.local_iters;
-        if self.engine.fused_k() == Some(k) {
-            let b = self.engine.meta().train_batch;
+        let backend: &dyn Backend = match cut {
+            Some(l) if !self.partitioned.is_empty() => {
+                let stack = &self.partitioned;
+                stack.get(l).map(|b| b as &dyn Backend).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "partition point {l} outside the executable model's 0..={}",
+                        stack.len() - 1
+                    )
+                })?
+            }
+            _ => self.engine.as_ref(),
+        };
+        if backend.fused_k() == Some(k) {
+            let b = backend.meta().train_batch;
             let mut xs = Vec::with_capacity(k * b * IMG_DIM);
             let mut ys = Vec::with_capacity(k * b);
             for _ in 0..k {
@@ -221,14 +283,14 @@ impl Experiment {
                 xs.extend(x);
                 ys.extend(y);
             }
-            let (w, loss) = self.engine.train_k_steps(start, &xs, &ys, self.cfg.lr as f32)?;
+            let (w, loss) = backend.train_k_steps(start, &xs, &ys, self.cfg.lr as f32)?;
             return Ok((w, loss as f64));
         }
         let mut w = start.clone();
         let mut loss_sum = 0.0;
         for _ in 0..k {
             let (x, y) = self.sample_batch(n, rng);
-            let (nw, loss) = self.engine.train_step(&w, &x, &y, self.cfg.lr as f32)?;
+            let (nw, loss) = backend.train_step(&w, &x, &y, self.cfg.lr as f32)?;
             w = nw;
             loss_sum += loss as f64;
         }
@@ -355,8 +417,19 @@ impl Experiment {
                 if opts.train {
                     let mut floor_loss = 0.0;
                     let members = &self.topo.gateways[m].members;
-                    for &n in members {
-                        let (w, loss) = self.local_train(n, &params, &mut sample_rng)?;
+                    for (i, &n) in members.iter().enumerate() {
+                        // The scheduler's chosen partition point for this
+                        // device — executed for real in split mode, where a
+                        // malformed plan (entry missing) must fail as loudly
+                        // as an out-of-range cut, not silently run fused.
+                        let cut = plan.partition.get(i).copied();
+                        if self.cfg.execute_partition && cut.is_none() {
+                            anyhow::bail!(
+                                "gateway {m}'s plan lacks a partition entry for \
+                                 member {i} (device {n}) in execute-partition mode"
+                            );
+                        }
+                        let (w, loss) = self.local_train(n, cut, &params, &mut sample_rng)?;
                         let weight = self.topo.devices[n].train_batch as f64;
                         updates.push((w, weight));
                         floor_loss += loss;
@@ -431,7 +504,9 @@ impl Experiment {
         let mut local: Vec<Params> = Vec::with_capacity(n_dev);
         let mut losses: Vec<f64> = Vec::with_capacity(n_dev);
         for n in 0..n_dev {
-            let (w, loss) = self.local_train(n, params, rng)?;
+            // The divergence probe has no scheduler plan (every device
+            // trains); it always measures through the fused engine.
+            let (w, loss) = self.local_train(n, None, params, rng)?;
             local.push(w);
             losses.push(loss);
         }

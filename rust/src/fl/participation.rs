@@ -13,18 +13,23 @@
 use crate::topo::Topology;
 
 /// Per-device gradient statistics estimated from the running model
-/// (Assumptions 1–2 made measurable).
+/// (Assumptions 1–2 made measurable; see
+/// `fl::Experiment::estimate_grad_stats` for the probing estimators).
 #[derive(Clone, Debug)]
 pub struct GradStats {
-    /// σ_n: per-sample gradient variance bound.
+    /// σ_n: per-sample gradient variance bound (§IV Assumption 1,
+    /// E‖∇F̃_n − ∇F_n‖ ≤ σ_n/√D̃_n).
     pub sigma: Vec<f64>,
-    /// δ_n: local-vs-global gradient divergence.
+    /// δ_n: local-vs-global gradient divergence (§IV Assumption 2,
+    /// ‖∇F_n − ∇F‖ ≤ δ_n).
     pub delta: Vec<f64>,
-    /// L_n: smoothness estimate.
+    /// L_n: smoothness (Lipschitz-gradient) estimate of F_n (§IV).
     pub lsmooth: Vec<f64>,
 }
 
-/// Φ_m (Eq. 12) for gateway m.
+/// Φ_m — the Theorem 1 divergence bound between shop floor m's aggregated
+/// model and the centralized-GD trajectory after K local iterations
+/// (Eq. 12) — for gateway m.
 pub fn phi_m(
     topo: &Topology,
     m: usize,
@@ -51,7 +56,19 @@ pub fn phi_m(
         .sum()
 }
 
-/// Γ_m for every gateway (Eq. 13) from divergence bounds `phis`.
+/// Γ_m for every gateway from divergence bounds `phis` — Eq. 13:
+/// Γ_m = min(J · (1/Φ_m) / Σ_m'(1/Φ_m'), 1). Small Φ (representative
+/// data) ⇒ large Γ (participate often); DDSRA's virtual queues (Eq. 14)
+/// then enforce these rates in time average (C11).
+///
+/// ```
+/// use iiot_fl::fl::participation::gamma_from_phi;
+/// // The gateway with the smallest divergence bound gets the highest
+/// // participation rate, and every rate is capped at 1.
+/// let g = gamma_from_phi(&[0.5, 1.0, 2.0], 2);
+/// assert!(g[0] > g[1] && g[1] > g[2]);
+/// assert!(g.iter().all(|&x| (0.0..=1.0).contains(&x)));
+/// ```
 pub fn gamma_from_phi(phis: &[f64], num_channels: usize) -> Vec<f64> {
     let inv: Vec<f64> = phis.iter().map(|&p| 1.0 / p.max(1e-30)).collect();
     let total: f64 = inv.iter().sum();

@@ -17,7 +17,11 @@
 //!   compiled from the scheduler's own [`dnn::ModelSpec`] descriptions —
 //!   the `mlp` AND `cnn` (VGG-mini) presets build, train and are tested
 //!   with **zero native dependencies**;
-//! - feature `pjrt`: [`runtime::Engine`] executes the AOT-compiled
+//! - split execution: [`runtime::PartitionedBackend`] runs the same
+//!   presets cut into a device half and a gateway half at the partition
+//!   point the DDSRA scheduler selects (byte-identical to fused
+//!   execution) — enable with `--execute-partition`;
+//! - feature `pjrt`: `runtime::Engine` executes the AOT-compiled
 //!   JAX/Pallas HLO artifacts on the PJRT CPU client (requires the `xla`
 //!   crate to be supplied — see Cargo.toml — plus `make artifacts`).
 //!

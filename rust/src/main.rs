@@ -47,7 +47,10 @@ fn print_help() {
          \u{20}                --set key=value (any config key) --config file\n\
          train flags:  --scheme ddsra|participation|random|round_robin|\n\
          \u{20}                loss_driven|delay_driven --out results/run.csv\n\
-         \u{20}                --eval-every N --no-train --divergence"
+         \u{20}                --eval-every N --no-train --divergence\n\
+         \u{20}                --execute-partition (run each device's local step\n\
+         \u{20}                SPLIT at the scheduler's chosen cut; needs\n\
+         \u{20}                --cost-model == --preset)"
     );
 }
 
@@ -63,12 +66,13 @@ fn cmd_train(args: &Args) -> Result<()> {
         train: !args.has("no-train"),
     };
     eprintln!(
-        "[train] scheme={} rounds={} dataset={} exec={} cost={}",
+        "[train] scheme={} rounds={} dataset={} exec={} cost={}{}",
         sched.name(),
         opts.rounds,
         exp.cfg.dataset,
         exp.cfg.exec_model,
-        exp.cfg.cost_model
+        exp.cfg.cost_model,
+        if exp.cfg.execute_partition { " split-execution=on" } else { "" }
     );
     let log = exp.run(sched.as_mut(), &opts)?;
     if let Some(path) = args.get("out") {

@@ -27,7 +27,7 @@ pub struct ChannelModel {
 /// One round's realisation: gains and interference for every (m, j).
 #[derive(Clone, Debug)]
 pub struct ChannelState {
-    /// up_gain[m][j] = h^u_{m,j}(t).
+    /// `up_gain[m][j]` = h^u_{m,j}(t).
     pub up_gain: Vec<Vec<f64>>,
     pub down_gain: Vec<Vec<f64>>,
     /// Interference POWER i^u_{m,j}(t), i^d_{m,j}(t) (W).

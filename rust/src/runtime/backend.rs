@@ -1,17 +1,30 @@
 //! The pluggable execution backend: everything the FL orchestrator needs
-//! from a training runtime, abstracted over *how* the numerics run.
+//! from a training runtime (the K local SGD iterations of §III-A step 2,
+//! the §IV gradient probes, and test-set evaluation), abstracted over
+//! *how* the numerics run.
 //!
-//! Two implementations:
+//! Three implementations:
 //! * [`crate::runtime::NativeBackend`] — the pure-Rust layer-graph engine
 //!   (rayon-parallel forward/backward + SGD) for the `mlp` and `cnn`
 //!   presets. Zero native dependencies; the default.
-//! * [`crate::runtime::Engine`] (feature `pjrt`) — the PJRT CPU client over
+//! * [`crate::runtime::PartitionedBackend`] — the same presets executed
+//!   SPLIT at a device/gateway partition point (the paper's §II-B training
+//!   flow), byte-identical to the fused engine at every cut.
+//! * `crate::runtime::Engine` (feature `pjrt`) — the PJRT CPU client over
 //!   the AOT HLO artifacts compiled by python/compile/aot.py.
 //!
 //! Parameters live in the coordinator as `Params = Vec<Vec<f32>>` (one flat
-//! buffer per tensor, in artifact ABI order) so that FedAvg, divergence
-//! norms and the centralized-GD shadow run are plain vector arithmetic
-//! regardless of backend.
+//! buffer per tensor, in artifact ABI order) so that FedAvg (§III-A step 3),
+//! divergence norms (Fig. 2) and the centralized-GD shadow run are plain
+//! vector arithmetic regardless of backend.
+//!
+//! ```
+//! use iiot_fl::runtime::{make_backend, Backend};
+//! let backend = make_backend(std::path::Path::new("artifacts"), "mlp").unwrap();
+//! assert_eq!(backend.meta().preset, "mlp");
+//! // Seeded deterministic init: same backend, same bytes.
+//! assert_eq!(backend.init_params().unwrap(), backend.init_params().unwrap());
+//! ```
 
 use std::path::Path;
 
@@ -19,7 +32,8 @@ use anyhow::Result;
 
 use super::meta::ModelMeta;
 
-/// Model parameters as flat per-tensor buffers (artifact ABI order).
+/// Model parameters as flat per-tensor buffers (artifact ABI order):
+/// the w-vectors the paper's aggregation steps (§III-A) average.
 pub type Params = Vec<Vec<f32>>;
 
 /// One model preset's training/evaluation runtime.
@@ -27,16 +41,20 @@ pub trait Backend {
     /// Shapes and sizes of the preset this backend executes.
     fn meta(&self) -> &ModelMeta;
 
-    /// K of the fused local-training entry point, if one is available.
+    /// K of the fused local-training entry point, if one is available
+    /// (the paper's K local iterations batched into one backend call).
     fn fused_k(&self) -> Option<usize> {
         None
     }
 
-    /// Seeded, deterministic parameter initialisation.
+    /// Seeded, deterministic parameter initialisation (the shared global
+    /// model w(0) every device starts from).
     fn init_params(&self) -> Result<Params>;
 
-    /// One SGD step: (params, x[train_batch·dim], y[train_batch], lr)
-    /// -> (params', mean batch loss).
+    /// One local SGD iteration of §III-A step 2, w ← w − β·∇F̃ on one
+    /// minibatch: (params, `x[train_batch·dim]`, `y[train_batch]`, lr = β)
+    /// -> (params', mean batch loss). The loss is evaluated at the
+    /// PRE-step parameters (like `jax.value_and_grad`).
     fn train_step(&self, params: &Params, x: &[f32], y: &[i32], lr: f32)
         -> Result<(Params, f32)>;
 
@@ -108,8 +126,9 @@ pub trait Backend {
         Ok((loss / n, correct / n))
     }
 
-    /// Flat minibatch gradient (sigma/delta probes for §IV), length
-    /// `meta().param_total`.
+    /// Flat minibatch gradient ∇F̃_n(w), length `meta().param_total` —
+    /// the estimator behind the §IV Assumption 1–2 probes (σ_n, δ_n) and
+    /// the L_n smoothness estimate that feed Theorem 1's Φ_m.
     fn grad(&self, params: &Params, x: &[f32], y: &[i32]) -> Result<Vec<f32>>;
 }
 

@@ -6,7 +6,7 @@
 //! form; the text parser reassigns ids (see DESIGN.md and aot.py).
 //!
 //! NOTE: the `xla` crate is not on crates.io; enabling this feature
-//! requires adding a vendored checkout of xla-rs under [dependencies]
+//! requires adding a vendored checkout of xla-rs under `[dependencies]`
 //! in Cargo.toml (e.g. `xla = { path = "../xla-rs" }`).
 
 use std::path::{Path, PathBuf};
@@ -60,8 +60,10 @@ impl Engine {
         })
     }
 
-    /// Compile an arbitrary extra artifact from the same directory (used by
-    /// the partitioned-step example).
+    /// Compile an arbitrary extra artifact from the same directory (e.g.
+    /// the cnn_bottom_fwd / cnn_top_step / cnn_bottom_bwd partition
+    /// artifacts; the native split runtime — `PartitionedBackend` — has
+    /// since superseded them as the proof of split/fused equivalence).
     pub fn compile_extra(&self, name: &str) -> Result<PjRtLoadedExecutable> {
         compile_artifact(&self.client, &self.dir.join(format!("{name}.hlo.txt")))
     }
@@ -104,7 +106,7 @@ impl Backend for Engine {
         self.unpack_params(&out)
     }
 
-    /// One SGD step: (params, x[train_batch], y, lr) -> (params', loss).
+    /// One SGD step: (params, `x[train_batch]`, y, lr) -> (params', loss).
     fn train_step(
         &self,
         params: &Params,

@@ -8,7 +8,11 @@
 //!   own `dnn::ModelSpec` descriptions, with rayon-parallel batches. Both
 //!   executable presets (`mlp`, `cnn`) train with no artifacts and no
 //!   native libraries.
-//! * Feature `pjrt`: [`Engine`] loads the AOT HLO-text artifacts produced
+//! * Split execution: [`PartitionedBackend`] (`native/partition`) runs the
+//!   same presets as a device/gateway pair cut at any spec-layer boundary
+//!   — the paper's DNN partition executed for real, byte-identical to the
+//!   fused engine at every cut point.
+//! * Feature `pjrt`: `Engine` loads the AOT HLO-text artifacts produced
 //!   by `make artifacts` and executes them on the PJRT CPU client (Python
 //!   is never on this path — artifacts compile once at `Engine::load`).
 //!
@@ -24,4 +28,4 @@ pub use backend::{make_backend, Backend, Params};
 #[cfg(feature = "pjrt")]
 pub use engine::Engine;
 pub use meta::ModelMeta;
-pub use native::{LayerGraph, NativeBackend};
+pub use native::{make_partitioned_stack, LayerGraph, NativeBackend, PartitionedBackend};

@@ -1,4 +1,5 @@
-//! `LayerGraph`: composes the op library into one executable network.
+//! `LayerGraph`: composes the op library into one executable network — or
+//! into one *half* of a partitioned network.
 //!
 //! The graph is compiled from the same `dnn::ModelSpec` the scheduler's
 //! cost model plans with — one source of truth for both the FLOPs/memory
@@ -7,6 +8,17 @@
 //! op's block inside the flat gradient vector, and the ABI parameter
 //! tensor order (weights-then-bias per parameterized op, ops in layer
 //! order — exactly the artifact family's ABI).
+//!
+//! [`LayerGraph::from_spec`] compiles the whole model with its
+//! softmax-cross-entropy loss head; [`LayerGraph::from_spec_range`]
+//! compiles any contiguous run of spec layers into a *segment* — a
+//! headless device subgraph (the paper's bottom `l` layers, §II-B) or a
+//! head-owning gateway subgraph (the top `L − l` layers). The
+//! `runtime::native::partition` module composes two such halves into the
+//! split-execution `PartitionedBackend`, exchanging the smashed activation
+//! forward and the cut gradient backward. Segment execution reuses the
+//! exact per-op call sequence of the fused pass, so split results are
+//! byte-identical to fused ones.
 //!
 //! The batch dimension of [`LayerGraph::fwd_bwd`] fans out over rayon;
 //! every reduction is order-preserving (the loss folds in sample order,
@@ -43,9 +55,64 @@ impl Shape {
             Shape::Flat(n) => n,
         }
     }
+
+    fn as_dims(self) -> Vec<usize> {
+        match self {
+            Shape::Spatial(h, w, c) => vec![h, w, c],
+            Shape::Flat(n) => vec![n],
+        }
+    }
 }
 
-/// An executable DNN: ops + offset bookkeeping + softmax-xent head.
+/// The per-sample input shape a layer declares.
+fn layer_input_shape(layer: &Layer) -> Shape {
+    match *layer {
+        Layer::Conv { ci, hi, wi, .. } | Layer::Pool { ci, hi, wi, .. } => {
+            Shape::Spatial(hi as usize, wi as usize, ci as usize)
+        }
+        Layer::Fc { si, .. } => Shape::Flat(si as usize),
+    }
+}
+
+/// Order-preserving batch reduction shared by the fused graph and the
+/// partitioned backend: the loss/correct fold walks samples in order, and
+/// each gradient coordinate sums its per-sample contributions in sample
+/// order (rayon fans out over `GRAD_CHUNK`-wide coordinate chunks), so the
+/// result is independent of the worker count.
+pub(crate) fn reduce_batch(
+    per_sample: Vec<(f64, bool, Option<Vec<f32>>)>,
+    param_total: usize,
+    want_grad: bool,
+) -> (f64, usize, Option<Vec<f32>>) {
+    let mut loss_sum = 0.0f64;
+    let mut correct = 0usize;
+    for r in &per_sample {
+        loss_sum += r.0;
+        correct += r.1 as usize;
+    }
+    let grad = if want_grad {
+        let gs: Vec<&Vec<f32>> = per_sample
+            .iter()
+            .map(|r| r.2.as_ref().expect("per-sample gradient present"))
+            .collect();
+        let mut g = vec![0.0f32; param_total];
+        g.par_chunks_mut(GRAD_CHUNK).enumerate().for_each(|(ci, chunk)| {
+            let base = ci * GRAD_CHUNK;
+            for gsample in &gs {
+                for (k, dst) in chunk.iter_mut().enumerate() {
+                    *dst += gsample[base + k];
+                }
+            }
+        });
+        Some(g)
+    } else {
+        None
+    };
+    (loss_sum, correct, grad)
+}
+
+/// An executable DNN (or DNN segment): ops + offset bookkeeping + an
+/// optional softmax-xent head.
 pub struct LayerGraph {
     ops: Vec<Box<dyn Op>>,
     /// (start, len) of each op's parameter block in the flat gradient.
@@ -60,35 +127,67 @@ pub struct LayerGraph {
     act_total: usize,
     /// Largest activation length (backward scratch size).
     max_act: usize,
-    /// Index of the zero-initialised head (last op with parameters).
-    head_idx: usize,
     in_len: usize,
-    /// Per-sample input tensor shape ([H, W, C] or [S]).
+    /// Per-sample output element count (= `in_len` for an empty segment).
+    out_len: usize,
+    /// Per-sample input tensor shape (`[H, W, C]` or `[S]`).
     input_shape: Vec<usize>,
     classes: usize,
-    head: SoftmaxXent,
+    /// The loss head — `Some` for full graphs and gateway (top) segments,
+    /// `None` for device (bottom) segments.
+    head: Option<SoftmaxXent>,
 }
 
 impl LayerGraph {
-    /// Compile `spec` into an executable graph with a `classes`-way
-    /// softmax cross-entropy head. Fails when a layer's geometry is not
-    /// natively executable: only SAME stride-1 odd-kernel convolutions,
-    /// non-overlapping max pools, and dense layers are implemented.
+    /// Compile the whole of `spec` into an executable graph with a
+    /// `classes`-way softmax cross-entropy head. Fails when a layer's
+    /// geometry is not natively executable: only SAME stride-1 odd-kernel
+    /// convolutions, non-overlapping max pools, and dense layers are
+    /// implemented.
     pub fn from_spec(spec: &ModelSpec, classes: usize) -> Result<Self> {
-        let Some(first) = spec.layers.first() else {
+        if spec.layers.is_empty() {
             bail!("model {:?} has no layers", spec.name);
-        };
-        let mut cur = match *first {
-            Layer::Conv { ci, hi, wi, .. } | Layer::Pool { ci, hi, wi, .. } => {
-                Shape::Spatial(hi as usize, wi as usize, ci as usize)
-            }
-            Layer::Fc { si, .. } => Shape::Flat(si as usize),
+        }
+        let g = Self::from_spec_range(spec, classes, 0, spec.depth(), true)?;
+        if g.param_total == 0 {
+            bail!("{}: no parameterized layers", spec.name);
+        }
+        Ok(g)
+    }
+
+    /// Compile spec layers `lo..hi` into a segment graph — the unit the
+    /// split-execution runtime is built from (paper §II-B: the bottom `l`
+    /// layers train on the device, the top `L − l` on the gateway).
+    ///
+    /// `with_head = true` attaches the softmax-xent head and requires the
+    /// segment to end in `classes` logits (a gateway/top half or a full
+    /// graph); `with_head = false` compiles a headless device/bottom half
+    /// whose output is the smashed activation at the cut. Either half may
+    /// be empty (`lo == hi`): an empty bottom half forwards the raw input,
+    /// an empty top half (`lo == hi == depth`) is the bare loss head.
+    pub fn from_spec_range(
+        spec: &ModelSpec,
+        classes: usize,
+        lo: usize,
+        hi: usize,
+        with_head: bool,
+    ) -> Result<Self> {
+        let depth = spec.depth();
+        if lo > hi || hi > depth {
+            bail!("{}: layer range {lo}..{hi} outside 0..={depth}", spec.name);
+        }
+        // The segment's input shape: declared by its first layer; an empty
+        // top segment at the very end consumes the logits directly.
+        let mut cur = match spec.layers.get(lo) {
+            Some(layer) => layer_input_shape(layer),
+            None => Shape::Flat(classes),
         };
         let in_len = cur.len();
-        let input_shape = spec.exec_input_shape();
+        let input_shape = cur.as_dims();
 
         let mut ops: Vec<Box<dyn Op>> = Vec::new();
-        for (li, layer) in spec.layers.iter().enumerate() {
+        for (li, layer) in spec.layers[lo..hi].iter().enumerate() {
+            let li = lo + li;
             match *layer {
                 Layer::Conv { ci, hi, wi, co, ho, wo, hf, wf, act } => {
                     let (ci, hi, wi) = (ci as usize, hi as usize, wi as usize);
@@ -173,7 +272,7 @@ impl LayerGraph {
                 }
             }
         }
-        if cur != Shape::Flat(classes) {
+        if with_head && cur != Shape::Flat(classes) {
             bail!(
                 "{}: the final layer must emit {classes} logits, got {cur:?}",
                 spec.name
@@ -186,23 +285,16 @@ impl LayerGraph {
         let mut act_off = Vec::with_capacity(ops.len());
         let (mut ptot, mut atot) = (0usize, 0usize);
         let mut max_act = in_len;
-        let mut head_idx = usize::MAX;
-        for (i, op) in ops.iter().enumerate() {
+        for op in ops.iter() {
             let shapes = op.param_shapes();
             let len: usize = shapes.iter().map(|s| s.iter().product::<usize>()).sum();
             param_off.push((ptot, len));
             tensor_off.push((param_shapes.len(), shapes.len()));
-            if !shapes.is_empty() {
-                head_idx = i;
-            }
             param_shapes.extend(shapes);
             ptot += len;
             act_off.push(atot);
             atot += op.out_len();
             max_act = max_act.max(op.out_len());
-        }
-        if head_idx == usize::MAX {
-            bail!("{}: no parameterized layers", spec.name);
         }
         Ok(LayerGraph {
             ops,
@@ -213,11 +305,11 @@ impl LayerGraph {
             act_off,
             act_total: atot,
             max_act,
-            head_idx,
             in_len,
+            out_len: cur.len(),
             input_shape,
             classes,
-            head: SoftmaxXent { classes },
+            head: with_head.then_some(SoftmaxXent { classes }),
         })
     }
 
@@ -233,6 +325,13 @@ impl LayerGraph {
         self.in_len
     }
 
+    /// Per-sample output element count of the segment — at a partition
+    /// point this is the size of the smashed activation the device uploads
+    /// (and of the cut gradient the gateway returns).
+    pub fn out_len(&self) -> usize {
+        self.out_len
+    }
+
     pub fn input_shape(&self) -> &[usize] {
         &self.input_shape
     }
@@ -241,17 +340,36 @@ impl LayerGraph {
         self.ops.len()
     }
 
+    /// Whether this graph carries the softmax-xent loss head.
+    pub fn has_head(&self) -> bool {
+        self.head.is_some()
+    }
+
     /// Deterministic init: ONE RNG stream walks the ops in ABI order —
     /// He-normal weights, zero biases, and a zero-init head (the last
     /// parameterized op), so the initial loss is exactly ln C.
     pub fn init_params(&self, seed: u64) -> Params {
         let mut rng = Rng::new(seed);
+        self.init_params_with(&mut rng, true)
+    }
+
+    /// Init from a caller-supplied RNG stream: He-normal weights, zero
+    /// biases; when `zero_last`, the LAST parameterized op of this segment
+    /// is zero-initialised instead (the logits head of the overall model).
+    /// Splitting a model and initialising bottom-then-top with one shared
+    /// stream (zeroing only the half that holds the model head) reproduces
+    /// the fused init stream byte for byte.
+    pub fn init_params_with(&self, rng: &mut Rng, zero_last: bool) -> Params {
+        let last_param = self
+            .ops
+            .iter()
+            .rposition(|op| !op.param_shapes().is_empty());
         let mut out: Params = Vec::with_capacity(self.param_shapes.len());
         for (i, op) in self.ops.iter().enumerate() {
-            let tensors = if i == self.head_idx {
+            let tensors = if zero_last && Some(i) == last_param {
                 op.init_params(None)
             } else {
-                op.init_params(Some(&mut rng))
+                op.init_params(Some(&mut *rng))
             };
             out.extend(tensors);
         }
@@ -259,9 +377,106 @@ impl LayerGraph {
     }
 
     /// This op's parameter tensors as slices (ABI order).
-    fn op_params<'a>(&self, params: &'a Params, i: usize) -> Vec<&'a [f32]> {
+    fn op_params<'a>(&self, params: &'a [Vec<f32>], i: usize) -> Vec<&'a [f32]> {
         let (t0, tn) = self.tensor_off[i];
         params[t0..t0 + tn].iter().map(|t| t.as_slice()).collect()
+    }
+
+    /// Per-sample forward through every op (no loss head): fills and
+    /// returns the activation arena. An empty segment returns an empty
+    /// arena — its output is the input itself (see [`Self::output_slice`]).
+    pub(crate) fn forward_arena(&self, params: &[Vec<f32>], xs: &[f32]) -> Vec<f32> {
+        let mut acts = vec![0.0f32; self.act_total];
+        for (i, op) in self.ops.iter().enumerate() {
+            let (prev, cur) = acts.split_at_mut(self.act_off[i]);
+            let input: &[f32] = if i == 0 { xs } else { &prev[self.act_off[i - 1]..] };
+            let pv = self.op_params(params, i);
+            op.forward(&pv, input, &mut cur[..op.out_len()]);
+        }
+        acts
+    }
+
+    /// The segment's per-sample output inside (`xs`, `acts`): the last
+    /// op's activation, or `xs` itself when the segment has no ops.
+    pub(crate) fn output_slice<'a>(&self, xs: &'a [f32], acts: &'a [f32]) -> &'a [f32] {
+        match self.ops.last() {
+            None => xs,
+            Some(op) => {
+                let off = self.act_off[self.ops.len() - 1];
+                &acts[off..off + op.out_len()]
+            }
+        }
+    }
+
+    /// Loss head on a logits slice (gateway/full graphs only): returns
+    /// (per-sample loss, argmax == label) and — when `grad_scale` is
+    /// `Some(1/B)` — writes dL/dz of the mean batch loss into `dz`.
+    pub(crate) fn head_loss_grad(
+        &self,
+        logits: &[f32],
+        label: usize,
+        grad_scale: Option<f32>,
+        dz: &mut [f32],
+    ) -> (f64, bool) {
+        self.head
+            .as_ref()
+            .expect("loss head requested on a headless segment")
+            .loss_grad(logits, label, grad_scale, dz)
+    }
+
+    /// Per-sample backward from the error `dy` at the segment output:
+    /// accumulates every op's parameter gradient into `g` (length
+    /// [`Self::param_total`]) and, when `want_dx`, returns the error at
+    /// the segment *input* — the cut gradient a gateway half sends back to
+    /// its device half. An empty segment echoes `dy` (identity).
+    pub(crate) fn backward_arena(
+        &self,
+        params: &[Vec<f32>],
+        xs: &[f32],
+        acts: &[f32],
+        dy: &[f32],
+        g: &mut [f32],
+        want_dx: bool,
+    ) -> Option<Vec<f32>> {
+        let nops = self.ops.len();
+        if nops == 0 {
+            return want_dx.then(|| dy.to_vec());
+        }
+        let mut dy_buf = vec![0.0f32; self.max_act];
+        let mut dx_buf = vec![0.0f32; self.max_act];
+        dy_buf[..dy.len()].copy_from_slice(dy);
+        for i in (0..nops).rev() {
+            let op = &self.ops[i];
+            let pv = self.op_params(params, i);
+            let (po, pl) = self.param_off[i];
+            let dp = &mut g[po..po + pl];
+            if i == 0 {
+                return if want_dx {
+                    op.backward(
+                        &pv,
+                        xs,
+                        &dy_buf[..op.out_len()],
+                        Some(&mut dx_buf[..op.in_len()]),
+                        dp,
+                    );
+                    Some(dx_buf[..op.in_len()].to_vec())
+                } else {
+                    op.backward(&pv, xs, &dy_buf[..op.out_len()], None, dp);
+                    None
+                };
+            }
+            let off = self.act_off[i - 1];
+            let input = &acts[off..off + op.in_len()];
+            op.backward(
+                &pv,
+                input,
+                &dy_buf[..op.out_len()],
+                Some(&mut dx_buf[..op.in_len()]),
+                dp,
+            );
+            std::mem::swap(&mut dy_buf, &mut dx_buf);
+        }
+        unreachable!("loop returns at i == 0")
     }
 
     /// One sample: forward through the arena, loss head, and — when
@@ -273,46 +488,15 @@ impl LayerGraph {
         label: usize,
         grad_scale: Option<f32>,
     ) -> (f64, bool, Option<Vec<f32>>) {
-        let nops = self.ops.len();
-        let mut acts = vec![0.0f32; self.act_total];
-        for (i, op) in self.ops.iter().enumerate() {
-            let (prev, cur) = acts.split_at_mut(self.act_off[i]);
-            let input: &[f32] = if i == 0 { xs } else { &prev[self.act_off[i - 1]..] };
-            let pv = self.op_params(params, i);
-            op.forward(&pv, input, &mut cur[..op.out_len()]);
-        }
-        let logits =
-            &acts[self.act_off[nops - 1]..self.act_off[nops - 1] + self.classes];
+        let acts = self.forward_arena(params, xs);
+        let logits = self.output_slice(xs, &acts);
         let mut dz = vec![0.0f32; self.classes];
-        let (loss, ok) = self.head.loss_grad(logits, label, grad_scale, &mut dz);
+        let (loss, ok) = self.head_loss_grad(logits, label, grad_scale, &mut dz);
         if grad_scale.is_none() {
             return (loss, ok, None);
         }
-
         let mut g = vec![0.0f32; self.param_total];
-        let mut dy_buf = vec![0.0f32; self.max_act];
-        let mut dx_buf = vec![0.0f32; self.max_act];
-        dy_buf[..self.classes].copy_from_slice(&dz);
-        for i in (0..nops).rev() {
-            let op = &self.ops[i];
-            let pv = self.op_params(params, i);
-            let (po, pl) = self.param_off[i];
-            let dp = &mut g[po..po + pl];
-            if i == 0 {
-                op.backward(&pv, xs, &dy_buf[..op.out_len()], None, dp);
-            } else {
-                let off = self.act_off[i - 1];
-                let input = &acts[off..off + op.in_len()];
-                op.backward(
-                    &pv,
-                    input,
-                    &dy_buf[..op.out_len()],
-                    Some(&mut dx_buf[..op.in_len()]),
-                    dp,
-                );
-                std::mem::swap(&mut dy_buf, &mut dx_buf);
-            }
-        }
+        self.backward_arena(params, xs, &acts, &dz, &mut g, false);
         (loss, ok, Some(g))
     }
 
@@ -341,32 +525,7 @@ impl LayerGraph {
                 )
             })
             .collect();
-
-        let mut loss_sum = 0.0f64;
-        let mut correct = 0usize;
-        for r in &per_sample {
-            loss_sum += r.0;
-            correct += r.1 as usize;
-        }
-        let grad = if want_grad {
-            let gs: Vec<&Vec<f32>> = per_sample
-                .iter()
-                .map(|r| r.2.as_ref().expect("per-sample gradient present"))
-                .collect();
-            let mut g = vec![0.0f32; self.param_total];
-            g.par_chunks_mut(GRAD_CHUNK).enumerate().for_each(|(ci, chunk)| {
-                let base = ci * GRAD_CHUNK;
-                for gsample in &gs {
-                    for (k, dst) in chunk.iter_mut().enumerate() {
-                        *dst += gsample[base + k];
-                    }
-                }
-            });
-            Some(g)
-        } else {
-            None
-        };
-        (loss_sum, correct, grad)
+        reduce_batch(per_sample, self.param_total, want_grad)
     }
 }
 
@@ -412,6 +571,8 @@ mod tests {
         assert_eq!(mlp.param_total(), 3072 * 64 + 64 + 64 * 10 + 10);
         assert_eq!(mlp.in_len(), 3072);
         assert_eq!(mlp.input_shape(), &[3072]);
+        assert_eq!(mlp.out_len(), 10);
+        assert!(mlp.has_head());
         // dense, relu, dense
         assert_eq!(mlp.num_ops(), 3);
 
@@ -450,6 +611,52 @@ mod tests {
                 + (64 + 128 + 256 + 256 + 512 + 512 + 512 + 512)
                 + (4096 + 4096 + 10)
         });
+    }
+
+    #[test]
+    fn segment_compilation_covers_every_cut_point() {
+        // Each half compiles at every spec-layer boundary; the halves chain
+        // (bottom output length == top input length) and their ABI tensor
+        // lists concatenate to the fused graph's.
+        for spec in [models::mlp(), models::vgg_mini(), tiny_cnn_spec()] {
+            let full = LayerGraph::from_spec(&spec, 10).unwrap();
+            for cut in 0..=spec.depth() {
+                let bottom =
+                    LayerGraph::from_spec_range(&spec, 10, 0, cut, false).unwrap();
+                let top =
+                    LayerGraph::from_spec_range(&spec, 10, cut, spec.depth(), true).unwrap();
+                assert!(!bottom.has_head());
+                assert!(top.has_head());
+                assert_eq!(bottom.out_len(), top.in_len(), "{} cut {cut}", spec.name);
+                assert_eq!(bottom.in_len(), full.in_len());
+                assert_eq!(top.out_len(), 10);
+                let mut shapes = bottom.param_shapes().to_vec();
+                shapes.extend(top.param_shapes().iter().cloned());
+                assert_eq!(shapes, full.param_shapes(), "{} cut {cut}", spec.name);
+                assert_eq!(
+                    bottom.param_total() + top.param_total(),
+                    full.param_total()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn split_init_with_shared_stream_matches_fused_init() {
+        for spec in [models::mlp(), models::vgg_mini()] {
+            let full = LayerGraph::from_spec(&spec, 10).unwrap();
+            for cut in 0..=spec.depth() {
+                let bottom =
+                    LayerGraph::from_spec_range(&spec, 10, 0, cut, false).unwrap();
+                let top =
+                    LayerGraph::from_spec_range(&spec, 10, cut, spec.depth(), true).unwrap();
+                let mut rng = Rng::new(42);
+                let top_has_params = top.param_total() > 0;
+                let mut split = bottom.init_params_with(&mut rng, !top_has_params);
+                split.extend(top.init_params_with(&mut rng, top_has_params));
+                assert_eq!(split, full.init_params(42), "{} cut {cut}", spec.name);
+            }
+        }
     }
 
     #[test]
@@ -497,6 +704,10 @@ mod tests {
             ],
         );
         assert!(LayerGraph::from_spec(&bad4, 10).is_err());
+        // A segment range outside the model is rejected too.
+        let m = models::mlp();
+        assert!(LayerGraph::from_spec_range(&m, 10, 0, 3, false).is_err());
+        assert!(LayerGraph::from_spec_range(&m, 10, 2, 1, false).is_err());
     }
 
     #[test]

@@ -8,7 +8,12 @@
 //!   forward/backward/param_shapes implementation;
 //! * [`graph`] — [`LayerGraph`], which compiles a `dnn::ModelSpec` (the
 //!   SAME description the scheduler's Table II cost model uses) into an op
-//!   chain and owns all offset bookkeeping;
+//!   chain — whole, or any contiguous spec-layer segment — and owns all
+//!   offset bookkeeping;
+//! * [`partition`] — [`PartitionedBackend`], the split-execution runtime:
+//!   a device half and a gateway half of one model cut at the DDSRA
+//!   partition point, exchanging the smashed activation forward and the
+//!   cut gradient backward (byte-identical to fused execution);
 //! * this module — [`NativeBackend`], the [`Backend`] implementation: the
 //!   `mlp` (3072 → 64 ReLU → 10) and `cnn` (VGG-mini:
 //!   3× [conv3x3 + ReLU + maxpool2] → 1024 → 128 → 10) presets.
@@ -24,6 +29,7 @@
 
 pub mod graph;
 pub mod ops;
+pub mod partition;
 
 use anyhow::{bail, Result};
 
@@ -32,12 +38,99 @@ use super::meta::ModelMeta;
 use crate::dnn::{models, ModelSpec};
 
 pub use graph::LayerGraph;
+pub use partition::{make_partitioned_stack, PartitionedBackend};
 
 /// Batch shapes shared by every native preset (python/compile/model.py
 /// bakes the same ones into the AOT artifacts).
 pub const TRAIN_BATCH: usize = 64;
 pub const EVAL_BATCH: usize = 256;
 pub const NUM_CLASSES: usize = 10;
+
+/// The executable-preset registry: (spec, default init seed) by name —
+/// the ONE place the fused backend, the split backend and the
+/// partitioned-stack builder all resolve a preset, so their init streams
+/// can never drift apart.
+pub(crate) fn preset_spec_and_seed(name: &str) -> Result<(ModelSpec, u64)> {
+    match name {
+        "mlp" => Ok((models::mlp(), 0x6d6c70)),  // "mlp"
+        "cnn" => Ok((models::vgg_mini(), 0x636e6e)), // "cnn"
+        other => bail!(
+            "unknown preset {other:?}: the native layer-graph engine implements \
+             \"mlp\" and \"cnn\""
+        ),
+    }
+}
+
+/// Shared input validation for the native backend family (fused and
+/// split): parameter tensors must match the meta's ABI shapes.
+pub(crate) fn check_params_against(meta: &ModelMeta, params: &Params) -> Result<()> {
+    if params.len() != meta.param_shapes.len() {
+        bail!(
+            "expected {} param tensors, got {}",
+            meta.param_shapes.len(),
+            params.len()
+        );
+    }
+    for (buf, shape) in params.iter().zip(&meta.param_shapes) {
+        let expect: usize = shape.iter().product();
+        if buf.len() != expect {
+            bail!("param tensor size {} != shape {shape:?}", buf.len());
+        }
+    }
+    Ok(())
+}
+
+/// Validate per-sample geometry and labels for an arbitrary-size batch
+/// of `dim` features per sample.
+pub(crate) fn check_samples_against(
+    meta: &ModelMeta,
+    dim: usize,
+    x: &[f32],
+    y: &[i32],
+) -> Result<()> {
+    if y.is_empty() {
+        bail!("empty batch");
+    }
+    if x.len() != y.len() * dim {
+        bail!("input size {} != {}x{dim}", x.len(), y.len());
+    }
+    let classes = meta.num_classes as i32;
+    for &c in y {
+        if !(0..classes).contains(&c) {
+            bail!("label {c} outside 0..{classes}");
+        }
+    }
+    Ok(())
+}
+
+/// [`check_samples_against`] plus an exact batch-size requirement.
+pub(crate) fn check_batch_against(
+    meta: &ModelMeta,
+    dim: usize,
+    x: &[f32],
+    y: &[i32],
+    batch: usize,
+) -> Result<()> {
+    if y.len() != batch {
+        bail!("label batch {} != expected {batch}", y.len());
+    }
+    check_samples_against(meta, dim, x, y)
+}
+
+/// One SGD update over the flat mean-loss gradient, walking the ABI
+/// tensors in order — the exact loop the golden mlp oracle pins, shared
+/// by the fused and split backends.
+pub(crate) fn apply_sgd(params: &Params, g: &[f32], lr: f32) -> Params {
+    let mut new = params.clone();
+    let mut off = 0usize;
+    for t in new.iter_mut() {
+        for v in t.iter_mut() {
+            *v -= lr * g[off];
+            off += 1;
+        }
+    }
+    new
+}
 
 /// Dependency-free layer-graph runtime.
 pub struct NativeBackend {
@@ -49,7 +142,7 @@ pub struct NativeBackend {
 impl NativeBackend {
     /// The `mlp` preset with the default deterministic init seed.
     pub fn mlp() -> Self {
-        Self::mlp_seeded(0x6d6c70) // "mlp"
+        Self::mlp_seeded(preset_spec_and_seed("mlp").expect("registered preset").1)
     }
 
     /// Same preset, custom init seed (distinct seeds give distinct inits,
@@ -60,7 +153,7 @@ impl NativeBackend {
 
     /// The `cnn` (VGG-mini) preset with the default init seed.
     pub fn cnn() -> Self {
-        Self::cnn_seeded(0x636e6e) // "cnn"
+        Self::cnn_seeded(preset_spec_and_seed("cnn").expect("registered preset").1)
     }
 
     pub fn cnn_seeded(init_seed: u64) -> Self {
@@ -90,45 +183,16 @@ impl NativeBackend {
     }
 
     fn check_params(&self, params: &Params) -> Result<()> {
-        if params.len() != self.meta.param_shapes.len() {
-            bail!(
-                "expected {} param tensors, got {}",
-                self.meta.param_shapes.len(),
-                params.len()
-            );
-        }
-        for (buf, shape) in params.iter().zip(&self.meta.param_shapes) {
-            let expect: usize = shape.iter().product();
-            if buf.len() != expect {
-                bail!("param tensor size {} != shape {shape:?}", buf.len());
-            }
-        }
-        Ok(())
+        check_params_against(&self.meta, params)
     }
 
     /// Validate per-sample geometry and labels for an arbitrary-size batch.
     fn check_samples(&self, x: &[f32], y: &[i32]) -> Result<()> {
-        if y.is_empty() {
-            bail!("empty batch");
-        }
-        let dim = self.graph.in_len();
-        if x.len() != y.len() * dim {
-            bail!("input size {} != {}x{dim}", x.len(), y.len());
-        }
-        let classes = self.meta.num_classes as i32;
-        for &c in y {
-            if !(0..classes).contains(&c) {
-                bail!("label {c} outside 0..{classes}");
-            }
-        }
-        Ok(())
+        check_samples_against(&self.meta, self.graph.in_len(), x, y)
     }
 
     fn check_batch(&self, x: &[f32], y: &[i32], batch: usize) -> Result<()> {
-        if y.len() != batch {
-            bail!("label batch {} != expected {batch}", y.len());
-        }
-        self.check_samples(x, y)
+        check_batch_against(&self.meta, self.graph.in_len(), x, y, batch)
     }
 }
 
@@ -152,15 +216,7 @@ impl Backend for NativeBackend {
         self.check_batch(x, y, self.meta.train_batch)?;
         let (loss_sum, _, grad) = self.graph.fwd_bwd(params, x, y, true);
         let g = grad.expect("gradient requested");
-        let mut new = params.clone();
-        let mut off = 0usize;
-        for t in new.iter_mut() {
-            for v in t.iter_mut() {
-                *v -= lr * g[off];
-                off += 1;
-            }
-        }
-        Ok((new, (loss_sum / y.len() as f64) as f32))
+        Ok((apply_sgd(params, &g, lr), (loss_sum / y.len() as f64) as f32))
     }
 
     fn eval_batch(&self, params: &Params, x: &[f32], y: &[i32]) -> Result<(f64, f64)> {

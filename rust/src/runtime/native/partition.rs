@@ -1,0 +1,371 @@
+//! Split-execution runtime: the paper's device/gateway DNN partition
+//! (§II-B) actually *executed*, not just costed.
+//!
+//! [`PartitionedBackend`] composes two [`LayerGraph`] halves compiled from
+//! one `dnn::ModelSpec` at a spec-layer cut point `l` — the same `l` the
+//! DDSRA scheduler optimises in Eq. 21 and the Table II cost model prices:
+//!
+//! ```text
+//!   device (bottom l layers)                 gateway (top L − l layers)
+//!   ────────────────────────                 ──────────────────────────
+//!   forward(x) ──── smashed activation ────▶ forward + softmax-xent head
+//!   backward  ◀──── cut gradient dL/da ───── backward (also yields top ∇)
+//!   bottom ∇
+//! ```
+//!
+//! One train step per sample: the device runs its half forward and uploads
+//! the smashed activation at the cut; the gateway completes the forward
+//! pass, computes the loss, runs its half backward and returns the cut
+//! gradient; the device finishes backward. Both halves' gradients
+//! concatenate into the fused flat-gradient ABI, and the batch uses the
+//! same rayon fan-out and order-preserving reduction as the fused engine —
+//! so split execution is **byte-identical** to fused execution at every
+//! cut point (pinned by `rust/tests/partition.rs` and
+//! `examples/partitioned_step.rs`).
+//!
+//! The exchanged tensor sizes are *measured* here
+//! ([`PartitionedBackend::cut_activation_elems`]), making the cost model's
+//! communication terms observable instead of assumed.
+
+use anyhow::{bail, Result};
+use rayon::prelude::*;
+
+use crate::dnn::ModelSpec;
+use crate::rng::Rng;
+
+use super::super::backend::{Backend, Params};
+use super::super::meta::ModelMeta;
+use super::graph::{reduce_batch, LayerGraph};
+use super::{
+    apply_sgd, check_batch_against, check_params_against, check_samples_against, EVAL_BATCH,
+    NUM_CLASSES, TRAIN_BATCH,
+};
+
+/// A device/gateway split of one executable preset at spec-layer `cut`.
+pub struct PartitionedBackend {
+    meta: ModelMeta,
+    /// Bottom `cut` layers (headless) — trains on the device.
+    device: LayerGraph,
+    /// Top `L − cut` layers + loss head — trains on the gateway.
+    gateway: LayerGraph,
+    /// Spec-layer partition point `l ∈ 0..=L` (C5).
+    cut: usize,
+    /// Number of ABI parameter tensors held by the device half.
+    bottom_tensors: usize,
+    init_seed: u64,
+}
+
+impl PartitionedBackend {
+    /// Split `spec` at spec-layer boundary `cut` (`0..=depth`): the bottom
+    /// `cut` layers run on the device, the rest (plus the loss head) on
+    /// the gateway. Fails when the spec is not natively executable or the
+    /// cut is out of range.
+    pub fn from_spec(spec: &ModelSpec, cut: usize, init_seed: u64) -> Result<Self> {
+        let depth = spec.depth();
+        if cut > depth {
+            bail!("{}: partition point {cut} outside 0..={depth}", spec.name);
+        }
+        let device = LayerGraph::from_spec_range(spec, NUM_CLASSES, 0, cut, false)?;
+        let gateway = LayerGraph::from_spec_range(spec, NUM_CLASSES, cut, depth, true)?;
+        if device.out_len() != gateway.in_len() {
+            bail!(
+                "{} cut {cut}: halves do not chain ({} != {})",
+                spec.name,
+                device.out_len(),
+                gateway.in_len()
+            );
+        }
+        let mut param_shapes = device.param_shapes().to_vec();
+        param_shapes.extend(gateway.param_shapes().iter().cloned());
+        let mut input_train = vec![TRAIN_BATCH];
+        input_train.extend_from_slice(device.input_shape());
+        let mut input_eval = vec![EVAL_BATCH];
+        input_eval.extend_from_slice(device.input_shape());
+        let meta = ModelMeta {
+            preset: format!("{}@cut{cut}", spec.name),
+            train_batch: TRAIN_BATCH,
+            eval_batch: EVAL_BATCH,
+            num_classes: NUM_CLASSES,
+            input_train,
+            input_eval,
+            param_total: device.param_total() + gateway.param_total(),
+            train_k: 0,
+            param_shapes,
+        };
+        let bottom_tensors = device.param_shapes().len();
+        Ok(PartitionedBackend { meta, device, gateway, cut, bottom_tensors, init_seed })
+    }
+
+    /// Split an executable preset by name (`"mlp"` or `"cnn"`), resolved
+    /// through the same preset registry as the fused `NativeBackend` — so
+    /// `init_params` is byte-identical to the fused preset's.
+    pub fn preset(name: &str, cut: usize) -> Result<Self> {
+        let (spec, seed) = super::preset_spec_and_seed(name)?;
+        Self::from_spec(&spec, cut, seed)
+    }
+
+    /// The spec-layer partition point this backend executes.
+    pub fn cut(&self) -> usize {
+        self.cut
+    }
+
+    /// MEASURED per-sample element count of the smashed activation the
+    /// device uploads at the cut (the returned cut gradient has the same
+    /// size). Multiply by 4 (f32) and the batch size for bytes per
+    /// exchange — the quantity the Table II cost model's communication
+    /// terms assume.
+    pub fn cut_activation_elems(&self) -> usize {
+        self.device.out_len()
+    }
+
+    /// Flat parameter count of the device (bottom) half — the gateway
+    /// half's coordinates start here in the fused gradient ABI.
+    pub fn device_param_total(&self) -> usize {
+        self.device.param_total()
+    }
+
+    /// Number of ABI parameter tensors held by the device half.
+    pub fn device_tensor_count(&self) -> usize {
+        self.bottom_tensors
+    }
+
+    fn check_params(&self, params: &Params) -> Result<()> {
+        check_params_against(&self.meta, params)
+    }
+
+    fn check_samples(&self, x: &[f32], y: &[i32]) -> Result<()> {
+        check_samples_against(&self.meta, self.device.in_len(), x, y)
+    }
+
+    fn check_batch(&self, x: &[f32], y: &[i32], batch: usize) -> Result<()> {
+        check_batch_against(&self.meta, self.device.in_len(), x, y, batch)
+    }
+
+    /// One sample through the split pipeline: device forward → activation
+    /// exchange → gateway forward + head (+ backward → gradient exchange →
+    /// device backward when `grad_scale` is set). The flat gradient is the
+    /// device half's block followed by the gateway half's — the fused ABI.
+    fn split_sample(
+        &self,
+        bottom: &[Vec<f32>],
+        top: &[Vec<f32>],
+        xs: &[f32],
+        label: usize,
+        grad_scale: Option<f32>,
+    ) -> (f64, bool, Option<Vec<f32>>) {
+        // Device: bottom forward to the cut.
+        let dev_acts = self.device.forward_arena(bottom, xs);
+        let cut_act = self.device.output_slice(xs, &dev_acts);
+        // Gateway: top forward + loss head.
+        let gw_acts = self.gateway.forward_arena(top, cut_act);
+        let logits = self.gateway.output_slice(cut_act, &gw_acts);
+        let mut dz = vec![0.0f32; self.meta.num_classes];
+        let (loss, ok) = self.gateway.head_loss_grad(logits, label, grad_scale, &mut dz);
+        if grad_scale.is_none() {
+            return (loss, ok, None);
+        }
+        // Gateway: top backward — yields the top gradients AND the cut
+        // gradient to ship back (skipped when the device half is empty,
+        // matching the fused graph's dx=None at op 0).
+        let mut g = vec![0.0f32; self.meta.param_total];
+        let (g_bottom, g_top) = g.split_at_mut(self.device.param_total());
+        let want_dcut = self.device.num_ops() > 0;
+        let d_cut =
+            self.gateway.backward_arena(top, cut_act, &gw_acts, &dz, g_top, want_dcut);
+        // Device: bottom backward from the gateway's cut gradient.
+        if let Some(d_cut) = d_cut {
+            self.device.backward_arena(bottom, xs, &dev_acts, &d_cut, g_bottom, false);
+        }
+        (loss, ok, Some(g))
+    }
+
+    /// Batched split execution with the same rayon fan-out and
+    /// order-preserving reduction as the fused engine.
+    fn split_fwd_bwd(
+        &self,
+        params: &Params,
+        x: &[f32],
+        y: &[i32],
+        want_grad: bool,
+    ) -> (f64, usize, Option<Vec<f32>>) {
+        let b = y.len();
+        let in_len = self.device.in_len();
+        let grad_scale = want_grad.then_some(1.0f32 / b as f32);
+        let (bottom, top) = params.split_at(self.bottom_tensors);
+        let per_sample: Vec<(f64, bool, Option<Vec<f32>>)> = (0..b)
+            .into_par_iter()
+            .map(|s| {
+                self.split_sample(
+                    bottom,
+                    top,
+                    &x[s * in_len..(s + 1) * in_len],
+                    y[s] as usize,
+                    grad_scale,
+                )
+            })
+            .collect();
+        reduce_batch(per_sample, self.meta.param_total, want_grad)
+    }
+}
+
+impl Backend for PartitionedBackend {
+    fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    /// Byte-identical to the fused preset's init: one RNG stream walks the
+    /// device half then the gateway half, zero-initialising the model head
+    /// (the globally last parameterized op) wherever it lives.
+    fn init_params(&self) -> Result<Params> {
+        let mut rng = Rng::new(self.init_seed);
+        let top_has_params = self.gateway.param_total() > 0;
+        let mut p = self.device.init_params_with(&mut rng, !top_has_params);
+        p.extend(self.gateway.init_params_with(&mut rng, top_has_params));
+        Ok(p)
+    }
+
+    fn train_step(
+        &self,
+        params: &Params,
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+    ) -> Result<(Params, f32)> {
+        self.check_params(params)?;
+        self.check_batch(x, y, self.meta.train_batch)?;
+        let (loss_sum, _, grad) = self.split_fwd_bwd(params, x, y, true);
+        let g = grad.expect("gradient requested");
+        Ok((apply_sgd(params, &g, lr), (loss_sum / y.len() as f64) as f32))
+    }
+
+    fn eval_batch(&self, params: &Params, x: &[f32], y: &[i32]) -> Result<(f64, f64)> {
+        self.check_params(params)?;
+        self.check_batch(x, y, self.meta.eval_batch)?;
+        let (loss_sum, correct, _) = self.split_fwd_bwd(params, x, y, false);
+        Ok((loss_sum, correct as f64))
+    }
+
+    fn eval_partial_batch(
+        &self,
+        params: &Params,
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<Option<(f64, f64)>> {
+        self.check_params(params)?;
+        self.check_samples(x, y)?;
+        let (loss_sum, correct, _) = self.split_fwd_bwd(params, x, y, false);
+        Ok(Some((loss_sum, correct as f64)))
+    }
+
+    fn grad(&self, params: &Params, x: &[f32], y: &[i32]) -> Result<Vec<f32>> {
+        self.check_params(params)?;
+        self.check_batch(x, y, self.meta.train_batch)?;
+        let (_, _, grad) = self.split_fwd_bwd(params, x, y, true);
+        Ok(grad.expect("gradient requested"))
+    }
+}
+
+/// The full split stack for one executable preset: a backend per legal
+/// partition point `l ∈ 0..=L`, indexed by `l`. This is what the
+/// orchestrator dispatches on when `--execute-partition` is set: device
+/// `n`'s local step runs through `stack[plan.partition[n]]`.
+pub fn make_partitioned_stack(preset: &str) -> Result<Vec<PartitionedBackend>> {
+    let (spec, seed) = super::preset_spec_and_seed(preset)?;
+    (0..=spec.depth())
+        .map(|cut| PartitionedBackend::from_spec(&spec, cut, seed))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::NativeBackend;
+    use super::*;
+
+    fn batch(seed: u64, n: usize, dim: usize) -> (Vec<f32>, Vec<i32>) {
+        let mut rng = Rng::new(seed);
+        let x: Vec<f32> = (0..n * dim).map(|_| rng.normal() as f32 * 0.5).collect();
+        let y: Vec<i32> = (0..n).map(|_| rng.below(NUM_CLASSES) as i32).collect();
+        (x, y)
+    }
+
+    fn assert_bits_eq(a: &Params, b: &Params, what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: tensor count");
+        for (t, (ta, tb)) in a.iter().zip(b).enumerate() {
+            assert_eq!(ta.len(), tb.len(), "{what}: tensor {t} len");
+            for (i, (va, vb)) in ta.iter().zip(tb).enumerate() {
+                assert_eq!(
+                    va.to_bits(),
+                    vb.to_bits(),
+                    "{what}: tensor {t} idx {i}: {va} vs {vb}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mlp_split_matches_fused_at_every_cut() {
+        let fused = NativeBackend::mlp();
+        let p0 = fused.init_params().unwrap();
+        let dim = fused.meta().sample_dim();
+        let (x, y) = batch(0x51, TRAIN_BATCH, dim);
+        let (fused_next, fused_loss) = fused.train_step(&p0, &x, &y, 0.05).unwrap();
+        for cut in 0..=2 {
+            let split = PartitionedBackend::preset("mlp", cut).unwrap();
+            assert_bits_eq(&split.init_params().unwrap(), &p0, "init");
+            let (next, loss) = split.train_step(&p0, &x, &y, 0.05).unwrap();
+            assert_eq!(loss.to_bits(), fused_loss.to_bits(), "cut {cut} loss");
+            assert_bits_eq(&next, &fused_next, "params after split step");
+        }
+    }
+
+    #[test]
+    fn cut_sizes_are_measured_from_the_compiled_halves() {
+        // cnn spec: conv16@32² / pool / conv32@16² / pool / conv64@8² /
+        // pool / fc1024→128 / fc128→10.
+        let expect = [
+            32 * 32 * 3,  // cut 0: raw input
+            32 * 32 * 16, // after conv1
+            16 * 16 * 16, // after pool1
+            16 * 16 * 32,
+            8 * 8 * 32,
+            8 * 8 * 64,
+            4 * 4 * 64, // = 1024, the flatten boundary
+            128,
+            10, // cut 8: the logits themselves
+        ];
+        for (cut, &e) in expect.iter().enumerate() {
+            let b = PartitionedBackend::preset("cnn", cut).unwrap();
+            assert_eq!(b.cut_activation_elems(), e, "cut {cut}");
+            assert_eq!(b.cut(), cut);
+        }
+    }
+
+    #[test]
+    fn stack_covers_every_cut_and_shares_the_fused_abi() {
+        let stack = make_partitioned_stack("mlp").unwrap();
+        assert_eq!(stack.len(), 3);
+        let fused = NativeBackend::mlp();
+        for b in &stack {
+            assert_eq!(b.meta().param_shapes, fused.meta().param_shapes);
+            assert_eq!(b.meta().param_total, fused.meta().param_total);
+            assert_eq!(b.meta().train_batch, fused.meta().train_batch);
+        }
+        assert!(make_partitioned_stack("resnet").is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_range_cuts_and_malformed_inputs() {
+        assert!(PartitionedBackend::preset("mlp", 3).is_err());
+        assert!(PartitionedBackend::preset("resnet", 0).is_err());
+        let b = PartitionedBackend::preset("mlp", 1).unwrap();
+        let p = b.init_params().unwrap();
+        let (x, y) = batch(9, TRAIN_BATCH, 3072);
+        assert!(b.train_step(&p, &x[..10], &y, 0.1).is_err());
+        assert!(b.train_step(&p, &x, &y[..10], 0.1).is_err());
+        let bad_y: Vec<i32> = vec![11; TRAIN_BATCH];
+        assert!(b.train_step(&p, &x, &bad_y, 0.1).is_err());
+        let mut bad_p = p.clone();
+        bad_p[0].pop();
+        assert!(b.train_step(&bad_p, &x, &y, 0.1).is_err());
+    }
+}

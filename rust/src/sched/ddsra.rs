@@ -28,21 +28,29 @@ use crate::sched::{Decision, GatewayPlan, RoundCtx, Scheduler};
 /// Hungarian penalty Ψ for inadmissible pairs (Eq. 29).
 const PSI: f64 = 1e15;
 
-/// The DDSRA scheduler state.
+/// The DDSRA scheduler state (Algorithm 1).
 pub struct Ddsra {
-    /// Lyapunov trade-off parameter V.
+    /// Lyapunov trade-off parameter V (Eq. 15–17): larger V weighs the
+    /// round-delay penalty more against the participation-queue drift —
+    /// the O(1/V) vs O(√V) trade-off of Theorem 2.
     pub v: f64,
-    /// Device-specific participation rates Γ_m (Eq. 13).
+    /// Device-specific participation rates Γ_m (Eq. 13, derived from the
+    /// Theorem 1 divergence bounds Φ_m via `fl::participation`).
     pub gamma: Vec<f64>,
-    /// Virtual queues Q_m(t) (Eq. 14).
+    /// Virtual queues Q_m(t) (Eq. 14): Q_m(t+1) = max(Q_m(t) − 1_m(t) +
+    /// Γ_m, 0) — their stability enforces constraint C11 in time average.
     pub queues: Vec<f64>,
-    /// BCD outer iterations for the (l, f, P) subproblem.
+    /// BCD outer iterations for the (l, f, P) subproblem (Algorithm 1
+    /// line 6; the paper iterates to convergence, 3 suffices in practice).
     pub bcd_iters: usize,
     /// Run the per-(m,j) Λ solves on the rayon pool (§V-C scalability).
     pub parallel: bool,
 }
 
 impl Ddsra {
+    /// A DDSRA instance with trade-off parameter `v` (Eq. 17) and
+    /// per-gateway participation rates `gamma` (Eq. 13); virtual queues
+    /// start empty, Q_m(0) = 0.
     pub fn new(v: f64, gamma: Vec<f64>) -> Self {
         let queues = vec![0.0; gamma.len()];
         Ddsra { v, gamma, queues, bcd_iters: 3, parallel: false }
@@ -52,8 +60,14 @@ impl Ddsra {
     // Per-(m, j) resource allocation: minimise Λ_{m,j} (Eq. 20).
     // ------------------------------------------------------------------
 
-    /// Solve the (l, f, P) subproblem for gateway m on channel j.
-    /// Returns None when no feasible allocation exists this round.
+    /// Solve the (l, f, P) subproblem for gateway m on channel j —
+    /// minimise the round delay Λ_{m,j} (Eq. 20) by block coordinate
+    /// descent over the partition points (l-step, Eq. 21), the gateway
+    /// frequency shares (f-step, Eq. 22) and the transmit power (P-step,
+    /// Eq. 23–24), under C4–C10. Returns the best feasible
+    /// [`GatewayPlan`] — whose `partition` vector is what the runtime
+    /// executes under `--execute-partition` — or None when no feasible
+    /// allocation exists this round.
     pub fn solve_gateway(ctx: &RoundCtx, m: usize, j: usize, bcd_iters: usize) -> Option<GatewayPlan> {
         let gw = &ctx.topo.gateways[m];
         let model = ctx.model;

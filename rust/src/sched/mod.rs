@@ -38,7 +38,11 @@ pub struct GatewayPlan {
     /// Uplink transmit power P_m(t) (W).
     pub power: f64,
     /// DNN partition point l_n(t) per member device (aligned with
-    /// `topo.gateways[m].members`).
+    /// `topo.gateways[m].members`): the bottom l_n layers train on the
+    /// device, the top L − l_n on the gateway (C5). Besides pricing the
+    /// round via the Table II cost model, this is surfaced to the runtime:
+    /// with `execute_partition` on, the orchestrator runs device n's local
+    /// step through the split-execution backend at exactly this cut.
     pub partition: Vec<usize>,
     /// Gateway frequency share f^G_{m,n}(t) per member device (Hz).
     pub freq: Vec<f64>,
