@@ -1,0 +1,138 @@
+//! Round-engine throughput (custom harness — criterion is unavailable
+//! offline): wall-clock per communication round as the device count and
+//! the rayon thread count scale, plus a paired all-schedulers run at
+//! N=240 — the large-N scenario exercising the streaming round engine
+//! end to end. Prints human tables and emits machine-readable
+//! `BENCH_round_engine.json`. Thresholds are NOT asserted (bench, not
+//! test); byte-stability across thread counts IS asserted (it is the
+//! engine's core guarantee and costs nothing to check here).
+//!
+//! Run: `cargo bench --bench round_engine`
+
+use std::fmt::Write as _;
+use std::time::Instant;
+
+use iiot_fl::config::SimConfig;
+use iiot_fl::fl::{Experiment, RunOpts};
+
+/// A scale working point with budgets generous enough that scheduled
+/// floors always train — the bench measures the engine, not feasibility.
+fn scale_cfg(devices: usize, gateways: usize, channels: usize) -> SimConfig {
+    let mut cfg = SimConfig::default();
+    cfg.num_devices = devices;
+    cfg.num_gateways = gateways;
+    cfg.num_channels = channels;
+    cfg.dataset_min = 32;
+    cfg.dataset_max = 128;
+    cfg.test_size = 256;
+    cfg.local_iters = 2;
+    cfg.device_energy_max = 500.0;
+    cfg.gw_energy_max = 5000.0;
+    cfg
+}
+
+/// One timed run inside a dedicated rayon pool: returns (seconds per
+/// round, final train loss, a bit-exact digest of the trajectory).
+fn timed_run(
+    cfg: &SimConfig,
+    scheme: &str,
+    rounds: usize,
+    threads: usize,
+) -> anyhow::Result<(f64, Option<f64>, String)> {
+    let pool = rayon::ThreadPoolBuilder::new().num_threads(threads).build()?;
+    pool.install(|| {
+        let exp = Experiment::new(cfg.clone())?;
+        let mut sched = exp.make_scheduler(scheme)?;
+        let opts = RunOpts { rounds, eval_every: 0, track_divergence: false, train: true };
+        let t0 = Instant::now();
+        let log = exp.run(sched.as_mut(), &opts)?;
+        let per_round = t0.elapsed().as_secs_f64() / rounds as f64;
+        let loss = log.records.iter().rev().find_map(|r| r.train_loss);
+        let mut digest = String::new();
+        for r in &log.records {
+            let _ = write!(
+                digest,
+                "{:016x}|{:016x};",
+                r.delay.to_bits(),
+                r.train_loss.unwrap_or(-1.0).to_bits()
+            );
+        }
+        Ok((per_round, loss, digest))
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let max_threads = std::thread::available_parallelism().map_or(4, |n| n.get());
+    let mut thread_grid: Vec<usize> = [1usize, 2, 4, max_threads]
+        .into_iter()
+        .filter(|&t| t <= max_threads)
+        .collect();
+    thread_grid.dedup();
+
+    let mut json = String::from("{\n  \"bench\": \"round_engine\",\n");
+    let _ = writeln!(json, "  \"max_threads\": {max_threads},");
+    json.push_str("  \"device_sweep\": [\n");
+
+    println!("== round throughput vs device count x thread count ==");
+    println!(
+        "{:>8} {:>9} {:>8} {:>14} {:>10}",
+        "devices", "gateways", "threads", "s/round", "speedup"
+    );
+    let sweeps = [(12usize, 6usize, 3usize), (60, 12, 6), (240, 24, 8)];
+    let rounds = 3;
+    let mut first_row = true;
+    for (n, m, j) in sweeps {
+        let cfg = scale_cfg(n, m, j);
+        let mut serial = None;
+        let mut serial_digest = None;
+        for &threads in &thread_grid {
+            let (per_round, _, digest) = timed_run(&cfg, "round_robin", rounds, threads)?;
+            // The engine's core guarantee, checked in passing: the
+            // trajectory bytes do not depend on the thread count.
+            if let Some(d) = &serial_digest {
+                assert_eq!(d, &digest, "thread count changed round bytes");
+            } else {
+                serial_digest = Some(digest);
+            }
+            let base = *serial.get_or_insert(per_round);
+            let speedup = base / per_round;
+            println!("{n:>8} {m:>9} {threads:>8} {:>12.1}ms {speedup:>9.2}x", per_round * 1e3);
+            if !first_row {
+                json.push_str(",\n");
+            }
+            first_row = false;
+            let _ = write!(
+                json,
+                "    {{\"devices\": {n}, \"gateways\": {m}, \"channels\": {j}, \
+                 \"threads\": {threads}, \"sec_per_round\": {per_round:.6}, \
+                 \"speedup_vs_1_thread\": {speedup:.3}}}"
+            );
+        }
+    }
+    json.push_str("\n  ],\n  \"schedulers_n240\": [\n");
+
+    println!("\n== paired schedulers at N=240 (plant scale, {max_threads} threads) ==");
+    println!("{:>16} {:>14} {:>12}", "scheme", "s/round", "train_loss");
+    let cfg = scale_cfg(240, 24, 8);
+    let schemes =
+        ["ddsra", "participation", "random", "round_robin", "loss_driven", "delay_driven"];
+    for (i, &scheme) in schemes.iter().enumerate() {
+        let (per_round, loss, _) = timed_run(&cfg, scheme, 2, max_threads)?;
+        let loss_s = loss.map_or("-".into(), |l| format!("{l:.4}"));
+        println!("{scheme:>16} {:>12.1}ms {loss_s:>12}", per_round * 1e3);
+        if i > 0 {
+            json.push_str(",\n");
+        }
+        let _ = write!(
+            json,
+            "    {{\"scheme\": \"{scheme}\", \"devices\": 240, \"threads\": {max_threads}, \
+             \"sec_per_round\": {per_round:.6}, \"final_train_loss\": {}}}",
+            loss.map_or("null".into(), |l| format!("{l:.6}"))
+        );
+    }
+    json.push_str("\n  ]\n}\n");
+
+    std::fs::write("BENCH_round_engine.json", &json)?;
+    println!("\nwrote BENCH_round_engine.json");
+    Ok(())
+}

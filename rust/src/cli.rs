@@ -65,13 +65,18 @@ impl Args {
         self.flags.contains_key(key)
     }
 
-    /// Build a SimConfig: optional `--config file`, then `--set k=v`
-    /// overrides, then well-known direct flags (--rounds, --v, --seed, ...).
+    /// Build a SimConfig: optional `--config file`, then `--scenario name`
+    /// (a named scale preset, applied BEFORE the overrides so individual
+    /// knobs can be tuned on top), then `--set k=v` overrides, then
+    /// well-known direct flags (--rounds, --v, --seed, ...).
     pub fn sim_config(&self) -> Result<SimConfig> {
         let mut cfg = match self.get("config") {
             Some(path) => SimConfig::from_file(std::path::Path::new(path))?,
             None => SimConfig::default(),
         };
+        if let Some(name) = self.get("scenario") {
+            cfg.apply_scenario(name)?;
+        }
         for kv in self.get_all("set") {
             let Some((k, v)) = kv.split_once('=') else {
                 bail!("--set expects key=value, got {kv:?}");
@@ -153,6 +158,25 @@ mod tests {
         assert!(cfg.execute_partition);
         // Mismatched cost/exec models are rejected at validation.
         let bad = Args::parse(&sv(&["train", "--execute-partition"])).unwrap();
+        assert!(bad.sim_config().is_err());
+    }
+
+    #[test]
+    fn scenario_scales_then_overrides_apply_on_top() {
+        let a = Args::parse(&sv(&["train", "--scenario", "plant"])).unwrap();
+        let cfg = a.sim_config().unwrap();
+        assert_eq!((cfg.num_devices, cfg.num_gateways), (240, 24));
+        // --set lands after the scenario, tuning a single knob on top.
+        let b = Args::parse(&sv(&[
+            "train",
+            "--scenario",
+            "plant",
+            "--set",
+            "num_devices=480",
+        ]))
+        .unwrap();
+        assert_eq!(b.sim_config().unwrap().num_devices, 480);
+        let bad = Args::parse(&sv(&["train", "--scenario", "galaxy"])).unwrap();
         assert!(bad.sim_config().is_err());
     }
 

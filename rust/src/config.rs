@@ -250,10 +250,68 @@ impl SimConfig {
         Ok(())
     }
 
+    /// Apply a named scale scenario: a consistent (M, N, J, shard-size,
+    /// test-size) working point for the large-N round engine. Scenarios
+    /// are applied BEFORE `--set` overrides, so individual knobs can still
+    /// be tuned on top; everything re-validates afterwards — nothing is
+    /// relaxed silently.
+    ///
+    /// | scenario | gateways M | devices N | channels J | D_n range |
+    /// |---|---|---|---|---|
+    /// | `paper`  | 6 (default) | 12 | 3 | (200, 2000] |
+    /// | `plant`  | 24 | 240 | 8 | (32, 256] |
+    /// | `campus` | 48 | 960 | 12 | (32, 128] |
+    /// | `metro`  | 96 | 2880 | 16 | (16, 64] |
+    ///
+    /// The per-device dataset sizes shrink as N grows so total shard
+    /// memory stays bounded; the training batch each device feeds the
+    /// backend is the preset's fixed batch either way (D̃_n only weights
+    /// aggregation and the cost model).
+    pub fn apply_scenario(&mut self, name: &str) -> anyhow::Result<()> {
+        match name {
+            // The paper's §VII-A working point — the defaults.
+            "paper" => {}
+            "plant" => {
+                self.num_gateways = 24;
+                self.num_devices = 240;
+                self.num_channels = 8;
+                self.dataset_min = 32;
+                self.dataset_max = 256;
+                self.test_size = 512;
+            }
+            "campus" => {
+                self.num_gateways = 48;
+                self.num_devices = 960;
+                self.num_channels = 12;
+                self.dataset_min = 32;
+                self.dataset_max = 128;
+                self.test_size = 512;
+            }
+            "metro" => {
+                self.num_gateways = 96;
+                self.num_devices = 2880;
+                self.num_channels = 16;
+                self.dataset_min = 16;
+                self.dataset_max = 64;
+                self.test_size = 256;
+            }
+            other => bail!("unknown scenario {other:?} (known: paper, plant, campus, metro)"),
+        }
+        Ok(())
+    }
+
     /// Validate cross-field invariants before a run.
     pub fn validate(&self) -> anyhow::Result<()> {
         if self.num_gateways == 0 || self.num_devices == 0 {
             bail!("topology must be non-empty");
+        }
+        if self.num_devices < self.num_gateways {
+            bail!(
+                "num_devices ({}) < num_gateways ({}): every shop floor needs at \
+                 least one member device",
+                self.num_devices,
+                self.num_gateways
+            );
         }
         if self.num_devices % self.num_gateways != 0 {
             bail!(
@@ -339,6 +397,38 @@ mod tests {
         let mut c2 = SimConfig::default();
         c2.num_channels = 7;
         assert!(c2.validate().is_err());
+        // Fewer devices than gateways would leave empty shop floors; the
+        // dedicated check fires with the clear message.
+        let mut c3 = SimConfig::default();
+        c3.num_devices = 3;
+        c3.num_gateways = 6;
+        c3.num_channels = 3;
+        let err = c3.validate().unwrap_err().to_string();
+        assert!(err.contains("shop floor"), "{err}");
+    }
+
+    #[test]
+    fn scenarios_scale_and_validate() {
+        for (name, n, m, j) in [
+            ("paper", 12, 6, 3),
+            ("plant", 240, 24, 8),
+            ("campus", 960, 48, 12),
+            ("metro", 2880, 96, 16),
+        ] {
+            let mut c = SimConfig::default();
+            c.apply_scenario(name).unwrap();
+            assert_eq!((c.num_devices, c.num_gateways, c.num_channels), (n, m, j), "{name}");
+            c.validate().unwrap();
+            // Devices spread evenly, at least one per floor.
+            assert!(c.devices_per_gateway() >= 1, "{name}");
+        }
+        assert!(SimConfig::default().apply_scenario("galaxy").is_err());
+        // Scenario + override composition: knobs on top still validate.
+        let mut c = SimConfig::default();
+        c.apply_scenario("plant").unwrap();
+        c.set("num_devices", "480").unwrap();
+        c.validate().unwrap();
+        assert_eq!(c.devices_per_gateway(), 20);
     }
 
     #[test]

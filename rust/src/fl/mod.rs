@@ -1,10 +1,14 @@
-//! Federated learning core: FedAvg aggregation, the §IV device-specific
-//! participation-rate machinery, and the round-loop orchestrator that ties
-//! scheduling, simulation and backend execution together.
+//! Federated learning core: FedAvg aggregation (streaming accumulators in
+//! [`vecmath`]), the §IV device-specific participation-rate machinery, the
+//! experiment orchestrator that ties scheduling, simulation and backend
+//! execution together, and the parallel streaming [`round`] engine that
+//! executes the communication rounds.
 
 pub mod orchestrator;
 pub mod participation;
+pub mod round;
 pub mod vecmath;
 
 pub use orchestrator::{Experiment, RoundRecord, RunLog, RunOpts};
 pub use participation::{gamma_rates, phi_m, GradStats};
+pub use round::RoundEngine;

@@ -1,31 +1,32 @@
 //! The FL orchestrator: owns one experiment (topology, data, channel and
-//! energy processes, execution backend) and runs schedulers against it.
+//! energy processes, execution backend) and the local-training primitives.
+//! The communication-round loop itself lives in the parallel streaming
+//! round engine, [`crate::fl::round`] — phases: draw environment →
+//! schedule → feasibility → local training (rayon device fan-out) →
+//! streaming aggregation → eval.
 //!
-//! One communication round (§III-A):
-//!   1. draw the block-fading channel state and the EH energy arrivals;
-//!   2. the scheduler picks J gateways + resources (X(t));
-//!   3. feasibility is enforced (C7–C10) — infeasible plans "fail" and
-//!      contribute no update (the baselines' failure mode in §VII-C);
-//!   4. every scheduled device runs K local SGD iterations through the
-//!      execution backend — the pure-Rust layer-graph `NativeBackend` by
-//!      default (`mlp` and `cnn` presets), the AOT train-step artifact
-//!      under the `pjrt` feature. With `execute_partition` set, each
-//!      device's step instead runs through the split-execution
-//!      `PartitionedBackend` at EXACTLY the partition point l_n the
-//!      scheduler chose for it this round (`GatewayPlan::partition`):
-//!      device half forward → smashed-activation upload → gateway half
-//!      forward/backward → cut-gradient download → device half backward.
-//!      Split and fused execution are byte-identical at every cut point
-//!      (pinned by rust/tests/partition.rs and examples/partitioned_step),
-//!      so turning the flag on changes WHERE the layers run, never the
-//!      numbers;
-//!   5. shop-floor FedAvg then global FedAvg (both weight by D̃_n);
-//!   6. periodic evaluation on the IID test set.
+//! Per round (§III-A): the scheduler picks J gateways + resources X(t);
+//! feasibility (C7–C10) is enforced — infeasible plans "fail" and
+//! contribute no update (the baselines' failure mode in §VII-C); every
+//! scheduled device runs K local SGD iterations through the execution
+//! backend — the pure-Rust layer-graph `NativeBackend` by default (`mlp`
+//! and `cnn` presets), the AOT train-step artifact under the `pjrt`
+//! feature. With `execute_partition` set, each device's step instead runs
+//! through the split-execution `PartitionedBackend` at EXACTLY the
+//! partition point l_n the scheduler chose for it this round
+//! (`GatewayPlan::partition`): device half forward → smashed-activation
+//! upload → gateway half forward/backward → cut-gradient download →
+//! device half backward. Split and fused execution are byte-identical at
+//! every cut point (pinned by rust/tests/partition.rs and
+//! examples/partitioned_step), so turning the flag on changes WHERE the
+//! layers run, never the numbers. Shop-floor FedAvg then global FedAvg
+//! (both weight by D̃_n) close the round.
 //!
 //! Environment realisations (channels, energy, batch sampling) are drawn
-//! from RNG streams forked from the config seed, NOT from scheduler state,
-//! so different schedulers face identical conditions — paired comparison,
-//! as in the paper's figures.
+//! from stateless RNG streams keyed on the config seed (see the stream
+//! map in [`crate::fl::round`]), NOT from scheduler state, so different
+//! schedulers face identical conditions — paired comparison, as in the
+//! paper's figures.
 
 use anyhow::{Context, Result};
 
@@ -34,14 +35,11 @@ use crate::data::synth::{DatasetFlavor, SynthData, IMG_DIM};
 use crate::data::{shard_non_iid, DeviceShard};
 use crate::dnn::models;
 use crate::dnn::ModelSpec;
-use crate::energy::EnergyArrivals;
-use crate::fl::participation::GradStats;
-use crate::fl::vecmath;
+use crate::fl::round::RoundEngine;
 use crate::net::ChannelModel;
 use crate::rng::Rng;
 use crate::runtime::{make_backend, make_partitioned_stack, Backend, Params, PartitionedBackend};
-use crate::sched::latency::plan_cost;
-use crate::sched::{RoundCtx, RoundFeedback, Scheduler};
+use crate::sched::Scheduler;
 use crate::topo::Topology;
 
 /// Options for one scheduler run.
@@ -147,6 +145,9 @@ impl Experiment {
         cfg.validate()?;
         let mut rng = Rng::new(cfg.seed);
         let topo = Topology::generate(&cfg, &mut rng.fork(1));
+        // Structural invariants the round engine divides by (member counts,
+        // FedAvg weights) are enforced once, up front.
+        topo.validate()?;
         let chan = ChannelModel::new(&cfg, &topo, &mut rng.fork(2));
         let flavor = DatasetFlavor::parse(&cfg.dataset)
             .with_context(|| format!("unknown dataset {:?}", cfg.dataset))?;
@@ -229,7 +230,9 @@ impl Experiment {
     }
 
     /// Sample a training batch (with replacement) from device n's shard.
-    fn sample_batch(&self, n: usize, rng: &mut Rng) -> (Vec<f32>, Vec<i32>) {
+    /// The round engine passes a per-(round, device) stream, so any worker
+    /// can draw any device's batches independently.
+    pub(crate) fn sample_batch(&self, n: usize, rng: &mut Rng) -> (Vec<f32>, Vec<i32>) {
         let b = self.engine.meta().train_batch;
         let shard = &self.shards[n];
         let mut x = Vec::with_capacity(b * IMG_DIM);
@@ -254,7 +257,7 @@ impl Experiment {
     /// The fused engine may batch the K steps into one call when its baked
     /// fused-K matches the config (§Perf: one PJRT call + one parameter
     /// round-trip instead of K); split backends always run K single steps.
-    fn local_train(
+    pub(crate) fn local_train(
         &self,
         n: usize,
         cut: Option<usize>,
@@ -297,249 +300,12 @@ impl Experiment {
         Ok((w, loss_sum / k as f64))
     }
 
-    /// Estimate σ_n, δ_n, L_n (§IV Assumptions) by gradient probing at the
-    /// current init. `probes` minibatch gradients per device.
-    pub fn estimate_grad_stats(&self, probes: usize) -> Result<GradStats> {
-        let params = self.engine.init_params()?;
-        let mut rng = Rng::new(self.cfg.seed ^ 0x9d0b);
-        let n_dev = self.topo.num_devices();
-        let b = self.engine.meta().train_batch as f64;
-
-        // Per-device mean gradient + per-batch deviations.
-        let mut mean_grads: Vec<Vec<f32>> = Vec::with_capacity(n_dev);
-        let mut batch_grads: Vec<Vec<Vec<f32>>> = Vec::with_capacity(n_dev);
-        for n in 0..n_dev {
-            let gs: Vec<Vec<f32>> = (0..probes)
-                .map(|_| {
-                    let (x, y) = self.sample_batch(n, &mut rng);
-                    self.engine.grad(&params, &x, &y)
-                })
-                .collect::<Result<_>>()?;
-            mean_grads.push(vecmath::mean_flat(&gs));
-            batch_grads.push(gs);
-        }
-
-        // Global gradient: dataset-size-weighted mean (∇F definition).
-        let weighted: Vec<(&[f32], f64)> = (0..n_dev)
-            .map(|n| (mean_grads[n].as_slice(), self.topo.devices[n].dataset_size as f64))
-            .collect();
-        let global = vecmath::weighted_mean_flat(&weighted);
-
-        // σ_n ≈ √B · E_b ||g_b − ∇F_n|| (Assumption 1, minibatch estimator).
-        let sigma: Vec<f64> = (0..n_dev)
-            .map(|n| {
-                let mean_dev: f64 = batch_grads[n]
-                    .iter()
-                    .map(|g| vecmath::flat_l2_diff(g, &mean_grads[n]))
-                    .sum::<f64>()
-                    / probes as f64;
-                b.sqrt() * mean_dev
-            })
-            .collect();
-
-        // δ_n = ||∇F_n − ∇F|| (Assumption 2).
-        let delta: Vec<f64> = (0..n_dev)
-            .map(|n| vecmath::flat_l2_diff(&mean_grads[n], &global))
-            .collect();
-
-        // L_n: finite-difference smoothness probe along a random direction.
-        let mut lsmooth = Vec::with_capacity(n_dev);
-        let eps = 1e-2f32;
-        for n in 0..n_dev {
-            let mut pert = params.clone();
-            let mut dir_norm_sq = 0.0f64;
-            let mut prng = Rng::new(self.cfg.seed ^ (n as u64) << 8 ^ 0x51);
-            for t in pert.iter_mut() {
-                for v in t.iter_mut() {
-                    let d = prng.normal() as f32;
-                    *v += eps * d;
-                    dir_norm_sq += (eps * d) as f64 * (eps * d) as f64;
-                }
-            }
-            let (x, y) = self.sample_batch(n, &mut rng);
-            let g0 = self.engine.grad(&params, &x, &y)?;
-            let g1 = self.engine.grad(&pert, &x, &y)?;
-            let l = vecmath::flat_l2_diff(&g1, &g0) / dir_norm_sq.sqrt();
-            lsmooth.push(l.max(1e-6));
-        }
-
-        Ok(GradStats { sigma, delta, lsmooth })
-    }
-
-    /// Run one scheduler for `opts.rounds` communication rounds.
+    /// Run one scheduler for `opts.rounds` communication rounds through
+    /// the parallel streaming round engine — see [`crate::fl::round`] for
+    /// the phase structure, the RNG stream map, and the determinism
+    /// guarantees. (`estimate_grad_stats`, the §IV probe, also lives
+    /// there, on the same per-device streams.)
     pub fn run(&self, sched: &mut dyn Scheduler, opts: &RunOpts) -> Result<RunLog> {
-        let mm = self.topo.num_gateways();
-        // Environment streams: identical across schedulers (paired runs).
-        let mut chan_rng = Rng::new(self.cfg.seed ^ 0xc4a1);
-        let mut energy_rng = Rng::new(self.cfg.seed ^ 0xe9e1);
-        let mut sample_rng = Rng::new(self.cfg.seed ^ 0x5a3c);
-
-        let mut params = self.engine.init_params()?;
-        let mut records = Vec::with_capacity(opts.rounds);
-        let mut cum_delay = 0.0;
-        let mut sel_counts = vec![0usize; mm];
-        let mut eff_counts = vec![0usize; mm];
-
-        for t in 0..opts.rounds {
-            let state = self.chan.draw(&mut chan_rng);
-            let arrivals = EnergyArrivals::draw(&self.cfg, &mut energy_rng);
-            let ctx = RoundCtx {
-                cfg: &self.cfg,
-                topo: &self.topo,
-                model: &self.cost_model,
-                chan: &self.chan,
-                state: &state,
-                arrivals: &arrivals,
-                round: t,
-            };
-            let decision = sched.schedule(&ctx);
-            let delay = decision.round_delay();
-            cum_delay += delay;
-
-            let mut selected = vec![false; mm];
-            let mut failed = vec![false; mm];
-            let mut avg_loss: Vec<Option<f64>> = vec![None; mm];
-            // (params, weight) updates that survive feasibility.
-            let mut updates: Vec<(Params, f64)> = Vec::new();
-            let mut loss_accum = 0.0;
-            let mut loss_count = 0usize;
-
-            for plan in &decision.plans {
-                let m = plan.gateway;
-                selected[m] = true;
-                sel_counts[m] += 1;
-                let cost = plan_cost(&ctx, plan);
-                if !cost.feasible() {
-                    failed[m] = true;
-                    continue; // "fails to complete local model training"
-                }
-                eff_counts[m] += 1;
-                if opts.train {
-                    let mut floor_loss = 0.0;
-                    let members = &self.topo.gateways[m].members;
-                    for (i, &n) in members.iter().enumerate() {
-                        // The scheduler's chosen partition point for this
-                        // device — executed for real in split mode, where a
-                        // malformed plan (entry missing) must fail as loudly
-                        // as an out-of-range cut, not silently run fused.
-                        let cut = plan.partition.get(i).copied();
-                        if self.cfg.execute_partition && cut.is_none() {
-                            anyhow::bail!(
-                                "gateway {m}'s plan lacks a partition entry for \
-                                 member {i} (device {n}) in execute-partition mode"
-                            );
-                        }
-                        let (w, loss) = self.local_train(n, cut, &params, &mut sample_rng)?;
-                        let weight = self.topo.devices[n].train_batch as f64;
-                        updates.push((w, weight));
-                        floor_loss += loss;
-                        loss_accum += loss;
-                        loss_count += 1;
-                    }
-                    avg_loss[m] = Some(floor_loss / members.len() as f64);
-                }
-            }
-
-            // Divergence measurement (Fig. 2): every device trains from the
-            // current global model; centralized GD shadows on the union.
-            let divergence = if opts.track_divergence && opts.train {
-                Some(self.measure_divergence(&params, &mut sample_rng, &mut avg_loss)?)
-            } else {
-                None
-            };
-
-            // Global FedAvg (Eq. in §III-A step 3). Weighting by D̃_n makes
-            // the two-stage (floor, then BS) aggregation a single weighted
-            // average.
-            if !updates.is_empty() {
-                let refs: Vec<(&Params, f64)> = updates.iter().map(|(p, w)| (p, *w)).collect();
-                params = vecmath::weighted_average(&refs);
-            }
-
-            sched.observe(&RoundFeedback { avg_loss });
-
-            let (test_loss, test_acc) = if opts.eval_every > 0
-                && opts.train
-                && (t % opts.eval_every == opts.eval_every - 1 || t + 1 == opts.rounds)
-            {
-                let (l, a) = self.engine.eval_full(&params, &self.test_x, &self.test_y)?;
-                (Some(l), Some(a))
-            } else {
-                (None, None)
-            };
-
-            records.push(RoundRecord {
-                round: t,
-                delay,
-                cum_delay,
-                selected,
-                failed,
-                train_loss: (loss_count > 0).then(|| loss_accum / loss_count as f64),
-                test_loss,
-                test_acc,
-                divergence,
-            });
-        }
-
-        let t = opts.rounds as f64;
-        Ok(RunLog {
-            scheme: sched.name(),
-            records,
-            participation: sel_counts.iter().map(|&c| c as f64 / t).collect(),
-            effective_participation: eff_counts.iter().map(|&c| c as f64 / t).collect(),
-        })
-    }
-
-    /// Fig. 2 machinery: all devices train locally; a centralized-GD shadow
-    /// runs K steps on the union gradient; returns ||ŵ_m − v^{K,t}|| per
-    /// gateway.
-    fn measure_divergence(
-        &self,
-        params: &Params,
-        rng: &mut Rng,
-        avg_loss: &mut [Option<f64>],
-    ) -> Result<Vec<f64>> {
-        let n_dev = self.topo.num_devices();
-        // Local updates for every device.
-        let mut local: Vec<Params> = Vec::with_capacity(n_dev);
-        let mut losses: Vec<f64> = Vec::with_capacity(n_dev);
-        for n in 0..n_dev {
-            // The divergence probe has no scheduler plan (every device
-            // trains); it always measures through the fused engine.
-            let (w, loss) = self.local_train(n, None, params, rng)?;
-            local.push(w);
-            losses.push(loss);
-        }
-        // Centralized GD shadow: v ← v − β · ∇F(v), with ∇F estimated as
-        // the dataset-weighted mean of per-device minibatch gradients.
-        let mut v = params.clone();
-        for _ in 0..self.cfg.local_iters {
-            let grads: Vec<Vec<f32>> = (0..n_dev)
-                .map(|n| {
-                    let (x, y) = self.sample_batch(n, rng);
-                    self.engine.grad(&v, &x, &y)
-                })
-                .collect::<Result<_>>()?;
-            let weighted: Vec<(&[f32], f64)> = (0..n_dev)
-                .map(|n| (grads[n].as_slice(), self.topo.devices[n].dataset_size as f64))
-                .collect();
-            let g = vecmath::weighted_mean_flat(&weighted);
-            vecmath::sgd_step_flat(&mut v, &g, self.cfg.lr as f32);
-        }
-        // Per-gateway aggregated model vs the shadow.
-        let mut out = Vec::with_capacity(self.topo.num_gateways());
-        for gw in &self.topo.gateways {
-            let refs: Vec<(&Params, f64)> = gw
-                .members
-                .iter()
-                .map(|&n| (&local[n], self.topo.devices[n].train_batch as f64))
-                .collect();
-            let w_hat = vecmath::weighted_average(&refs);
-            out.push(vecmath::l2_diff(&w_hat, &v));
-            let floor_loss: f64 =
-                gw.members.iter().map(|&n| losses[n]).sum::<f64>() / gw.members.len() as f64;
-            avg_loss[gw.id] = Some(floor_loss);
-        }
-        Ok(out)
+        RoundEngine::new(self).run(sched, opts)
     }
 }

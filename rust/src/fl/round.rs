@@ -1,0 +1,483 @@
+//! The parallel streaming round engine: one §III-A communication round
+//! decomposed into explicit phases, executed with rayon device fan-out
+//! and O(1)-copy streaming aggregation.
+//!
+//! ```text
+//!   1 draw environment   block-fading channel state + EH energy arrivals
+//!   2 schedule           the Scheduler picks J gateways + resources X(t)
+//!   3 feasibility        C7–C10 — infeasible plans fail, train nothing
+//!   4 local training     K local SGD steps per device, rayon fan-out
+//!   5 aggregation        streaming weighted FedAvg (WeightedAccum)
+//!   6 evaluation         periodic IID test-set eval
+//! ```
+//!
+//! ## RNG stream map
+//!
+//! Every random draw comes from a stateless stream derived with
+//! [`Rng::stream`]`(cfg.seed, &[DOMAIN, ...])` — no generator state is
+//! shared between rounds, devices, or threads:
+//!
+//! | domain | key path | consumer |
+//! |---|---|---|
+//! | [`STREAM_CHANNEL`] | `[dom, round]` | block-fading channel state (phase 1) |
+//! | [`STREAM_ENERGY`] | `[dom, round]` | EH energy arrivals (phase 1) |
+//! | [`STREAM_TRAIN`] | `[dom, round, device]` | the device's K minibatch draws (phase 4) |
+//! | [`STREAM_DIVERGENCE`] | `[dom, round, device]` | Fig. 2 all-device local training |
+//! | [`STREAM_SHADOW`] | `[dom, round, iter, device]` | centralized-GD shadow minibatches |
+//! | [`STREAM_PROBE`] | `[dom, device]` | §IV gradient-probe minibatches |
+//! | [`STREAM_SMOOTH`] | `[dom, device]` | §IV L_n perturbation direction |
+//!
+//! Because device n's round-t batch stream depends only on
+//! `(seed, t, n)`, local training is **order-independent**: any worker
+//! may train any device at any time and the realised batches are
+//! identical. Combined with the fixed device-order aggregation fold,
+//! round logs are byte-identical across thread counts (pinned by
+//! `rust/tests/round_engine.rs`). Environment streams depend only on
+//! `(seed, t)`, so different schedulers still face identical conditions —
+//! the paper's paired-comparison property survives the refactor.
+//!
+//! Note (vs the PR 3 engine): the retired loop drew batches from ONE
+//! sequential `sample_rng`, so every realisation depended on how many
+//! draws every earlier device consumed. The stream keying above changes
+//! those sequences once — same distributions, different realisations —
+//! in exchange for order independence; `docs/ARCHITECTURE.md` §4 records
+//! the trade.
+//!
+//! ## Streaming aggregation
+//!
+//! Phase 4 trains devices in *waves* of `wave_width()` units: each wave
+//! fans out over rayon, and as results land they fold — in device order —
+//! into a [`WeightedAccum`] and are dropped. Live parameter copies are
+//! O(wave), never O(N); the fold order (and therefore every output byte)
+//! does not depend on the wave width or the worker count.
+
+use anyhow::Result;
+use rayon::prelude::*;
+
+use crate::energy::EnergyArrivals;
+use crate::fl::participation::GradStats;
+use crate::fl::vecmath::{self, FlatWeightedAccum, WeightedAccum};
+use crate::net::ChannelState;
+use crate::rng::Rng;
+use crate::runtime::Params;
+use crate::sched::{plan_cost, Decision, RoundCtx, RoundFeedback, Scheduler};
+
+use super::orchestrator::{Experiment, RoundRecord, RunLog, RunOpts};
+
+/// Stream domain: per-round channel fading (phase 1).
+pub const STREAM_CHANNEL: u64 = 0xC4A1;
+/// Stream domain: per-round energy arrivals (phase 1).
+pub const STREAM_ENERGY: u64 = 0xE9E1;
+/// Stream domain: per-(round, device) training minibatches (phase 4).
+pub const STREAM_TRAIN: u64 = 0x5A3C;
+/// Stream domain: per-(round, device) Fig. 2 divergence training.
+pub const STREAM_DIVERGENCE: u64 = 0xD1FE;
+/// Stream domain: per-(round, iter, device) centralized-GD shadow batches.
+pub const STREAM_SHADOW: u64 = 0x54AD;
+/// Stream domain: per-device §IV gradient-probe batches.
+pub const STREAM_PROBE: u64 = 0x9D0B;
+/// Stream domain: per-device §IV smoothness-probe perturbation.
+pub const STREAM_SMOOTH: u64 = 0x5100;
+
+/// Devices trained concurrently per streaming wave of phase 4: wide
+/// enough to keep every rayon worker busy, narrow enough that only
+/// O(wave) parameter copies are ever live. The aggregation fold walks
+/// devices in order regardless of the wave width, so this knob never
+/// changes the resulting bytes — only the memory/parallelism trade.
+fn wave_width() -> usize {
+    rayon::current_num_threads().saturating_mul(2).max(8)
+}
+
+/// One device's training assignment (phase-3 output, phase-4 input).
+#[derive(Clone, Copy, Debug)]
+struct TrainUnit {
+    device: usize,
+    gateway: usize,
+    /// Scheduler-chosen partition point (split execution); None = fused.
+    cut: Option<usize>,
+}
+
+/// Phase-4 output: the aggregate state of local training with every
+/// model update already folded away.
+struct TrainOutcome {
+    accum: WeightedAccum,
+    floor_loss: Vec<f64>,
+    floor_count: Vec<usize>,
+    loss_sum: f64,
+    loss_count: usize,
+}
+
+/// Executes communication rounds for one [`Experiment`].
+pub struct RoundEngine<'a> {
+    exp: &'a Experiment,
+}
+
+impl<'a> RoundEngine<'a> {
+    pub fn new(exp: &'a Experiment) -> Self {
+        RoundEngine { exp }
+    }
+
+    /// Phase 1: draw the round's environment. Streams depend only on
+    /// `(seed, round)`, so every scheduler faces identical conditions.
+    fn draw_env(&self, t: usize) -> (ChannelState, EnergyArrivals) {
+        let seed = self.exp.cfg.seed;
+        let mut chan_rng = Rng::stream(seed, &[STREAM_CHANNEL, t as u64]);
+        let mut energy_rng = Rng::stream(seed, &[STREAM_ENERGY, t as u64]);
+        let state = self.exp.chan.draw(&mut chan_rng);
+        let arrivals = EnergyArrivals::draw(&self.exp.cfg, &mut energy_rng);
+        (state, arrivals)
+    }
+
+    /// Phase 3: feasibility (C7–C10). Marks selected/failed gateways and
+    /// expands the surviving plans into per-device training units. A plan
+    /// that fails a constraint "fails to complete local model training"
+    /// (§VII-C) and contributes no units.
+    fn feasibility(
+        &self,
+        decision: &Decision,
+        ctx: &RoundCtx,
+        selected: &mut [bool],
+        failed: &mut [bool],
+    ) -> Result<Vec<TrainUnit>> {
+        let mut units = Vec::new();
+        for plan in &decision.plans {
+            let m = plan.gateway;
+            selected[m] = true;
+            if !plan_cost(ctx, plan).feasible() {
+                failed[m] = true;
+                continue;
+            }
+            for (i, &n) in self.exp.topo.gateways[m].members.iter().enumerate() {
+                // The scheduler's chosen partition point for this device —
+                // executed for real in split mode, where a malformed plan
+                // (entry missing) must fail as loudly as an out-of-range
+                // cut, not silently run fused.
+                let cut = plan.partition.get(i).copied();
+                if self.exp.cfg.execute_partition && cut.is_none() {
+                    anyhow::bail!(
+                        "gateway {m}'s plan lacks a partition entry for \
+                         member {i} (device {n}) in execute-partition mode"
+                    );
+                }
+                units.push(TrainUnit { device: n, gateway: m, cut });
+            }
+        }
+        Ok(units)
+    }
+
+    /// Phase 4 (+ the folding half of phase 5): rayon-parallel local
+    /// training in streaming waves. Each wave's results fold into the
+    /// weighted accumulator in device order and are dropped, so live
+    /// parameter copies stay O(wave) instead of O(N).
+    fn local_training(
+        &self,
+        t: usize,
+        units: &[TrainUnit],
+        params: &Params,
+    ) -> Result<TrainOutcome> {
+        let exp = self.exp;
+        let seed = exp.cfg.seed;
+        let mm = exp.topo.num_gateways();
+        let mut out = TrainOutcome {
+            accum: WeightedAccum::new(),
+            floor_loss: vec![0.0; mm],
+            floor_count: vec![0; mm],
+            loss_sum: 0.0,
+            loss_count: 0,
+        };
+        for wave in units.chunks(wave_width()) {
+            let results: Vec<Result<(Params, f64)>> = wave
+                .par_iter()
+                .map(|u| {
+                    let mut rng = Rng::stream(seed, &[STREAM_TRAIN, t as u64, u.device as u64]);
+                    exp.local_train(u.device, u.cut, params, &mut rng)
+                })
+                .collect();
+            for (u, res) in wave.iter().zip(results) {
+                let (w, loss) = res?;
+                out.accum.add(&w, exp.topo.devices[u.device].train_batch as f64);
+                out.floor_loss[u.gateway] += loss;
+                out.floor_count[u.gateway] += 1;
+                out.loss_sum += loss;
+                out.loss_count += 1;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Run one scheduler for `opts.rounds` communication rounds.
+    pub fn run(&self, sched: &mut dyn Scheduler, opts: &RunOpts) -> Result<RunLog> {
+        let exp = self.exp;
+        let mm = exp.topo.num_gateways();
+        let mut params = exp.engine.init_params()?;
+        let mut records = Vec::with_capacity(opts.rounds);
+        let mut cum_delay = 0.0;
+        let mut sel_counts = vec![0usize; mm];
+        let mut eff_counts = vec![0usize; mm];
+
+        for t in 0..opts.rounds {
+            // Phase 1: environment.
+            let (state, arrivals) = self.draw_env(t);
+            let ctx = RoundCtx {
+                cfg: &exp.cfg,
+                topo: &exp.topo,
+                model: &exp.cost_model,
+                chan: &exp.chan,
+                state: &state,
+                arrivals: &arrivals,
+                round: t,
+            };
+
+            // Phase 2: scheduling — X(t) = [I, l, P, f^G].
+            let decision = sched.schedule(&ctx);
+            let delay = decision.round_delay();
+            cum_delay += delay;
+
+            // Phase 3: feasibility.
+            let mut selected = vec![false; mm];
+            let mut failed = vec![false; mm];
+            let units = self.feasibility(&decision, &ctx, &mut selected, &mut failed)?;
+            for m in 0..mm {
+                sel_counts[m] += selected[m] as usize;
+                eff_counts[m] += (selected[m] && !failed[m]) as usize;
+            }
+
+            // Phase 4: parallel local training (streaming folds).
+            let outcome = if opts.train && !units.is_empty() {
+                Some(self.local_training(t, &units, &params)?)
+            } else {
+                None
+            };
+            let mut avg_loss: Vec<Option<f64>> = vec![None; mm];
+            let mut train_loss = None;
+            if let Some(o) = &outcome {
+                for m in 0..mm {
+                    if o.floor_count[m] > 0 {
+                        avg_loss[m] = Some(o.floor_loss[m] / o.floor_count[m] as f64);
+                    }
+                }
+                if o.loss_count > 0 {
+                    train_loss = Some(o.loss_sum / o.loss_count as f64);
+                }
+            }
+
+            // Divergence measurement (Fig. 2): from the round's STARTING
+            // model, before aggregation replaces it.
+            let divergence = if opts.track_divergence && opts.train {
+                Some(self.measure_divergence(t, &params, &mut avg_loss)?)
+            } else {
+                None
+            };
+
+            // Phase 5: global FedAvg (§III-A step 3). Weighting by D̃_n
+            // makes the two-stage (floor, then BS) aggregation a single
+            // weighted average; the accumulator already holds Σ w·p.
+            if let Some(o) = outcome {
+                if let Some(new_params) = o.accum.finish() {
+                    params = new_params;
+                }
+            }
+
+            sched.observe(&RoundFeedback { avg_loss });
+
+            // Phase 6: periodic evaluation.
+            let (test_loss, test_acc) = if opts.eval_every > 0
+                && opts.train
+                && (t % opts.eval_every == opts.eval_every - 1 || t + 1 == opts.rounds)
+            {
+                let (l, a) = exp.engine.eval_full(&params, &exp.test_x, &exp.test_y)?;
+                (Some(l), Some(a))
+            } else {
+                (None, None)
+            };
+
+            records.push(RoundRecord {
+                round: t,
+                delay,
+                cum_delay,
+                selected,
+                failed,
+                train_loss,
+                test_loss,
+                test_acc,
+                divergence,
+            });
+        }
+
+        let t = opts.rounds as f64;
+        Ok(RunLog {
+            scheme: sched.name(),
+            records,
+            participation: sel_counts.iter().map(|&c| c as f64 / t).collect(),
+            effective_participation: eff_counts.iter().map(|&c| c as f64 / t).collect(),
+        })
+    }
+
+    /// Fig. 2 machinery: every device trains locally from the current
+    /// global model (rayon fan-out, per-device [`STREAM_DIVERGENCE`]
+    /// streams); a centralized-GD shadow runs K steps on the streamed
+    /// union gradient; returns `‖ŵ_m − v^{K,t}‖` per gateway. Per-gateway
+    /// aggregates stream through [`WeightedAccum`] one shop floor at a
+    /// time, so live copies are O(floor), not O(N).
+    fn measure_divergence(
+        &self,
+        t: usize,
+        params: &Params,
+        avg_loss: &mut [Option<f64>],
+    ) -> Result<Vec<f64>> {
+        let exp = self.exp;
+        let seed = exp.cfg.seed;
+        let n_dev = exp.topo.num_devices();
+
+        // Centralized-GD shadow: v ← v − β·∇F(v), with ∇F the
+        // dataset-size-weighted mean of per-device minibatch gradients,
+        // streamed through a flat accumulator.
+        let mut v = params.clone();
+        let devices: Vec<usize> = (0..n_dev).collect();
+        for k in 0..exp.cfg.local_iters {
+            let mut gacc = FlatWeightedAccum::new();
+            for wave in devices.chunks(wave_width()) {
+                let grads: Vec<Result<Vec<f32>>> = wave
+                    .par_iter()
+                    .map(|&n| {
+                        let path = [STREAM_SHADOW, t as u64, k as u64, n as u64];
+                        let mut rng = Rng::stream(seed, &path);
+                        let (x, y) = exp.sample_batch(n, &mut rng);
+                        exp.engine.grad(&v, &x, &y)
+                    })
+                    .collect();
+                for (&n, g) in wave.iter().zip(grads) {
+                    gacc.add(&g?, exp.topo.devices[n].dataset_size as f64);
+                }
+            }
+            let g = gacc.finish().expect("validated: topology is non-empty");
+            vecmath::sgd_step_flat(&mut v, &g, exp.cfg.lr as f32);
+        }
+
+        // Per-gateway aggregated model vs the shadow, one floor at a time.
+        let mut out = Vec::with_capacity(exp.topo.num_gateways());
+        for gw in &exp.topo.gateways {
+            let members = &gw.members;
+            let results: Vec<Result<(Params, f64)>> = members
+                .par_iter()
+                .map(|&n| {
+                    // The divergence probe has no scheduler plan (every
+                    // device trains); it always measures through the
+                    // fused engine.
+                    let mut rng = Rng::stream(seed, &[STREAM_DIVERGENCE, t as u64, n as u64]);
+                    exp.local_train(n, None, params, &mut rng)
+                })
+                .collect();
+            let mut acc = WeightedAccum::new();
+            let mut floor_loss = 0.0;
+            for (&n, res) in members.iter().zip(results) {
+                let (w, loss) = res?;
+                acc.add(&w, exp.topo.devices[n].train_batch as f64);
+                floor_loss += loss;
+            }
+            let w_hat = acc.finish().expect("validated: no empty shop floors");
+            out.push(vecmath::l2_diff(&w_hat, &v));
+            avg_loss[gw.id] = Some(floor_loss / members.len() as f64);
+        }
+        Ok(out)
+    }
+}
+
+impl Experiment {
+    /// Estimate σ_n, δ_n, L_n (§IV Assumptions) by gradient probing at
+    /// the current init: `probes` minibatch gradients per device, drawn
+    /// from the per-device [`STREAM_PROBE`] streams and fanned out over
+    /// rayon.
+    ///
+    /// Two streaming passes keep memory O(wave·|w|) instead of
+    /// O(N·probes·|w|): pass 1 folds the dataset-size-weighted global
+    /// gradient while computing σ_n (Assumption 1) and the L_n
+    /// finite-difference smoothness probe; pass 2 REPLAYS each device's
+    /// probe stream — stateless streams make the replay free — to
+    /// re-derive its mean gradient and measure δ_n (Assumption 2) against
+    /// the global mean, so no per-device gradient is ever retained.
+    pub fn estimate_grad_stats(&self, probes: usize) -> Result<GradStats> {
+        anyhow::ensure!(probes > 0, "need at least one gradient probe per device");
+        let params = self.engine.init_params()?;
+        let seed = self.cfg.seed;
+        let n_dev = self.topo.num_devices();
+        let b = self.engine.meta().train_batch as f64;
+        let eps = 1e-2f32;
+
+        // The `probes` gradients of device n drawn from `rng` — replayable
+        // at will from the device's stateless stream, and the ONE
+        // definition both passes share, so the pass-2 replay can never
+        // drift from what pass 1 folded. The buffered gradients live only
+        // inside one call — O(probes·|w|) per in-flight task, not O(N·|w|).
+        let probe_grads = |n: usize, rng: &mut Rng| -> Result<Vec<Vec<f32>>> {
+            (0..probes)
+                .map(|_| {
+                    let (x, y) = self.sample_batch(n, rng);
+                    self.engine.grad(&params, &x, &y)
+                })
+                .collect()
+        };
+
+        // Pass 1 per device: σ_n, L_n, and the device's mean gradient for
+        // the global fold.
+        let probe_device = |n: usize| -> Result<(Vec<f32>, f64, f64)> {
+            let mut rng = Rng::stream(seed, &[STREAM_PROBE, n as u64]);
+            let gs = probe_grads(n, &mut rng)?;
+            let mean = vecmath::mean_flat(&gs);
+            // σ_n ≈ √B · E_b ‖g_b − ∇F_n‖ (Assumption 1, minibatch
+            // estimator).
+            let mean_dev: f64 =
+                gs.iter().map(|g| vecmath::flat_l2_diff(g, &mean)).sum::<f64>() / probes as f64;
+            let sigma = b.sqrt() * mean_dev;
+
+            // L_n: finite-difference smoothness probe along a random
+            // direction, on the stream's next batch.
+            let mut pert = params.clone();
+            let mut dir_norm_sq = 0.0f64;
+            let mut prng = Rng::stream(seed, &[STREAM_SMOOTH, n as u64]);
+            for tensor in pert.iter_mut() {
+                for v in tensor.iter_mut() {
+                    let d = prng.normal() as f32;
+                    *v += eps * d;
+                    dir_norm_sq += (eps * d) as f64 * (eps * d) as f64;
+                }
+            }
+            let (x, y) = self.sample_batch(n, &mut rng);
+            let g0 = self.engine.grad(&params, &x, &y)?;
+            let g1 = self.engine.grad(&pert, &x, &y)?;
+            let l = (vecmath::flat_l2_diff(&g1, &g0) / dir_norm_sq.sqrt()).max(1e-6);
+            Ok((mean, sigma, l))
+        };
+
+        let devices: Vec<usize> = (0..n_dev).collect();
+        let mut sigma = Vec::with_capacity(n_dev);
+        let mut lsmooth = Vec::with_capacity(n_dev);
+        let mut gacc = FlatWeightedAccum::new();
+        for wave in devices.chunks(wave_width()) {
+            let results: Vec<Result<(Vec<f32>, f64, f64)>> =
+                wave.par_iter().map(|&n| probe_device(n)).collect();
+            for (&n, res) in wave.iter().zip(results) {
+                let (mean, s, l) = res?;
+                // Global gradient: dataset-size-weighted mean (∇F
+                // definition), folded in device order.
+                gacc.add(&mean, self.topo.devices[n].dataset_size as f64);
+                sigma.push(s);
+                lsmooth.push(l);
+            }
+        }
+        let global = gacc.finish().expect("validated: topology is non-empty");
+
+        // Pass 2: δ_n = ‖∇F_n − ∇F‖ (Assumption 2), replaying each
+        // device's probe stream through the same draw sequence as pass 1.
+        let delta: Vec<f64> = devices
+            .par_iter()
+            .map(|&n| -> Result<f64> {
+                let mut rng = Rng::stream(seed, &[STREAM_PROBE, n as u64]);
+                let mean = vecmath::mean_flat(&probe_grads(n, &mut rng)?);
+                Ok(vecmath::flat_l2_diff(&mean, &global))
+            })
+            .collect::<Result<_>>()?;
+
+        Ok(GradStats { sigma, delta, lsmooth })
+    }
+}

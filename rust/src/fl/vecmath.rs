@@ -1,6 +1,14 @@
 //! Flat-vector arithmetic over model parameters (`Params`): FedAvg,
 //! divergence norms, and manual SGD steps for the centralized-GD shadow
 //! run all reduce to these primitives.
+//!
+//! The streaming accumulators ([`WeightedAccum`], [`FlatWeightedAccum`])
+//! are the round engine's O(1)-copy aggregation substrate: updates fold
+//! in one at a time and are dropped immediately, so FedAvg over N devices
+//! holds ONE parameter-shaped buffer instead of N. The batch helpers
+//! ([`weighted_average`], [`weighted_mean_flat`]) are thin folds through
+//! the same accumulators, which pins the two paths to each other
+//! bit-for-bit by construction (and by test).
 
 use crate::runtime::Params;
 
@@ -36,22 +44,140 @@ pub fn flat_l2_diff(a: &[f32], b: &[f32]) -> f64 {
         .sqrt()
 }
 
-/// Weighted average of parameter sets (FedAvg): Σ w_i p_i / Σ w_i.
-pub fn weighted_average(sets: &[(&Params, f64)]) -> Params {
-    assert!(!sets.is_empty(), "FedAvg over empty participant set");
-    let total: f64 = sets.iter().map(|(_, w)| w).sum();
-    assert!(total > 0.0, "FedAvg weights sum to zero");
-    let proto = sets[0].0;
-    let mut out: Params = proto.iter().map(|t| vec![0.0f32; t.len()]).collect();
-    for (params, w) in sets {
-        let scale = (w / total) as f32;
-        for (o, t) in out.iter_mut().zip(params.iter()) {
-            for (ov, &tv) in o.iter_mut().zip(t) {
-                *ov += scale * tv;
+/// Streaming FedAvg accumulator: Σ w_i·p_i (held in f64 so thousands of
+/// devices accumulate without f32 cancellation) plus Σ w_i — ONE
+/// parameter-shaped buffer no matter how many updates stream through.
+/// The FP result depends only on the SEQUENCE of [`WeightedAccum::add`]
+/// calls, never on wall-clock interleaving: fold in a fixed order
+/// (the round engine uses device order) and the aggregate bytes are
+/// independent of the thread count.
+#[derive(Clone, Debug, Default)]
+pub struct WeightedAccum {
+    /// Σ w_i·p_i per tensor; allocated lazily on the first `add`.
+    sum: Option<Vec<Vec<f64>>>,
+    total: f64,
+    count: usize,
+}
+
+impl WeightedAccum {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of updates folded in so far.
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Σ w_i so far.
+    pub fn total_weight(&self) -> f64 {
+        self.total
+    }
+
+    /// Fold one weighted parameter set in. Panics when the tensor layout
+    /// differs from the first update's (mixed-model aggregation is a bug).
+    pub fn add(&mut self, p: &Params, w: f64) {
+        assert!(w.is_finite() && w >= 0.0, "bad FedAvg weight {w}");
+        match &mut self.sum {
+            None => {
+                let scaled: Vec<Vec<f64>> =
+                    p.iter().map(|t| t.iter().map(|&v| v as f64 * w).collect()).collect();
+                self.sum = Some(scaled);
+            }
+            Some(sum) => {
+                assert_eq!(sum.len(), p.len(), "FedAvg tensor count changed mid-stream");
+                for (st, pt) in sum.iter_mut().zip(p) {
+                    assert_eq!(st.len(), pt.len(), "FedAvg tensor shape changed mid-stream");
+                    for (sv, &pv) in st.iter_mut().zip(pt) {
+                        *sv += pv as f64 * w;
+                    }
+                }
             }
         }
+        self.total += w;
+        self.count += 1;
     }
-    out
+
+    /// Σ w_i·p_i / Σ w_i. `None` when nothing was folded in; panics when
+    /// the folded weights sum to zero (FedAvg is undefined there).
+    pub fn finish(self) -> Option<Params> {
+        let sum = self.sum?;
+        assert!(self.total > 0.0, "FedAvg weights sum to zero");
+        let inv = 1.0 / self.total;
+        let mut out: Params = Vec::with_capacity(sum.len());
+        for t in sum {
+            out.push(t.into_iter().map(|v| (v * inv) as f32).collect());
+        }
+        Some(out)
+    }
+}
+
+/// Streaming weighted mean over FLAT f32 vectors — the gradient-space
+/// analogue of [`WeightedAccum`], used by the §IV probes and the
+/// centralized-GD shadow so no O(N) gradient buffer ever exists.
+#[derive(Clone, Debug, Default)]
+pub struct FlatWeightedAccum {
+    sum: Option<Vec<f64>>,
+    total: f64,
+    count: usize,
+}
+
+impl FlatWeightedAccum {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn total_weight(&self) -> f64 {
+        self.total
+    }
+
+    /// Fold one weighted flat vector in.
+    pub fn add(&mut self, v: &[f32], w: f64) {
+        assert!(w.is_finite() && w >= 0.0, "bad weight {w}");
+        match &mut self.sum {
+            None => self.sum = Some(v.iter().map(|&x| x as f64 * w).collect()),
+            Some(sum) => {
+                assert_eq!(sum.len(), v.len(), "flat vector length changed mid-stream");
+                for (s, &x) in sum.iter_mut().zip(v) {
+                    *s += x as f64 * w;
+                }
+            }
+        }
+        self.total += w;
+        self.count += 1;
+    }
+
+    /// Σ w_i·v_i / Σ w_i; `None` when nothing was folded in.
+    pub fn finish(self) -> Option<Vec<f32>> {
+        let sum = self.sum?;
+        assert!(self.total > 0.0, "weights sum to zero");
+        let inv = 1.0 / self.total;
+        Some(sum.into_iter().map(|v| (v * inv) as f32).collect())
+    }
+}
+
+/// Weighted average of parameter sets (FedAvg): Σ w_i p_i / Σ w_i.
+/// A fold through [`WeightedAccum`], so the batch helper and streaming
+/// aggregation are bit-identical on the same inputs in the same order.
+pub fn weighted_average(sets: &[(&Params, f64)]) -> Params {
+    assert!(!sets.is_empty(), "FedAvg over empty participant set");
+    let mut acc = WeightedAccum::new();
+    for (p, w) in sets {
+        acc.add(p, *w);
+    }
+    acc.finish().expect("non-empty FedAvg")
 }
 
 /// In-place SGD step on params from a flat gradient: p -= lr * g.
@@ -79,18 +205,14 @@ pub fn mean_flat(vs: &[Vec<f32>]) -> Vec<f32> {
     out
 }
 
-/// Weighted mean of flat vectors.
+/// Weighted mean of flat vectors — a fold through [`FlatWeightedAccum`].
 pub fn weighted_mean_flat(vs: &[(&[f32], f64)]) -> Vec<f32> {
     assert!(!vs.is_empty());
-    let total: f64 = vs.iter().map(|(_, w)| w).sum();
-    let mut out = vec![0.0f32; vs[0].0.len()];
+    let mut acc = FlatWeightedAccum::new();
     for (v, w) in vs {
-        let s = (w / total) as f32;
-        for (o, &x) in out.iter_mut().zip(v.iter()) {
-            *o += s * x;
-        }
+        acc.add(v, *w);
     }
-    out
+    acc.finish().expect("non-empty weighted mean")
 }
 
 #[cfg(test)]
@@ -155,5 +277,55 @@ mod tests {
     fn norms() {
         assert!((norm(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
         assert!((flat_l2_diff(&[1.0, 1.0], &[1.0, 2.0]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weighted_accum_streams_to_the_batch_average_bitwise() {
+        let sets = [
+            (p(&[&[1.0, -2.0], &[0.5]]), 2.0),
+            (p(&[&[3.0, 0.25], &[-1.5]]), 5.0),
+            (p(&[&[-0.75, 4.0], &[2.0]]), 0.5),
+        ];
+        let refs: Vec<(&Params, f64)> = sets.iter().map(|(p, w)| (p, *w)).collect();
+        let batch = weighted_average(&refs);
+        let mut acc = WeightedAccum::new();
+        for (params, w) in &sets {
+            acc.add(params, *w);
+        }
+        assert_eq!(acc.count(), 3);
+        assert!((acc.total_weight() - 7.5).abs() < 1e-12);
+        let streamed = acc.finish().unwrap();
+        for (tb, ts) in batch.iter().zip(&streamed) {
+            for (vb, vs) in tb.iter().zip(ts) {
+                assert_eq!(vb.to_bits(), vs.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_accum_empty_and_shape_guards() {
+        assert!(WeightedAccum::new().finish().is_none());
+        assert!(WeightedAccum::new().is_empty());
+        let mut acc = WeightedAccum::new();
+        acc.add(&p(&[&[1.0, 2.0]]), 1.0);
+        let bad = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            acc.add(&p(&[&[1.0, 2.0, 3.0]]), 1.0);
+        }));
+        assert!(bad.is_err(), "shape change mid-stream must panic");
+    }
+
+    #[test]
+    fn flat_weighted_accum_matches_weighted_mean_flat() {
+        let a = [0.5f32, -1.0, 2.0];
+        let b = [4.0f32, 0.0, -3.0];
+        let batch = weighted_mean_flat(&[(&a[..], 1.5), (&b[..], 3.5)]);
+        let mut acc = FlatWeightedAccum::new();
+        acc.add(&a, 1.5);
+        acc.add(&b, 3.5);
+        let streamed = acc.finish().unwrap();
+        for (x, y) in batch.iter().zip(&streamed) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert!(FlatWeightedAccum::new().finish().is_none());
     }
 }

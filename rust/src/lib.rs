@@ -32,7 +32,9 @@
 //! - [`energy`] — energy-harvesting arrivals + consumption (Eq. 2, 3, 9)
 //! - [`opt`] — Hungarian assignment + scalar bisection substrates
 //! - [`sched`] — DDSRA (§V) and the four baseline schedulers
-//! - [`fl`] — FL orchestration, FedAvg, participation rates (§IV)
+//! - [`fl`] — FL orchestration, the parallel streaming round engine
+//!   ([`fl::round`]: rayon device fan-out, stateless per-(round, device)
+//!   RNG streams, O(1)-copy FedAvg), participation rates (§IV)
 //! - [`data`] — synthetic SVHN/CIFAR-like datasets + non-IID sharding
 //! - [`runtime`] — the [`runtime::Backend`] trait + native/PJRT engines
 //! - [`rng`], [`config`], [`metrics`], [`cli`] — infrastructure

@@ -44,6 +44,8 @@ fn print_help() {
          commands: train | participation | info\n\
          common flags: --rounds N --v V --seed S --dataset svhn|cifar\n\
          \u{20}                --preset mlp|cnn --cost-model vgg11|cnn|mlp\n\
+         \u{20}                --scenario paper|plant|campus|metro (scale preset,\n\
+         \u{20}                applied before --set overrides)\n\
          \u{20}                --set key=value (any config key) --config file\n\
          train flags:  --scheme ddsra|participation|random|round_robin|\n\
          \u{20}                loss_driven|delay_driven --out results/run.csv\n\

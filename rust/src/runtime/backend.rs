@@ -37,7 +37,12 @@ use super::meta::ModelMeta;
 pub type Params = Vec<Vec<f32>>;
 
 /// One model preset's training/evaluation runtime.
-pub trait Backend {
+///
+/// `Send + Sync` is part of the contract: the round engine fans
+/// `local_train` calls out over rayon, so every backend must be safely
+/// shareable across worker threads (the native layer-graph backends are
+/// stateless per call; a PJRT engine must wrap a thread-safe client).
+pub trait Backend: Send + Sync {
     /// Shapes and sizes of the preset this backend executes.
     fn meta(&self) -> &ModelMeta;
 

@@ -8,6 +8,13 @@
 //! NOTE: the `xla` crate is not on crates.io; enabling this feature
 //! requires adding a vendored checkout of xla-rs under `[dependencies]`
 //! in Cargo.toml (e.g. `xla = { path = "../xla-rs" }`).
+//!
+//! NOTE: [`Backend`] is `Send + Sync` (the round engine fans device
+//! training out over rayon), so the vendored xla-rs types backing
+//! [`Engine`] must be `Send + Sync` too. XLA's underlying `PjRtClient` /
+//! `PjRtLoadedExecutable` are thread-safe C++ objects; if the vendored
+//! binding does not mark its wrappers accordingly, patch the vendored
+//! crate rather than weakening the trait bound.
 
 use std::path::{Path, PathBuf};
 

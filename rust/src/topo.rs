@@ -93,6 +93,49 @@ impl Topology {
         Topology { devices, gateways }
     }
 
+    /// Structural invariants the round engine divides by: every gateway
+    /// owns at least one device (an empty shop floor would turn the
+    /// per-floor loss/FedAvg denominators into NaN), every member list
+    /// points back at its gateway, and every device is deployed exactly
+    /// once. `Experiment` construction runs this once up front, so the
+    /// round loop never re-checks.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.devices.is_empty() || self.gateways.is_empty() {
+            anyhow::bail!("topology must contain at least one device and one gateway");
+        }
+        let mut deployed = vec![false; self.devices.len()];
+        for g in &self.gateways {
+            if g.members.is_empty() {
+                anyhow::bail!(
+                    "gateway {} has no member devices (empty shop floor): \
+                     FedAvg and the per-floor loss are undefined there",
+                    g.id
+                );
+            }
+            for &n in &g.members {
+                if n >= self.devices.len() {
+                    anyhow::bail!("gateway {} lists unknown device {n}", g.id);
+                }
+                let dev = &self.devices[n];
+                if dev.gateway != g.id {
+                    anyhow::bail!(
+                        "device {n} is deployed on gateway {} but listed by gateway {}",
+                        dev.gateway,
+                        g.id
+                    );
+                }
+                if deployed[n] {
+                    anyhow::bail!("device {n} is listed by two gateways");
+                }
+                deployed[n] = true;
+            }
+        }
+        if let Some(n) = deployed.iter().position(|&d| !d) {
+            anyhow::bail!("device {n} belongs to no gateway");
+        }
+        Ok(())
+    }
+
     pub fn num_devices(&self) -> usize {
         self.devices.len()
     }
@@ -165,6 +208,33 @@ mod tests {
         for g in &t.gateways {
             assert!(g.distance >= cfg.gw_dist_min && g.distance <= cfg.gw_dist_max);
         }
+    }
+
+    #[test]
+    fn validate_accepts_generated_and_rejects_broken_topologies() {
+        let t = topo();
+        t.validate().unwrap();
+
+        // An emptied shop floor is caught.
+        let mut empty = topo();
+        empty.gateways[0].members.clear();
+        let err = empty.validate().unwrap_err().to_string();
+        assert!(err.contains("empty shop floor"), "{err}");
+
+        // A member list pointing at a foreign device is caught.
+        let mut cross = topo();
+        let stolen = cross.gateways[1].members[0];
+        cross.gateways[0].members.push(stolen);
+        assert!(cross.validate().is_err());
+
+        // Scales: a hundreds-of-devices generation still validates.
+        let mut cfg = SimConfig::default();
+        cfg.num_gateways = 24;
+        cfg.num_devices = 240;
+        let big = Topology::generate(&cfg, &mut Rng::new(5));
+        assert_eq!(big.num_devices(), 240);
+        assert_eq!(big.num_gateways(), 24);
+        big.validate().unwrap();
     }
 
     #[test]

@@ -1,12 +1,17 @@
 //! Deterministic-replay guarantee: two `Experiment::run` invocations built
 //! from the same `SimConfig` seed must produce BYTE-identical round logs —
-//! bit-for-bit equal floats, not approximately equal. This pins down
-//! `rng.rs` stream forking and protects future parallelism work (the rayon
-//! DDSRA path must not perturb results either).
+//! bit-for-bit equal floats, not approximately equal. This pins down the
+//! `rng.rs` stateless stream keying the round engine draws from, and
+//! protects the parallel paths (rayon DDSRA and the rayon device fan-out
+//! must not perturb results; `rust/tests/round_engine.rs` additionally
+//! pins thread-count invariance at large N).
 
+mod common;
+
+use common::serialize;
 use iiot_fl::config::SimConfig;
 use iiot_fl::fl::participation::gamma_rates;
-use iiot_fl::fl::{Experiment, RunLog, RunOpts};
+use iiot_fl::fl::{Experiment, RunOpts};
 use iiot_fl::sched::Ddsra;
 
 fn cfg() -> SimConfig {
@@ -16,34 +21,6 @@ fn cfg() -> SimConfig {
     cfg.dataset_max = 500;
     cfg.rounds = 3;
     cfg
-}
-
-/// Render every field of every round record with exact bit patterns.
-fn serialize(log: &RunLog) -> String {
-    let bits = |v: f64| format!("{:016x}", v.to_bits());
-    let opt = |v: Option<f64>| v.map_or("-".into(), bits);
-    let mut out = String::new();
-    out.push_str(&log.scheme);
-    out.push('\n');
-    for r in &log.records {
-        out.push_str(&format!(
-            "{}|{}|{}|{:?}|{:?}|{}|{}|{}|{:?}\n",
-            r.round,
-            bits(r.delay),
-            bits(r.cum_delay),
-            r.selected,
-            r.failed,
-            opt(r.train_loss),
-            opt(r.test_loss),
-            opt(r.test_acc),
-            r.divergence.as_ref().map(|d| d.iter().map(|&v| bits(v)).collect::<Vec<_>>()),
-        ));
-    }
-    for p in log.participation.iter().chain(&log.effective_participation) {
-        out.push_str(&bits(*p));
-        out.push('\n');
-    }
-    out
 }
 
 #[test]

@@ -1,0 +1,182 @@
+//! Round-engine guarantees: streaming aggregation is bit-identical to the
+//! batch FedAvg helper, a parallel large-N run replays byte-identically
+//! across rayon thread counts (the per-(round, device) RNG-stream
+//! property), the §IV gradient probes are thread-count-invariant, scale
+//! scenarios validate, and empty shop floors are rejected up front.
+
+mod common;
+
+use common::serialize;
+use iiot_fl::config::SimConfig;
+use iiot_fl::fl::vecmath::{weighted_average, WeightedAccum};
+use iiot_fl::fl::{Experiment, RunOpts};
+use iiot_fl::rng::Rng;
+use iiot_fl::runtime::Params;
+use iiot_fl::topo::Topology;
+
+fn random_params(rng: &mut Rng, shapes: &[usize]) -> Params {
+    shapes
+        .iter()
+        .map(|&len| (0..len).map(|_| rng.normal() as f32).collect())
+        .collect()
+}
+
+/// The streaming accumulator must equal `vecmath::weighted_average`
+/// BITWISE on random inputs — the O(1)-copy aggregation path and the
+/// batch helper are one set of numerics.
+#[test]
+fn weighted_accum_is_bitwise_equal_to_weighted_average() {
+    let mut rng = Rng::new(0xacc0);
+    for case in 0..20usize {
+        let participants = 1 + case % 9;
+        let sets: Vec<(Params, f64)> = (0..participants)
+            .map(|_| {
+                let p = random_params(&mut rng, &[37, 5, 12]);
+                let w = rng.uniform(0.5, 120.0);
+                (p, w)
+            })
+            .collect();
+        let refs: Vec<(&Params, f64)> = sets.iter().map(|(p, w)| (p, *w)).collect();
+        let batch = weighted_average(&refs);
+        let mut acc = WeightedAccum::new();
+        for (p, w) in &sets {
+            acc.add(p, *w);
+        }
+        assert_eq!(acc.count(), participants);
+        let streamed = acc.finish().unwrap();
+        assert_eq!(batch.len(), streamed.len());
+        for (t, (tb, ts)) in batch.iter().zip(&streamed).enumerate() {
+            for (i, (vb, vs)) in tb.iter().zip(ts).enumerate() {
+                assert_eq!(
+                    vb.to_bits(),
+                    vs.to_bits(),
+                    "case {case} tensor {t} idx {i}: {vb} vs {vs}"
+                );
+            }
+        }
+    }
+}
+
+/// THE large-N replay guarantee: a parallel 240-device run produces
+/// byte-identical round logs whether rayon runs 1 worker or 8 (the
+/// RAYON_NUM_THREADS=1 vs =8 property, pinned with explicit pools so one
+/// test process can compare both). Per-(round, device) RNG streams make
+/// training order-independent; the device-order aggregation fold makes
+/// the FedAvg bytes schedule-independent.
+#[test]
+fn large_n_run_is_byte_identical_across_thread_counts() {
+    let mut cfg = SimConfig::default();
+    cfg.apply_scenario("plant").unwrap(); // N=240, M=24, J=8
+    cfg.dataset_min = 16;
+    cfg.dataset_max = 48; // small shards keep the test quick
+    cfg.test_size = 256;
+    cfg.local_iters = 1;
+    cfg.rounds = 2;
+    // Budgets generous enough that scheduled floors really train — the
+    // replay must cover the parallel training path, not just scheduling.
+    cfg.device_energy_max = 500.0;
+    cfg.gw_energy_max = 5000.0;
+    let opts = RunOpts { rounds: 2, eval_every: 2, track_divergence: false, train: true };
+    let run_with = |threads: usize| {
+        let pool = rayon::ThreadPoolBuilder::new().num_threads(threads).build().unwrap();
+        pool.install(|| {
+            let exp = Experiment::new(cfg.clone()).unwrap();
+            let mut sched = exp.make_scheduler("round_robin").unwrap();
+            let log = exp.run(sched.as_mut(), &opts).unwrap();
+            assert!(
+                log.records.iter().any(|r| r.train_loss.is_some()),
+                "the large-N run must actually train"
+            );
+            serialize(&log)
+        })
+    };
+    assert_eq!(run_with(1), run_with(8), "thread count changed the round bytes");
+}
+
+/// The §IV gradient probes (per-device streams, two streaming passes)
+/// are deterministic and thread-count-invariant too — DDSRA's Γ_m rates
+/// must not depend on the worker count.
+#[test]
+fn grad_stats_are_thread_count_invariant() {
+    let mut cfg = SimConfig::default();
+    cfg.dataset_max = 400;
+    cfg.test_size = 256;
+    let stats_with = |threads: usize| {
+        let pool = rayon::ThreadPoolBuilder::new().num_threads(threads).build().unwrap();
+        pool.install(|| {
+            let exp = Experiment::new(cfg.clone()).unwrap();
+            exp.estimate_grad_stats(3).unwrap()
+        })
+    };
+    let a = stats_with(1);
+    let b = stats_with(4);
+    for (x, y) in a.sigma.iter().zip(&b.sigma) {
+        assert_eq!(x.to_bits(), y.to_bits(), "sigma diverged across pools");
+    }
+    for (x, y) in a.delta.iter().zip(&b.delta) {
+        assert_eq!(x.to_bits(), y.to_bits(), "delta diverged across pools");
+    }
+    for (x, y) in a.lsmooth.iter().zip(&b.lsmooth) {
+        assert_eq!(x.to_bits(), y.to_bits(), "lsmooth diverged across pools");
+    }
+    assert!(a.sigma.iter().all(|&s| s.is_finite() && s >= 0.0));
+    assert!(a.lsmooth.iter().all(|&l| l > 0.0));
+}
+
+/// Divergence mode through the engine: per-gateway measurements stay
+/// finite and replay exactly (the Fig. 2 path uses its own stream
+/// domains).
+#[test]
+fn divergence_mode_replays_through_the_engine() {
+    let mut cfg = SimConfig::default();
+    cfg.dataset_max = 400;
+    cfg.test_size = 256;
+    cfg.rounds = 2;
+    let opts = RunOpts { rounds: 2, eval_every: 0, track_divergence: true, train: true };
+    let run = || {
+        let exp = Experiment::new(cfg.clone()).unwrap();
+        let mut sched = exp.make_scheduler("round_robin").unwrap();
+        let log = exp.run(sched.as_mut(), &opts).unwrap();
+        for r in &log.records {
+            let d = r.divergence.as_ref().expect("divergence recorded every round");
+            assert_eq!(d.len(), exp.topo.num_gateways());
+            assert!(d.iter().all(|&v| v.is_finite() && v > 0.0), "{d:?}");
+        }
+        serialize(&log)
+    };
+    assert_eq!(run(), run(), "divergence-mode replay diverged");
+}
+
+/// Scale scenarios produce validating configs; unknown names fail.
+#[test]
+fn scale_scenarios_validate() {
+    for (name, n, m) in
+        [("paper", 12, 6), ("plant", 240, 24), ("campus", 960, 48), ("metro", 2880, 96)]
+    {
+        let mut cfg = SimConfig::default();
+        cfg.apply_scenario(name).unwrap();
+        assert_eq!((cfg.num_devices, cfg.num_gateways), (n, m), "{name}");
+        cfg.validate().unwrap();
+    }
+    assert!(SimConfig::default().apply_scenario("galaxy").is_err());
+}
+
+/// Empty shop floors are rejected up front — at the config level (fewer
+/// devices than gateways) and at the topology level (a hand-emptied
+/// member list) — instead of surfacing as NaN losses mid-run.
+#[test]
+fn empty_shop_floors_are_rejected_up_front() {
+    let mut cfg = SimConfig::default();
+    cfg.num_devices = 3;
+    cfg.num_gateways = 6;
+    cfg.num_channels = 3;
+    let err = cfg.validate().unwrap_err().to_string();
+    assert!(err.contains("shop floor"), "{err}");
+    assert!(Experiment::new(cfg).is_err());
+
+    let base = SimConfig::default();
+    let mut topo = Topology::generate(&base, &mut Rng::new(1));
+    topo.gateways[0].members.clear();
+    let err = topo.validate().unwrap_err().to_string();
+    assert!(err.contains("empty shop floor"), "{err}");
+}
