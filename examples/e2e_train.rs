@@ -1,10 +1,10 @@
 //! End-to-end driver: the full three-layer stack on a real workload.
 //!
 //! Phase 1 (default): DDSRA-scheduled federated training of the MLP preset
-//! over the synthetic SVHN-like corpus for 150 communication rounds
-//! (= 150 × J × devices × K ≈ 4500 PJRT train-step executions), logging the
-//! loss curve and test accuracy to results/e2e_loss.csv. This is the run
-//! recorded in EXPERIMENTS.md.
+//! over the synthetic SVHN-like corpus for 150 communication rounds,
+//! STREAMING the loss curve to results/e2e_loss.csv while the run is in
+//! flight (CsvSink) and buffering a copy for the closing summary
+//! (MemorySink). This is the run recorded in EXPERIMENTS.md.
 //!
 //! Phase 2: a short VGG-mini (cnn preset) leg — 2 rounds on a reduced
 //! topology — proving the conv path composes with the FL stack (the cnn
@@ -19,30 +19,31 @@ use std::path::Path;
 
 use iiot_fl::cli::Args;
 use iiot_fl::config::SimConfig;
-use iiot_fl::fl::{Experiment, RunOpts};
-use iiot_fl::metrics::write_run_csv;
+use iiot_fl::fl::{RoundObserver, SchedulerSpec, Session};
+use iiot_fl::metrics::{CsvSink, MemorySink};
 
 fn main() -> anyhow::Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&argv)?;
+    args.expect_known(&["rounds", "skip-cnn"])?;
     let rounds = args.parse_num::<usize>("rounds")?.unwrap_or(150);
 
     // ---------------- phase 1: long MLP run -----------------------------
     let mut cfg = SimConfig::default();
-    cfg.rounds = rounds;
     cfg.exec_model = "mlp".into();
     cfg.cost_model = "vgg11".into();
     cfg.dataset = "svhn".into();
-    let exp = Experiment::new(cfg)?;
-    let mut sched = exp.make_scheduler("ddsra")?;
-    eprintln!("[e2e] phase 1: {} rounds of {} on svhn (mlp preset)", rounds, sched.name());
+    let session = Session::builder(cfg).rounds(rounds).eval_every(10).build()?;
+    eprintln!("[e2e] phase 1: {rounds} rounds of ddsra on svhn (mlp preset)");
     let t0 = std::time::Instant::now();
-    let log = exp.run(
-        sched.as_mut(),
-        &RunOpts { rounds, eval_every: 10, track_divergence: false, train: true },
-    )?;
+    let mut mem = MemorySink::new();
+    let mut csv = CsvSink::create(Path::new("results/e2e_loss.csv"))?;
+    {
+        let mut observers: Vec<&mut dyn RoundObserver> = vec![&mut mem, &mut csv];
+        session.run_with(&SchedulerSpec::ddsra(), &mut observers)?;
+    }
     let wall = t0.elapsed().as_secs_f64();
-    write_run_csv(&log, Path::new("results/e2e_loss.csv"))?;
+    let log = mem.into_log();
     println!("\n[e2e] loss curve (every 10 rounds):");
     println!("round  cum_sim_delay(s)  train_loss  test_acc");
     for r in log.records.iter().filter(|r| r.test_acc.is_some()) {
@@ -65,7 +66,6 @@ fn main() -> anyhow::Result<()> {
     // ---------------- phase 2: short CNN leg -----------------------------
     if !args.has("skip-cnn") {
         let mut cfg = SimConfig::default();
-        cfg.rounds = 2;
         cfg.exec_model = "cnn".into();
         cfg.cost_model = "cnn".into(); // cost model matches the executable net
         cfg.num_gateways = 2;
@@ -73,13 +73,9 @@ fn main() -> anyhow::Result<()> {
         cfg.num_channels = 1;
         cfg.dataset_max = 400; // small shards -> small train batches
         cfg.test_size = 256;
-        let exp = Experiment::new(cfg)?;
-        let mut sched = exp.make_scheduler("ddsra")?;
+        let session = Session::builder(cfg).rounds(2).eval_every(1).build()?;
         eprintln!("[e2e] phase 2: 2 rounds of VGG-mini through the native conv engine");
-        let log = exp.run(
-            sched.as_mut(),
-            &RunOpts { rounds: 2, eval_every: 1, track_divergence: false, train: true },
-        )?;
+        let log = session.run(&SchedulerSpec::ddsra())?;
         for r in &log.records {
             println!(
                 "[e2e/cnn] round {} loss {:.4} acc {:.2}%",

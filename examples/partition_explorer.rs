@@ -28,6 +28,7 @@ use iiot_fl::topo::Topology;
 fn main() -> anyhow::Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&argv)?;
+    args.expect_known(&["cost-model"])?;
     let cfg = SimConfig::default();
     let name = args.get_or("cost-model", "vgg11");
     let model = models::by_name(name)

@@ -23,6 +23,7 @@ use iiot_fl::runtime::{Backend, NativeBackend, PartitionedBackend};
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&argv)?;
+    args.expect_known(&["preset"])?;
     let preset = args.get_or("preset", "mlp");
     let fused: NativeBackend = match preset {
         "mlp" => NativeBackend::mlp(),

@@ -1,4 +1,4 @@
-//! Quickstart: the whole system in ~30 lines.
+//! Quickstart: the whole system in ~30 lines, on the Session API.
 //!
 //! Builds the paper's default IIoT deployment (6 shop floors, 12 devices,
 //! 3 channels), derives the device-specific participation rates Γ_m from
@@ -13,20 +13,19 @@
 //! Run: `cargo run --release --example quickstart`
 
 use iiot_fl::config::SimConfig;
-use iiot_fl::fl::{Experiment, RunOpts};
+use iiot_fl::fl::{SchedulerSpec, Session};
 
 fn main() -> anyhow::Result<()> {
     let mut cfg = SimConfig::default();
-    cfg.rounds = 10;
     cfg.exec_model = "mlp".into(); // fast executable preset
     cfg.cost_model = "vgg11".into(); // paper-scale DNN for the scheduler
 
-    let exp = Experiment::new(cfg)?;
-    let mut sched = exp.make_scheduler("ddsra")?;
-    println!("scheduler: {}", sched.name());
-
-    let opts = RunOpts { rounds: 10, eval_every: 2, track_divergence: false, train: true };
-    let log = exp.run(sched.as_mut(), &opts)?;
+    // One typed builder instead of Experiment + make_scheduler + RunOpts;
+    // add .until_accuracy(0.5) to stop at the Fig. 4 convergence target,
+    // or stream sinks during the run via session.run_with(...).
+    let session = Session::builder(cfg).rounds(10).eval_every(2).build()?;
+    let log = session.run(&SchedulerSpec::ddsra())?;
+    println!("scheduler: {}", log.scheme);
 
     println!("\nround  delay(s)  train_loss  test_acc");
     for r in &log.records {

@@ -1,9 +1,10 @@
 //! Theorem 2: the [O(1/V), O(√V)] trade-off between FL latency
 //! minimisation and participation-rate satisfaction.
 //!
-//! Sweeps the Lyapunov control parameter V over six orders of magnitude,
-//! runs the DDSRA scheduler (scheduling-only — no PJRT training needed for
-//! this result) for T rounds, and reports for each V:
+//! Sweeps the Lyapunov control parameter V over six orders of magnitude
+//! with ONE paired-run call (shared experiment, shared Γ estimation,
+//! byte-identical environment streams per round — scheduling-only, so no
+//! backend training runs), and reports for each V:
 //!   * the time-average round delay (should DECREASE with V), and
 //!   * the participation-rate deficit Σ_m max(Γ_m − rate_m, 0)
 //!     (should INCREASE with V).
@@ -13,33 +14,29 @@
 
 use iiot_fl::cli::Args;
 use iiot_fl::config::SimConfig;
-use iiot_fl::fl::{Experiment, RunOpts};
+use iiot_fl::fl::{SchedulerSpec, Session};
 use iiot_fl::metrics::print_table;
-use iiot_fl::sched::Ddsra;
 
 fn main() -> anyhow::Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&argv)?;
+    args.expect_known(&["rounds"])?;
     let rounds = args.parse_num::<usize>("rounds")?.unwrap_or(300);
 
-    let cfg = SimConfig::default();
-    let exp = Experiment::new(cfg)?;
-    // Γ_m from gradient probes, shared across the sweep.
-    let stats = exp.estimate_grad_stats(4)?;
-    let (_, gamma) = iiot_fl::fl::gamma_rates(
-        &exp.topo,
-        &stats,
-        exp.cfg.num_channels,
-        exp.cfg.lr,
-        exp.cfg.local_iters,
-    );
+    let session = Session::builder(SimConfig::default())
+        .rounds(rounds)
+        .eval_every(0)
+        .schedule_only()
+        .build()?;
+    // Γ_m from gradient probes — estimated once, shared across the sweep.
+    let gamma = session.gamma()?.to_vec();
     println!("gamma = {gamma:?}");
 
-    let opts = RunOpts { rounds, eval_every: 0, track_divergence: false, train: false };
+    let specs: Vec<SchedulerSpec> =
+        [0.01, 1.0, 100.0, 1e4, 1e6].iter().map(|&v| SchedulerSpec::ddsra_with_v(v)).collect();
     let mut rows = Vec::new();
-    for &v in &[0.01, 1.0, 100.0, 1e4, 1e6] {
-        let mut sched = Ddsra::new(v, gamma.clone());
-        let log = exp.run(&mut sched, &opts)?;
+    for (run, &v) in session.run_paired(&specs)?.iter().zip(&[0.01, 1.0, 100.0, 1e4, 1e6]) {
+        let log = &run.log;
         let avg_delay = log.total_delay() / rounds as f64;
         let deficit: f64 = gamma
             .iter()

@@ -14,7 +14,7 @@ use anyhow::Result;
 use iiot_fl::config::SimConfig;
 use iiot_fl::dnn::models;
 use iiot_fl::energy::EnergyArrivals;
-use iiot_fl::fl::{Experiment, RunOpts};
+use iiot_fl::fl::{SchedulerSpec, Session};
 use iiot_fl::metrics::print_table;
 use iiot_fl::net::ChannelModel;
 use iiot_fl::rng::Rng;
@@ -172,11 +172,8 @@ fn a3_non_iid_degree() -> Result<()> {
     for chi in [0.0, 0.5, 1.0] {
         let mut cfg = SimConfig::default();
         cfg.non_iid_degree = chi;
-        cfg.rounds = rounds;
-        let exp = Experiment::new(cfg)?;
-        let mut sched = exp.make_scheduler("ddsra")?;
-        let opts = RunOpts { rounds, eval_every: rounds, track_divergence: false, train: true };
-        let log = exp.run(sched.as_mut(), &opts)?;
+        let session = Session::builder(cfg).rounds(rounds).eval_every(rounds).build()?;
+        let log = session.run(&SchedulerSpec::ddsra())?;
         rows.push(vec![
             format!("{chi}"),
             format!("{:.2}%", log.final_accuracy().unwrap_or(0.0) * 100.0),

@@ -18,9 +18,8 @@ use anyhow::Result;
 use iiot_fl::config::SimConfig;
 use iiot_fl::dnn::models;
 use iiot_fl::fl::participation::{gamma_from_phi, gamma_rates};
-use iiot_fl::fl::{Experiment, RunLog, RunOpts};
+use iiot_fl::fl::{RunLog, SchedulerSpec, Session};
 use iiot_fl::metrics::{print_table, write_run_csv, Csv};
-use iiot_fl::sched::{Ddsra, Scheduler};
 
 fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -90,17 +89,15 @@ fn fig2(dataset: &str, rounds: usize) -> Result<()> {
     println!("\n[fig2] {dataset}: divergence-tracked run ({rounds} rounds)...");
     let mut cfg = SimConfig::default();
     cfg.dataset = dataset.into();
-    cfg.rounds = rounds;
-    let exp = Experiment::new(cfg)?;
+    let session = Session::builder(cfg).rounds(rounds).eval_every(0).divergence().build()?;
+    let exp = session.experiment();
 
     let stats = exp.estimate_grad_stats(4)?;
     let (phis, derived) =
         gamma_rates(&exp.topo, &stats, exp.cfg.num_channels, exp.cfg.lr, exp.cfg.local_iters);
 
     // Any scheduler works — divergence is measured for ALL gateways.
-    let mut sched = exp.make_scheduler("round_robin")?;
-    let opts = RunOpts { rounds, eval_every: 0, track_divergence: true, train: true };
-    let log = exp.run(sched.as_mut(), &opts)?;
+    let log = session.run(&SchedulerSpec::RoundRobin)?;
     let measured = log.mean_divergence().expect("divergence mode");
     let experimental = gamma_from_phi(&measured, exp.cfg.num_channels);
 
@@ -140,35 +137,32 @@ fn fig3_to_6(dataset: &str, rounds: usize) -> Result<()> {
     println!("\n[fig3-6] {dataset}: {rounds} rounds per scheme...");
     let mut cfg = SimConfig::default();
     cfg.dataset = dataset.into();
-    cfg.rounds = rounds;
-    let exp = Experiment::new(cfg)?;
-    let stats = exp.estimate_grad_stats(4)?;
-    let (_, gamma) =
-        gamma_rates(&exp.topo, &stats, exp.cfg.num_channels, exp.cfg.lr, exp.cfg.local_iters);
+    let session = Session::builder(cfg).rounds(rounds).eval_every(5).build()?;
+    let exp = session.experiment();
 
-    let opts = RunOpts { rounds, eval_every: 5, track_divergence: false, train: true };
-    let mut logs: BTreeMap<&'static str, RunLog> = BTreeMap::new();
-    let schemes: Vec<(&'static str, Box<dyn Scheduler>)> = vec![
-        ("participation", Box::new(Ddsra::new(0.0, gamma.clone()))),
-        ("ddsra_v0.01", Box::new(Ddsra::new(0.01, gamma.clone()))),
-        ("ddsra_v1000", Box::new(Ddsra::new(1000.0, gamma.clone()))),
-        ("ddsra_v10000", Box::new(Ddsra::new(10000.0, gamma.clone()))),
-        ("random", exp.make_scheduler("random")?),
-        ("round_robin", exp.make_scheduler("round_robin")?),
-        ("loss_driven", exp.make_scheduler("loss_driven")?),
-        ("delay_driven", exp.make_scheduler("delay_driven")?),
+    // The paper's paired comparison as one call: every scheme faces the
+    // same environment streams, the DDSRA family shares one Γ estimation.
+    let specs = vec![
+        SchedulerSpec::Participation,
+        SchedulerSpec::ddsra_with_v(0.01),
+        SchedulerSpec::ddsra_with_v(1000.0),
+        SchedulerSpec::ddsra_with_v(10000.0),
+        SchedulerSpec::Random,
+        SchedulerSpec::RoundRobin,
+        SchedulerSpec::LossDriven,
+        SchedulerSpec::DelayDriven,
     ];
-    for (label, mut sched) in schemes {
-        let t0 = std::time::Instant::now();
-        let log = exp.run(sched.as_mut(), &opts)?;
+    let mut logs: BTreeMap<String, RunLog> = BTreeMap::new();
+    for run in session.run_paired(&specs)? {
         println!(
-            "  {label:<14} final_acc={:>6.2}%  total_delay={:>8.0}s  wall={:.0}s",
-            log.final_accuracy().unwrap_or(0.0) * 100.0,
-            log.total_delay(),
-            t0.elapsed().as_secs_f64()
+            "  {:<14} final_acc={:>6.2}%  total_delay={:>8.0}s  wall={:.0}s",
+            run.label,
+            run.log.final_accuracy().unwrap_or(0.0) * 100.0,
+            run.log.total_delay(),
+            run.wall_secs
         );
-        write_run_csv(&log, &out(&format!("run_{dataset}_{label}.csv")))?;
-        logs.insert(label, log);
+        write_run_csv(&run.log, &out(&format!("run_{dataset}_{}.csv", run.label)))?;
+        logs.insert(run.label, run.log);
     }
 
     // Fig. 3 summary: accuracy of the Γ-policy vs fairness baselines.
@@ -176,7 +170,7 @@ fn fig3_to_6(dataset: &str, rounds: usize) -> Result<()> {
         labels
             .iter()
             .map(|l| {
-                let log = &logs[l];
+                let log = &logs[*l];
                 vec![
                     l.to_string(),
                     format!("{:.2}%", log.final_accuracy().unwrap_or(0.0) * 100.0),
@@ -191,7 +185,15 @@ fn fig3_to_6(dataset: &str, rounds: usize) -> Result<()> {
         &acc_rows(&["participation", "random", "round_robin"]),
     );
 
-    let fig4 = ["ddsra_v0.01", "ddsra_v1000", "ddsra_v10000", "random", "round_robin", "loss_driven", "delay_driven"];
+    let fig4 = [
+        "ddsra_v0.01",
+        "ddsra_v1000",
+        "ddsra_v10000",
+        "random",
+        "round_robin",
+        "loss_driven",
+        "delay_driven",
+    ];
     print_table(
         &format!("Fig.4 ({dataset}) — test accuracy"),
         &["scheme", "final acc", "rounds to 50%"],
@@ -202,7 +204,7 @@ fn fig3_to_6(dataset: &str, rounds: usize) -> Result<()> {
     let rows5: Vec<Vec<String>> = fig4
         .iter()
         .map(|l| {
-            let log = &logs[l];
+            let log = &logs[*l];
             vec![
                 l.to_string(),
                 format!("{:.0}", log.total_delay()),
@@ -223,7 +225,7 @@ fn fig3_to_6(dataset: &str, rounds: usize) -> Result<()> {
     )?;
     let mut rows6 = Vec::new();
     for l in fig4.iter().chain(["participation"].iter()) {
-        let log = &logs[l];
+        let log = &logs[*l];
         for m in 0..exp.topo.num_gateways() {
             csv.row(&[
                 l.to_string(),

@@ -13,7 +13,7 @@ use std::fmt::Write as _;
 use std::time::Instant;
 
 use iiot_fl::config::SimConfig;
-use iiot_fl::fl::{Experiment, RunOpts};
+use iiot_fl::fl::{SchedulerSpec, Session};
 
 /// A scale working point with budgets generous enough that scheduled
 /// floors always train — the bench measures the engine, not feasibility.
@@ -35,17 +35,16 @@ fn scale_cfg(devices: usize, gateways: usize, channels: usize) -> SimConfig {
 /// round, final train loss, a bit-exact digest of the trajectory).
 fn timed_run(
     cfg: &SimConfig,
-    scheme: &str,
+    spec: &SchedulerSpec,
     rounds: usize,
     threads: usize,
 ) -> anyhow::Result<(f64, Option<f64>, String)> {
     let pool = rayon::ThreadPoolBuilder::new().num_threads(threads).build()?;
     pool.install(|| {
-        let exp = Experiment::new(cfg.clone())?;
-        let mut sched = exp.make_scheduler(scheme)?;
-        let opts = RunOpts { rounds, eval_every: 0, track_divergence: false, train: true };
+        let session = Session::builder(cfg.clone()).rounds(rounds).eval_every(0).build()?;
+        let mut sched = session.scheduler(spec)?;
         let t0 = Instant::now();
-        let log = exp.run(sched.as_mut(), &opts)?;
+        let log = session.run_scheduler(sched.as_mut())?;
         let per_round = t0.elapsed().as_secs_f64() / rounds as f64;
         let loss = log.records.iter().rev().find_map(|r| r.train_loss);
         let mut digest = String::new();
@@ -86,7 +85,8 @@ fn main() -> anyhow::Result<()> {
         let mut serial = None;
         let mut serial_digest = None;
         for &threads in &thread_grid {
-            let (per_round, _, digest) = timed_run(&cfg, "round_robin", rounds, threads)?;
+            let (per_round, _, digest) =
+                timed_run(&cfg, &SchedulerSpec::RoundRobin, rounds, threads)?;
             // The engine's core guarantee, checked in passing: the
             // trajectory bytes do not depend on the thread count.
             if let Some(d) = &serial_digest {
@@ -114,19 +114,29 @@ fn main() -> anyhow::Result<()> {
     println!("\n== paired schedulers at N=240 (plant scale, {max_threads} threads) ==");
     println!("{:>16} {:>14} {:>12}", "scheme", "s/round", "train_loss");
     let cfg = scale_cfg(240, 24, 8);
-    let schemes =
-        ["ddsra", "participation", "random", "round_robin", "loss_driven", "delay_driven"];
-    for (i, &scheme) in schemes.iter().enumerate() {
-        let (per_round, loss, _) = timed_run(&cfg, scheme, 2, max_threads)?;
+    // One Session::run_paired call: every scheduler faces identical
+    // environment streams over ONE experiment, the DDSRA family shares a
+    // single Γ estimation, and per-run wall time comes back per entry.
+    let paired = {
+        let pool = rayon::ThreadPoolBuilder::new().num_threads(max_threads).build()?;
+        pool.install(|| -> anyhow::Result<_> {
+            let session = Session::builder(cfg.clone()).rounds(2).eval_every(0).build()?;
+            session.run_paired(&SchedulerSpec::all())
+        })?
+    };
+    for (i, run) in paired.iter().enumerate() {
+        let per_round = run.wall_secs / 2.0;
+        let loss = run.log.records.iter().rev().find_map(|r| r.train_loss);
         let loss_s = loss.map_or("-".into(), |l| format!("{l:.4}"));
-        println!("{scheme:>16} {:>12.1}ms {loss_s:>12}", per_round * 1e3);
+        println!("{:>16} {:>12.1}ms {loss_s:>12}", run.label, per_round * 1e3);
         if i > 0 {
             json.push_str(",\n");
         }
         let _ = write!(
             json,
-            "    {{\"scheme\": \"{scheme}\", \"devices\": 240, \"threads\": {max_threads}, \
+            "    {{\"scheme\": \"{}\", \"devices\": 240, \"threads\": {max_threads}, \
              \"sec_per_round\": {per_round:.6}, \"final_train_loss\": {}}}",
+            run.label,
             loss.map_or("null".into(), |l| format!("{l:.6}"))
         );
     }

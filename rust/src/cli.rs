@@ -1,11 +1,32 @@
 //! Tiny CLI argument parser (no clap offline): subcommand + `--key value`
-//! flags + repeated `--set cfg_key=value` config overrides.
+//! flags + repeated `--set cfg_key=value` config overrides, plus
+//! per-subcommand unknown-flag rejection with "did you mean"
+//! suggestions (a typo like `--eval-evry 2` fails loudly instead of
+//! silently running with the default).
 
 use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
 use crate::config::SimConfig;
+
+/// Edit distance for the "did you mean" suggestions (full Levenshtein —
+/// flag names are short, so the O(|a|·|b|) table is trivial).
+fn levenshtein(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    for i in 1..=a.len() {
+        let mut cur = Vec::with_capacity(b.len() + 1);
+        cur.push(i);
+        for j in 1..=b.len() {
+            let sub = prev[j - 1] + usize::from(a[i - 1] != b[j - 1]);
+            cur.push(sub.min(prev[j] + 1).min(cur[j - 1] + 1));
+        }
+        prev = cur;
+    }
+    prev[b.len()]
+}
 
 /// Parsed command line.
 #[derive(Clone, Debug, Default)]
@@ -63,6 +84,35 @@ impl Args {
 
     pub fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
+    }
+
+    /// Reject any parsed flag not in `allowed`, suggesting the nearest
+    /// known flags ("did you mean") and listing the full menu. Callers
+    /// pass the union of common and subcommand-specific flags.
+    pub fn expect_known(&self, allowed: &[&str]) -> Result<()> {
+        for key in self.flags.keys() {
+            if allowed.contains(&key.as_str()) {
+                continue;
+            }
+            let mut near: Vec<(usize, &str)> = allowed
+                .iter()
+                .map(|&cand| (levenshtein(key, cand), cand))
+                .filter(|&(d, _)| d <= 3)
+                .collect();
+            near.sort_unstable();
+            let suggestion = if near.is_empty() {
+                String::new()
+            } else {
+                let menu: Vec<String> =
+                    near.iter().take(3).map(|(_, c)| format!("--{c}")).collect();
+                format!(" — did you mean {}?", menu.join(" or "))
+            };
+            bail!(
+                "unknown flag --{key}{suggestion}\n  known flags here: {}",
+                allowed.iter().map(|f| format!("--{f}")).collect::<Vec<_>>().join(" ")
+            );
+        }
+        Ok(())
     }
 
     /// Build a SimConfig: optional `--config file`, then `--scenario name`
@@ -184,5 +234,35 @@ mod tests {
     fn rejects_positional_after_flags() {
         assert!(Args::parse(&sv(&["train", "oops"])).is_err());
         assert!(Args::parse(&sv(&["train", "--set", "nokey"])).unwrap().sim_config().is_err());
+    }
+
+    #[test]
+    fn levenshtein_basics() {
+        assert_eq!(levenshtein("", ""), 0);
+        assert_eq!(levenshtein("abc", "abc"), 0);
+        assert_eq!(levenshtein("abc", ""), 3);
+        assert_eq!(levenshtein("eval-evry", "eval-every"), 1);
+        assert_eq!(levenshtein("kitten", "sitting"), 3);
+    }
+
+    #[test]
+    fn unknown_flags_are_rejected_with_suggestions() {
+        let allowed = &["rounds", "eval-every", "scheme", "out"];
+        // The motivating bug: a typo'd flag used to be silently ignored.
+        let a = Args::parse(&sv(&["train", "--eval-evry", "2"])).unwrap();
+        let err = a.expect_known(allowed).unwrap_err().to_string();
+        assert!(err.contains("unknown flag --eval-evry"), "{err}");
+        assert!(err.contains("did you mean --eval-every"), "{err}");
+        assert!(err.contains("--scheme"), "list all known flags: {err}");
+
+        // Nothing near: no suggestion, but the menu still prints.
+        let b = Args::parse(&sv(&["train", "--zzzzzzzzzz", "1"])).unwrap();
+        let err = b.expect_known(allowed).unwrap_err().to_string();
+        assert!(err.contains("unknown flag --zzzzzzzzzz"), "{err}");
+        assert!(!err.contains("did you mean"), "{err}");
+
+        // All-known parses clean.
+        let c = Args::parse(&sv(&["train", "--rounds", "5", "--out", "x.csv"])).unwrap();
+        assert!(c.expect_known(allowed).is_ok());
     }
 }

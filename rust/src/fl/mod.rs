@@ -1,14 +1,20 @@
 //! Federated learning core: FedAvg aggregation (streaming accumulators in
 //! [`vecmath`]), the §IV device-specific participation-rate machinery, the
-//! experiment orchestrator that ties scheduling, simulation and backend
-//! execution together, and the parallel streaming [`round`] engine that
-//! executes the communication rounds.
+//! experiment orchestrator, the parallel streaming [`round`] engine that
+//! executes the communication rounds, and the [`session`] API — typed run
+//! builder, scheduler specs, and the observer/sink layer — that everything
+//! (CLI, benches, examples, tests) drives runs through.
 
 pub mod orchestrator;
 pub mod participation;
 pub mod round;
+pub mod session;
 pub mod vecmath;
 
-pub use orchestrator::{Experiment, RoundRecord, RunLog, RunOpts};
+pub use orchestrator::{Experiment, GatewayMask, RoundRecord, RunLog};
 pub use participation::{gamma_rates, phi_m, GradStats};
 pub use round::RoundEngine;
+pub use session::{
+    PairedRun, RoundObserver, RunMeta, RunOpts, RunSummary, SchedulerSpec, Session,
+    SessionBuilder, StopCause,
+};

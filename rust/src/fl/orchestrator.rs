@@ -35,43 +35,90 @@ use crate::data::synth::{DatasetFlavor, SynthData, IMG_DIM};
 use crate::data::{shard_non_iid, DeviceShard};
 use crate::dnn::models;
 use crate::dnn::ModelSpec;
+use crate::fl::participation::gamma_rates;
 use crate::fl::round::RoundEngine;
+use crate::fl::session::{RunOpts, SchedulerSpec};
 use crate::net::ChannelModel;
 use crate::rng::Rng;
 use crate::runtime::{make_backend, make_partitioned_stack, Backend, Params, PartitionedBackend};
 use crate::sched::Scheduler;
 use crate::topo::Topology;
 
-/// Options for one scheduler run.
-#[derive(Clone, Debug)]
-pub struct RunOpts {
-    pub rounds: usize,
-    /// Evaluate on the test set every this many rounds (0 = never).
-    pub eval_every: usize,
-    /// Track ||ŵ_m − v^{K,t}|| against a centralized-GD shadow (Fig. 2);
-    /// forces all devices to train each round for measurement.
-    pub track_divergence: bool,
-    /// Execute real training through the backend. When false, only the
-    /// scheduling/delay simulation runs (used by scheduling-only benches).
-    pub train: bool,
+/// Compact per-gateway membership set: one bit per gateway instead of a
+/// heap `Vec<bool>`, so buffering sinks stay small when records stream
+/// at metro scale (M = 96 gateways × thousands of rounds).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct GatewayMask {
+    len: usize,
+    bits: Vec<u64>,
 }
 
-impl Default for RunOpts {
-    fn default() -> Self {
-        RunOpts { rounds: 50, eval_every: 5, track_divergence: false, train: true }
+impl GatewayMask {
+    /// An empty mask over `len` gateways.
+    pub fn new(len: usize) -> Self {
+        GatewayMask { len, bits: vec![0u64; len.div_ceil(64)] }
+    }
+
+    pub fn from_slice(flags: &[bool]) -> Self {
+        let mut mask = Self::new(flags.len());
+        for (m, &f) in flags.iter().enumerate() {
+            if f {
+                mask.set(m);
+            }
+        }
+        mask
+    }
+
+    pub fn set(&mut self, m: usize) {
+        // Hard assert: a silently dropped or hidden bit would corrupt the
+        // num_selected/num_failed telemetry in release builds.
+        assert!(m < self.len, "gateway {m} outside 0..{}", self.len);
+        self.bits[m / 64] |= 1u64 << (m % 64);
+    }
+
+    /// Is gateway `m` in the set? Out-of-range indices are simply absent.
+    pub fn get(&self, m: usize) -> bool {
+        m < self.len && (self.bits[m / 64] >> (m % 64)) & 1 == 1
+    }
+
+    /// Number of gateways the mask ranges over (NOT the popcount).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Number of gateways in the set.
+    pub fn count(&self) -> usize {
+        self.bits.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Per-gateway membership flags, in gateway order.
+    pub fn iter(&self) -> impl Iterator<Item = bool> + '_ {
+        (0..self.len).map(|m| self.get(m))
+    }
+
+    /// Expand back to the pre-compaction `Vec<bool>` representation
+    /// (the serialization the byte-parity tests pin).
+    pub fn to_vec(&self) -> Vec<bool> {
+        self.iter().collect()
     }
 }
 
-/// Per-round record (one CSV row in the figure harness).
+/// Per-round record (one CSV row in the figure harness), delivered to
+/// every [`crate::fl::RoundObserver`] as the round completes.
 #[derive(Clone, Debug)]
 pub struct RoundRecord {
     pub round: usize,
     /// τ(t) (Eq. 10) in seconds.
     pub delay: f64,
     pub cum_delay: f64,
-    pub selected: Vec<bool>,
+    /// Gateways selected this round (1_m^t).
+    pub selected: GatewayMask,
     /// Selected but constraint-violating (update dropped).
-    pub failed: Vec<bool>,
+    pub failed: GatewayMask,
     /// Mean local training loss over participating devices.
     pub train_loss: Option<f64>,
     pub test_loss: Option<f64>,
@@ -196,37 +243,23 @@ impl Experiment {
         Ok(Experiment { cfg, topo, cost_model, chan, shards, test_x, test_y, engine, partitioned })
     }
 
-    /// Construct a scheduler by scheme name. DDSRA variants estimate the
-    /// gradient statistics (§IV) to derive the participation rates Γ_m.
-    ///
-    /// Schemes: "ddsra" (V from config), "participation" (DDSRA with V=0 —
-    /// the pure device-specific participation-rate policy of Fig. 3),
-    /// "random", "round_robin", "loss_driven", "delay_driven".
-    pub fn make_scheduler(&self, scheme: &str) -> Result<Box<dyn Scheduler>> {
-        use crate::fl::participation::gamma_rates;
-        use crate::sched::{Ddsra, DelayDriven, LossDriven, RandomSched, RoundRobin};
-        let gammas = || -> Result<Vec<f64>> {
-            let stats = self.estimate_grad_stats(4)?;
-            Ok(gamma_rates(
-                &self.topo,
-                &stats,
-                self.cfg.num_channels,
-                self.cfg.lr,
-                self.cfg.local_iters,
-            )
+    /// Γ_m participation rates (Eq. 13) from a fresh §IV gradient-probe
+    /// pass. [`crate::fl::Session`] caches the result per session; this
+    /// helper is the one place the estimation is spelled out.
+    pub(crate) fn derive_gamma(&self) -> Result<Vec<f64>> {
+        let stats = self.estimate_grad_stats(4)?;
+        Ok(gamma_rates(&self.topo, &stats, self.cfg.num_channels, self.cfg.lr, self.cfg.local_iters)
             .1)
-        };
-        Ok(match scheme {
-            "ddsra" => Box::new(Ddsra::new(self.cfg.lyapunov_v, gammas()?)),
-            "participation" => Box::new(Ddsra::new(0.0, gammas()?)),
-            "random" => Box::new(RandomSched::new(self.cfg.seed ^ 0xaa11)),
-            "round_robin" => Box::new(RoundRobin::new()),
-            "loss_driven" => {
-                Box::new(LossDriven::new(self.topo.num_gateways(), self.cfg.seed ^ 0xbb22))
-            }
-            "delay_driven" => Box::new(DelayDriven),
-            other => anyhow::bail!("unknown scheme {other:?}"),
-        })
+    }
+
+    /// Compat shim: construct a scheduler by scheme name through the
+    /// typed [`SchedulerSpec`] bridge. Prefer [`crate::fl::Session`],
+    /// which shares one Γ_m estimation across schedulers — this shim
+    /// re-estimates on every DDSRA-family call.
+    pub fn make_scheduler(&self, scheme: &str) -> Result<Box<dyn Scheduler>> {
+        let spec: SchedulerSpec = scheme.parse()?;
+        let gamma = if spec.needs_gamma() { Some(self.derive_gamma()?) } else { None };
+        spec.build(self, gamma.as_deref())
     }
 
     /// Sample a training batch (with replacement) from device n's shard.
@@ -300,12 +333,59 @@ impl Experiment {
         Ok((w, loss_sum / k as f64))
     }
 
-    /// Run one scheduler for `opts.rounds` communication rounds through
-    /// the parallel streaming round engine — see [`crate::fl::round`] for
-    /// the phase structure, the RNG stream map, and the determinism
-    /// guarantees. (`estimate_grad_stats`, the §IV probe, also lives
-    /// there, on the same per-device streams.)
+    /// Compat shim: run one scheduler for `opts.rounds` communication
+    /// rounds through the streaming round engine, buffering records into
+    /// a [`RunLog`]. Prefer [`crate::fl::Session`], whose builder is the
+    /// only place [`RunOpts`] is assembled and whose observer layer
+    /// streams records instead of buffering them. See
+    /// [`crate::fl::round`] for the phase structure, the RNG stream map,
+    /// and the determinism guarantees.
     pub fn run(&self, sched: &mut dyn Scheduler, opts: &RunOpts) -> Result<RunLog> {
-        RoundEngine::new(self).run(sched, opts)
+        RoundEngine::new(self).run_logged(sched, opts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::GatewayMask;
+
+    #[test]
+    fn gateway_mask_set_get_count_roundtrip() {
+        let flags = [true, false, true, true, false, false];
+        let mask = GatewayMask::from_slice(&flags);
+        assert_eq!(mask.len(), 6);
+        assert!(!mask.is_empty());
+        assert_eq!(mask.count(), 3);
+        for (m, &f) in flags.iter().enumerate() {
+            assert_eq!(mask.get(m), f, "gateway {m}");
+        }
+        assert_eq!(mask.to_vec(), flags.to_vec());
+        assert_eq!(mask.iter().collect::<Vec<_>>(), flags.to_vec());
+        // Out-of-range membership is simply absent.
+        assert!(!mask.get(6));
+        assert!(!mask.get(1000));
+    }
+
+    #[test]
+    fn gateway_mask_spans_multiple_words() {
+        // Metro scale: 96 gateways is more than one u64 word.
+        let mut mask = GatewayMask::new(96);
+        assert_eq!(mask.count(), 0);
+        for m in [0usize, 63, 64, 70, 95] {
+            mask.set(m);
+        }
+        assert_eq!(mask.count(), 5);
+        assert!(mask.get(63) && mask.get(64) && mask.get(95));
+        assert!(!mask.get(62) && !mask.get(65));
+        let roundtrip = GatewayMask::from_slice(&mask.to_vec());
+        assert_eq!(roundtrip, mask);
+    }
+
+    #[test]
+    fn empty_gateway_mask() {
+        let mask = GatewayMask::new(0);
+        assert!(mask.is_empty());
+        assert_eq!(mask.count(), 0);
+        assert_eq!(mask.to_vec(), Vec::<bool>::new());
     }
 }

@@ -50,19 +50,34 @@
 //! into a [`WeightedAccum`] and are dropped. Live parameter copies are
 //! O(wave), never O(N); the fold order (and therefore every output byte)
 //! does not depend on the wave width or the worker count.
+//!
+//! ## Observer delivery
+//!
+//! The engine buffers nothing itself: each finished round's
+//! [`RoundRecord`] goes straight to the
+//! [`RoundObserver`](crate::fl::RoundObserver)s (CSV/JSONL rows stream
+//! DURING the run, progress heartbeats fire live, and only a
+//! [`MemorySink`] buffers — rebuilding the classic [`RunLog`]). The
+//! engine also owns every early-stop rule (target accuracy, simulated
+//! delay budget, observer break) so callers never re-implement them;
+//! see [`crate::fl::Session`] for the builder that assembles the knobs.
+
+use std::ops::ControlFlow;
 
 use anyhow::Result;
 use rayon::prelude::*;
 
 use crate::energy::EnergyArrivals;
 use crate::fl::participation::GradStats;
+use crate::fl::session::{RoundObserver, RunMeta, RunOpts, RunSummary, StopCause};
 use crate::fl::vecmath::{self, FlatWeightedAccum, WeightedAccum};
+use crate::metrics::MemorySink;
 use crate::net::ChannelState;
 use crate::rng::Rng;
 use crate::runtime::Params;
 use crate::sched::{plan_cost, Decision, RoundCtx, RoundFeedback, Scheduler};
 
-use super::orchestrator::{Experiment, RoundRecord, RunLog, RunOpts};
+use super::orchestrator::{Experiment, GatewayMask, RoundRecord, RunLog};
 
 /// Stream domain: per-round channel fading (phase 1).
 pub const STREAM_CHANNEL: u64 = 0xC4A1;
@@ -205,15 +220,54 @@ impl<'a> RoundEngine<'a> {
         Ok(out)
     }
 
-    /// Run one scheduler for `opts.rounds` communication rounds.
-    pub fn run(&self, sched: &mut dyn Scheduler, opts: &RunOpts) -> Result<RunLog> {
+    /// Buffer a full run into the back-compat [`RunLog`] via a
+    /// [`MemorySink`] (the [`Experiment::run`] shim and
+    /// [`crate::fl::Session::run`] both land here).
+    pub fn run_logged(&self, sched: &mut dyn Scheduler, opts: &RunOpts) -> Result<RunLog> {
+        let mut mem = MemorySink::new();
+        {
+            let mut observers: [&mut dyn RoundObserver; 1] = [&mut mem];
+            self.run(sched, opts, &mut observers)?;
+        }
+        Ok(mem.into_log())
+    }
+
+    /// Run one scheduler for up to `opts.rounds` communication rounds,
+    /// streaming each [`RoundRecord`] to the observers as it is
+    /// produced.
+    ///
+    /// Stop rules — checked once here, for every caller — end the run
+    /// after the round that triggered them (that round's record is
+    /// always delivered first): `opts.until_accuracy`,
+    /// `opts.max_sim_delay`, or any observer returning
+    /// [`ControlFlow::Break`]. Because every round's RNG streams depend
+    /// only on `(seed, round, device)` and never on later rounds, a
+    /// stopped run's records are byte-identical to the same-index
+    /// records of the uninterrupted run (pinned by
+    /// `rust/tests/session.rs`).
+    pub fn run(
+        &self,
+        sched: &mut dyn Scheduler,
+        opts: &RunOpts,
+        observers: &mut [&mut dyn RoundObserver],
+    ) -> Result<RunSummary> {
         let exp = self.exp;
         let mm = exp.topo.num_gateways();
+        let meta = RunMeta {
+            scheme: sched.name(),
+            rounds: opts.rounds,
+            gateways: mm,
+            devices: exp.topo.num_devices(),
+        };
+        for obs in observers.iter_mut() {
+            obs.on_start(&meta)?;
+        }
         let mut params = exp.engine.init_params()?;
-        let mut records = Vec::with_capacity(opts.rounds);
         let mut cum_delay = 0.0;
         let mut sel_counts = vec![0usize; mm];
         let mut eff_counts = vec![0usize; mm];
+        let mut rounds_run = 0usize;
+        let mut stop: Option<StopCause> = None;
 
         for t in 0..opts.rounds {
             // Phase 1: environment.
@@ -291,26 +345,56 @@ impl<'a> RoundEngine<'a> {
                 (None, None)
             };
 
-            records.push(RoundRecord {
+            let record = RoundRecord {
                 round: t,
                 delay,
                 cum_delay,
-                selected,
-                failed,
+                selected: GatewayMask::from_slice(&selected),
+                failed: GatewayMask::from_slice(&failed),
                 train_loss,
                 test_loss,
                 test_acc,
                 divergence,
-            });
+            };
+            rounds_run = t + 1;
+
+            // Engine-level stop rules, then observer votes. The record
+            // that triggers a stop is still delivered to every observer.
+            if let (Some(target), Some(acc)) = (opts.until_accuracy, record.test_acc) {
+                if acc >= target {
+                    stop = Some(StopCause::TargetAccuracy { round: t, accuracy: acc });
+                }
+            }
+            if stop.is_none() {
+                if let Some(budget) = opts.max_sim_delay {
+                    if cum_delay >= budget {
+                        stop = Some(StopCause::DelayBudget { round: t, cum_delay });
+                    }
+                }
+            }
+            for obs in observers.iter_mut() {
+                if obs.on_record(&record)? == ControlFlow::Break(()) && stop.is_none() {
+                    stop = Some(StopCause::Observer { round: t });
+                }
+            }
+            if stop.is_some() {
+                break;
+            }
         }
 
-        let t = opts.rounds as f64;
-        Ok(RunLog {
-            scheme: sched.name(),
-            records,
+        let t = rounds_run.max(1) as f64;
+        let summary = RunSummary {
+            scheme: meta.scheme,
+            rounds_planned: opts.rounds,
+            rounds_run,
+            stop,
             participation: sel_counts.iter().map(|&c| c as f64 / t).collect(),
             effective_participation: eff_counts.iter().map(|&c| c as f64 / t).collect(),
-        })
+        };
+        for obs in observers.iter_mut() {
+            obs.on_finish(&summary)?;
+        }
+        Ok(summary)
     }
 
     /// Fig. 2 machinery: every device trains locally from the current

@@ -1,0 +1,587 @@
+//! The session API: the one public way to run experiments.
+//!
+//! A [`Session`] owns a fully-built [`Experiment`] plus validated run
+//! options, and executes schedulers through the streaming
+//! [`RoundEngine`](crate::fl::round::RoundEngine):
+//!
+//! ```text
+//!   Session::builder(cfg)            typed knobs, validated once
+//!     └─ Session                     Experiment + RunOpts + cached Γ
+//!          └─ RoundEngine::run       §III-A phases, per-round records
+//!               └─ RoundObserver*    CsvSink / JsonlSink / ProgressSink /
+//!                                    MemorySink — each RoundRecord is
+//!                                    delivered AS IT IS PRODUCED
+//! ```
+//!
+//! Schedulers are named by the typed [`SchedulerSpec`] enum (with a
+//! [`FromStr`] bridge for the CLI); the Γ_m participation rates that
+//! DDSRA variants need are estimated once per session and shared, so a
+//! paired sweep ([`Session::run_paired`]) probes gradients once and runs
+//! every scheduler against byte-identical environment streams.
+//!
+//! Early stopping lives in the engine, once: the builder's
+//! [`until_accuracy`](SessionBuilder::until_accuracy) (run-to-target —
+//! the paper's Fig. 4–6 convergence-time metric) and
+//! [`max_rounds_wall`](SessionBuilder::max_rounds_wall) (simulated
+//! wall-clock budget Σ τ(t)) knobs, plus any observer returning
+//! [`ControlFlow::Break`]. A stopped run's records are byte-identical
+//! to the first k records of the full run (pinned by
+//! `rust/tests/session.rs`) because each round's RNG streams depend
+//! only on `(seed, round, device)`, never on the future.
+//!
+//! # Example
+//!
+//! ```no_run
+//! use iiot_fl::config::SimConfig;
+//! use iiot_fl::fl::{SchedulerSpec, Session};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let session = Session::builder(SimConfig::default())
+//!     .rounds(10)
+//!     .eval_every(2)
+//!     .build()?;
+//! let log = session.run(&SchedulerSpec::ddsra())?;
+//! println!("final accuracy: {:?}", log.final_accuracy());
+//! # Ok(())
+//! # }
+//! ```
+
+use std::fmt;
+use std::ops::ControlFlow;
+use std::path::PathBuf;
+use std::str::FromStr;
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::SimConfig;
+use crate::fl::round::RoundEngine;
+use crate::sched::Scheduler;
+
+use super::orchestrator::{Experiment, RoundRecord, RunLog};
+
+// ---------------------------------------------------------------- options
+
+/// Validated engine options for one run. Constructed by
+/// [`SessionBuilder::build`] — callers go through the builder (or the
+/// compat [`Experiment::run`] shim) instead of filling this in by hand.
+#[derive(Clone, Debug)]
+pub struct RunOpts {
+    pub rounds: usize,
+    /// Evaluate on the test set every this many rounds (0 = never).
+    pub eval_every: usize,
+    /// Track ||ŵ_m − v^{K,t}|| against a centralized-GD shadow (Fig. 2);
+    /// forces all devices to train each round for measurement.
+    pub track_divergence: bool,
+    /// Execute real training through the backend. When false, only the
+    /// scheduling/delay simulation runs (scheduling-only sweeps).
+    pub train: bool,
+    /// Stop once an eval round reports test accuracy ≥ this target.
+    pub until_accuracy: Option<f64>,
+    /// Stop once the simulated cumulative round delay Σ τ(t) reaches
+    /// this budget (seconds).
+    pub max_sim_delay: Option<f64>,
+}
+
+impl Default for RunOpts {
+    fn default() -> Self {
+        RunOpts {
+            rounds: 50,
+            eval_every: 5,
+            track_divergence: false,
+            train: true,
+            until_accuracy: None,
+            max_sim_delay: None,
+        }
+    }
+}
+
+// -------------------------------------------------------------- observers
+
+/// Metadata delivered to observers before the first round.
+#[derive(Clone, Debug)]
+pub struct RunMeta {
+    /// Scheduler display name ([`Scheduler::name`]) — becomes
+    /// [`RunLog::scheme`].
+    pub scheme: String,
+    /// Planned round count (early stopping may end the run sooner).
+    pub rounds: usize,
+    pub gateways: usize,
+    pub devices: usize,
+}
+
+/// Why a run ended before its planned round count.
+#[derive(Clone, Debug, PartialEq)]
+pub enum StopCause {
+    /// `until_accuracy`: an eval round reported accuracy ≥ the target.
+    TargetAccuracy { round: usize, accuracy: f64 },
+    /// `max_rounds_wall`: the simulated cumulative delay Σ τ(t) reached
+    /// the budget.
+    DelayBudget { round: usize, cum_delay: f64 },
+    /// An observer returned [`ControlFlow::Break`].
+    Observer { round: usize },
+}
+
+impl StopCause {
+    /// Index of the last executed round.
+    pub fn round(&self) -> usize {
+        match *self {
+            StopCause::TargetAccuracy { round, .. }
+            | StopCause::DelayBudget { round, .. }
+            | StopCause::Observer { round } => round,
+        }
+    }
+
+    /// Stable machine-readable tag (used by [`crate::metrics::JsonlSink`]).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            StopCause::TargetAccuracy { .. } => "target_accuracy",
+            StopCause::DelayBudget { .. } => "delay_budget",
+            StopCause::Observer { .. } => "observer",
+        }
+    }
+}
+
+impl fmt::Display for StopCause {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StopCause::TargetAccuracy { round, accuracy } => {
+                write!(f, "reached target accuracy {:.2}% at round {round}", accuracy * 100.0)
+            }
+            StopCause::DelayBudget { round, cum_delay } => {
+                write!(f, "simulated delay budget hit at round {round} (Σ τ = {cum_delay:.1}s)")
+            }
+            StopCause::Observer { round } => write!(f, "observer stopped the run at round {round}"),
+        }
+    }
+}
+
+/// End-of-run summary delivered to observers (and returned by the
+/// streaming entry points, which buffer nothing themselves).
+#[derive(Clone, Debug)]
+pub struct RunSummary {
+    pub scheme: String,
+    pub rounds_planned: usize,
+    /// Rounds actually executed (== `rounds_planned` unless stopped).
+    pub rounds_run: usize,
+    pub stop: Option<StopCause>,
+    /// Empirical participation rate per gateway over the executed
+    /// rounds: (1/T) Σ_t 1_m^t.
+    pub participation: Vec<f64>,
+    /// Effective participation (selected AND feasible).
+    pub effective_participation: Vec<f64>,
+}
+
+/// Receives each [`RoundRecord`] as the engine produces it.
+///
+/// Implementations stream (CSV/JSONL rows written during the run),
+/// report (stderr heartbeats), or buffer (`MemorySink`, which rebuilds a
+/// [`RunLog`]). Returning [`ControlFlow::Break`] stops the run after the
+/// current round — the record that triggered the stop is always
+/// delivered to every observer first.
+pub trait RoundObserver {
+    /// Called once before round 0.
+    fn on_start(&mut self, _meta: &RunMeta) -> Result<()> {
+        Ok(())
+    }
+
+    /// Called after every executed round, in round order.
+    fn on_record(&mut self, record: &RoundRecord) -> Result<ControlFlow<()>>;
+
+    /// Called once after the last round (stopped or not).
+    fn on_finish(&mut self, _summary: &RunSummary) -> Result<()> {
+        Ok(())
+    }
+}
+
+// --------------------------------------------------------- scheduler spec
+
+/// Typed scheduler selection, replacing the stringly
+/// `make_scheduler("ddsra")` surface. The [`FromStr`] impl bridges the
+/// CLI (`--scheme ddsra`); everything else names schedulers through this
+/// enum.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SchedulerSpec {
+    /// DDSRA (§V): Lyapunov V from the config, or overridden per spec —
+    /// `SchedulerSpec::ddsra_with_v(1000.0)` is Fig. 4's "DDSRA
+    /// (V=1000)" curve.
+    Ddsra { v: Option<f64> },
+    /// DDSRA with V = 0 — the pure device-specific participation-rate
+    /// policy of Fig. 3.
+    Participation,
+    Random,
+    RoundRobin,
+    LossDriven,
+    DelayDriven,
+}
+
+impl SchedulerSpec {
+    /// DDSRA with the config's Lyapunov V.
+    pub fn ddsra() -> Self {
+        SchedulerSpec::Ddsra { v: None }
+    }
+
+    /// DDSRA with an explicit Lyapunov V (the Fig. 4/5 sweeps).
+    pub fn ddsra_with_v(v: f64) -> Self {
+        SchedulerSpec::Ddsra { v: Some(v) }
+    }
+
+    /// The canonical scheduler menu (one spec per CLI scheme name).
+    pub fn all() -> [SchedulerSpec; 6] {
+        [
+            SchedulerSpec::ddsra(),
+            SchedulerSpec::Participation,
+            SchedulerSpec::Random,
+            SchedulerSpec::RoundRobin,
+            SchedulerSpec::LossDriven,
+            SchedulerSpec::DelayDriven,
+        ]
+    }
+
+    /// CLI scheme names accepted by the [`FromStr`] bridge.
+    pub const NAMES: &[&str] =
+        &["ddsra", "participation", "random", "round_robin", "loss_driven", "delay_driven"];
+
+    /// Stable label for file names and result tables: distinguishes
+    /// DDSRA V-variants (`ddsra_v1000`) where [`Scheduler::name`] is the
+    /// run-time source of truth.
+    pub fn label(&self) -> String {
+        match self {
+            SchedulerSpec::Ddsra { v: None } => "ddsra".into(),
+            SchedulerSpec::Ddsra { v: Some(v) } => format!("ddsra_v{v}"),
+            SchedulerSpec::Participation => "participation".into(),
+            SchedulerSpec::Random => "random".into(),
+            SchedulerSpec::RoundRobin => "round_robin".into(),
+            SchedulerSpec::LossDriven => "loss_driven".into(),
+            SchedulerSpec::DelayDriven => "delay_driven".into(),
+        }
+    }
+
+    /// Does building this scheduler require the Γ_m participation rates
+    /// (one gradient-probe pass, §IV)?
+    pub fn needs_gamma(&self) -> bool {
+        matches!(self, SchedulerSpec::Ddsra { .. } | SchedulerSpec::Participation)
+    }
+
+    /// Instantiate the scheduler against an experiment. `gamma` must be
+    /// provided when [`needs_gamma`](Self::needs_gamma) — callers go
+    /// through [`Session::scheduler`], which caches the estimate.
+    pub fn build(&self, exp: &Experiment, gamma: Option<&[f64]>) -> Result<Box<dyn Scheduler>> {
+        use crate::sched::{Ddsra, DelayDriven, LossDriven, RandomSched, RoundRobin};
+        let need_gamma = || -> Result<Vec<f64>> {
+            Ok(gamma
+                .with_context(|| format!("{} needs the Γ_m participation rates", self.label()))?
+                .to_vec())
+        };
+        Ok(match self {
+            SchedulerSpec::Ddsra { v } => {
+                Box::new(Ddsra::new(v.unwrap_or(exp.cfg.lyapunov_v), need_gamma()?))
+            }
+            SchedulerSpec::Participation => Box::new(Ddsra::new(0.0, need_gamma()?)),
+            SchedulerSpec::Random => Box::new(RandomSched::new(exp.cfg.seed ^ 0xaa11)),
+            SchedulerSpec::RoundRobin => Box::new(RoundRobin::new()),
+            SchedulerSpec::LossDriven => {
+                Box::new(LossDriven::new(exp.topo.num_gateways(), exp.cfg.seed ^ 0xbb22))
+            }
+            SchedulerSpec::DelayDriven => Box::new(DelayDriven),
+        })
+    }
+}
+
+impl FromStr for SchedulerSpec {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "ddsra" => SchedulerSpec::ddsra(),
+            "participation" => SchedulerSpec::Participation,
+            "random" => SchedulerSpec::Random,
+            "round_robin" => SchedulerSpec::RoundRobin,
+            "loss_driven" => SchedulerSpec::LossDriven,
+            "delay_driven" => SchedulerSpec::DelayDriven,
+            other => {
+                // Round-trip the labels too: "ddsra_v1000" parses back.
+                if let Some(v) = other.strip_prefix("ddsra_v") {
+                    let v: f64 =
+                        v.parse().map_err(|e| anyhow::anyhow!("bad DDSRA V in {other:?}: {e}"))?;
+                    return Ok(SchedulerSpec::ddsra_with_v(v));
+                }
+                anyhow::bail!(
+                    "unknown scheme {other:?} (expected one of: {})",
+                    SchedulerSpec::NAMES.join(", ")
+                )
+            }
+        })
+    }
+}
+
+// ---------------------------------------------------------------- session
+
+/// Builder for a [`Session`] — every run knob is a typed method, and
+/// cross-knob constraints are validated once in [`build`](Self::build)
+/// instead of silently misbehaving mid-run.
+#[derive(Clone, Debug)]
+pub struct SessionBuilder {
+    cfg: SimConfig,
+    artifacts: PathBuf,
+    rounds: Option<usize>,
+    eval_every: usize,
+    divergence: bool,
+    train: bool,
+    until_accuracy: Option<f64>,
+    max_sim_delay: Option<f64>,
+}
+
+impl SessionBuilder {
+    /// Communication rounds T (default: `cfg.rounds`).
+    pub fn rounds(mut self, n: usize) -> Self {
+        self.rounds = Some(n);
+        self
+    }
+
+    /// Evaluate on the test set every `n` rounds (0 = never; the planned
+    /// final round always evaluates when training). Default 5.
+    pub fn eval_every(mut self, n: usize) -> Self {
+        self.eval_every = n;
+        self
+    }
+
+    /// Track the Fig. 2 divergence `‖ŵ_m − v^{K,t}‖` every round (all
+    /// devices train for measurement; implies training).
+    pub fn divergence(mut self) -> Self {
+        self.divergence = true;
+        self
+    }
+
+    /// Scheduling/delay simulation only — no backend training (the
+    /// Theorem-2 sweeps and scheduler benches).
+    pub fn schedule_only(mut self) -> Self {
+        self.train = false;
+        self
+    }
+
+    /// Stop as soon as an eval round reports test accuracy ≥ `target` —
+    /// run-to-target, the paper's Fig. 4–6 convergence-time metric.
+    /// Requires training and a nonzero eval cadence.
+    pub fn until_accuracy(mut self, target: f64) -> Self {
+        self.until_accuracy = Some(target);
+        self
+    }
+
+    /// Stop once the simulated FL wall-clock Σ τ(t) (cumulative round
+    /// delay, seconds) reaches `budget_s` — compare schedulers by what
+    /// they learn within a fixed latency budget.
+    pub fn max_rounds_wall(mut self, budget_s: f64) -> Self {
+        self.max_sim_delay = Some(budget_s);
+        self
+    }
+
+    /// Directory with compiled PJRT artifacts (default `artifacts/`;
+    /// only consulted by the `pjrt` feature).
+    pub fn artifacts(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.artifacts = dir.into();
+        self
+    }
+
+    /// Validate the knobs and build the experiment (topology, channels,
+    /// data, execution backend).
+    pub fn build(self) -> Result<Session> {
+        anyhow::ensure!(
+            self.train || !self.divergence,
+            "divergence tracking trains every device — it cannot be combined with schedule_only()"
+        );
+        if let Some(target) = self.until_accuracy {
+            anyhow::ensure!(
+                (0.0..=1.0).contains(&target),
+                "until_accuracy target {target} outside [0, 1]"
+            );
+            anyhow::ensure!(
+                self.train && self.eval_every > 0,
+                "until_accuracy needs training and eval_every > 0 to observe accuracy"
+            );
+        }
+        if let Some(budget) = self.max_sim_delay {
+            anyhow::ensure!(budget > 0.0, "max_rounds_wall budget must be positive");
+        }
+        if let Some(r) = self.rounds {
+            anyhow::ensure!(r > 0, "a session needs at least one round");
+        }
+        let exp = Experiment::with_artifacts(self.cfg, &self.artifacts)?;
+        let rounds = self.rounds.unwrap_or(exp.cfg.rounds);
+        anyhow::ensure!(rounds > 0, "a session needs at least one round");
+        Ok(Session {
+            exp,
+            opts: RunOpts {
+                rounds,
+                eval_every: self.eval_every,
+                track_divergence: self.divergence,
+                train: self.train,
+                until_accuracy: self.until_accuracy,
+                max_sim_delay: self.max_sim_delay,
+            },
+            gamma: OnceLock::new(),
+        })
+    }
+}
+
+/// One paired-comparison entry from [`Session::run_paired`].
+#[derive(Clone, Debug)]
+pub struct PairedRun {
+    /// [`SchedulerSpec::label`] of the scheduler that produced the log.
+    pub label: String,
+    pub log: RunLog,
+    /// Wall-clock seconds spent executing the run (scheduler
+    /// construction and Γ estimation excluded — they are shared).
+    pub wall_secs: f64,
+}
+
+/// A built experiment plus validated run options; the entry point for
+/// every runner in the repo (CLI, benches, examples, tests).
+pub struct Session {
+    exp: Experiment,
+    opts: RunOpts,
+    /// Γ_m participation rates, estimated at most once per session and
+    /// shared by every DDSRA-family scheduler (§IV gradient probes are
+    /// the expensive part).
+    gamma: OnceLock<Vec<f64>>,
+}
+
+impl Session {
+    pub fn builder(cfg: SimConfig) -> SessionBuilder {
+        SessionBuilder {
+            cfg,
+            artifacts: PathBuf::from("artifacts"),
+            rounds: None,
+            eval_every: 5,
+            divergence: false,
+            train: true,
+            until_accuracy: None,
+            max_sim_delay: None,
+        }
+    }
+
+    /// The underlying experiment (topology, shards, channel model, ...).
+    pub fn experiment(&self) -> &Experiment {
+        &self.exp
+    }
+
+    pub fn config(&self) -> &SimConfig {
+        &self.exp.cfg
+    }
+
+    pub fn opts(&self) -> &RunOpts {
+        &self.opts
+    }
+
+    /// The Γ_m participation rates (Eq. 13), estimated from §IV gradient
+    /// probes on first use and cached for the session's lifetime.
+    pub fn gamma(&self) -> Result<&[f64]> {
+        if self.gamma.get().is_none() {
+            let g = self.exp.derive_gamma()?;
+            let _ = self.gamma.set(g);
+        }
+        Ok(self.gamma.get().expect("gamma cache populated above"))
+    }
+
+    /// Instantiate a scheduler, sharing the session's cached Γ_m.
+    pub fn scheduler(&self, spec: &SchedulerSpec) -> Result<Box<dyn Scheduler>> {
+        let gamma = if spec.needs_gamma() { Some(self.gamma()?) } else { None };
+        spec.build(&self.exp, gamma)
+    }
+
+    /// Run one scheduler to completion, buffering records through a
+    /// [`crate::metrics::MemorySink`] into the back-compat [`RunLog`].
+    pub fn run(&self, spec: &SchedulerSpec) -> Result<RunLog> {
+        let mut sched = self.scheduler(spec)?;
+        self.run_scheduler(sched.as_mut())
+    }
+
+    /// Streaming variant: records flow to `observers` as they are
+    /// produced; nothing is buffered unless an observer buffers.
+    pub fn run_with(
+        &self,
+        spec: &SchedulerSpec,
+        observers: &mut [&mut dyn RoundObserver],
+    ) -> Result<RunSummary> {
+        let mut sched = self.scheduler(spec)?;
+        self.run_scheduler_with(sched.as_mut(), observers)
+    }
+
+    /// Run a caller-constructed scheduler instance (custom V sweeps,
+    /// schedulers not in the spec menu) into a [`RunLog`].
+    pub fn run_scheduler(&self, sched: &mut dyn Scheduler) -> Result<RunLog> {
+        RoundEngine::new(&self.exp).run_logged(sched, &self.opts)
+    }
+
+    /// Streaming variant of [`run_scheduler`](Self::run_scheduler).
+    pub fn run_scheduler_with(
+        &self,
+        sched: &mut dyn Scheduler,
+        observers: &mut [&mut dyn RoundObserver],
+    ) -> Result<RunSummary> {
+        RoundEngine::new(&self.exp).run(sched, &self.opts, observers)
+    }
+
+    /// The paper's paired-comparison experiment as one call: k
+    /// schedulers over ONE experiment, so every run faces byte-identical
+    /// channel/energy streams (they depend only on `(seed, round)`) and
+    /// the DDSRA family shares one Γ estimation. Returns one
+    /// [`PairedRun`] per spec, in order.
+    pub fn run_paired(&self, specs: &[SchedulerSpec]) -> Result<Vec<PairedRun>> {
+        let mut out = Vec::with_capacity(specs.len());
+        for spec in specs {
+            let mut sched = self.scheduler(spec)?;
+            let t0 = Instant::now();
+            let log = self.run_scheduler(sched.as_mut())?;
+            out.push(PairedRun {
+                label: spec.label(),
+                log,
+                wall_secs: t0.elapsed().as_secs_f64(),
+            });
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scheduler_spec_parses_every_cli_name() {
+        for &name in SchedulerSpec::NAMES {
+            let spec: SchedulerSpec = name.parse().unwrap();
+            assert_eq!(spec.label(), name);
+        }
+        assert_eq!("ddsra".parse::<SchedulerSpec>().unwrap(), SchedulerSpec::ddsra());
+        assert_eq!(
+            "ddsra_v1000".parse::<SchedulerSpec>().unwrap(),
+            SchedulerSpec::ddsra_with_v(1000.0)
+        );
+        assert_eq!(SchedulerSpec::ddsra_with_v(0.01).label(), "ddsra_v0.01");
+        let err = "dsdra".parse::<SchedulerSpec>().unwrap_err().to_string();
+        assert!(err.contains("ddsra"), "{err}");
+        assert!("ddsra_vfast".parse::<SchedulerSpec>().is_err());
+    }
+
+    #[test]
+    fn builder_rejects_contradictory_knobs() {
+        let base = || Session::builder(SimConfig::default());
+        assert!(base().schedule_only().divergence().build().is_err());
+        assert!(base().eval_every(0).until_accuracy(0.5).build().is_err());
+        assert!(base().until_accuracy(1.5).build().is_err());
+        assert!(base().max_rounds_wall(0.0).build().is_err());
+        assert!(base().rounds(0).build().is_err());
+    }
+
+    #[test]
+    fn stop_cause_reports_round_and_kind() {
+        let s = StopCause::TargetAccuracy { round: 7, accuracy: 0.5 };
+        assert_eq!((s.round(), s.kind()), (7, "target_accuracy"));
+        let s = StopCause::DelayBudget { round: 3, cum_delay: 10.0 };
+        assert_eq!((s.round(), s.kind()), (3, "delay_budget"));
+        let s = StopCause::Observer { round: 0 };
+        assert_eq!((s.round(), s.kind()), (0, "observer"));
+    }
+}

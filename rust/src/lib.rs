@@ -34,10 +34,14 @@
 //! - [`sched`] — DDSRA (§V) and the four baseline schedulers
 //! - [`fl`] — FL orchestration, the parallel streaming round engine
 //!   ([`fl::round`]: rayon device fan-out, stateless per-(round, device)
-//!   RNG streams, O(1)-copy FedAvg), participation rates (§IV)
+//!   RNG streams, O(1)-copy FedAvg), participation rates (§IV), and the
+//!   [`fl::Session`] API ([`fl::session`]: typed run builder,
+//!   [`fl::SchedulerSpec`], streaming observer/sink telemetry, engine-
+//!   owned early stopping, one-call paired multi-scheduler runs)
 //! - [`data`] — synthetic SVHN/CIFAR-like datasets + non-IID sharding
 //! - [`runtime`] — the [`runtime::Backend`] trait + native/PJRT engines
-//! - [`rng`], [`config`], [`metrics`], [`cli`] — infrastructure
+//! - [`rng`], [`config`], [`metrics`] (streaming CSV/JSONL/progress
+//!   sinks), [`cli`] — infrastructure
 
 pub mod cli;
 pub mod config;

@@ -9,6 +9,8 @@
 //! Examples:
 //!   iiot-fl train --scheme ddsra --v 0.01 --rounds 100 --dataset svhn
 //!   iiot-fl train --scheme round_robin --rounds 50 --out results/rr.csv
+//!   iiot-fl train --scheme ddsra --until-acc 0.5 --jsonl results/run.jsonl
+//!   iiot-fl train --scenario metro --progress 10 --max-delay 3600
 //!   iiot-fl participation --dataset cifar
 //!   iiot-fl info --cost-model vgg11
 
@@ -17,16 +19,58 @@ use std::path::Path;
 use anyhow::Result;
 use iiot_fl::cli::Args;
 use iiot_fl::dnn::models;
-use iiot_fl::fl::{Experiment, RunOpts};
-use iiot_fl::metrics::{print_table, write_run_csv};
+use iiot_fl::fl::{RoundObserver, SchedulerSpec, Session};
+use iiot_fl::metrics::{print_table, CsvSink, JsonlSink, MemorySink, ProgressSink};
+
+/// Flags every subcommand understands (config assembly).
+const COMMON_FLAGS: &[&str] = &[
+    "config",
+    "scenario",
+    "set",
+    "rounds",
+    "v",
+    "seed",
+    "dataset",
+    "preset",
+    "cost-model",
+    "execute-partition",
+];
+
+/// Flags only `train` understands (session knobs + sinks).
+const TRAIN_FLAGS: &[&str] = &[
+    "scheme",
+    "eval-every",
+    "no-train",
+    "divergence",
+    "until-acc",
+    "max-delay",
+    "out",
+    "jsonl",
+    "progress",
+];
+
+fn allowed(extra: &[&'static str]) -> Vec<&'static str> {
+    let mut v = COMMON_FLAGS.to_vec();
+    v.extend_from_slice(extra);
+    v
+}
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&argv)?;
     match args.command.as_str() {
-        "train" => cmd_train(&args),
-        "participation" => cmd_participation(&args),
-        "info" => cmd_info(&args),
+        "train" => {
+            args.expect_known(&allowed(TRAIN_FLAGS))?;
+            cmd_train(&args)
+        }
+        "participation" => {
+            args.expect_known(&allowed(&[]))?;
+            cmd_participation(&args)
+        }
+        "info" => {
+            args.expect_known(&allowed(&[]))?;
+            cmd_info(&args)
+        }
         "" | "help" => {
             print_help();
             Ok(())
@@ -48,39 +92,87 @@ fn print_help() {
          \u{20}                applied before --set overrides)\n\
          \u{20}                --set key=value (any config key) --config file\n\
          train flags:  --scheme ddsra|participation|random|round_robin|\n\
-         \u{20}                loss_driven|delay_driven --out results/run.csv\n\
+         \u{20}                loss_driven|delay_driven\n\
          \u{20}                --eval-every N --no-train --divergence\n\
+         \u{20}                --until-acc A (stop at test accuracy >= A)\n\
+         \u{20}                --max-delay S (stop at simulated delay budget S)\n\
+         \u{20}                --out results/run.csv (stream CSV during the run)\n\
+         \u{20}                --jsonl results/run.jsonl (stream JSONL)\n\
+         \u{20}                --progress N (stderr heartbeat every N rounds)\n\
          \u{20}                --execute-partition (run each device's local step\n\
          \u{20}                SPLIT at the scheduler's chosen cut; needs\n\
-         \u{20}                --cost-model == --preset)"
+         \u{20}                --cost-model == --preset)\n\
+         unknown flags are rejected with a \"did you mean\" hint"
     );
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = args.sim_config()?;
-    let scheme = args.get_or("scheme", "ddsra").to_string();
-    let exp = Experiment::new(cfg)?;
-    let mut sched = exp.make_scheduler(&scheme)?;
-    let opts = RunOpts {
-        rounds: exp.cfg.rounds,
-        eval_every: args.parse_num::<usize>("eval-every")?.unwrap_or(5),
-        track_divergence: args.has("divergence"),
-        train: !args.has("no-train"),
-    };
+    let spec: SchedulerSpec = args.get_or("scheme", "ddsra").parse()?;
+
+    let mut builder =
+        Session::builder(cfg).eval_every(args.parse_num::<usize>("eval-every")?.unwrap_or(5));
+    if args.has("no-train") {
+        builder = builder.schedule_only();
+    }
+    if args.has("divergence") {
+        builder = builder.divergence();
+    }
+    if let Some(target) = args.parse_num::<f64>("until-acc")? {
+        builder = builder.until_accuracy(target);
+    }
+    if let Some(budget) = args.parse_num::<f64>("max-delay")? {
+        builder = builder.max_rounds_wall(budget);
+    }
+    let session = builder.build()?;
+    let exp = session.experiment();
     eprintln!(
         "[train] scheme={} rounds={} dataset={} exec={} cost={}{}",
-        sched.name(),
-        opts.rounds,
+        spec.label(),
+        session.opts().rounds,
         exp.cfg.dataset,
         exp.cfg.exec_model,
         exp.cfg.cost_model,
         if exp.cfg.execute_partition { " split-execution=on" } else { "" }
     );
-    let log = exp.run(sched.as_mut(), &opts)?;
+
+    // Sinks: records stream to every requested emitter DURING the run;
+    // the memory sink rebuilds the log for the closing tables.
+    let mut mem = MemorySink::new();
+    let mut csv = match args.get("out") {
+        Some(path) => Some(CsvSink::create(Path::new(path))?),
+        None => None,
+    };
+    let mut jsonl = match args.get("jsonl") {
+        Some(path) => Some(JsonlSink::create(Path::new(path))?),
+        None => None,
+    };
+    let mut progress = args.parse_num::<usize>("progress")?.map(ProgressSink::every);
+
+    let summary = {
+        let mut observers: Vec<&mut dyn RoundObserver> = vec![&mut mem];
+        if let Some(sink) = csv.as_mut() {
+            observers.push(sink);
+        }
+        if let Some(sink) = jsonl.as_mut() {
+            observers.push(sink);
+        }
+        if let Some(sink) = progress.as_mut() {
+            observers.push(sink);
+        }
+        session.run_with(&spec, &mut observers)?
+    };
+    if let Some(cause) = &summary.stop {
+        eprintln!("[train] stopped early: {cause}");
+    }
     if let Some(path) = args.get("out") {
-        write_run_csv(&log, Path::new(path))?;
         eprintln!("[train] wrote {path}");
     }
+    if let Some(path) = args.get("jsonl") {
+        eprintln!("[train] wrote {path}");
+    }
+
+    let log = mem.into_log();
     let rows: Vec<Vec<String>> = log
         .records
         .iter()
@@ -114,7 +206,8 @@ fn cmd_train(args: &Args) -> Result<()> {
 
 fn cmd_participation(args: &Args) -> Result<()> {
     let cfg = args.sim_config()?;
-    let exp = Experiment::new(cfg)?;
+    let session = Session::builder(cfg).build()?;
+    let exp = session.experiment();
     let stats = exp.estimate_grad_stats(4)?;
     let (phis, gammas) = iiot_fl::fl::gamma_rates(
         &exp.topo,

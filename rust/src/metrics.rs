@@ -1,13 +1,24 @@
-//! CSV emitters for run logs — every figure in the paper is regenerated as
-//! a CSV under `results/` plus a printed table.
+//! Telemetry emitters: streaming sinks for run records (CSV, JSONL,
+//! stderr progress, in-memory), plus the CSV/table primitives the figure
+//! harness uses.
+//!
+//! Every sink implements [`RoundObserver`] and receives each
+//! [`RoundRecord`] AS THE ROUND COMPLETES — a metro-scale run writes its
+//! CSV while training, instead of buffering thousands of records for a
+//! post-hoc dump. [`MemorySink`] is the one buffering sink: it rebuilds
+//! the classic [`RunLog`] for tables, tests and back-compat callers.
+//! [`write_run_csv`] (the old post-hoc emitter) is now a thin loop over
+//! [`CsvSink`], so streamed and post-hoc CSVs are byte-identical by
+//! construction (pinned by `rust/tests/session.rs`).
 
 use std::fs;
 use std::io::Write;
+use std::ops::ControlFlow;
 use std::path::Path;
 
 use anyhow::{Context, Result};
 
-use crate::fl::RunLog;
+use crate::fl::{RoundObserver, RoundRecord, RunLog, RunMeta, RunSummary};
 
 /// Minimal CSV writer (no external deps offline).
 pub struct Csv {
@@ -26,7 +37,8 @@ impl Csv {
     }
 
     pub fn row(&mut self, fields: &[String]) -> Result<()> {
-        anyhow::ensure!(fields.len() == self.cols, "row width {} != header {}", fields.len(), self.cols);
+        let (got, want) = (fields.len(), self.cols);
+        anyhow::ensure!(got == want, "row width {got} != header {want}");
         writeln!(self.file, "{}", fields.join(","))?;
         Ok(())
     }
@@ -36,23 +48,279 @@ impl Csv {
     }
 }
 
-/// Write one run's per-round records.
+/// Column order of the per-round run CSV (streamed by [`CsvSink`],
+/// replayed post-hoc by [`write_run_csv`]).
+pub const RUN_CSV_HEADER: &[&str] = &[
+    "round",
+    "delay",
+    "cum_delay",
+    "train_loss",
+    "test_loss",
+    "test_acc",
+    "num_selected",
+    "num_failed",
+];
+
+fn run_csv_row(r: &RoundRecord) -> Vec<String> {
+    vec![
+        r.round.to_string(),
+        format!("{:.6}", r.delay),
+        format!("{:.6}", r.cum_delay),
+        r.train_loss.map_or(String::new(), |v| format!("{v:.6}")),
+        r.test_loss.map_or(String::new(), |v| format!("{v:.6}")),
+        r.test_acc.map_or(String::new(), |v| format!("{v:.6}")),
+        r.selected.count().to_string(),
+        r.failed.count().to_string(),
+    ]
+}
+
+// ------------------------------------------------------------------ sinks
+
+/// Streams one CSV row per round, during the run.
+pub struct CsvSink {
+    csv: Csv,
+}
+
+impl CsvSink {
+    pub fn create(path: &Path) -> Result<Self> {
+        Ok(CsvSink { csv: Csv::create(path, RUN_CSV_HEADER)? })
+    }
+
+    /// Append one record's row (shared by the streaming observer path
+    /// and the post-hoc [`write_run_csv`] replay).
+    pub fn write_record(&mut self, r: &RoundRecord) -> Result<()> {
+        self.csv.row(&run_csv_row(r))
+    }
+}
+
+impl RoundObserver for CsvSink {
+    fn on_record(&mut self, record: &RoundRecord) -> Result<ControlFlow<()>> {
+        self.write_record(record)?;
+        Ok(ControlFlow::Continue(()))
+    }
+}
+
+/// Render a finite f64 as a JSON number (shortest round-trip form);
+/// non-finite values have no JSON representation and become `null`.
+fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".into()
+    }
+}
+
+fn json_opt(v: Option<f64>) -> String {
+    v.map_or_else(|| "null".into(), json_f64)
+}
+
+/// JSON string literal with the mandatory escapes — scheme names come
+/// from `Scheduler::name()`, which callers with custom schedulers may
+/// populate with anything.
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+fn json_arr(vs: &[f64]) -> String {
+    let body: Vec<String> = vs.iter().map(|&v| json_f64(v)).collect();
+    format!("[{}]", body.join(","))
+}
+
+/// Streams one JSON object per line: a `meta` line before round 0, one
+/// `round` line per record, and a closing `summary` line. The schema is
+/// pinned by a golden file in `rust/tests/session.rs`.
+pub struct JsonlSink {
+    file: fs::File,
+}
+
+impl JsonlSink {
+    pub fn create(path: &Path) -> Result<Self> {
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir).with_context(|| format!("mkdir {dir:?}"))?;
+        }
+        let file = fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+        Ok(JsonlSink { file })
+    }
+}
+
+impl RoundObserver for JsonlSink {
+    fn on_start(&mut self, meta: &RunMeta) -> Result<()> {
+        writeln!(
+            self.file,
+            "{{\"type\":\"meta\",\"scheme\":{},\"rounds\":{},\"gateways\":{},\"devices\":{}}}",
+            json_str(&meta.scheme),
+            meta.rounds,
+            meta.gateways,
+            meta.devices
+        )?;
+        Ok(())
+    }
+
+    fn on_record(&mut self, r: &RoundRecord) -> Result<ControlFlow<()>> {
+        let divergence =
+            r.divergence.as_ref().map_or_else(|| "null".into(), |d| json_arr(d));
+        writeln!(
+            self.file,
+            "{{\"type\":\"round\",\"round\":{},\"delay\":{},\"cum_delay\":{},\
+             \"selected\":{},\"failed\":{},\"train_loss\":{},\"test_loss\":{},\
+             \"test_acc\":{},\"divergence\":{}}}",
+            r.round,
+            json_f64(r.delay),
+            json_f64(r.cum_delay),
+            r.selected.count(),
+            r.failed.count(),
+            json_opt(r.train_loss),
+            json_opt(r.test_loss),
+            json_opt(r.test_acc),
+            divergence,
+        )?;
+        Ok(ControlFlow::Continue(()))
+    }
+
+    fn on_finish(&mut self, s: &RunSummary) -> Result<()> {
+        let stop = s.stop.as_ref().map_or_else(|| "null".into(), |c| format!("\"{}\"", c.kind()));
+        writeln!(
+            self.file,
+            "{{\"type\":\"summary\",\"scheme\":{},\"rounds_run\":{},\"stop\":{},\
+             \"participation\":{},\"effective_participation\":{}}}",
+            json_str(&s.scheme),
+            s.rounds_run,
+            stop,
+            json_arr(&s.participation),
+            json_arr(&s.effective_participation),
+        )?;
+        Ok(())
+    }
+}
+
+/// Stderr heartbeat for long (metro-scale) runs: one line every `every`
+/// rounds plus a closing summary, so a multi-hour run is observably
+/// alive without buffering anything.
+pub struct ProgressSink {
+    every: usize,
+    scheme: String,
+    rounds: usize,
+}
+
+impl ProgressSink {
+    /// Report every `every` rounds (clamped to ≥ 1).
+    pub fn every(every: usize) -> Self {
+        ProgressSink { every: every.max(1), scheme: String::new(), rounds: 0 }
+    }
+}
+
+impl RoundObserver for ProgressSink {
+    fn on_start(&mut self, meta: &RunMeta) -> Result<()> {
+        self.scheme = meta.scheme.clone();
+        self.rounds = meta.rounds;
+        eprintln!(
+            "[{}] starting: {} rounds over {} gateways / {} devices",
+            meta.scheme, meta.rounds, meta.gateways, meta.devices
+        );
+        Ok(())
+    }
+
+    fn on_record(&mut self, r: &RoundRecord) -> Result<ControlFlow<()>> {
+        if (r.round + 1) % self.every == 0 || r.round + 1 == self.rounds {
+            let loss = r.train_loss.map_or("-".into(), |v| format!("{v:.4}"));
+            let acc = r.test_acc.map_or("-".into(), |v| format!("{:.1}%", v * 100.0));
+            eprintln!(
+                "[{}] round {}/{}  τ={:.1}s  Στ={:.1}s  loss={}  acc={}",
+                self.scheme,
+                r.round + 1,
+                self.rounds,
+                r.delay,
+                r.cum_delay,
+                loss,
+                acc
+            );
+        }
+        Ok(ControlFlow::Continue(()))
+    }
+
+    fn on_finish(&mut self, s: &RunSummary) -> Result<()> {
+        match &s.stop {
+            Some(cause) => eprintln!("[{}] stopped early: {cause}", s.scheme),
+            None => eprintln!("[{}] finished {} rounds", s.scheme, s.rounds_run),
+        }
+        Ok(())
+    }
+}
+
+/// The one buffering sink: collects records and the end-of-run summary,
+/// rebuilding the classic [`RunLog`] for tables, tests and back-compat
+/// callers. Records are memory-lean ([`crate::fl::GatewayMask`] bitmasks
+/// instead of `Vec<bool>` per round), so buffering stays cheap even at
+/// `--scenario metro`.
+#[derive(Default)]
+pub struct MemorySink {
+    scheme: String,
+    records: Vec<RoundRecord>,
+    participation: Vec<f64>,
+    effective_participation: Vec<f64>,
+}
+
+impl MemorySink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn records(&self) -> &[RoundRecord] {
+        &self.records
+    }
+
+    /// The buffered run as a [`RunLog`] (byte-compatible with what the
+    /// pre-session engine returned — pinned by the replay suites).
+    pub fn into_log(self) -> RunLog {
+        RunLog {
+            scheme: self.scheme,
+            records: self.records,
+            participation: self.participation,
+            effective_participation: self.effective_participation,
+        }
+    }
+}
+
+impl RoundObserver for MemorySink {
+    fn on_start(&mut self, meta: &RunMeta) -> Result<()> {
+        self.scheme = meta.scheme.clone();
+        self.records.clear();
+        Ok(())
+    }
+
+    fn on_record(&mut self, record: &RoundRecord) -> Result<ControlFlow<()>> {
+        self.records.push(record.clone());
+        Ok(ControlFlow::Continue(()))
+    }
+
+    fn on_finish(&mut self, s: &RunSummary) -> Result<()> {
+        self.participation = s.participation.clone();
+        self.effective_participation = s.effective_participation.clone();
+        Ok(())
+    }
+}
+
+/// Write one run's per-round records post-hoc — a replay of the
+/// [`CsvSink`] streaming path over a buffered log, guaranteed
+/// byte-identical to streaming the same records during the run.
 pub fn write_run_csv(log: &RunLog, path: &Path) -> Result<()> {
-    let mut csv = Csv::create(
-        path,
-        &["round", "delay", "cum_delay", "train_loss", "test_loss", "test_acc", "num_selected", "num_failed"],
-    )?;
+    let mut sink = CsvSink::create(path)?;
     for r in &log.records {
-        csv.row(&[
-            r.round.to_string(),
-            format!("{:.6}", r.delay),
-            format!("{:.6}", r.cum_delay),
-            r.train_loss.map_or(String::new(), |v| format!("{v:.6}")),
-            r.test_loss.map_or(String::new(), |v| format!("{v:.6}")),
-            r.test_acc.map_or(String::new(), |v| format!("{v:.6}")),
-            r.selected.iter().filter(|&&s| s).count().to_string(),
-            r.failed.iter().filter(|&&f| f).count().to_string(),
-        ])?;
+        sink.write_record(r)?;
     }
     Ok(())
 }
@@ -98,5 +366,16 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         assert_eq!(text, "a,b\n1.5,2.5\nx,y\n");
         let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn json_scalars_render_compactly() {
+        assert_eq!(json_f64(1.5), "1.5");
+        assert_eq!(json_f64(1.0), "1");
+        assert_eq!(json_f64(f64::NAN), "null");
+        assert_eq!(json_opt(None), "null");
+        assert_eq!(json_opt(Some(0.25)), "0.25");
+        assert_eq!(json_arr(&[1.0, 0.5]), "[1,0.5]");
+        assert_eq!(json_arr(&[]), "[]");
     }
 }

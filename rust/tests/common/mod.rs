@@ -1,31 +1,42 @@
 //! Helpers shared by the integration-test crates (pulled in via
 //! `mod common;` — not a test target itself).
 
-use iiot_fl::fl::RunLog;
+use iiot_fl::fl::{RoundRecord, RunLog};
 
-/// Render every field of every round record with exact bit patterns —
-/// THE definition of "byte-identical round log" the replay and
-/// round-engine suites pin against.
-pub fn serialize(log: &RunLog) -> String {
+/// Render every field of every round record with exact bit patterns.
+/// `selected`/`failed` expand through [`iiot_fl::fl::GatewayMask::to_vec`]
+/// so the rendered bytes are IDENTICAL to the pre-compaction `Vec<bool>`
+/// representation the earlier engines logged.
+pub fn serialize_records(records: &[RoundRecord]) -> String {
     let bits = |v: f64| format!("{:016x}", v.to_bits());
     let opt = |v: Option<f64>| v.map_or("-".into(), bits);
     let mut out = String::new();
-    out.push_str(&log.scheme);
-    out.push('\n');
-    for r in &log.records {
+    for r in records {
         out.push_str(&format!(
             "{}|{}|{}|{:?}|{:?}|{}|{}|{}|{:?}\n",
             r.round,
             bits(r.delay),
             bits(r.cum_delay),
-            r.selected,
-            r.failed,
+            r.selected.to_vec(),
+            r.failed.to_vec(),
             opt(r.train_loss),
             opt(r.test_loss),
             opt(r.test_acc),
             r.divergence.as_ref().map(|d| d.iter().map(|&v| bits(v)).collect::<Vec<_>>()),
         ));
     }
+    out
+}
+
+/// Render every field of a run log with exact bit patterns — THE
+/// definition of "byte-identical round log" the replay, partition and
+/// round-engine suites pin against.
+pub fn serialize(log: &RunLog) -> String {
+    let mut out = String::new();
+    out.push_str(&log.scheme);
+    out.push('\n');
+    out.push_str(&serialize_records(&log.records));
+    let bits = |v: f64| format!("{:016x}", v.to_bits());
     for p in log.participation.iter().chain(&log.effective_participation) {
         out.push_str(&bits(*p));
         out.push('\n');

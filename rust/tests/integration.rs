@@ -6,7 +6,7 @@
 //! `pjrt_artifacts` at the bottom).
 
 use iiot_fl::config::SimConfig;
-use iiot_fl::fl::{Experiment, RunOpts};
+use iiot_fl::fl::{SchedulerSpec, Session};
 use iiot_fl::runtime::{make_backend, Backend, NativeBackend};
 
 fn mlp_cfg() -> SimConfig {
@@ -77,49 +77,42 @@ fn backend_init_train_eval_grad_roundtrip() {
 }
 
 #[test]
-fn experiment_runs_every_scheme_one_round() {
-    let mut cfg = mlp_cfg();
-    cfg.rounds = 2;
-    let exp = Experiment::new(cfg).unwrap();
-    let opts = RunOpts { rounds: 2, eval_every: 2, track_divergence: false, train: true };
-    for scheme in ["ddsra", "participation", "random", "round_robin", "loss_driven", "delay_driven"] {
-        let mut sched = exp.make_scheduler(scheme).unwrap();
-        let log = exp.run(sched.as_mut(), &opts).unwrap();
-        assert_eq!(log.records.len(), 2, "{scheme}");
-        assert!(log.records[1].cum_delay >= log.records[0].delay, "{scheme}");
-        assert!(log.records.last().unwrap().test_acc.is_some(), "{scheme}");
+fn session_runs_every_scheme_one_round() {
+    // ONE session serves the whole scheduler menu: the DDSRA family
+    // shares the cached gamma estimate, and every scheme faces identical
+    // environment streams.
+    let session = Session::builder(mlp_cfg()).rounds(2).eval_every(2).build().unwrap();
+    let exp = session.experiment();
+    for spec in SchedulerSpec::all() {
+        let label = spec.label();
+        let log = session.run(&spec).unwrap();
+        assert_eq!(log.records.len(), 2, "{label}");
+        assert!(log.records[1].cum_delay >= log.records[0].delay, "{label}");
+        assert!(log.records.last().unwrap().test_acc.is_some(), "{label}");
         // J channels -> at most J gateways selected per round
         for r in &log.records {
-            assert!(
-                r.selected.iter().filter(|&&s| s).count() <= exp.cfg.num_channels,
-                "{scheme}"
-            );
+            assert!(r.selected.count() <= exp.cfg.num_channels, "{label}");
         }
     }
 }
 
 #[test]
 fn runs_are_deterministic_and_paired_across_schedulers() {
-    let mut cfg = mlp_cfg();
-    cfg.rounds = 3;
-    let exp = Experiment::new(cfg.clone()).unwrap();
-    let opts = RunOpts { rounds: 3, eval_every: 3, track_divergence: false, train: true };
+    let cfg = mlp_cfg();
+    let session = Session::builder(cfg.clone()).rounds(3).eval_every(3).build().unwrap();
 
-    // Same scheme twice: identical trajectories.
-    let mut s1 = exp.make_scheduler("round_robin").unwrap();
-    let mut s2 = exp.make_scheduler("round_robin").unwrap();
-    let a = exp.run(s1.as_mut(), &opts).unwrap();
-    let b = exp.run(s2.as_mut(), &opts).unwrap();
+    // Same scheme twice through one session: identical trajectories.
+    let a = session.run(&SchedulerSpec::RoundRobin).unwrap();
+    let b = session.run(&SchedulerSpec::RoundRobin).unwrap();
     for (ra, rb) in a.records.iter().zip(&b.records) {
         assert_eq!(ra.delay, rb.delay);
         assert_eq!(ra.test_acc, rb.test_acc);
         assert_eq!(ra.train_loss, rb.train_loss);
     }
 
-    // A re-built experiment from the same config seed reproduces the run.
-    let exp2 = Experiment::new(cfg).unwrap();
-    let mut s3 = exp2.make_scheduler("round_robin").unwrap();
-    let c = exp2.run(s3.as_mut(), &opts).unwrap();
+    // A re-built session from the same config seed reproduces the run.
+    let session2 = Session::builder(cfg).rounds(3).eval_every(3).build().unwrap();
+    let c = session2.run(&SchedulerSpec::RoundRobin).unwrap();
     for (ra, rc) in a.records.iter().zip(&c.records) {
         assert_eq!(ra.delay, rc.delay);
         assert_eq!(ra.test_acc, rc.test_acc);
@@ -128,20 +121,18 @@ fn runs_are_deterministic_and_paired_across_schedulers() {
 
 #[test]
 fn divergence_mode_produces_per_gateway_divergence() {
-    let mut cfg = mlp_cfg();
-    cfg.rounds = 2;
-    let exp = Experiment::new(cfg).unwrap();
-    let mut sched = exp.make_scheduler("round_robin").unwrap();
-    let opts = RunOpts { rounds: 2, eval_every: 0, track_divergence: true, train: true };
-    let log = exp.run(sched.as_mut(), &opts).unwrap();
+    let session =
+        Session::builder(mlp_cfg()).rounds(2).eval_every(0).divergence().build().unwrap();
+    let log = session.run(&SchedulerSpec::RoundRobin).unwrap();
     let mean = log.mean_divergence().unwrap();
-    assert_eq!(mean.len(), exp.topo.num_gateways());
+    assert_eq!(mean.len(), session.experiment().topo.num_gateways());
     assert!(mean.iter().all(|&d| d.is_finite() && d > 0.0), "{mean:?}");
 }
 
 #[test]
 fn grad_stats_reflect_non_iid_structure() {
-    let exp = Experiment::new(mlp_cfg()).unwrap();
+    let session = Session::builder(mlp_cfg()).build().unwrap();
+    let exp = session.experiment();
     let stats = exp.estimate_grad_stats(4).unwrap();
     assert!(stats.sigma.iter().all(|&s| s.is_finite() && s >= 0.0));
     assert!(stats.delta.iter().all(|&d| d.is_finite() && d >= 0.0));
@@ -180,13 +171,11 @@ fn cnn_native_training_loss_decreases_from_ln10() {
     // feasible every round, so both rounds really train.
     cfg.device_energy_max = 500.0;
     cfg.gw_energy_max = 5000.0;
-    let exp = Experiment::new(cfg).unwrap();
-    let mut sched = exp.make_scheduler("round_robin").unwrap();
-    let opts = RunOpts { rounds: 2, eval_every: 2, track_divergence: false, train: true };
-    let log = exp.run(sched.as_mut(), &opts).unwrap();
+    let session = Session::builder(cfg).rounds(2).eval_every(2).build().unwrap();
+    let log = session.run(&SchedulerSpec::RoundRobin).unwrap();
     assert_eq!(log.records.len(), 2);
     assert!(
-        log.records.iter().all(|r| !r.failed[0]),
+        log.records.iter().all(|r| !r.failed.get(0)),
         "fixed plan should stay feasible with generous energy budgets"
     );
 
@@ -208,12 +197,8 @@ fn cnn_native_training_loss_decreases_from_ln10() {
 /// must beat 10-class chance, with no artifacts anywhere.
 #[test]
 fn ddsra_native_training_learns() {
-    let mut cfg = mlp_cfg();
-    cfg.rounds = 12;
-    let exp = Experiment::new(cfg).unwrap();
-    let mut sched = exp.make_scheduler("ddsra").unwrap();
-    let opts = RunOpts { rounds: 12, eval_every: 12, track_divergence: false, train: true };
-    let log = exp.run(sched.as_mut(), &opts).unwrap();
+    let session = Session::builder(mlp_cfg()).rounds(12).eval_every(12).build().unwrap();
+    let log = session.run(&SchedulerSpec::ddsra()).unwrap();
     let acc = log.final_accuracy().unwrap();
     assert!(acc > 0.12, "accuracy {acc} not above chance after 12 rounds");
     // loss must decrease
@@ -267,12 +252,13 @@ mod pjrt_artifacts {
     #[test]
     fn pjrt_experiment_trains() {
         let Some(dir) = artifacts() else { return };
-        let mut cfg = mlp_cfg();
-        cfg.rounds = 2;
-        let exp = Experiment::with_artifacts(cfg, dir).unwrap();
-        let mut sched = exp.make_scheduler("round_robin").unwrap();
-        let opts = RunOpts { rounds: 2, eval_every: 2, track_divergence: false, train: true };
-        let log = exp.run(sched.as_mut(), &opts).unwrap();
+        let session = Session::builder(mlp_cfg())
+            .rounds(2)
+            .eval_every(2)
+            .artifacts(dir)
+            .build()
+            .unwrap();
+        let log = session.run(&SchedulerSpec::RoundRobin).unwrap();
         assert!(log.records.last().unwrap().test_acc.is_some());
     }
 

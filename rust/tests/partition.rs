@@ -6,9 +6,12 @@
 //! paper's actually-executed DNN partition, and proves that turning
 //! `--execute-partition` on changes WHERE layers run, never the numbers.
 
+mod common;
+
+use common::serialize;
 use iiot_fl::config::SimConfig;
 use iiot_fl::dnn::models;
-use iiot_fl::fl::{Experiment, RunLog, RunOpts};
+use iiot_fl::fl::{SchedulerSpec, Session};
 use iiot_fl::rng::Rng;
 use iiot_fl::runtime::{Backend, NativeBackend, Params, PartitionedBackend};
 
@@ -52,7 +55,7 @@ fn split_equals_fused_at_every_cut_for_both_presets() {
         let mut fused_traj = Vec::with_capacity(steps);
         let mut p = p0.clone();
         for step in 0..steps {
-            let (x, y) = batch(0x5eed ^ (step as u64) << 8, meta.train_batch, dim);
+            let (x, y) = batch(0x5eed ^ ((step as u64) << 8), meta.train_batch, dim);
             let (np, loss) = fused.train_step(&p, &x, &y, 0.05).unwrap();
             fused_traj.push((np.clone(), loss));
             p = np;
@@ -69,7 +72,7 @@ fn split_equals_fused_at_every_cut_for_both_presets() {
 
             let mut w = p0.clone();
             for (step, (fp, floss)) in fused_traj.iter().enumerate() {
-                let (x, y) = batch(0x5eed ^ (step as u64) << 8, meta.train_batch, dim);
+                let (x, y) = batch(0x5eed ^ ((step as u64) << 8), meta.train_batch, dim);
                 let (nw, loss) = split.train_step(&w, &x, &y, 0.05).unwrap();
                 assert_eq!(
                     loss.to_bits(),
@@ -146,25 +149,6 @@ fn gateway_half_gradient_matches_finite_differences() {
     assert!(g[..base].iter().any(|&v| v != 0.0), "no gradient crossed the cut");
 }
 
-fn serialize(log: &RunLog) -> String {
-    let bits = |v: f64| format!("{:016x}", v.to_bits());
-    let opt = |v: Option<f64>| v.map_or("-".into(), bits);
-    let mut out = String::new();
-    for r in &log.records {
-        out.push_str(&format!(
-            "{}|{}|{:?}|{:?}|{}|{}|{}\n",
-            r.round,
-            bits(r.delay),
-            r.selected,
-            r.failed,
-            opt(r.train_loss),
-            opt(r.test_loss),
-            opt(r.test_acc),
-        ));
-    }
-    out
-}
-
 /// Orchestrator-level parity: a full multi-round FL run with
 /// `execute_partition` on — every scheduled device trains through the
 /// split backend at its DDSRA-chosen cut — produces byte-identical round
@@ -178,15 +162,14 @@ fn execute_partition_run_matches_fused_run_byte_for_byte() {
     cfg.test_size = 512;
     cfg.dataset_max = 500;
     cfg.rounds = 3;
-    let opts = RunOpts { rounds: 3, eval_every: 3, track_divergence: false, train: true };
 
     let run = |execute_partition: bool| -> String {
         let mut c = cfg.clone();
         c.execute_partition = execute_partition;
-        let exp = Experiment::new(c).unwrap();
+        let session = Session::builder(c).rounds(3).eval_every(3).build().unwrap();
+        let exp = session.experiment();
         assert_eq!(exp.partitioned.len(), if execute_partition { 3 } else { 0 });
-        let mut sched = exp.make_scheduler("round_robin").unwrap();
-        let log = exp.run(sched.as_mut(), &opts).unwrap();
+        let log = session.run(&SchedulerSpec::RoundRobin).unwrap();
         assert!(log.records.iter().any(|r| r.train_loss.is_some()), "must train");
         serialize(&log)
     };
@@ -194,13 +177,14 @@ fn execute_partition_run_matches_fused_run_byte_for_byte() {
 
     // The baselines' fixed plan picks l = L/2 (clamped) — with the mlp
     // cost model that is cut 1, a genuine two-sided split.
-    let exp = Experiment::new({
+    let session = Session::builder({
         let mut c = cfg.clone();
         c.execute_partition = true;
         c
     })
+    .build()
     .unwrap();
-    assert_eq!(exp.partitioned[1].cut_activation_elems(), 64);
+    assert_eq!(session.experiment().partitioned[1].cut_activation_elems(), 64);
 }
 
 /// DDSRA + split execution: the optimiser's per-device, per-round cuts
@@ -214,13 +198,11 @@ fn ddsra_execute_partition_matches_fused() {
     cfg.test_size = 256;
     cfg.dataset_max = 400;
     cfg.rounds = 2;
-    let opts = RunOpts { rounds: 2, eval_every: 2, track_divergence: false, train: true };
     let run = |execute_partition: bool| -> String {
         let mut c = cfg.clone();
         c.execute_partition = execute_partition;
-        let exp = Experiment::new(c).unwrap();
-        let mut sched = exp.make_scheduler("ddsra").unwrap();
-        serialize(&exp.run(sched.as_mut(), &opts).unwrap())
+        let session = Session::builder(c).rounds(2).eval_every(2).build().unwrap();
+        serialize(&session.run(&SchedulerSpec::ddsra()).unwrap())
     };
     assert_eq!(run(false), run(true), "DDSRA split run diverged from fused");
 }

@@ -1,5 +1,5 @@
-//! Deterministic-replay guarantee: two `Experiment::run` invocations built
-//! from the same `SimConfig` seed must produce BYTE-identical round logs —
+//! Deterministic-replay guarantee: two session runs built from the same
+//! `SimConfig` seed must produce BYTE-identical round logs —
 //! bit-for-bit equal floats, not approximately equal. This pins down the
 //! `rng.rs` stateless stream keying the round engine draws from, and
 //! protects the parallel paths (rayon DDSRA and the rayon device fan-out
@@ -10,8 +10,7 @@ mod common;
 
 use common::serialize;
 use iiot_fl::config::SimConfig;
-use iiot_fl::fl::participation::gamma_rates;
-use iiot_fl::fl::{Experiment, RunOpts};
+use iiot_fl::fl::{SchedulerSpec, Session};
 use iiot_fl::sched::Ddsra;
 
 fn cfg() -> SimConfig {
@@ -25,25 +24,21 @@ fn cfg() -> SimConfig {
 
 #[test]
 fn same_seed_same_bytes() {
-    let opts = RunOpts { rounds: 3, eval_every: 3, track_divergence: false, train: true };
     let mut logs = Vec::new();
     for _ in 0..2 {
-        let exp = Experiment::new(cfg()).unwrap();
-        let mut sched = exp.make_scheduler("ddsra").unwrap();
-        logs.push(serialize(&exp.run(sched.as_mut(), &opts).unwrap()));
+        let session = Session::builder(cfg()).rounds(3).eval_every(3).build().unwrap();
+        logs.push(serialize(&session.run(&SchedulerSpec::ddsra()).unwrap()));
     }
     assert_eq!(logs[0], logs[1], "replay with identical SimConfig diverged");
 }
 
 #[test]
 fn different_seed_different_bytes() {
-    let opts = RunOpts { rounds: 3, eval_every: 3, track_divergence: false, train: true };
     let run = |seed: u64| {
         let mut c = cfg();
         c.seed = seed;
-        let exp = Experiment::new(c).unwrap();
-        let mut sched = exp.make_scheduler("round_robin").unwrap();
-        serialize(&exp.run(sched.as_mut(), &opts).unwrap())
+        let session = Session::builder(c).rounds(3).eval_every(3).build().unwrap();
+        serialize(&session.run(&SchedulerSpec::RoundRobin).unwrap())
     };
     assert_ne!(run(1), run(2), "seed must influence the trajectory");
 }
@@ -67,12 +62,10 @@ fn cnn_native_runs_replay_byte_identically() {
     // fwd/bwd path) is what gets replayed, not just scheduling.
     c.device_energy_max = 500.0;
     c.gw_energy_max = 5000.0;
-    let opts = RunOpts { rounds: 2, eval_every: 2, track_divergence: false, train: true };
     let mut logs = Vec::new();
     for _ in 0..2 {
-        let exp = Experiment::new(c.clone()).unwrap();
-        let mut sched = exp.make_scheduler("round_robin").unwrap();
-        let log = exp.run(sched.as_mut(), &opts).unwrap();
+        let session = Session::builder(c.clone()).rounds(2).eval_every(2).build().unwrap();
+        let log = session.run(&SchedulerSpec::RoundRobin).unwrap();
         assert!(log.records.iter().any(|r| r.train_loss.is_some()), "cnn must train");
         logs.push(serialize(&log));
     }
@@ -81,16 +74,14 @@ fn cnn_native_runs_replay_byte_identically() {
 
 #[test]
 fn parallel_ddsra_replays_serial_run_exactly() {
-    let opts = RunOpts { rounds: 3, eval_every: 3, track_divergence: false, train: true };
-    let gamma_for = |exp: &Experiment| {
-        let stats = exp.estimate_grad_stats(4).unwrap();
-        gamma_rates(&exp.topo, &stats, exp.cfg.num_channels, exp.cfg.lr, exp.cfg.local_iters).1
-    };
+    // Custom scheduler instances (the `parallel` knob is not on the spec
+    // menu) run through Session::run_scheduler.
     let run = |parallel: bool| {
-        let exp = Experiment::new(cfg()).unwrap();
-        let mut sched = Ddsra::new(exp.cfg.lyapunov_v, gamma_for(&exp));
+        let session = Session::builder(cfg()).rounds(3).eval_every(3).build().unwrap();
+        let mut sched =
+            Ddsra::new(session.config().lyapunov_v, session.gamma().unwrap().to_vec());
         sched.parallel = parallel;
-        serialize(&exp.run(&mut sched, &opts).unwrap())
+        serialize(&session.run_scheduler(&mut sched).unwrap())
     };
     assert_eq!(run(false), run(true), "rayon-parallel DDSRA diverged from serial");
 }

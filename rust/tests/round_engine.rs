@@ -9,7 +9,7 @@ mod common;
 use common::serialize;
 use iiot_fl::config::SimConfig;
 use iiot_fl::fl::vecmath::{weighted_average, WeightedAccum};
-use iiot_fl::fl::{Experiment, RunOpts};
+use iiot_fl::fl::{Experiment, SchedulerSpec, Session};
 use iiot_fl::rng::Rng;
 use iiot_fl::runtime::Params;
 use iiot_fl::topo::Topology;
@@ -76,13 +76,11 @@ fn large_n_run_is_byte_identical_across_thread_counts() {
     // replay must cover the parallel training path, not just scheduling.
     cfg.device_energy_max = 500.0;
     cfg.gw_energy_max = 5000.0;
-    let opts = RunOpts { rounds: 2, eval_every: 2, track_divergence: false, train: true };
     let run_with = |threads: usize| {
         let pool = rayon::ThreadPoolBuilder::new().num_threads(threads).build().unwrap();
         pool.install(|| {
-            let exp = Experiment::new(cfg.clone()).unwrap();
-            let mut sched = exp.make_scheduler("round_robin").unwrap();
-            let log = exp.run(sched.as_mut(), &opts).unwrap();
+            let session = Session::builder(cfg.clone()).rounds(2).eval_every(2).build().unwrap();
+            let log = session.run(&SchedulerSpec::RoundRobin).unwrap();
             assert!(
                 log.records.iter().any(|r| r.train_loss.is_some()),
                 "the large-N run must actually train"
@@ -132,14 +130,13 @@ fn divergence_mode_replays_through_the_engine() {
     cfg.dataset_max = 400;
     cfg.test_size = 256;
     cfg.rounds = 2;
-    let opts = RunOpts { rounds: 2, eval_every: 0, track_divergence: true, train: true };
     let run = || {
-        let exp = Experiment::new(cfg.clone()).unwrap();
-        let mut sched = exp.make_scheduler("round_robin").unwrap();
-        let log = exp.run(sched.as_mut(), &opts).unwrap();
+        let session =
+            Session::builder(cfg.clone()).rounds(2).eval_every(0).divergence().build().unwrap();
+        let log = session.run(&SchedulerSpec::RoundRobin).unwrap();
         for r in &log.records {
             let d = r.divergence.as_ref().expect("divergence recorded every round");
-            assert_eq!(d.len(), exp.topo.num_gateways());
+            assert_eq!(d.len(), session.experiment().topo.num_gateways());
             assert!(d.iter().all(|&v| v.is_finite() && v > 0.0), "{d:?}");
         }
         serialize(&log)

@@ -1,0 +1,276 @@
+//! Session-API guarantees: sink schemas are pinned by golden files, the
+//! CSV streamed DURING a run is byte-identical to the post-hoc
+//! `write_run_csv` emission, the `MemorySink` log equals the compat
+//! `Experiment::run` log (the pre-session engine surface) for a
+//! paper-scale DDSRA run, paired runs equal sequential runs, and an
+//! early-stopped run is byte-identical to the first k records of the
+//! uninterrupted run.
+
+mod common;
+
+use std::ops::ControlFlow;
+use std::path::PathBuf;
+
+use common::{serialize, serialize_records};
+use iiot_fl::config::SimConfig;
+use iiot_fl::fl::{
+    GatewayMask, RoundObserver, RoundRecord, RunMeta, RunOpts, RunSummary, SchedulerSpec,
+    Session, StopCause,
+};
+use iiot_fl::metrics::{write_run_csv, CsvSink, JsonlSink, MemorySink};
+
+fn cfg() -> SimConfig {
+    // Paper-scale topology (M=6, N=12, J=3); small shards/test set keep
+    // the real training fast.
+    let mut cfg = SimConfig::default();
+    cfg.exec_model = "mlp".into();
+    cfg.test_size = 512;
+    cfg.dataset_max = 500;
+    cfg
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join("iiot_fl_session_test").join(name)
+}
+
+/// Hand-built two-round trajectory with exactly representable floats —
+/// the fixture behind the golden-file schema pins.
+fn fixture() -> (RunMeta, Vec<RoundRecord>, RunSummary) {
+    let meta =
+        RunMeta { scheme: "golden".into(), rounds: 2, gateways: 2, devices: 4 };
+    let records = vec![
+        RoundRecord {
+            round: 0,
+            delay: 1.5,
+            cum_delay: 1.5,
+            selected: GatewayMask::from_slice(&[true, false]),
+            failed: GatewayMask::from_slice(&[false, false]),
+            train_loss: Some(2.5),
+            test_loss: None,
+            test_acc: None,
+            divergence: None,
+        },
+        RoundRecord {
+            round: 1,
+            delay: 2.25,
+            cum_delay: 3.75,
+            selected: GatewayMask::from_slice(&[true, true]),
+            failed: GatewayMask::from_slice(&[false, true]),
+            train_loss: Some(1.25),
+            test_loss: Some(0.5),
+            test_acc: Some(0.75),
+            divergence: Some(vec![0.5, 0.25]),
+        },
+    ];
+    let summary = RunSummary {
+        scheme: "golden".into(),
+        rounds_planned: 2,
+        rounds_run: 2,
+        stop: None,
+        participation: vec![1.0, 0.5],
+        effective_participation: vec![1.0, 0.0],
+    };
+    (meta, records, summary)
+}
+
+fn drive_sink(sink: &mut dyn RoundObserver) {
+    let (meta, records, summary) = fixture();
+    sink.on_start(&meta).unwrap();
+    for r in &records {
+        assert_eq!(sink.on_record(r).unwrap(), ControlFlow::Continue(()));
+    }
+    sink.on_finish(&summary).unwrap();
+}
+
+/// Golden-file schema pin: the CSV and JSONL emitted for the fixture
+/// trajectory must match the checked-in files byte for byte. Changing a
+/// sink's schema means deliberately regenerating the goldens.
+#[test]
+fn sink_output_matches_golden_files() {
+    let csv_path = tmp("fixture.csv");
+    let mut csv = CsvSink::create(&csv_path).unwrap();
+    drive_sink(&mut csv);
+    drop(csv);
+    assert_eq!(
+        std::fs::read_to_string(&csv_path).unwrap(),
+        include_str!("golden/sink_fixture.csv"),
+        "CsvSink schema drifted from rust/tests/golden/sink_fixture.csv"
+    );
+
+    let jsonl_path = tmp("fixture.jsonl");
+    let mut jsonl = JsonlSink::create(&jsonl_path).unwrap();
+    drive_sink(&mut jsonl);
+    drop(jsonl);
+    assert_eq!(
+        std::fs::read_to_string(&jsonl_path).unwrap(),
+        include_str!("golden/sink_fixture.jsonl"),
+        "JsonlSink schema drifted from rust/tests/golden/sink_fixture.jsonl"
+    );
+}
+
+/// A `MemorySink` driven by the fixture rebuilds the exact `RunLog`.
+#[test]
+fn memory_sink_rebuilds_the_log() {
+    let mut mem = MemorySink::new();
+    drive_sink(&mut mem);
+    let (_, records, summary) = fixture();
+    let log = mem.into_log();
+    assert_eq!(log.scheme, "golden");
+    assert_eq!(serialize_records(&log.records), serialize_records(&records));
+    assert_eq!(log.participation, summary.participation);
+    assert_eq!(log.effective_participation, summary.effective_participation);
+}
+
+/// The acceptance pin: a CSV STREAMED during a real run equals the
+/// post-hoc `write_run_csv` of the buffered log, byte for byte.
+#[test]
+fn csv_streamed_during_run_equals_post_hoc_write() {
+    let session = Session::builder(cfg()).rounds(3).eval_every(2).build().unwrap();
+    let streamed_path = tmp("streamed.csv");
+    let mut mem = MemorySink::new();
+    let mut csv = CsvSink::create(&streamed_path).unwrap();
+    {
+        let mut observers: Vec<&mut dyn RoundObserver> = vec![&mut mem, &mut csv];
+        session.run_with(&SchedulerSpec::RoundRobin, &mut observers).unwrap();
+    }
+    drop(csv);
+    let log = mem.into_log();
+    let post_hoc_path = tmp("post_hoc.csv");
+    write_run_csv(&log, &post_hoc_path).unwrap();
+    let streamed = std::fs::read_to_string(&streamed_path).unwrap();
+    let post_hoc = std::fs::read_to_string(&post_hoc_path).unwrap();
+    assert_eq!(streamed, post_hoc, "streamed CSV != post-hoc CSV");
+    assert_eq!(streamed.lines().count(), 4, "header + one row per round");
+
+    // The JSONL stream frames the same run: meta + rounds + summary.
+    let jsonl_path = tmp("run.jsonl");
+    let mut jsonl = JsonlSink::create(&jsonl_path).unwrap();
+    {
+        let mut observers: Vec<&mut dyn RoundObserver> = vec![&mut jsonl];
+        session.run_with(&SchedulerSpec::RoundRobin, &mut observers).unwrap();
+    }
+    drop(jsonl);
+    let text = std::fs::read_to_string(&jsonl_path).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 5, "meta + 3 rounds + summary");
+    assert!(lines[0].starts_with("{\"type\":\"meta\",\"scheme\":\"round_robin\""), "{}", lines[0]);
+    assert!(lines[1].starts_with("{\"type\":\"round\",\"round\":0,"), "{}", lines[1]);
+    assert!(lines[4].starts_with("{\"type\":\"summary\",") && lines[4].contains("\"stop\":null"));
+}
+
+/// The determinism acceptance pin at paper scale: the `MemorySink`-built
+/// log of a DDSRA session run serializes byte-identically to the log
+/// returned by the compat `Experiment::run` surface (the engine entry
+/// that predates sessions). Both paths execute the identical per-round
+/// computation — the observer layer only changes where records GO, and
+/// `GatewayMask::to_vec` reproduces the pre-compaction `Vec<bool>`
+/// rendering — so every byte must match.
+#[test]
+fn session_ddsra_log_matches_compat_run_surface() {
+    let session = Session::builder(cfg()).rounds(3).eval_every(2).build().unwrap();
+    let via_session = serialize(&session.run(&SchedulerSpec::ddsra()).unwrap());
+
+    let exp = iiot_fl::fl::Experiment::new(cfg()).unwrap();
+    let mut sched = exp.make_scheduler("ddsra").unwrap();
+    let mut opts = RunOpts::default();
+    opts.rounds = 3;
+    opts.eval_every = 2;
+    let via_compat = serialize(&exp.run(sched.as_mut(), &opts).unwrap());
+
+    assert_eq!(via_session, via_compat, "session and compat logs diverged");
+}
+
+/// `run_paired` is exactly k sequential runs over one experiment: same
+/// bytes, labels in spec order.
+#[test]
+fn paired_runs_equal_sequential_runs() {
+    let session = Session::builder(cfg()).rounds(2).eval_every(2).build().unwrap();
+    let specs = [SchedulerSpec::RoundRobin, SchedulerSpec::DelayDriven];
+    let paired = session.run_paired(&specs).unwrap();
+    assert_eq!(paired.len(), 2);
+    assert_eq!(paired[0].label, "round_robin");
+    assert_eq!(paired[1].label, "delay_driven");
+    for (run, spec) in paired.iter().zip(&specs) {
+        let solo = session.run(spec).unwrap();
+        assert_eq!(serialize(&run.log), serialize(&solo), "{}", run.label);
+        assert!(run.wall_secs >= 0.0);
+    }
+}
+
+/// Early-stop determinism: a run stopped at round k (simulated delay
+/// budget, target accuracy, or observer break) is byte-identical to the
+/// first k+1 records of the uninterrupted run.
+#[test]
+fn early_stopped_run_is_a_byte_identical_prefix() {
+    let full_session = Session::builder(cfg()).rounds(6).eval_every(2).build().unwrap();
+    let full = full_session.run(&SchedulerSpec::RoundRobin).unwrap();
+    assert_eq!(full.records.len(), 6);
+
+    // Delay budget: cum_delay reaches records[2].cum_delay at round 2.
+    let budget = full.records[2].cum_delay;
+    let session =
+        Session::builder(cfg()).rounds(6).eval_every(2).max_rounds_wall(budget).build().unwrap();
+    let mut mem = MemorySink::new();
+    let summary = {
+        let mut observers: Vec<&mut dyn RoundObserver> = vec![&mut mem];
+        session.run_with(&SchedulerSpec::RoundRobin, &mut observers).unwrap()
+    };
+    assert_eq!(summary.rounds_run, 3);
+    assert!(
+        matches!(summary.stop, Some(StopCause::DelayBudget { round: 2, .. })),
+        "{:?}",
+        summary.stop
+    );
+    let stopped = mem.into_log();
+    assert_eq!(
+        serialize_records(&stopped.records),
+        serialize_records(&full.records[..3]),
+        "delay-budget stop is not a byte-identical prefix"
+    );
+
+    // Target accuracy: any accuracy satisfies target 0.0, so the first
+    // eval round (round 1 with eval_every=2) stops the run.
+    let session =
+        Session::builder(cfg()).rounds(6).eval_every(2).until_accuracy(0.0).build().unwrap();
+    let mut mem = MemorySink::new();
+    let summary = {
+        let mut observers: Vec<&mut dyn RoundObserver> = vec![&mut mem];
+        session.run_with(&SchedulerSpec::RoundRobin, &mut observers).unwrap()
+    };
+    assert_eq!(summary.rounds_run, 2);
+    assert!(
+        matches!(summary.stop, Some(StopCause::TargetAccuracy { round: 1, .. })),
+        "{:?}",
+        summary.stop
+    );
+    assert_eq!(
+        serialize_records(&mem.into_log().records),
+        serialize_records(&full.records[..2]),
+        "target-accuracy stop is not a byte-identical prefix"
+    );
+
+    // Observer break after the first record.
+    struct BreakAfter {
+        remaining: usize,
+    }
+    impl RoundObserver for BreakAfter {
+        fn on_record(&mut self, _r: &RoundRecord) -> anyhow::Result<ControlFlow<()>> {
+            self.remaining -= 1;
+            Ok(if self.remaining == 0 { ControlFlow::Break(()) } else { ControlFlow::Continue(()) })
+        }
+    }
+    let session = Session::builder(cfg()).rounds(6).eval_every(2).build().unwrap();
+    let mut mem = MemorySink::new();
+    let mut brk = BreakAfter { remaining: 1 };
+    let summary = {
+        let mut observers: Vec<&mut dyn RoundObserver> = vec![&mut mem, &mut brk];
+        session.run_with(&SchedulerSpec::RoundRobin, &mut observers).unwrap()
+    };
+    assert_eq!(summary.rounds_run, 1);
+    assert_eq!(summary.stop, Some(StopCause::Observer { round: 0 }));
+    assert_eq!(
+        serialize_records(&mem.into_log().records),
+        serialize_records(&full.records[..1]),
+        "observer stop is not a byte-identical prefix"
+    );
+}
