@@ -140,6 +140,43 @@ fn main() -> anyhow::Result<()> {
             loss.map_or("null".into(), |l| format!("{l:.6}"))
         );
     }
+    json.push_str("\n  ],\n  \"fault_injection\": [\n");
+
+    // Fault-injected rounds at plant scale: what deterministic adversity
+    // costs on top of the benign engine, and — checked in passing, like
+    // the sweep above — that the faulted trajectory is byte-stable across
+    // thread counts too.
+    println!("\n== flaky-plant (faults armed) vs plant, round_robin ==");
+    println!("{:>12} {:>8} {:>14}", "scenario", "threads", "s/round");
+    let mut flaky = scale_cfg(240, 24, 8);
+    flaky.fault = {
+        let mut probe = SimConfig::default();
+        probe.apply_scenario("flaky-plant")?;
+        probe.fault
+    };
+    // Keep the benign sweep's menu sharder so the comparison isolates the
+    // per-round fault seams from the Dirichlet sharding change.
+    flaky.fault.dirichlet_alpha = 0.0;
+    let mut first_row = true;
+    let mut flaky_digest = None;
+    for &threads in &thread_grid {
+        let (per_round, _, digest) = timed_run(&flaky, &SchedulerSpec::RoundRobin, rounds, threads)?;
+        if let Some(d) = &flaky_digest {
+            assert_eq!(d, &digest, "thread count changed faulted round bytes");
+        } else {
+            flaky_digest = Some(digest);
+        }
+        println!("{:>12} {threads:>8} {:>12.1}ms", "flaky-plant", per_round * 1e3);
+        if !first_row {
+            json.push_str(",\n");
+        }
+        first_row = false;
+        let _ = write!(
+            json,
+            "    {{\"scenario\": \"flaky-plant\", \"devices\": 240, \"threads\": {threads}, \
+             \"sec_per_round\": {per_round:.6}}}"
+        );
+    }
     json.push_str("\n  ]\n}\n");
 
     std::fs::write("BENCH_round_engine.json", &json)?;

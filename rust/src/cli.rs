@@ -231,6 +231,32 @@ mod tests {
     }
 
     #[test]
+    fn fault_knobs_flow_through_scenario_and_set() {
+        // An adversity preset arms the fault block from the CLI...
+        let a = Args::parse(&sv(&["train", "--scenario", "flaky-plant"])).unwrap();
+        let cfg = a.sim_config().unwrap();
+        assert_eq!((cfg.num_devices, cfg.num_gateways), (240, 24));
+        assert_eq!(cfg.fault.dropout_prob, 0.10);
+        assert!(!cfg.fault.is_benign());
+        // ...and --set tunes (or disarms) individual fault.* keys on top.
+        let b = Args::parse(&sv(&[
+            "train",
+            "--scenario",
+            "flaky-plant",
+            "--set",
+            "fault.dropout_prob=0",
+            "--set",
+            "fault.straggler_prob=0.5",
+        ]))
+        .unwrap();
+        let cfg = b.sim_config().unwrap();
+        assert_eq!(cfg.fault.dropout_prob, 0.0);
+        assert_eq!(cfg.fault.straggler_prob, 0.5);
+        let plain = Args::parse(&sv(&["train", "--set", "fault.dropout_prob=0.1"])).unwrap();
+        assert_eq!(plain.sim_config().unwrap().fault.dropout_prob, 0.1);
+    }
+
+    #[test]
     fn rejects_positional_after_flags() {
         assert!(Args::parse(&sv(&["train", "oops"])).is_err());
         assert!(Args::parse(&sv(&["train", "--set", "nokey"])).unwrap().sim_config().is_err());

@@ -13,6 +13,52 @@ use std::path::Path;
 
 use anyhow::{bail, Context};
 
+/// Deterministic-adversity knobs (`fault.*` config keys): Dirichlet
+/// non-IID sharding, stragglers, mid-round device dropout, and gateway
+/// outages. All default to "off" so the benign paper environment stays
+/// the byte-identical baseline; the `flaky-plant` / `churn-metro`
+/// scenarios arm them as presets. Consumed by `fl::fault::FaultPlan`,
+/// which draws every fault from dedicated `STREAM_FAULT_*` RNG domains
+/// so adversity runs replay byte-identically across thread counts.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultConfig {
+    /// Dirichlet concentration for non-IID label sharding (phase 0).
+    /// 0 = off (keep the menu-based `non_iid_degree` sharder); smaller
+    /// positive values = more skew.
+    pub dirichlet_alpha: f64,
+    /// Per-(round, device) probability of a straggler episode (phase 2).
+    pub straggler_prob: f64,
+    /// Max delay multiplier of a straggler episode: the realized factor
+    /// is U(1, slowdown). Must be >= 1.
+    pub straggler_slowdown: f64,
+    /// Per-(round, device) probability the device drops mid-round and
+    /// contributes nothing to aggregation (phases 3-4).
+    pub dropout_prob: f64,
+    /// Per-(round, gateway) probability of a whole-floor outage: the
+    /// gateway counts as failed and none of its members train.
+    pub gateway_outage_prob: f64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            dirichlet_alpha: 0.0,
+            straggler_prob: 0.0,
+            straggler_slowdown: 1.0,
+            dropout_prob: 0.0,
+            gateway_outage_prob: 0.0,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// True when every knob is at its benign default — the engine skips
+    /// all fault machinery (and all fault-stream draws) in that case.
+    pub fn is_benign(&self) -> bool {
+        *self == FaultConfig::default()
+    }
+}
+
 /// All simulation parameters. Units are SI (Hz, W, J, bytes, seconds)
 /// except where a field name says otherwise.
 #[derive(Clone, Debug)]
@@ -87,6 +133,9 @@ pub struct SimConfig {
     /// Test-set size (multiple of the eval batch).
     pub test_size: usize,
 
+    /// Deterministic-adversity block (`fault.*` keys). Benign by default.
+    pub fault: FaultConfig,
+
     pub seed: u64,
 }
 
@@ -133,6 +182,7 @@ impl Default for SimConfig {
             dataset: "svhn".into(),
             non_iid_degree: 1.0,
             test_size: 2048,
+            fault: FaultConfig::default(),
             seed: 2022,
         }
     }
@@ -244,6 +294,11 @@ impl SimConfig {
             "dataset" => self.dataset = val.into(),
             "non_iid_degree" => self.non_iid_degree = num!(),
             "test_size" => self.test_size = num!(),
+            "fault.dirichlet_alpha" => self.fault.dirichlet_alpha = num!(),
+            "fault.straggler_prob" => self.fault.straggler_prob = num!(),
+            "fault.straggler_slowdown" => self.fault.straggler_slowdown = num!(),
+            "fault.dropout_prob" => self.fault.dropout_prob = num!(),
+            "fault.gateway_outage_prob" => self.fault.gateway_outage_prob = num!(),
             "seed" => self.seed = num!(),
             other => bail!("unknown config key {other:?}"),
         }
@@ -262,6 +317,15 @@ impl SimConfig {
     /// | `plant`  | 24 | 240 | 8 | (32, 256] |
     /// | `campus` | 48 | 960 | 12 | (32, 128] |
     /// | `metro`  | 96 | 2880 | 16 | (16, 64] |
+    ///
+    /// Two adversity presets layer a `FaultConfig` on top of a scale
+    /// working point (every fault drawn from dedicated RNG streams, so
+    /// these runs stay byte-replayable):
+    ///
+    /// | scenario | base | Dirichlet α | straggler | dropout | outage |
+    /// |---|---|---|---|---|---|
+    /// | `flaky-plant` | `plant` | 0.5 | p=0.15, ×≤4 | 0.10 | 0.05 |
+    /// | `churn-metro` | `metro` | 0.3 | p=0.20, ×≤6 | 0.25 | 0.10 |
     ///
     /// The per-device dataset sizes shrink as N grows so total shard
     /// memory stays bounded; the training batch each device feeds the
@@ -295,7 +359,33 @@ impl SimConfig {
                 self.dataset_max = 64;
                 self.test_size = 256;
             }
-            other => bail!("unknown scenario {other:?} (known: paper, plant, campus, metro)"),
+            // Adversity presets: a scale base plus an armed fault block.
+            // A mid-size flaky plant — moderate skew, occasional floor
+            // outages — and a metro deployment with heavy churn.
+            "flaky-plant" => {
+                self.apply_scenario("plant")?;
+                self.fault = FaultConfig {
+                    dirichlet_alpha: 0.5,
+                    straggler_prob: 0.15,
+                    straggler_slowdown: 4.0,
+                    dropout_prob: 0.10,
+                    gateway_outage_prob: 0.05,
+                };
+            }
+            "churn-metro" => {
+                self.apply_scenario("metro")?;
+                self.fault = FaultConfig {
+                    dirichlet_alpha: 0.3,
+                    straggler_prob: 0.20,
+                    straggler_slowdown: 6.0,
+                    dropout_prob: 0.25,
+                    gateway_outage_prob: 0.10,
+                };
+            }
+            other => bail!(
+                "unknown scenario {other:?} (known: paper, plant, campus, metro, \
+                 flaky-plant, churn-metro)"
+            ),
         }
         Ok(())
     }
@@ -348,6 +438,25 @@ impl SimConfig {
                  actually executes",
                 self.cost_model,
                 self.exec_model
+            );
+        }
+        let f = &self.fault;
+        if !(f.dirichlet_alpha >= 0.0 && f.dirichlet_alpha.is_finite()) {
+            bail!("fault.dirichlet_alpha must be finite and >= 0 (0 = off)");
+        }
+        for (name, p) in [
+            ("fault.straggler_prob", f.straggler_prob),
+            ("fault.dropout_prob", f.dropout_prob),
+            ("fault.gateway_outage_prob", f.gateway_outage_prob),
+        ] {
+            if !(0.0..=1.0).contains(&p) {
+                bail!("{name} must be a probability in [0, 1], got {p}");
+            }
+        }
+        if !(f.straggler_slowdown >= 1.0 && f.straggler_slowdown.is_finite()) {
+            bail!(
+                "fault.straggler_slowdown must be finite and >= 1 (a delay multiplier), got {}",
+                f.straggler_slowdown
             );
         }
         Ok(())
@@ -429,6 +538,68 @@ mod tests {
         c.set("num_devices", "480").unwrap();
         c.validate().unwrap();
         assert_eq!(c.devices_per_gateway(), 20);
+    }
+
+    #[test]
+    fn fault_block_defaults_benign_and_parses() {
+        let c = SimConfig::default();
+        assert!(c.fault.is_benign());
+        c.validate().unwrap();
+
+        let cfg = SimConfig::from_str_cfg(
+            "[fault]\nfault.dirichlet_alpha = 0.5\nfault.dropout_prob = 0.1\n\
+             fault.straggler_prob = 0.2\nfault.straggler_slowdown = 3\n\
+             fault.gateway_outage_prob = 0.05\n",
+        )
+        .unwrap();
+        assert!(!cfg.fault.is_benign());
+        assert_eq!(cfg.fault.dirichlet_alpha, 0.5);
+        assert_eq!(cfg.fault.dropout_prob, 0.1);
+        assert_eq!(cfg.fault.straggler_prob, 0.2);
+        assert_eq!(cfg.fault.straggler_slowdown, 3.0);
+        assert_eq!(cfg.fault.gateway_outage_prob, 0.05);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn fault_block_validation_rejects_bad_knobs() {
+        let mut c = SimConfig::default();
+        c.fault.dropout_prob = 1.5;
+        assert!(c.validate().unwrap_err().to_string().contains("dropout_prob"));
+        let mut c = SimConfig::default();
+        c.fault.straggler_slowdown = 0.5; // a speed-up is not a straggler
+        assert!(c.validate().is_err());
+        let mut c = SimConfig::default();
+        c.fault.dirichlet_alpha = -1.0;
+        assert!(c.validate().is_err());
+        let mut c = SimConfig::default();
+        c.fault.gateway_outage_prob = f64::NAN;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn adversity_scenarios_arm_faults_and_validate() {
+        let mut c = SimConfig::default();
+        c.apply_scenario("flaky-plant").unwrap();
+        // Scale working point inherited from `plant`...
+        assert_eq!((c.num_devices, c.num_gateways, c.num_channels), (240, 24, 8));
+        // ...with the fault block armed on top.
+        assert_eq!(c.fault.dirichlet_alpha, 0.5);
+        assert_eq!(c.fault.dropout_prob, 0.10);
+        c.validate().unwrap();
+
+        let mut c = SimConfig::default();
+        c.apply_scenario("churn-metro").unwrap();
+        assert_eq!((c.num_devices, c.num_gateways, c.num_channels), (2880, 96, 16));
+        assert_eq!(c.fault.dropout_prob, 0.25);
+        c.validate().unwrap();
+
+        // Overrides still compose on top of an adversity preset.
+        let mut c = SimConfig::default();
+        c.apply_scenario("flaky-plant").unwrap();
+        c.set("fault.dropout_prob", "0").unwrap();
+        assert_eq!(c.fault.dropout_prob, 0.0);
+        c.validate().unwrap();
     }
 
     #[test]

@@ -6,11 +6,19 @@
 //! full class set — reproducing the paper's setup where each device
 //! associated with the 1-th gateway has "a local dataset with a wider
 //! variety of the q_m-class non-IID data points" (Fig. 2 discussion).
+//!
+//! With `fault.dirichlet_alpha > 0` the menu scheme is replaced by
+//! Dirichlet(α) label sharding (the FL-benchmark standard, e.g. Hsu et
+//! al.): each device draws its own class proportions p ~ Dir(α) from its
+//! dedicated [`STREAM_FAULT_SHARD`] stream — smaller α, heavier skew.
+//! Per-device streams keep generation embarrassingly parallel and
+//! byte-identical across thread counts, same as the menu path.
 
 use rayon::prelude::*;
 
 use crate::config::SimConfig;
-use crate::data::synth::{SynthData, NUM_CLASSES};
+use crate::data::synth::{SynthData, IMG_DIM, NUM_CLASSES};
+use crate::fl::fault::STREAM_FAULT_SHARD;
 use crate::rng::Rng;
 use crate::topo::Topology;
 
@@ -48,6 +56,9 @@ pub fn shard_non_iid(
     data: &SynthData,
     rng: &mut Rng,
 ) -> Vec<DeviceShard> {
+    if cfg.fault.dirichlet_alpha > 0.0 {
+        return shard_dirichlet(cfg, topo, data, rng);
+    }
     // Per-gateway class menus.
     let mut menus: Vec<Vec<usize>> = Vec::with_capacity(topo.num_gateways());
     for m in 0..topo.num_gateways() {
@@ -82,6 +93,92 @@ pub fn shard_non_iid(
             }
         })
         .collect()
+}
+
+/// Dirichlet(α) non-IID sharding (`fault.dirichlet_alpha > 0`): device n
+/// draws class proportions p ~ Dir(α·1) and then its D_n labels i.i.d.
+/// from p, all from the stateless `[STREAM_FAULT_SHARD, n]` stream —
+/// deterministic, order-independent, thread-count-invariant.
+fn shard_dirichlet(
+    cfg: &SimConfig,
+    topo: &Topology,
+    data: &SynthData,
+    rng: &mut Rng,
+) -> Vec<DeviceShard> {
+    let alpha = cfg.fault.dirichlet_alpha;
+    let base = rng.next_u64();
+    topo.devices
+        .par_iter()
+        .map(|dev| {
+            let mut drng = Rng::stream(base, &[STREAM_FAULT_SHARD, dev.id as u64]);
+            let props = dirichlet(alpha, NUM_CLASSES, &mut drng);
+            let n = dev.dataset_size;
+            let mut images = vec![0.0f32; n * IMG_DIM];
+            let mut labels = Vec::with_capacity(n);
+            for i in 0..n {
+                // CDF inversion over the proportions; the final class
+                // absorbs any floating-point shortfall.
+                let u = drng.f64();
+                let mut c = NUM_CLASSES - 1;
+                let mut acc = 0.0;
+                for (k, &p) in props.iter().enumerate() {
+                    acc += p;
+                    if u < acc {
+                        c = k;
+                        break;
+                    }
+                }
+                data.sample_into(c, &mut drng, &mut images[i * IMG_DIM..(i + 1) * IMG_DIM]);
+                labels.push(c as i32);
+            }
+            let mut classes: Vec<usize> = labels.iter().map(|&y| y as usize).collect();
+            classes.sort_unstable();
+            classes.dedup();
+            DeviceShard { device: dev.id, classes, images, labels }
+        })
+        .collect()
+}
+
+/// Gamma(α, 1) via Marsaglia–Tsang squeeze (only `normal()`/`f64()`
+/// primitives are available offline); the α < 1 case uses the boost
+/// Gamma(α) = Gamma(α+1) · U^{1/α}.
+fn gamma(alpha: f64, rng: &mut Rng) -> f64 {
+    if alpha < 1.0 {
+        let u = rng.f64().max(f64::MIN_POSITIVE);
+        return gamma(alpha + 1.0, rng) * u.powf(1.0 / alpha);
+    }
+    let d = alpha - 1.0 / 3.0;
+    let c = 1.0 / (9.0 * d).sqrt();
+    loop {
+        let x = rng.normal();
+        let v = 1.0 + c * x;
+        if v <= 0.0 {
+            continue;
+        }
+        let v = v * v * v;
+        let u = rng.f64();
+        if u < 1.0 - 0.0331 * x * x * x * x {
+            return d * v;
+        }
+        if u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+            return d * v;
+        }
+    }
+}
+
+/// Symmetric Dirichlet(α) over `k` classes: normalized i.i.d. Gamma(α)
+/// draws. Degenerate draws (all-zero underflow at tiny α) fall back to
+/// uniform rather than NaN.
+fn dirichlet(alpha: f64, k: usize, rng: &mut Rng) -> Vec<f64> {
+    let mut g: Vec<f64> = (0..k).map(|_| gamma(alpha, rng)).collect();
+    let sum: f64 = g.iter().sum();
+    if !(sum > 0.0 && sum.is_finite()) {
+        return vec![1.0 / k as f64; k];
+    }
+    for v in &mut g {
+        *v /= sum;
+    }
+    g
 }
 
 #[cfg(test)]
@@ -158,6 +255,77 @@ mod tests {
             let same = sa.images.iter().zip(&sb.images).all(|(x, y)| x.to_bits() == y.to_bits());
             assert!(same, "device {} images diverged across pools", sa.device);
         }
+    }
+
+    #[test]
+    fn dirichlet_sharding_is_byte_identical_across_thread_counts() {
+        let (mut cfg, topo, data, _) = fixtures();
+        cfg.fault.dirichlet_alpha = 0.5;
+        let generate = |threads: usize| {
+            let pool = rayon::ThreadPoolBuilder::new().num_threads(threads).build().unwrap();
+            pool.install(|| shard_non_iid(&cfg, &topo, &data, &mut Rng::new(77)))
+        };
+        let a = generate(1);
+        let b = generate(4);
+        assert_eq!(a.len(), b.len());
+        for (sa, sb) in a.iter().zip(&b) {
+            assert_eq!(sa.device, sb.device);
+            assert_eq!(sa.classes, sb.classes);
+            assert_eq!(sa.labels, sb.labels);
+            let same = sa.images.iter().zip(&sb.images).all(|(x, y)| x.to_bits() == y.to_bits());
+            assert!(same, "device {} images diverged across pools", sa.device);
+        }
+    }
+
+    #[test]
+    fn dirichlet_sharding_sizes_and_labels_are_wellformed() {
+        let (mut cfg, topo, data, mut rng) = fixtures();
+        cfg.fault.dirichlet_alpha = 0.5;
+        let shards = shard_non_iid(&cfg, &topo, &data, &mut rng);
+        assert_eq!(shards.len(), topo.num_devices());
+        for (s, d) in shards.iter().zip(&topo.devices) {
+            assert_eq!(s.len(), d.dataset_size);
+            assert_eq!(s.images.len(), d.dataset_size * IMG_DIM);
+            // `classes` is exactly the distinct labels present, sorted.
+            let mut seen: Vec<usize> = s.labels.iter().map(|&y| y as usize).collect();
+            seen.sort_unstable();
+            seen.dedup();
+            assert_eq!(s.classes, seen);
+            assert!(s.labels.iter().all(|&y| (y as usize) < NUM_CLASSES));
+        }
+    }
+
+    #[test]
+    fn dirichlet_concentration_controls_skew() {
+        // At tiny α most devices concentrate on few classes; at huge α
+        // every device's shard is near-uniform over all 10.
+        let (mut cfg, topo, data, mut rng) = fixtures();
+        cfg.fault.dirichlet_alpha = 0.05;
+        let skewed = shard_non_iid(&cfg, &topo, &data, &mut rng);
+        let mean_classes = |shards: &[DeviceShard]| {
+            shards.iter().map(|s| s.classes.len()).sum::<usize>() as f64 / shards.len() as f64
+        };
+        let mut rng2 = Rng::new(11 + 1);
+        cfg.fault.dirichlet_alpha = 100.0;
+        let uniform = shard_non_iid(&cfg, &topo, &data, &mut rng2);
+        assert!(
+            mean_classes(&skewed) < mean_classes(&uniform),
+            "α=0.05 should be more class-concentrated than α=100: {} vs {}",
+            mean_classes(&skewed),
+            mean_classes(&uniform)
+        );
+        // Sanity on the samplers themselves: proportions sum to ~1.
+        let mut r = Rng::new(3);
+        let p = dirichlet(0.3, NUM_CLASSES, &mut r);
+        assert_eq!(p.len(), NUM_CLASSES);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(p.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        // Gamma(α) has mean α: a loose moment check keeps the sampler
+        // honest without pinning realizations.
+        let m: f64 = (0..4000).map(|_| gamma(2.5, &mut r)).sum::<f64>() / 4000.0;
+        assert!((m - 2.5).abs() < 0.2, "Gamma(2.5) sample mean {m}");
+        let m: f64 = (0..4000).map(|_| gamma(0.4, &mut r)).sum::<f64>() / 4000.0;
+        assert!((m - 0.4).abs() < 0.1, "Gamma(0.4) sample mean {m}");
     }
 
     #[test]

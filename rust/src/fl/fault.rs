@@ -1,0 +1,211 @@
+//! Deterministic adversity: the [`FaultPlan`] consulted by the round
+//! engine at its phase seams (see `fl::round`), plus the per-round
+//! [`RoundFaults`] report carried on `RoundRecord`.
+//!
+//! Every fault is drawn from its own dedicated `Rng::stream` domain keyed
+//! `[DOMAIN, round, id]`, never from the env/train/divergence streams, so
+//!
+//! * fault-injected runs are byte-identical across rayon thread counts
+//!   (any worker can reconstruct any fault draw independently), and
+//! * a benign [`FaultPlan::none()`] performs ZERO draws and leaves the
+//!   engine's output byte-for-byte identical to an engine without the
+//!   fault layer — arming a knob cannot perturb any other stream.
+//!
+//! Fault-stream domains (also listed in the `fl::round` stream map and
+//! `docs/ARCHITECTURE.md` §4):
+//!
+//! | domain | key path | consumer |
+//! |---|---|---|
+//! | [`STREAM_FAULT_STRAGGLER`] | `[dom, t, device]` | phase-2 delay multiplier |
+//! | [`STREAM_FAULT_DROPOUT`]   | `[dom, t, device]` | phase-3/4 device dropout |
+//! | [`STREAM_FAULT_OUTAGE`]    | `[dom, t, gateway]` | phase-3 gateway outage |
+//! | [`STREAM_FAULT_SHARD`]     | `[dom, device]` | phase-0 Dirichlet sharding |
+
+use crate::config::{FaultConfig, SimConfig};
+use crate::fl::orchestrator::GatewayMask;
+use crate::rng::Rng;
+
+/// Straggler delay-multiplier stream, keyed `[STREAM_FAULT_STRAGGLER, t, n]`.
+pub const STREAM_FAULT_STRAGGLER: u64 = 0xFA57;
+/// Mid-round device-dropout stream, keyed `[STREAM_FAULT_DROPOUT, t, n]`.
+pub const STREAM_FAULT_DROPOUT: u64 = 0xFAD0;
+/// Gateway-outage stream, keyed `[STREAM_FAULT_OUTAGE, t, m]`.
+pub const STREAM_FAULT_OUTAGE: u64 = 0xFA07;
+/// Dirichlet-sharding stream, keyed `[STREAM_FAULT_SHARD, n]` (phase 0,
+/// consumed by `data::shard`).
+pub const STREAM_FAULT_SHARD: u64 = 0xFA5D;
+
+/// The validated fault schedule for a run: the `fault.*` config block plus
+/// the run seed the fault streams are keyed under. Stateless — every query
+/// re-derives its stream from `(seed, domain, round, id)`, so queries may
+/// happen from any worker in any order.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    cfg: FaultConfig,
+}
+
+impl FaultPlan {
+    /// The benign plan: no knob armed, no stream ever drawn.
+    pub fn none() -> Self {
+        FaultPlan { seed: 0, cfg: FaultConfig::default() }
+    }
+
+    /// Build the plan for a run (callers validate `cfg` beforehand; the
+    /// engine constructs this from an already-validated `SimConfig`).
+    pub fn from_config(cfg: &SimConfig) -> Self {
+        FaultPlan { seed: cfg.seed, cfg: cfg.fault.clone() }
+    }
+
+    /// True when every knob is benign — the engine skips the fault seams.
+    pub fn is_none(&self) -> bool {
+        self.cfg.is_benign()
+    }
+
+    /// Straggler knob armed?
+    pub fn has_stragglers(&self) -> bool {
+        self.cfg.straggler_prob > 0.0 && self.cfg.straggler_slowdown > 1.0
+    }
+
+    /// Device-dropout knob armed?
+    pub fn has_dropout(&self) -> bool {
+        self.cfg.dropout_prob > 0.0
+    }
+
+    /// Gateway-outage knob armed?
+    pub fn has_outages(&self) -> bool {
+        self.cfg.gateway_outage_prob > 0.0
+    }
+
+    /// Any per-round (phase 2-4) fault armed? (Dirichlet sharding is a
+    /// phase-0 property of the data, not a per-round fault.)
+    pub fn has_round_faults(&self) -> bool {
+        self.has_stragglers() || self.has_dropout() || self.has_outages()
+    }
+
+    /// Phase 2: the delay multiplier for device n in round t. Exactly 1.0
+    /// unless the straggler coin fires, in which case the episode slows
+    /// the device by U(1, slowdown). `x * 1.0` is bit-exact in IEEE-754,
+    /// so non-straggler rounds leave `round_delay()` bytes untouched.
+    pub fn straggler_multiplier(&self, t: usize, n: usize) -> f64 {
+        if !self.has_stragglers() {
+            return 1.0;
+        }
+        let mut rng = Rng::stream(self.seed, &[STREAM_FAULT_STRAGGLER, t as u64, n as u64]);
+        if rng.f64() < self.cfg.straggler_prob {
+            rng.uniform(1.0, self.cfg.straggler_slowdown)
+        } else {
+            1.0
+        }
+    }
+
+    /// Phases 3-4: does device n drop out of round t? A dropped device
+    /// trains nothing and contributes nothing to the FedAvg fold.
+    pub fn device_dropped(&self, t: usize, n: usize) -> bool {
+        self.has_dropout()
+            && Rng::stream(self.seed, &[STREAM_FAULT_DROPOUT, t as u64, n as u64]).f64()
+                < self.cfg.dropout_prob
+    }
+
+    /// Phase 3: is gateway m's whole floor out for round t? An out
+    /// gateway counts as failed; none of its members train.
+    pub fn gateway_out(&self, t: usize, m: usize) -> bool {
+        self.has_outages()
+            && Rng::stream(self.seed, &[STREAM_FAULT_OUTAGE, t as u64, m as u64]).f64()
+                < self.cfg.gateway_outage_prob
+    }
+}
+
+/// What actually went wrong in one round — the per-round fault report on
+/// `RoundRecord`. The engine only attaches it when something REALIZED
+/// (`any()`), so benign rounds and benign runs serialize exactly as
+/// before the fault layer existed.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RoundFaults {
+    /// Devices that dropped mid-round (sorted ascending).
+    pub dropped: Vec<usize>,
+    /// Gateways whose whole floor was out this round.
+    pub outages: GatewayMask,
+    /// Largest realized straggler delay multiplier (1.0 = none fired).
+    pub max_slowdown: f64,
+}
+
+impl RoundFaults {
+    /// An empty report for a topology with `gateways` floors.
+    pub fn new(gateways: usize) -> Self {
+        RoundFaults { dropped: Vec::new(), outages: GatewayMask::new(gateways), max_slowdown: 1.0 }
+    }
+
+    /// Did any fault realize this round?
+    pub fn any(&self) -> bool {
+        !self.dropped.is_empty() || self.outages.count() > 0 || self.max_slowdown > 1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn benign_plan_never_fires_and_multiplier_is_exactly_one() {
+        let plan = FaultPlan::none();
+        assert!(plan.is_none());
+        assert!(!plan.has_round_faults());
+        for t in 0..50 {
+            for n in 0..10 {
+                assert_eq!(plan.straggler_multiplier(t, n).to_bits(), 1.0f64.to_bits());
+                assert!(!plan.device_dropped(t, n));
+                assert!(!plan.gateway_out(t, n));
+            }
+        }
+    }
+
+    #[test]
+    fn armed_plan_is_replayable_and_stream_keyed() {
+        let mut cfg = SimConfig::default();
+        cfg.fault.straggler_prob = 0.5;
+        cfg.fault.straggler_slowdown = 4.0;
+        cfg.fault.dropout_prob = 0.3;
+        cfg.fault.gateway_outage_prob = 0.3;
+        let plan = FaultPlan::from_config(&cfg);
+        assert!(plan.has_round_faults());
+        // Stateless replay: the same (t, n) query always answers the same.
+        for t in 0..20 {
+            for n in 0..8 {
+                assert_eq!(
+                    plan.straggler_multiplier(t, n).to_bits(),
+                    plan.straggler_multiplier(t, n).to_bits()
+                );
+                assert_eq!(plan.device_dropped(t, n), plan.device_dropped(t, n));
+                assert_eq!(plan.gateway_out(t, n), plan.gateway_out(t, n));
+            }
+        }
+        // The knobs actually fire at these probabilities: over 20x8 cells
+        // some drop and some survive.
+        let drops = (0..20)
+            .flat_map(|t| (0..8).map(move |n| (t, n)))
+            .filter(|&(t, n)| plan.device_dropped(t, n))
+            .count();
+        assert!(drops > 0 && drops < 160, "dropout coin looks stuck: {drops}/160");
+        // A realized straggler multiplier lands in (1, slowdown).
+        let slow = (0..200)
+            .map(|t| plan.straggler_multiplier(t, 0))
+            .find(|&s| s > 1.0)
+            .expect("no straggler fired in 200 rounds at p=0.5");
+        assert!(slow < 4.0, "{slow}");
+    }
+
+    #[test]
+    fn round_faults_any_tracks_realized_faults() {
+        let mut f = RoundFaults::new(3);
+        assert!(!f.any());
+        f.max_slowdown = 2.5;
+        assert!(f.any());
+        let mut f = RoundFaults::new(3);
+        f.dropped.push(7);
+        assert!(f.any());
+        let mut f = RoundFaults::new(3);
+        f.outages.set(1);
+        assert!(f.any());
+    }
+}

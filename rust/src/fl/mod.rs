@@ -5,12 +5,14 @@
 //! builder, scheduler specs, and the observer/sink layer — that everything
 //! (CLI, benches, examples, tests) drives runs through.
 
+pub mod fault;
 pub mod orchestrator;
 pub mod participation;
 pub mod round;
 pub mod session;
 pub mod vecmath;
 
+pub use fault::{FaultPlan, RoundFaults};
 pub use orchestrator::{Experiment, GatewayMask, RoundRecord, RunLog};
 pub use participation::{gamma_rates, phi_m, GradStats};
 pub use round::RoundEngine;

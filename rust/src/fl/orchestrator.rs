@@ -35,6 +35,7 @@ use crate::data::synth::{DatasetFlavor, SynthData, IMG_DIM};
 use crate::data::{shard_non_iid, DeviceShard};
 use crate::dnn::models;
 use crate::dnn::ModelSpec;
+use crate::fl::fault::RoundFaults;
 use crate::fl::participation::gamma_rates;
 use crate::fl::round::RoundEngine;
 use crate::fl::session::{RunOpts, SchedulerSpec};
@@ -125,6 +126,10 @@ pub struct RoundRecord {
     pub test_acc: Option<f64>,
     /// Measured ||ŵ_m − v^{K,t}|| per gateway (divergence mode only).
     pub divergence: Option<Vec<f64>>,
+    /// Faults REALIZED this round (fault-injection runs only): `None`
+    /// whenever nothing fired, so benign rounds serialize exactly as
+    /// before the adversity layer existed.
+    pub faults: Option<RoundFaults>,
 }
 
 /// Full run output.

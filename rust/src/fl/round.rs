@@ -11,6 +11,14 @@
 //!   6 evaluation         periodic IID test-set eval
 //! ```
 //!
+//! A [`FaultPlan`] (the `fault.*` config block, see `fl::fault`) injects
+//! deterministic adversity at the phase seams: straggler delay
+//! multipliers fold into the phase-2 round delay, gateway outages fail a
+//! floor at phase 3, and mid-round device dropout removes a device from
+//! the phase-4 fan-out — so a dropped device contributes nothing to the
+//! FedAvg fold. Realized faults ride on `RoundRecord::faults`. A benign
+//! plan draws nothing and leaves every byte unchanged.
+//!
 //! ## RNG stream map
 //!
 //! Every random draw comes from a stateless stream derived with
@@ -26,6 +34,10 @@
 //! | [`STREAM_SHADOW`] | `[dom, round, iter, device]` | centralized-GD shadow minibatches |
 //! | [`STREAM_PROBE`] | `[dom, device]` | §IV gradient-probe minibatches |
 //! | [`STREAM_SMOOTH`] | `[dom, device]` | §IV L_n perturbation direction |
+//! | [`STREAM_FAULT_STRAGGLER`] | `[dom, round, device]` | straggler delay multiplier (phase 2) |
+//! | [`STREAM_FAULT_DROPOUT`] | `[dom, round, device]` | mid-round device dropout (phases 3-4) |
+//! | [`STREAM_FAULT_OUTAGE`] | `[dom, round, gateway]` | whole-floor gateway outage (phase 3) |
+//! | [`STREAM_FAULT_SHARD`] | `[dom, device]` | Dirichlet non-IID sharding (phase 0) |
 //!
 //! Because device n's round-t batch stream depends only on
 //! `(seed, t, n)`, local training is **order-independent**: any worker
@@ -68,6 +80,12 @@ use anyhow::Result;
 use rayon::prelude::*;
 
 use crate::energy::EnergyArrivals;
+use crate::fl::fault::{FaultPlan, RoundFaults};
+// Fault-stream domains live with their consumer logic in `fl::fault`;
+// re-exported here so the full stream map reads from one module.
+pub use crate::fl::fault::{
+    STREAM_FAULT_DROPOUT, STREAM_FAULT_OUTAGE, STREAM_FAULT_SHARD, STREAM_FAULT_STRAGGLER,
+};
 use crate::fl::participation::GradStats;
 use crate::fl::session::{RoundObserver, RunMeta, RunOpts, RunSummary, StopCause};
 use crate::fl::vecmath::{self, FlatWeightedAccum, WeightedAccum};
@@ -125,11 +143,14 @@ struct TrainOutcome {
 /// Executes communication rounds for one [`Experiment`].
 pub struct RoundEngine<'a> {
     exp: &'a Experiment,
+    /// Deterministic adversity consulted at the phase seams; built from
+    /// the experiment's (validated) `fault.*` block, benign by default.
+    fault: FaultPlan,
 }
 
 impl<'a> RoundEngine<'a> {
     pub fn new(exp: &'a Experiment) -> Self {
-        RoundEngine { exp }
+        RoundEngine { exp, fault: FaultPlan::from_config(&exp.cfg) }
     }
 
     /// Phase 1: draw the round's environment. Streams depend only on
@@ -143,16 +164,51 @@ impl<'a> RoundEngine<'a> {
         (state, arrivals)
     }
 
+    /// Phase 2 fault seam: τ(t) with straggler episodes folded in. A
+    /// straggler on gateway m's floor stretches that plan's Λ by its
+    /// realized multiplier (the floor waits for its slowest device); the
+    /// round delay stays the max over selected gateways. With the knob
+    /// unarmed this IS `decision.round_delay()` — and when no episode
+    /// fires, `λ · 1.0` is bit-exact, so the bytes cannot drift.
+    fn round_delay_with_stragglers(
+        &self,
+        t: usize,
+        decision: &Decision,
+        faults: &mut Option<RoundFaults>,
+    ) -> f64 {
+        if !self.fault.has_stragglers() {
+            return decision.round_delay();
+        }
+        let topo = &self.exp.topo;
+        let mut delay = 0.0f64;
+        for plan in &decision.plans {
+            let mut slow = 1.0f64;
+            for &n in &topo.gateways[plan.gateway].members {
+                slow = slow.max(self.fault.straggler_multiplier(t, n));
+            }
+            if let Some(f) = faults.as_mut() {
+                f.max_slowdown = f.max_slowdown.max(slow);
+            }
+            delay = delay.max(plan.lambda * slow);
+        }
+        delay
+    }
+
     /// Phase 3: feasibility (C7–C10). Marks selected/failed gateways and
     /// expands the surviving plans into per-device training units. A plan
     /// that fails a constraint "fails to complete local model training"
-    /// (§VII-C) and contributes no units.
+    /// (§VII-C) and contributes no units. Fault seams: a whole-floor
+    /// outage fails an otherwise-feasible gateway, and a mid-round device
+    /// dropout withholds that device's unit — both recorded in `faults`,
+    /// both excluded from the phase-4/5 fold entirely.
     fn feasibility(
         &self,
+        t: usize,
         decision: &Decision,
         ctx: &RoundCtx,
         selected: &mut [bool],
         failed: &mut [bool],
+        faults: &mut Option<RoundFaults>,
     ) -> Result<Vec<TrainUnit>> {
         let mut units = Vec::new();
         for plan in &decision.plans {
@@ -160,6 +216,13 @@ impl<'a> RoundEngine<'a> {
             selected[m] = true;
             if !plan_cost(ctx, plan).feasible() {
                 failed[m] = true;
+                continue;
+            }
+            if self.fault.gateway_out(t, m) {
+                failed[m] = true;
+                if let Some(f) = faults.as_mut() {
+                    f.outages.set(m);
+                }
                 continue;
             }
             for (i, &n) in self.exp.topo.gateways[m].members.iter().enumerate() {
@@ -173,6 +236,12 @@ impl<'a> RoundEngine<'a> {
                         "gateway {m}'s plan lacks a partition entry for \
                          member {i} (device {n}) in execute-partition mode"
                     );
+                }
+                if self.fault.device_dropped(t, n) {
+                    if let Some(f) = faults.as_mut() {
+                        f.dropped.push(n);
+                    }
+                    continue;
                 }
                 units.push(TrainUnit { device: n, gateway: m, cut });
             }
@@ -210,7 +279,9 @@ impl<'a> RoundEngine<'a> {
                 .collect();
             for (u, res) in wave.iter().zip(results) {
                 let (w, loss) = res?;
-                out.accum.add(&w, exp.topo.devices[u.device].train_batch as f64);
+                // FedAvg weight: D̃_n (`Device::fedavg_weight`), the one
+                // weighting shared with the shadow and probe folds.
+                out.accum.add(&w, exp.topo.devices[u.device].fedavg_weight());
                 out.floor_loss[u.gateway] += loss;
                 out.floor_count[u.gateway] += 1;
                 out.loss_sum += loss;
@@ -282,15 +353,25 @@ impl<'a> RoundEngine<'a> {
                 round: t,
             };
 
-            // Phase 2: scheduling — X(t) = [I, l, P, f^G].
+            // Phase 2: scheduling — X(t) = [I, l, P, f^G] — with straggler
+            // episodes folded into τ(t). The per-round fault report only
+            // exists while a fault knob is armed (and is attached to the
+            // record only if something actually fired).
             let decision = sched.schedule(&ctx);
-            let delay = decision.round_delay();
+            let mut faults: Option<RoundFaults> =
+                if self.fault.has_round_faults() { Some(RoundFaults::new(mm)) } else { None };
+            let delay = self.round_delay_with_stragglers(t, &decision, &mut faults);
             cum_delay += delay;
+            // Known as soon as the delay is: whether this round exhausts
+            // the simulated-delay budget (the stopping round then gets a
+            // final eval below).
+            let budget_stop = opts.max_sim_delay.is_some_and(|b| cum_delay >= b);
 
             // Phase 3: feasibility.
             let mut selected = vec![false; mm];
             let mut failed = vec![false; mm];
-            let units = self.feasibility(&decision, &ctx, &mut selected, &mut failed)?;
+            let units =
+                self.feasibility(t, &decision, &ctx, &mut selected, &mut failed, &mut faults)?;
             for m in 0..mm {
                 sel_counts[m] += selected[m] as usize;
                 eff_counts[m] += (selected[m] && !failed[m]) as usize;
@@ -316,9 +397,13 @@ impl<'a> RoundEngine<'a> {
             }
 
             // Divergence measurement (Fig. 2): from the round's STARTING
-            // model, before aggregation replaces it.
+            // model, before aggregation replaces it. Purely a probe — it
+            // must never touch `avg_loss`, which carries the phase-4
+            // training losses to `sched.observe` unconditionally (a
+            // loss-driven schedule is identical with and without
+            // `--divergence`; pinned by rust/tests/fault.rs).
             let divergence = if opts.track_divergence && opts.train {
-                Some(self.measure_divergence(t, &params, &mut avg_loss)?)
+                Some(self.measure_divergence(t, &params)?)
             } else {
                 None
             };
@@ -345,6 +430,14 @@ impl<'a> RoundEngine<'a> {
                 (None, None)
             };
 
+            // Canonicalize the fault report (device order) and attach it
+            // only when something realized, so benign rounds — and whole
+            // benign runs — serialize exactly as before the fault layer.
+            if let Some(f) = faults.as_mut() {
+                f.dropped.sort_unstable();
+            }
+            let faults = faults.filter(|f| f.any());
+
             let record = RoundRecord {
                 round: t,
                 delay,
@@ -355,6 +448,7 @@ impl<'a> RoundEngine<'a> {
                 test_loss,
                 test_acc,
                 divergence,
+                faults,
             };
             rounds_run = t + 1;
 
@@ -365,12 +459,8 @@ impl<'a> RoundEngine<'a> {
                     stop = Some(StopCause::TargetAccuracy { round: t, accuracy: acc });
                 }
             }
-            if stop.is_none() {
-                if let Some(budget) = opts.max_sim_delay {
-                    if cum_delay >= budget {
-                        stop = Some(StopCause::DelayBudget { round: t, cum_delay });
-                    }
-                }
+            if stop.is_none() && budget_stop {
+                stop = Some(StopCause::DelayBudget { round: t, cum_delay });
             }
             for obs in observers.iter_mut() {
                 if obs.on_record(&record)? == ControlFlow::Break(()) && stop.is_none() {
@@ -378,6 +468,21 @@ impl<'a> RoundEngine<'a> {
                 }
             }
             if stop.is_some() {
+                // A stopping round that the periodic gate skipped still
+                // gets its final eval — a run must not end with
+                // `test_acc = None`. The patched record is delivered
+                // through the SEPARATE `on_final_eval` hook (never
+                // `on_record`), so the on_record stream of a stopped run
+                // stays a byte-identical prefix of the uninterrupted run.
+                if record.test_acc.is_none() && opts.train && opts.eval_every > 0 {
+                    let (l, a) = exp.engine.eval_full(&params, &exp.test_x, &exp.test_y)?;
+                    let mut fin = record.clone();
+                    fin.test_loss = Some(l);
+                    fin.test_acc = Some(a);
+                    for obs in observers.iter_mut() {
+                        obs.on_final_eval(&fin)?;
+                    }
+                }
                 break;
             }
         }
@@ -403,18 +508,19 @@ impl<'a> RoundEngine<'a> {
     /// union gradient; returns `‖ŵ_m − v^{K,t}‖` per gateway. Per-gateway
     /// aggregates stream through [`WeightedAccum`] one shop floor at a
     /// time, so live copies are O(floor), not O(N).
-    fn measure_divergence(
-        &self,
-        t: usize,
-        params: &Params,
-        avg_loss: &mut [Option<f64>],
-    ) -> Result<Vec<f64>> {
+    ///
+    /// A pure measurement: its losses stay inside the probe and never
+    /// reach scheduler feedback (they cover every device, scheduled or
+    /// not — feeding them to `observe` would change loss-driven schedules
+    /// whenever `--divergence` is on).
+    fn measure_divergence(&self, t: usize, params: &Params) -> Result<Vec<f64>> {
         let exp = self.exp;
         let seed = exp.cfg.seed;
         let n_dev = exp.topo.num_devices();
 
         // Centralized-GD shadow: v ← v − β·∇F(v), with ∇F the
-        // dataset-size-weighted mean of per-device minibatch gradients,
+        // D̃_n-weighted mean of per-device minibatch gradients (the same
+        // `fedavg_weight` the phase-5 fold uses — Eq. 7's weighting),
         // streamed through a flat accumulator.
         let mut v = params.clone();
         let devices: Vec<usize> = (0..n_dev).collect();
@@ -431,7 +537,7 @@ impl<'a> RoundEngine<'a> {
                     })
                     .collect();
                 for (&n, g) in wave.iter().zip(grads) {
-                    gacc.add(&g?, exp.topo.devices[n].dataset_size as f64);
+                    gacc.add(&g?, exp.topo.devices[n].fedavg_weight());
                 }
             }
             let g = gacc.finish().expect("validated: topology is non-empty");
@@ -453,15 +559,12 @@ impl<'a> RoundEngine<'a> {
                 })
                 .collect();
             let mut acc = WeightedAccum::new();
-            let mut floor_loss = 0.0;
             for (&n, res) in members.iter().zip(results) {
-                let (w, loss) = res?;
-                acc.add(&w, exp.topo.devices[n].train_batch as f64);
-                floor_loss += loss;
+                let (w, _) = res?;
+                acc.add(&w, exp.topo.devices[n].fedavg_weight());
             }
             let w_hat = acc.finish().expect("validated: no empty shop floors");
             out.push(vecmath::l2_diff(&w_hat, &v));
-            avg_loss[gw.id] = Some(floor_loss / members.len() as f64);
         }
         Ok(out)
     }
@@ -542,9 +645,10 @@ impl Experiment {
                 wave.par_iter().map(|&n| probe_device(n)).collect();
             for (&n, res) in wave.iter().zip(results) {
                 let (mean, s, l) = res?;
-                // Global gradient: dataset-size-weighted mean (∇F
-                // definition), folded in device order.
-                gacc.add(&mean, self.topo.devices[n].dataset_size as f64);
+                // Global gradient: D̃_n-weighted mean (`fedavg_weight` —
+                // the ∇F definition under Eq. 7's weighting, matching
+                // the phase-5 and shadow folds), folded in device order.
+                gacc.add(&mean, self.topo.devices[n].fedavg_weight());
                 sigma.push(s);
                 lsmooth.push(l);
             }
@@ -563,5 +667,105 @@ impl Experiment {
             .collect::<Result<_>>()?;
 
         Ok(GradStats { sigma, delta, lsmooth })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::sched::RoundRobin;
+
+    /// THE dropout aggregation pin: a dropped device contributes nothing
+    /// to the `WeightedAccum` fold, bitwise — the armed engine's phase-4/5
+    /// aggregate equals a from-scratch fold over exactly the surviving
+    /// units, and the unit list is exactly the benign list minus the
+    /// dropped devices.
+    #[test]
+    fn dropout_round_aggregation_excludes_dropped_devices_bitwise() {
+        let mut cfg = SimConfig::default();
+        cfg.test_size = 256;
+        cfg.dataset_max = 400;
+        // Budgets generous enough that every scheduled plan is feasible —
+        // the test must exercise dropout, not constraint failures.
+        cfg.device_energy_max = 500.0;
+        cfg.gw_energy_max = 5000.0;
+        cfg.fault.dropout_prob = 0.5;
+        let exp = Experiment::new(cfg).unwrap();
+        let engine = RoundEngine::new(&exp);
+        let engine_benign = RoundEngine { exp: &exp, fault: FaultPlan::none() };
+        let mm = exp.topo.num_gateways();
+        let mut sched = RoundRobin::new();
+
+        // Walk rounds until the (deterministic) dropout realization has
+        // both dropped devices and survivors; p=0.5 over ~6 scheduled
+        // devices makes the first such round come almost immediately.
+        for t in 0..20usize {
+            let (state, arrivals) = engine.draw_env(t);
+            let ctx = RoundCtx {
+                cfg: &exp.cfg,
+                topo: &exp.topo,
+                model: &exp.cost_model,
+                chan: &exp.chan,
+                state: &state,
+                arrivals: &arrivals,
+                round: t,
+            };
+            let decision = sched.schedule(&ctx);
+
+            let (mut sel_a, mut fail_a) = (vec![false; mm], vec![false; mm]);
+            let mut faults = Some(RoundFaults::new(mm));
+            let units_armed = engine
+                .feasibility(t, &decision, &ctx, &mut sel_a, &mut fail_a, &mut faults)
+                .unwrap();
+            let dropped = faults.unwrap().dropped;
+
+            let (mut sel_b, mut fail_b) = (vec![false; mm], vec![false; mm]);
+            let mut no_faults = None;
+            let units_all = engine_benign
+                .feasibility(t, &decision, &ctx, &mut sel_b, &mut fail_b, &mut no_faults)
+                .unwrap();
+            assert!(no_faults.is_none());
+
+            // Selection/failure flags are dropout-independent (only
+            // outages fail gateways, and none are armed here).
+            assert_eq!(sel_a, sel_b, "round {t}");
+            assert_eq!(fail_a, fail_b, "round {t}");
+            let survivors: Vec<usize> = units_all
+                .iter()
+                .map(|u| u.device)
+                .filter(|n| !dropped.contains(n))
+                .collect();
+            assert_eq!(
+                units_armed.iter().map(|u| u.device).collect::<Vec<_>>(),
+                survivors,
+                "round {t}: armed units != benign units minus dropped"
+            );
+
+            if dropped.is_empty() || units_armed.is_empty() {
+                continue;
+            }
+
+            // Fold parity, bit for bit.
+            let params = exp.engine.init_params().unwrap();
+            let out = engine.local_training(t, &units_armed, &params).unwrap();
+            let mut acc = WeightedAccum::new();
+            for u in &units_armed {
+                let mut rng =
+                    Rng::stream(exp.cfg.seed, &[STREAM_TRAIN, t as u64, u.device as u64]);
+                let (w, _) = exp.local_train(u.device, u.cut, &params, &mut rng).unwrap();
+                acc.add(&w, exp.topo.devices[u.device].fedavg_weight());
+            }
+            let manual = acc.finish().unwrap();
+            let folded = out.accum.finish().unwrap();
+            assert_eq!(manual.len(), folded.len());
+            for (a, b) in manual.iter().zip(&folded) {
+                for (x, y) in a.iter().zip(b) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "round {t}: fold bytes diverged");
+                }
+            }
+            return;
+        }
+        panic!("no round with both dropped devices and survivors in 20 rounds at p=0.5");
     }
 }

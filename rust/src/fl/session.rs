@@ -27,7 +27,11 @@
 //! [`ControlFlow::Break`]. A stopped run's records are byte-identical
 //! to the first k records of the full run (pinned by
 //! `rust/tests/session.rs`) because each round's RNG streams depend
-//! only on `(seed, round, device)`, never on the future.
+//! only on `(seed, round, device)`, never on the future. When the
+//! stopping round itself skipped the periodic eval, the engine runs a
+//! forced final eval and delivers the patched record via
+//! [`RoundObserver::on_final_eval`] — so an early-stopped run never ends
+//! with `test_acc = None`, without perturbing the prefix property.
 //!
 //! # Example
 //!
@@ -188,6 +192,17 @@ pub trait RoundObserver {
 
     /// Called after every executed round, in round order.
     fn on_record(&mut self, record: &RoundRecord) -> Result<ControlFlow<()>>;
+
+    /// Called at most once, only on an early-stopped run whose stopping
+    /// round the periodic eval gate skipped: `record` is the final round's
+    /// record with `test_loss`/`test_acc` filled in by a forced final
+    /// eval. Delivered OUTSIDE the `on_record` stream so a stopped run's
+    /// per-round records stay a byte-identical prefix of the full run;
+    /// buffering observers typically replace their last record with this
+    /// one (`MemorySink` does).
+    fn on_final_eval(&mut self, _record: &RoundRecord) -> Result<()> {
+        Ok(())
+    }
 
     /// Called once after the last round (stopped or not).
     fn on_finish(&mut self, _summary: &RunSummary) -> Result<()> {

@@ -88,7 +88,8 @@ fn print_help() {
          commands: train | participation | info\n\
          common flags: --rounds N --v V --seed S --dataset svhn|cifar\n\
          \u{20}                --preset mlp|cnn --cost-model vgg11|cnn|mlp\n\
-         \u{20}                --scenario paper|plant|campus|metro (scale preset,\n\
+         \u{20}                --scenario paper|plant|campus|metro|\n\
+         \u{20}                flaky-plant|churn-metro (scale/adversity preset,\n\
          \u{20}                applied before --set overrides)\n\
          \u{20}                --set key=value (any config key) --config file\n\
          train flags:  --scheme ddsra|participation|random|round_robin|\n\

@@ -140,6 +140,11 @@ fn json_arr(vs: &[f64]) -> String {
     format!("[{}]", body.join(","))
 }
 
+fn json_usize_arr(vs: &[usize]) -> String {
+    let body: Vec<String> = vs.iter().map(|v| v.to_string()).collect();
+    format!("[{}]", body.join(","))
+}
+
 /// Streams one JSON object per line: a `meta` line before round 0, one
 /// `round` line per record, and a closing `summary` line. The schema is
 /// pinned by a golden file in `rust/tests/session.rs`.
@@ -173,11 +178,21 @@ impl RoundObserver for JsonlSink {
     fn on_record(&mut self, r: &RoundRecord) -> Result<ControlFlow<()>> {
         let divergence =
             r.divergence.as_ref().map_or_else(|| "null".into(), |d| json_arr(d));
+        // The faults object is appended ONLY when faults realized, so
+        // benign runs keep the golden-pinned line bytes unchanged.
+        let faults = r.faults.as_ref().map_or_else(String::new, |f| {
+            format!(
+                ",\"faults\":{{\"dropped\":{},\"outages\":{},\"max_slowdown\":{}}}",
+                json_usize_arr(&f.dropped),
+                f.outages.count(),
+                json_f64(f.max_slowdown),
+            )
+        });
         writeln!(
             self.file,
             "{{\"type\":\"round\",\"round\":{},\"delay\":{},\"cum_delay\":{},\
              \"selected\":{},\"failed\":{},\"train_loss\":{},\"test_loss\":{},\
-             \"test_acc\":{},\"divergence\":{}}}",
+             \"test_acc\":{},\"divergence\":{}{}}}",
             r.round,
             json_f64(r.delay),
             json_f64(r.cum_delay),
@@ -187,8 +202,23 @@ impl RoundObserver for JsonlSink {
             json_opt(r.test_loss),
             json_opt(r.test_acc),
             divergence,
+            faults,
         )?;
         Ok(ControlFlow::Continue(()))
+    }
+
+    fn on_final_eval(&mut self, r: &RoundRecord) -> Result<()> {
+        // The stopping round's forced eval, framed as its own line so the
+        // preceding `round` lines stay a byte-identical prefix of the
+        // uninterrupted run's stream.
+        writeln!(
+            self.file,
+            "{{\"type\":\"final_eval\",\"round\":{},\"test_loss\":{},\"test_acc\":{}}}",
+            r.round,
+            json_opt(r.test_loss),
+            json_opt(r.test_acc),
+        )?;
+        Ok(())
     }
 
     fn on_finish(&mut self, s: &RunSummary) -> Result<()> {
@@ -305,6 +335,15 @@ impl RoundObserver for MemorySink {
     fn on_record(&mut self, record: &RoundRecord) -> Result<ControlFlow<()>> {
         self.records.push(record.clone());
         Ok(ControlFlow::Continue(()))
+    }
+
+    fn on_final_eval(&mut self, record: &RoundRecord) -> Result<()> {
+        // The buffered log should end on the evaluated form of the
+        // stopping round — callers read `final_accuracy()` off it.
+        if let Some(last) = self.records.last_mut() {
+            *last = record.clone();
+        }
+        Ok(())
     }
 
     fn on_finish(&mut self, s: &RunSummary) -> Result<()> {

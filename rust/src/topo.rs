@@ -30,6 +30,19 @@ pub struct Device {
     pub energy_max: f64,
 }
 
+impl Device {
+    /// THE FedAvg weight of this device: D̃_n = ceil(alpha · D_n), the
+    /// per-iteration training batch (§III-A step 3 / Eq. 7). Every
+    /// `WeightedAccum` feed — phase-5 aggregation, the centralized-GD
+    /// shadow, and the §IV gradient probes — weights by this one
+    /// definition, so the realized averages match the paper's D̃_n
+    /// weighting everywhere (not `dataset_size`, which only D̃_n is
+    /// derived from).
+    pub fn fedavg_weight(&self) -> f64 {
+        self.train_batch as f64
+    }
+}
+
 /// Static attributes of one edge gateway.
 #[derive(Clone, Debug)]
 pub struct Gateway {
@@ -154,7 +167,7 @@ impl Topology {
         self.gateways[m]
             .members
             .iter()
-            .map(|&n| self.devices[n].train_batch as f64)
+            .map(|&n| self.devices[n].fedavg_weight())
             .sum()
     }
 }
@@ -204,6 +217,8 @@ mod tests {
                 d.train_batch,
                 ((cfg.sample_ratio * d.dataset_size as f64).ceil() as usize).max(1)
             );
+            // The one FedAvg weight definition: D̃_n, never D_n.
+            assert_eq!(d.fedavg_weight(), d.train_batch as f64);
         }
         for g in &t.gateways {
             assert!(g.distance >= cfg.gw_dist_min && g.distance <= cfg.gw_dist_max);

@@ -13,7 +13,7 @@ pub fn serialize_records(records: &[RoundRecord]) -> String {
     let mut out = String::new();
     for r in records {
         out.push_str(&format!(
-            "{}|{}|{}|{:?}|{:?}|{}|{}|{}|{:?}\n",
+            "{}|{}|{}|{:?}|{:?}|{}|{}|{}|{:?}",
             r.round,
             bits(r.delay),
             bits(r.cum_delay),
@@ -24,6 +24,17 @@ pub fn serialize_records(records: &[RoundRecord]) -> String {
             opt(r.test_acc),
             r.divergence.as_ref().map(|d| d.iter().map(|&v| bits(v)).collect::<Vec<_>>()),
         ));
+        // Realized faults render ONLY when present, so fault-free logs
+        // keep the exact historical byte layout.
+        if let Some(f) = &r.faults {
+            out.push_str(&format!(
+                "|faults:{:?},{:?},{}",
+                f.dropped,
+                f.outages.to_vec(),
+                bits(f.max_slowdown)
+            ));
+        }
+        out.push('\n');
     }
     out
 }

@@ -1,0 +1,150 @@
+//! Fault-injection guarantees: an adversity-preset run replays
+//! byte-identically across rayon thread counts (faults draw from
+//! per-(round, device) `STREAM_FAULT_*` streams), an armed-but-inert
+//! `FaultPlan` leaves every engine byte identical to the benign engine,
+//! loss-driven schedules are identical with and without `--divergence`
+//! (the probe must never leak into scheduler feedback), and the §IV
+//! gradient probes weight by D̃_n — never by `dataset_size`.
+
+mod common;
+
+use common::{serialize, serialize_records};
+use iiot_fl::config::SimConfig;
+use iiot_fl::fl::{Experiment, RoundRecord, SchedulerSpec, Session};
+
+fn cfg() -> SimConfig {
+    // Paper-scale topology; small shards/test set keep real training fast.
+    let mut cfg = SimConfig::default();
+    cfg.exec_model = "mlp".into();
+    cfg.test_size = 256;
+    cfg.dataset_max = 400;
+    cfg
+}
+
+/// THE adversity replay pin: a `flaky-plant` run — Dirichlet sharding,
+/// stragglers, dropout, and outages all armed — produces byte-identical
+/// round logs whether rayon runs 1 worker or 8. Every fault draw comes
+/// from its own `(seed, round, device)` stream, so adversity is as
+/// order-independent as training itself.
+#[test]
+fn flaky_plant_run_is_byte_identical_across_thread_counts() {
+    let mut cfg = SimConfig::default();
+    cfg.apply_scenario("flaky-plant").unwrap(); // N=240, M=24, J=8 + faults
+    cfg.dataset_min = 16;
+    cfg.dataset_max = 48; // small shards keep the test quick
+    cfg.test_size = 256;
+    cfg.local_iters = 1;
+    cfg.rounds = 2;
+    // Budgets generous enough that scheduled floors really train — the
+    // replay must cover the faulted training path, not just scheduling.
+    cfg.device_energy_max = 500.0;
+    cfg.gw_energy_max = 5000.0;
+    let run_with = |threads: usize| {
+        let pool = rayon::ThreadPoolBuilder::new().num_threads(threads).build().unwrap();
+        pool.install(|| {
+            let session = Session::builder(cfg.clone()).rounds(2).eval_every(2).build().unwrap();
+            let log = session.run(&SchedulerSpec::RoundRobin).unwrap();
+            assert!(
+                log.records.iter().any(|r| r.faults.is_some()),
+                "flaky-plant probabilities over 80 scheduled devices must realize \
+                 at least one fault in two rounds"
+            );
+            assert!(
+                log.records.iter().any(|r| r.train_loss.is_some()),
+                "the faulted run must still train its survivors"
+            );
+            serialize(&log)
+        })
+    };
+    assert_eq!(run_with(1), run_with(8), "thread count changed the faulted round bytes");
+}
+
+/// THE `FaultPlan::none()` parity pin, at runtime: an ARMED fault block
+/// whose probabilities are too small to ever realize walks every fault
+/// seam in the engine and still produces the exact bytes of the benign
+/// engine (which skips the fault machinery entirely). Arming the knobs
+/// costs nothing until a fault actually fires.
+#[test]
+fn armed_but_inert_fault_plan_is_byte_identical_to_benign() {
+    let benign = cfg();
+    let mut inert = cfg();
+    inert.fault.straggler_prob = 1e-300; // armed, but a draw can never land below
+    inert.fault.straggler_slowdown = 1.5;
+    inert.fault.dropout_prob = 1e-300;
+    inert.fault.gateway_outage_prob = 1e-300;
+    assert!(!inert.fault.is_benign());
+    inert.validate().unwrap();
+    let run = |cfg: SimConfig| {
+        let session = Session::builder(cfg).rounds(3).eval_every(2).build().unwrap();
+        serialize(&session.run(&SchedulerSpec::RoundRobin).unwrap())
+    };
+    assert_eq!(
+        run(benign),
+        run(inert),
+        "an armed-but-inert fault plan changed the engine bytes"
+    );
+}
+
+/// The scheduler-feedback bugfix pin: a loss-driven schedule is
+/// IDENTICAL with and without divergence tracking. The Fig. 2 probe
+/// trains every device from the round's starting model — before the fix
+/// its losses overwrote the phase-4 training losses in `RoundFeedback`,
+/// so turning `--divergence` on silently changed which gateways a
+/// loss-driven scheduler picked.
+#[test]
+fn loss_driven_schedule_is_invariant_to_divergence_tracking() {
+    let run = |track: bool| {
+        let mut b = Session::builder(cfg()).rounds(4).eval_every(2);
+        if track {
+            b = b.divergence();
+        }
+        let log = b.build().unwrap().run(&SchedulerSpec::LossDriven).unwrap();
+        assert_eq!(log.records.len(), 4);
+        if track {
+            assert!(log.records.iter().all(|r| r.divergence.is_some()));
+        }
+        // The probe's own output differs by construction; everything
+        // else — selection, delays, losses, evals — must not.
+        let stripped: Vec<RoundRecord> = log
+            .records
+            .iter()
+            .map(|r| {
+                let mut r = r.clone();
+                r.divergence = None;
+                r
+            })
+            .collect();
+        serialize_records(&stripped)
+    };
+    assert_eq!(
+        run(false),
+        run(true),
+        "divergence tracking changed a loss-driven schedule"
+    );
+}
+
+/// The FedAvg-weight reconciliation pin for the §IV probes: the global
+/// gradient folds by D̃_n (`Device::fedavg_weight`), so mutating every
+/// device's `dataset_size` after construction — which leaves D̃_n and the
+/// shards untouched — cannot move a single bit of σ/δ/L.
+#[test]
+fn grad_stats_weight_by_train_batch_not_dataset_size() {
+    let exp = Experiment::new(cfg()).unwrap();
+    let base = exp.estimate_grad_stats(3).unwrap();
+
+    let mut warped = Experiment::new(cfg()).unwrap();
+    for d in &mut warped.topo.devices {
+        d.dataset_size = d.dataset_size * 13 + 1;
+    }
+    let stats = warped.estimate_grad_stats(3).unwrap();
+
+    for (a, b) in base.sigma.iter().zip(&stats.sigma) {
+        assert_eq!(a.to_bits(), b.to_bits(), "sigma depends on dataset_size");
+    }
+    for (a, b) in base.delta.iter().zip(&stats.delta) {
+        assert_eq!(a.to_bits(), b.to_bits(), "delta depends on dataset_size");
+    }
+    for (a, b) in base.lsmooth.iter().zip(&stats.lsmooth) {
+        assert_eq!(a.to_bits(), b.to_bits(), "lsmooth depends on dataset_size");
+    }
+}

@@ -144,15 +144,26 @@ fn divergence_mode_replays_through_the_engine() {
     assert_eq!(run(), run(), "divergence-mode replay diverged");
 }
 
-/// Scale scenarios produce validating configs; unknown names fail.
+/// Scale scenarios produce validating configs; unknown names fail. The
+/// adversity presets inherit their base topology and arm the fault block.
 #[test]
 fn scale_scenarios_validate() {
-    for (name, n, m) in
-        [("paper", 12, 6), ("plant", 240, 24), ("campus", 960, 48), ("metro", 2880, 96)]
-    {
+    for (name, n, m) in [
+        ("paper", 12, 6),
+        ("plant", 240, 24),
+        ("campus", 960, 48),
+        ("metro", 2880, 96),
+        ("flaky-plant", 240, 24),
+        ("churn-metro", 2880, 96),
+    ] {
         let mut cfg = SimConfig::default();
         cfg.apply_scenario(name).unwrap();
         assert_eq!((cfg.num_devices, cfg.num_gateways), (n, m), "{name}");
+        assert_eq!(
+            cfg.fault.is_benign(),
+            !name.contains('-'),
+            "{name}: adversity presets (and only they) arm the fault block"
+        );
         cfg.validate().unwrap();
     }
     assert!(SimConfig::default().apply_scenario("galaxy").is_err());

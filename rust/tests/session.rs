@@ -49,6 +49,7 @@ fn fixture() -> (RunMeta, Vec<RoundRecord>, RunSummary) {
             test_loss: None,
             test_acc: None,
             divergence: None,
+            faults: None,
         },
         RoundRecord {
             round: 1,
@@ -60,6 +61,7 @@ fn fixture() -> (RunMeta, Vec<RoundRecord>, RunSummary) {
             test_loss: Some(0.5),
             test_acc: Some(0.75),
             divergence: Some(vec![0.5, 0.25]),
+            faults: None,
         },
     ];
     let summary = RunSummary {
@@ -199,14 +201,41 @@ fn paired_runs_equal_sequential_runs() {
 
 /// Early-stop determinism: a run stopped at round k (simulated delay
 /// budget, target accuracy, or observer break) is byte-identical to the
-/// first k+1 records of the uninterrupted run.
+/// first k+1 records of the uninterrupted run — except that a stopping
+/// round the periodic eval gate skipped now carries a forced final eval
+/// (delivered via `on_final_eval`, patched into the `MemorySink` log),
+/// so those runs never end with `test_acc = None`. The eval values
+/// themselves are pinned against an `eval_every = 1` run, which
+/// evaluates the identical post-aggregation parameters.
 #[test]
 fn early_stopped_run_is_a_byte_identical_prefix() {
     let full_session = Session::builder(cfg()).rounds(6).eval_every(2).build().unwrap();
     let full = full_session.run(&SchedulerSpec::RoundRobin).unwrap();
     assert_eq!(full.records.len(), 6);
 
+    // Reference evals for every round: eval_every = 1 evaluates the same
+    // trained parameters each round (evaluation never perturbs training).
+    let dense = Session::builder(cfg())
+        .rounds(3)
+        .eval_every(1)
+        .build()
+        .unwrap()
+        .run(&SchedulerSpec::RoundRobin)
+        .unwrap();
+
+    // A stopped-run record whose eval fields came from the forced final
+    // eval, reduced back to what the periodic gate alone would have
+    // produced — so prefix comparisons stay bitwise.
+    let strip_eval = |r: &RoundRecord| {
+        let mut r = r.clone();
+        r.test_loss = None;
+        r.test_acc = None;
+        r
+    };
+
     // Delay budget: cum_delay reaches records[2].cum_delay at round 2.
+    // Round 2 is not eval-aligned (eval_every = 2 evals rounds 1, 3, 5),
+    // so the stopping round gets the forced final eval.
     let budget = full.records[2].cum_delay;
     let session =
         Session::builder(cfg()).rounds(6).eval_every(2).max_rounds_wall(budget).build().unwrap();
@@ -223,9 +252,23 @@ fn early_stopped_run_is_a_byte_identical_prefix() {
     );
     let stopped = mem.into_log();
     assert_eq!(
-        serialize_records(&stopped.records),
-        serialize_records(&full.records[..3]),
+        serialize_records(&stopped.records[..2]),
+        serialize_records(&full.records[..2]),
         "delay-budget stop is not a byte-identical prefix"
+    );
+    assert_eq!(
+        serialize_records(&[strip_eval(&stopped.records[2])]),
+        serialize_records(&full.records[2..3]),
+        "delay-budget stopping round diverged beyond the forced eval"
+    );
+    assert_eq!(
+        stopped.records[2].test_acc.map(f64::to_bits),
+        dense.records[2].test_acc.map(f64::to_bits),
+        "forced final eval != dense-eval reference at round 2"
+    );
+    assert_eq!(
+        stopped.records[2].test_loss.map(f64::to_bits),
+        dense.records[2].test_loss.map(f64::to_bits)
     );
 
     // Target accuracy: any accuracy satisfies target 0.0, so the first
@@ -268,9 +311,17 @@ fn early_stopped_run_is_a_byte_identical_prefix() {
     };
     assert_eq!(summary.rounds_run, 1);
     assert_eq!(summary.stop, Some(StopCause::Observer { round: 0 }));
+    // Round 0 is not eval-aligned, so the broken run's only record gains
+    // the forced final eval — dense-eval round 0 is the reference.
+    let stopped = mem.into_log();
     assert_eq!(
-        serialize_records(&mem.into_log().records),
+        serialize_records(&[strip_eval(&stopped.records[0])]),
         serialize_records(&full.records[..1]),
         "observer stop is not a byte-identical prefix"
+    );
+    assert_eq!(
+        stopped.records[0].test_acc.map(f64::to_bits),
+        dense.records[0].test_acc.map(f64::to_bits),
+        "forced final eval != dense-eval reference at round 0"
     );
 }
