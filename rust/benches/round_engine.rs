@@ -14,6 +14,21 @@ use std::time::Instant;
 
 use iiot_fl::config::SimConfig;
 use iiot_fl::fl::{SchedulerSpec, Session};
+use iiot_fl::runtime::KernelPath;
+
+/// `git describe --always --dirty`, or "unknown" outside a git checkout —
+/// tags the emitted JSON so two bench files can be attributed to commits.
+fn git_describe() -> String {
+    std::process::Command::new("git")
+        .args(["describe", "--always", "--dirty"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".into())
+}
 
 /// A scale working point with budgets generous enough that scheduled
 /// floors always train — the bench measures the engine, not feasibility.
@@ -69,6 +84,10 @@ fn main() -> anyhow::Result<()> {
     thread_grid.dedup();
 
     let mut json = String::from("{\n  \"bench\": \"round_engine\",\n");
+    // The sessions below run the config default, i.e. KernelPath::default();
+    // tagging it (plus the commit) makes two bench files comparable.
+    let _ = writeln!(json, "  \"kernel\": \"{}\",", KernelPath::default());
+    let _ = writeln!(json, "  \"git_describe\": \"{}\",", git_describe());
     let _ = writeln!(json, "  \"max_threads\": {max_threads},");
     json.push_str("  \"device_sweep\": [\n");
 

@@ -1,17 +1,27 @@
 //! Native layer-graph engine throughput (custom harness — criterion is
 //! unavailable offline): `train_step` / `eval_batch` / `grad` for the mlp
-//! and cnn presets, seeding the perf trajectory of the rayon fwd/bwd path,
+//! and cnn presets on BOTH kernel paths (`scalar` oracle loops vs the
+//! `vectorized` blocked-matmul/im2col path), with GFLOP/s derived from the
+//! Table II per-layer FLOP counts; a scalar-vs-vectorized speedup section;
 //! PLUS fused-vs-split step time across every cut point of each preset —
 //! the split-execution exchange overhead (double arena walk + cut-tensor
 //! copies) made visible. Thresholds are NOT asserted (bench, not test).
 //!
+//! Emits machine-readable `BENCH_runtime.json` (tagged with the kernel
+//! paths measured and `git describe`) next to the human tables; diff two
+//! emissions with `scripts/bench_compare`.
+//!
 //! Run: `cargo bench --bench runtime`
+//! Smoke (CI): `cargo bench --bench runtime -- --smoke` — minimum iters
+//! and a truncated cut sweep, so the lane finishes in seconds.
 
+use std::fmt::Write as _;
+use std::path::Path;
 use std::time::Instant;
 
 use iiot_fl::dnn::models;
 use iiot_fl::rng::Rng;
-use iiot_fl::runtime::{Backend, NativeBackend, PartitionedBackend};
+use iiot_fl::runtime::{make_backend_kernel, Backend, KernelPath, PartitionedBackend};
 
 fn batch(rng: &mut Rng, n: usize, dim: usize) -> (Vec<f32>, Vec<i32>) {
     let x: Vec<f32> = (0..n * dim).map(|_| rng.normal() as f32 * 0.5).collect();
@@ -19,8 +29,44 @@ fn batch(rng: &mut Rng, n: usize, dim: usize) -> (Vec<f32>, Vec<i32>) {
     (x, y)
 }
 
-/// Times `f` and prints per-iter latency plus samples/s throughput.
-fn bench<F: FnMut()>(name: &str, iters: usize, samples_per_iter: usize, mut f: F) {
+/// `git describe --always --dirty`, or "unknown" outside a git checkout —
+/// tags the emitted JSON so two bench files can be attributed to commits.
+fn git_describe() -> String {
+    std::process::Command::new("git")
+        .args(["describe", "--always", "--dirty"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".into())
+}
+
+/// Whole-model FLOPs for one batch, from the Table II cost model:
+/// (forward, backward). The scheduler plans with exactly these counts, so
+/// GFLOP/s here is the achieved fraction of the planned work rate.
+fn model_flops(preset: &str, batch: usize) -> (f64, f64) {
+    let spec = models::by_name(preset).expect("executable presets are in the model zoo");
+    let mut fwd = 0.0;
+    let mut bwd = 0.0;
+    for l in &spec.layers {
+        let c = l.cost(batch as u64, 4);
+        fwd += c.fwd_flops;
+        bwd += c.bwd_flops;
+    }
+    (fwd, bwd)
+}
+
+/// Times `f`; prints per-iter latency, samples/s, and GFLOP/s; returns the
+/// per-iter seconds for the JSON emission.
+fn bench<F: FnMut()>(
+    name: &str,
+    iters: usize,
+    samples_per_iter: usize,
+    flops_per_iter: f64,
+    mut f: F,
+) -> f64 {
     for _ in 0..iters.min(2) {
         f(); // warmup
     }
@@ -37,62 +83,170 @@ fn bench<F: FnMut()>(name: &str, iters: usize, samples_per_iter: usize, mut f: F
         (per, "s ")
     };
     println!(
-        "{name:<40} {val:>10.2} {unit}/iter  {:>12.0} samples/s  ({iters} iters)",
-        samples_per_iter as f64 / per
+        "{name:<44} {val:>10.2} {unit}/iter  {:>12.0} samples/s  {:>8.2} GFLOP/s  ({iters} iters)",
+        samples_per_iter as f64 / per,
+        flops_per_iter / per / 1e9
     );
+    per
 }
 
-fn main() {
-    println!("== native layer-graph engine throughput ==");
-    let presets: Vec<(&str, NativeBackend, usize)> =
-        vec![("mlp", NativeBackend::mlp(), 100), ("cnn", NativeBackend::cnn(), 5)];
-    for (name, be, iters) in &presets {
-        let iters = *iters;
-        let meta = be.meta().clone();
-        println!(
-            "\n-- {name}: {} params, train batch {}, eval batch {} --",
-            meta.param_total, meta.train_batch, meta.eval_batch
-        );
-        let mut rng = Rng::new(0xbe0c);
-        let params = be.init_params().unwrap();
-        let dim = meta.sample_dim();
-        let (xt, yt) = batch(&mut rng, meta.train_batch, dim);
-        let (xe, ye) = batch(&mut rng, meta.eval_batch, dim);
+/// One JSON object literal for a section row (no serde offline).
+fn row(fields: &[(&str, String)]) -> String {
+    let body: Vec<String> = fields.iter().map(|(k, v)| format!("\"{k}\": {v}")).collect();
+    format!("    {{{}}}", body.join(", "))
+}
 
-        bench(&format!("{name} train_step (fwd+bwd+sgd)"), iters, meta.train_batch, || {
-            be.train_step(&params, &xt, &yt, 0.01).unwrap();
-        });
-        bench(&format!("{name} grad (fwd+bwd)"), iters, meta.train_batch, || {
-            be.grad(&params, &xt, &yt).unwrap();
-        });
-        bench(&format!("{name} eval_batch (fwd)"), iters * 2, meta.eval_batch, || {
-            be.eval_batch(&params, &xe, &ye).unwrap();
-        });
+fn jstr(s: &str) -> String {
+    format!("\"{s}\"")
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke" || a == "smoke");
+    let kernels = [KernelPath::Scalar, KernelPath::Vectorized];
+    let mut throughput_rows: Vec<String> = Vec::new();
+    let mut speedup_rows: Vec<String> = Vec::new();
+    let mut split_rows: Vec<String> = Vec::new();
+
+    println!("== native layer-graph engine throughput (per kernel path) ==");
+    let presets: &[(&str, usize)] = &[("mlp", 100), ("cnn", 5)];
+    for &(name, full_iters) in presets {
+        let iters = if smoke { 2 } else { full_iters };
+        // (kernel, op) -> sec/iter, for the speedup section below.
+        let mut secs: Vec<(KernelPath, &str, f64)> = Vec::new();
+        for kernel in kernels {
+            let be = make_backend_kernel(Path::new("artifacts"), name, kernel)?;
+            let meta = be.meta().clone();
+            println!(
+                "\n-- {name}/{kernel}: {} params, train batch {}, eval batch {} --",
+                meta.param_total, meta.train_batch, meta.eval_batch
+            );
+            let mut rng = Rng::new(0xbe0c);
+            let params = be.init_params()?;
+            let dim = meta.sample_dim();
+            let (xt, yt) = batch(&mut rng, meta.train_batch, dim);
+            let (xe, ye) = batch(&mut rng, meta.eval_batch, dim);
+            let (fwd_t, bwd_t) = model_flops(name, meta.train_batch);
+            let (fwd_e, _) = model_flops(name, meta.eval_batch);
+
+            let ops: [(&str, usize, f64); 3] = [
+                ("train_step", meta.train_batch, fwd_t + bwd_t),
+                ("grad", meta.train_batch, fwd_t + bwd_t),
+                ("eval_batch", meta.eval_batch, fwd_e),
+            ];
+            for (op, samples, flops) in ops {
+                let label = format!("{name}/{kernel} {op}");
+                let per = match op {
+                    "train_step" => bench(&label, iters, samples, flops, || {
+                        be.train_step(&params, &xt, &yt, 0.01).unwrap();
+                    }),
+                    "grad" => bench(&label, iters, samples, flops, || {
+                        be.grad(&params, &xt, &yt).unwrap();
+                    }),
+                    _ => bench(&label, iters * 2, samples, flops, || {
+                        be.eval_batch(&params, &xe, &ye).unwrap();
+                    }),
+                };
+                secs.push((kernel, op, per));
+                throughput_rows.push(row(&[
+                    ("preset", jstr(name)),
+                    ("kernel", jstr(kernel.as_str())),
+                    ("op", jstr(op)),
+                    ("sec_per_iter", format!("{per:.6}")),
+                    ("samples_per_sec", format!("{:.0}", samples as f64 / per)),
+                    ("gflops", format!("{:.3}", flops / per / 1e9)),
+                ]));
+            }
+        }
+        println!("\n-- {name}: scalar -> vectorized speedup --");
+        for op in ["train_step", "grad", "eval_batch"] {
+            let pick = |k: KernelPath| {
+                secs.iter().find(|(kk, oo, _)| *kk == k && *oo == op).map(|(_, _, s)| *s)
+            };
+            if let (Some(s), Some(v)) = (pick(KernelPath::Scalar), pick(KernelPath::Vectorized)) {
+                println!("{name} {op:<12} {:>6.2}x", s / v);
+                speedup_rows.push(row(&[
+                    ("preset", jstr(name)),
+                    ("op", jstr(op)),
+                    ("scalar_sec_per_iter", format!("{s:.6}")),
+                    ("vectorized_sec_per_iter", format!("{v:.6}")),
+                    ("speedup", format!("{:.3}", s / v)),
+                ]));
+            }
+        }
     }
 
-    println!("\n== fused vs split train_step across cut points ==");
-    for (name, be, iters) in &presets {
-        let iters = *iters;
+    println!("\n== fused vs split train_step across cut points (vectorized) ==");
+    for &(name, full_iters) in presets {
+        let iters = if smoke { 1 } else { full_iters };
+        let kernel = KernelPath::Vectorized;
+        let be = make_backend_kernel(Path::new("artifacts"), name, kernel)?;
         let meta = be.meta().clone();
         let depth = models::by_name(name).unwrap().depth();
         let mut rng = Rng::new(0x5b117);
-        let params = be.init_params().unwrap();
+        let params = be.init_params()?;
         let (xt, yt) = batch(&mut rng, meta.train_batch, meta.sample_dim());
+        let (fwd_t, bwd_t) = model_flops(name, meta.train_batch);
         println!("\n-- {name}: L = {depth} layers --");
-        bench(&format!("{name} fused train_step"), iters, meta.train_batch, || {
+        let flops = fwd_t + bwd_t;
+        let per = bench(&format!("{name} fused train_step"), iters, meta.train_batch, flops, || {
             be.train_step(&params, &xt, &yt, 0.01).unwrap();
         });
-        for cut in 0..=depth {
-            let split = PartitionedBackend::preset(name, cut).unwrap();
+        split_rows.push(row(&[
+            ("preset", jstr(name)),
+            ("kernel", jstr(kernel.as_str())),
+            ("cut", jstr("fused")),
+            ("sec_per_iter", format!("{per:.6}")),
+        ]));
+        // Smoke keeps the endpoints and one interior cut; the full run
+        // sweeps every boundary.
+        let cuts: Vec<usize> = if smoke {
+            let mut c = vec![0, depth / 2, depth];
+            c.dedup();
+            c
+        } else {
+            (0..=depth).collect()
+        };
+        for cut in cuts {
+            let split = PartitionedBackend::preset_kernel(name, cut, kernel)?;
             let kib = split.cut_activation_elems() * 4 * meta.train_batch / 1024;
-            bench(
+            let per = bench(
                 &format!("{name} split train_step l={cut} (act {kib} KiB)"),
                 iters,
                 meta.train_batch,
+                flops,
                 || {
                     split.train_step(&params, &xt, &yt, 0.01).unwrap();
                 },
             );
+            split_rows.push(row(&[
+                ("preset", jstr(name)),
+                ("kernel", jstr(kernel.as_str())),
+                ("cut", format!("{cut}")),
+                ("sec_per_iter", format!("{per:.6}")),
+            ]));
         }
     }
+
+    let mut json = String::from("{\n  \"bench\": \"runtime\",\n");
+    let _ = writeln!(json, "  \"git_describe\": \"{}\",", git_describe());
+    let _ = writeln!(json, "  \"smoke\": {smoke},");
+    let _ = writeln!(json, "  \"kernel_default\": \"{}\",", KernelPath::default());
+    json.push_str("  \"sections\": {\n");
+    for (i, (title, rows)) in [
+        ("throughput", &throughput_rows),
+        ("kernel_speedup", &speedup_rows),
+        ("split", &split_rows),
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        if i > 0 {
+            json.push_str(",\n");
+        }
+        let _ = write!(json, "  \"{title}\": [\n{}\n  ]", rows.join(",\n"));
+    }
+    json.push_str("\n  }\n}\n");
+    std::fs::write("BENCH_runtime.json", &json)?;
+    println!("\nwrote BENCH_runtime.json");
+    Ok(())
 }

@@ -151,6 +151,9 @@ impl Args {
         if let Some(c) = self.get("cost-model") {
             cfg.cost_model = c.to_string();
         }
+        if let Some(k) = self.get("kernel") {
+            cfg.kernel = k.parse()?;
+        }
         if self.has("execute-partition") {
             cfg.execute_partition = true;
         }
@@ -254,6 +257,28 @@ mod tests {
         assert_eq!(cfg.fault.straggler_prob, 0.5);
         let plain = Args::parse(&sv(&["train", "--set", "fault.dropout_prob=0.1"])).unwrap();
         assert_eq!(plain.sim_config().unwrap().fault.dropout_prob, 0.1);
+    }
+
+    #[test]
+    fn kernel_flag_and_set_key_flow_through() {
+        use crate::runtime::KernelPath;
+        let a = Args::parse(&sv(&["train", "--kernel", "scalar"])).unwrap();
+        assert_eq!(a.sim_config().unwrap().kernel, KernelPath::Scalar);
+        let b = Args::parse(&sv(&["train", "--set", "kernel=scalar"])).unwrap();
+        assert_eq!(b.sim_config().unwrap().kernel, KernelPath::Scalar);
+        // The direct flag lands after --set, like every other direct flag.
+        let c = Args::parse(&sv(&[
+            "train",
+            "--set",
+            "kernel=scalar",
+            "--kernel",
+            "vectorized",
+        ]))
+        .unwrap();
+        assert_eq!(c.sim_config().unwrap().kernel, KernelPath::Vectorized);
+        // An unknown path name is a loud parse error, not a default.
+        let bad = Args::parse(&sv(&["train", "--kernel", "avx512"])).unwrap();
+        assert!(bad.sim_config().is_err());
     }
 
     #[test]

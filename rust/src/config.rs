@@ -13,6 +13,8 @@ use std::path::Path;
 
 use anyhow::{bail, Context};
 
+use crate::runtime::KernelPath;
+
 /// Deterministic-adversity knobs (`fault.*` config keys): Dirichlet
 /// non-IID sharding, stragglers, mid-round device dropout, and gateway
 /// outages. All default to "off" so the benign paper environment stays
@@ -126,6 +128,11 @@ pub struct SimConfig {
     /// with compiled artifacts refuses the flag rather than mix PJRT
     /// eval/init with native split training.
     pub execute_partition: bool,
+    /// Native compute-kernel path: `vectorized` (blocked matmul + im2col
+    /// conv, the default) or `scalar` (the original naive loops, kept as
+    /// the bit-exactness oracle). Applies to the native layer-graph
+    /// engine only; a PJRT build with artifacts ignores it.
+    pub kernel: KernelPath,
     /// Synthetic dataset flavour: "svhn" (easier) or "cifar" (harder).
     pub dataset: String,
     /// Non-IID degree chi (proportion of q_m-class-restricted samples).
@@ -179,6 +186,7 @@ impl Default for SimConfig {
             cost_model: "vgg11".into(),
             exec_model: "mlp".into(),
             execute_partition: false,
+            kernel: KernelPath::default(),
             dataset: "svhn".into(),
             non_iid_degree: 1.0,
             test_size: 2048,
@@ -291,6 +299,8 @@ impl SimConfig {
                     other => bail!("expected true/false/1/0, got {other:?}"),
                 }
             }
+            // Validated at parse time: only "scalar" / "vectorized" exist.
+            "kernel" => self.kernel = val.parse()?,
             "dataset" => self.dataset = val.into(),
             "non_iid_degree" => self.non_iid_degree = num!(),
             "test_size" => self.test_size = num!(),
@@ -633,6 +643,22 @@ mod tests {
         let c0 = SimConfig::from_str_cfg("execute_partition = 0\n").unwrap();
         assert!(!c0.execute_partition);
         assert!(SimConfig::from_str_cfg("execute_partition = maybe\n").is_err());
+    }
+
+    #[test]
+    fn kernel_knob_defaults_vectorized_and_parses() {
+        let c = SimConfig::default();
+        assert_eq!(c.kernel, KernelPath::Vectorized);
+        c.validate().unwrap();
+
+        let cfg = SimConfig::from_str_cfg("kernel = \"scalar\"\n").unwrap();
+        assert_eq!(cfg.kernel, KernelPath::Scalar);
+        cfg.validate().unwrap();
+        let cfg = SimConfig::from_str_cfg("kernel = vectorized\n").unwrap();
+        assert_eq!(cfg.kernel, KernelPath::Vectorized);
+
+        // Typos fail loudly instead of silently running the wrong path.
+        assert!(SimConfig::from_str_cfg("kernel = simd\n").is_err());
     }
 
     #[test]

@@ -41,7 +41,9 @@ use crate::fl::round::RoundEngine;
 use crate::fl::session::{RunOpts, SchedulerSpec};
 use crate::net::ChannelModel;
 use crate::rng::Rng;
-use crate::runtime::{make_backend, make_partitioned_stack, Backend, Params, PartitionedBackend};
+use crate::runtime::{
+    make_backend_kernel, make_partitioned_stack_kernel, Backend, Params, PartitionedBackend,
+};
 use crate::sched::Scheduler;
 use crate::topo::Topology;
 
@@ -209,7 +211,7 @@ impl Experiment {
         let (test_x, test_y) = data.test_set(cfg.test_size, &mut data_rng);
         let cost_model = models::by_name(&cfg.cost_model)
             .with_context(|| format!("unknown cost model {:?}", cfg.cost_model))?;
-        let engine = make_backend(artifacts, &cfg.exec_model)?;
+        let engine = make_backend_kernel(artifacts, &cfg.exec_model, cfg.kernel)?;
         // Shards store flat 32·32·3 images; every executable preset (the
         // flat mlp and the NHWC cnn) must consume exactly that geometry.
         if engine.meta().sample_dim() != IMG_DIM {
@@ -241,7 +243,7 @@ impl Experiment {
             );
         }
         let partitioned = if cfg.execute_partition {
-            make_partitioned_stack(&cfg.exec_model)?
+            make_partitioned_stack_kernel(&cfg.exec_model, cfg.kernel)?
         } else {
             Vec::new()
         };

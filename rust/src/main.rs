@@ -33,6 +33,7 @@ const COMMON_FLAGS: &[&str] = &[
     "dataset",
     "preset",
     "cost-model",
+    "kernel",
     "execute-partition",
 ];
 
@@ -88,6 +89,8 @@ fn print_help() {
          commands: train | participation | info\n\
          common flags: --rounds N --v V --seed S --dataset svhn|cifar\n\
          \u{20}                --preset mlp|cnn --cost-model vgg11|cnn|mlp\n\
+         \u{20}                --kernel vectorized|scalar (native compute path;\n\
+         \u{20}                scalar = the bit-exact oracle loops)\n\
          \u{20}                --scenario paper|plant|campus|metro|\n\
          \u{20}                flaky-plant|churn-metro (scale/adversity preset,\n\
          \u{20}                applied before --set overrides)\n\

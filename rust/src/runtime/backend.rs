@@ -145,6 +145,19 @@ pub trait Backend: Send + Sync {
 /// Both executable presets — `mlp` AND `cnn` (VGG-mini) — run natively
 /// from a fresh checkout; only unknown presets fail.
 pub fn make_backend(artifacts_dir: &Path, preset: &str) -> Result<Box<dyn Backend>> {
+    make_backend_kernel(artifacts_dir, preset, super::native::KernelPath::default())
+}
+
+/// [`make_backend`] with an explicit native [`crate::runtime::KernelPath`]
+/// (`Scalar` = the bit-exact oracle loops, `Vectorized` = the blocked
+/// fast path — the default). The kernel choice only applies to the
+/// native layer-graph engine; a PJRT engine, when selected, runs its
+/// compiled artifacts regardless.
+pub fn make_backend_kernel(
+    artifacts_dir: &Path,
+    preset: &str,
+    kernel: super::native::KernelPath,
+) -> Result<Box<dyn Backend>> {
     #[cfg(feature = "pjrt")]
     {
         if artifacts_dir.join(format!("{preset}.meta")).exists() {
@@ -152,14 +165,8 @@ pub fn make_backend(artifacts_dir: &Path, preset: &str) -> Result<Box<dyn Backen
         }
     }
     let _ = artifacts_dir;
-    let native = match preset {
-        "mlp" => super::native::NativeBackend::mlp(),
-        "cnn" => super::native::NativeBackend::cnn(),
-        other => anyhow::bail!(
-            "unknown preset {other:?}: the native layer-graph engine implements \
-             \"mlp\" and \"cnn\""
-        ),
-    };
+    let (spec, seed) = super::native::preset_spec_and_seed(preset)?;
+    let native = super::native::NativeBackend::from_spec_kernel(&spec, seed, kernel)?;
     // A pjrt build reaching this point means the artifacts are missing —
     // say so instead of silently swapping the numerics.
     #[cfg(feature = "pjrt")]

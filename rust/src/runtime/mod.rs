@@ -24,8 +24,11 @@ pub mod engine;
 pub mod meta;
 pub mod native;
 
-pub use backend::{make_backend, Backend, Params};
+pub use backend::{make_backend, make_backend_kernel, Backend, Params};
 #[cfg(feature = "pjrt")]
 pub use engine::Engine;
 pub use meta::ModelMeta;
-pub use native::{make_partitioned_stack, LayerGraph, NativeBackend, PartitionedBackend};
+pub use native::{
+    make_partitioned_stack, make_partitioned_stack_kernel, KernelPath, LayerGraph,
+    NativeBackend, PartitionedBackend,
+};

@@ -20,11 +20,18 @@
 //! exact per-op call sequence of the fused pass, so split results are
 //! byte-identical to fused ones.
 //!
-//! The batch dimension of [`LayerGraph::fwd_bwd`] fans out over rayon;
-//! every reduction is order-preserving (the loss folds in sample order,
-//! and each gradient coordinate sums its per-sample contributions in
-//! sample order), so results are byte-identical to the serial loop
-//! regardless of worker count — the deterministic-replay guarantee.
+//! The batch dimension of [`LayerGraph::fwd_bwd`] fans out over rayon in
+//! fixed SAMPLE BLOCKS (the crate-private `run_blocked` executor): each
+//! block accumulates its samples' gradients (in sample order) into one
+//! per-block buffer, and the blocks then reduce coordinate-wise in block
+//! order — so results depend only on the kernel path and the batch,
+//! never on the worker count. On the scalar path the block size is 1,
+//! which makes the whole executor arithmetic-identical to the original
+//! per-sample fan-out — the pre-refactor replay bytes are preserved
+//! exactly. All per-sample working memory (activation arenas, backward
+//! ping-pong buffers, the softmax `dz`) lives in a per-worker
+//! thread-local scratch (`GraphScratch`), so the hot batch path performs
+//! no per-sample heap allocation.
 
 use anyhow::{bail, Result};
 use rayon::prelude::*;
@@ -34,11 +41,18 @@ use crate::dnn::ModelSpec;
 use crate::rng::Rng;
 
 use super::super::backend::Params;
+use super::kernels::{self, KernelPath};
 use super::ops::{Conv2d, Dense, Flatten, MaxPool2d, Op, Relu, SoftmaxXent};
 
 /// Chunk width of the rayon ordered gradient reduction (coordinates per
-/// task; the sum over samples inside a chunk runs in sample order).
+/// task; the sum over blocks inside a chunk runs in block order).
 const GRAD_CHUNK: usize = 8192;
+
+/// Samples per gradient-accumulation block on the vectorized path. The
+/// scalar path uses block size 1 (bit-compatibility with the original
+/// per-sample reduction); the vectorized path amortizes the per-block
+/// gradient buffer over this many samples.
+const SAMPLE_BLOCK: usize = 8;
 
 /// Per-sample tensor shape flowing between layers.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
@@ -74,41 +88,102 @@ fn layer_input_shape(layer: &Layer) -> Shape {
     }
 }
 
-/// Order-preserving batch reduction shared by the fused graph and the
-/// partitioned backend: the loss/correct fold walks samples in order, and
-/// each gradient coordinate sums its per-sample contributions in sample
-/// order (rayon fans out over `GRAD_CHUNK`-wide coordinate chunks), so the
-/// result is independent of the worker count.
-pub(crate) fn reduce_batch(
-    per_sample: Vec<(f64, bool, Option<Vec<f32>>)>,
+/// Per-worker reusable working memory for graph execution: the forward
+/// activation arenas (two, so a partitioned device+gateway pass fits),
+/// the backward ping-pong error buffers, the softmax-xent `dz`, and the
+/// cut-gradient staging buffer of the split backend. All buffers are
+/// grow-only ([`kernels::ensure`]) and carry stale data between samples —
+/// safe because every op fully writes its outputs (see `ops` docs).
+#[derive(Default)]
+pub(crate) struct GraphScratch {
+    pub acts: Vec<f32>,
+    pub acts2: Vec<f32>,
+    pub dy: Vec<f32>,
+    pub dx: Vec<f32>,
+    pub dz: Vec<f32>,
+    pub dcut: Vec<f32>,
+}
+
+thread_local! {
+    static SCRATCH: std::cell::RefCell<GraphScratch> =
+        std::cell::RefCell::new(GraphScratch::default());
+}
+
+/// Run `f` with this worker's [`GraphScratch`]. Not reentrant (the graph
+/// never nests sample executions); conv ops use a separate thread-local
+/// ([`kernels::with_conv_scratch`]), so an op running inside `f` is fine.
+pub(crate) fn with_scratch<R>(f: impl FnOnce(&mut GraphScratch) -> R) -> R {
+    SCRATCH.with(|s| f(&mut s.borrow_mut()))
+}
+
+/// Deterministic blocked batch executor shared by the fused graph and the
+/// partitioned backend. Samples are grouped into fixed blocks of `block`
+/// consecutive samples; rayon fans out over BLOCKS. Within a block,
+/// `per_sample(s, Some(g_block))` runs in sample order, accumulating the
+/// sample gradients directly into the block's zeroed gradient buffer;
+/// the per-block buffers then reduce coordinate-wise in block order
+/// (rayon over `GRAD_CHUNK`-wide coordinate chunks). Both reductions
+/// depend only on `block` and the batch — never on the worker count.
+/// With `block == 1` this is arithmetic-identical to the original
+/// per-sample fan-out + sample-order reduction.
+pub(crate) fn run_blocked<F>(
+    b: usize,
+    block: usize,
     param_total: usize,
     want_grad: bool,
-) -> (f64, usize, Option<Vec<f32>>) {
-    let mut loss_sum = 0.0f64;
-    let mut correct = 0usize;
-    for r in &per_sample {
-        loss_sum += r.0;
-        correct += r.1 as usize;
-    }
-    let grad = if want_grad {
-        let gs: Vec<&Vec<f32>> = per_sample
-            .iter()
-            .map(|r| r.2.as_ref().expect("per-sample gradient present"))
-            .collect();
-        let mut g = vec![0.0f32; param_total];
-        g.par_chunks_mut(GRAD_CHUNK).enumerate().for_each(|(ci, chunk)| {
-            let base = ci * GRAD_CHUNK;
-            for gsample in &gs {
-                for (k, dst) in chunk.iter_mut().enumerate() {
-                    *dst += gsample[base + k];
+    per_sample: F,
+) -> (f64, usize, Option<Vec<f32>>)
+where
+    F: Fn(usize, Option<&mut [f32]>) -> (f64, bool) + Sync,
+{
+    let nblocks = b.div_ceil(block);
+    let mut results: Vec<(f64, bool)> = vec![(0.0, false); b];
+    let grad = if want_grad && param_total > 0 {
+        // ONE flat allocation holds every block's gradient buffer.
+        let mut block_gs = vec![0.0f32; nblocks * param_total];
+        results
+            .par_chunks_mut(block)
+            .zip(block_gs.par_chunks_mut(param_total))
+            .enumerate()
+            .for_each(|(bi, (chunk, g))| {
+                for (k, slot) in chunk.iter_mut().enumerate() {
+                    *slot = per_sample(bi * block + k, Some(&mut *g));
                 }
+            });
+        Some(reduce_blocks(&block_gs, nblocks, param_total))
+    } else {
+        results.par_chunks_mut(block).enumerate().for_each(|(bi, chunk)| {
+            for (k, slot) in chunk.iter_mut().enumerate() {
+                *slot = per_sample(bi * block + k, None);
             }
         });
-        Some(g)
-    } else {
-        None
+        want_grad.then(Vec::new)
     };
+    let mut loss_sum = 0.0f64;
+    let mut correct = 0usize;
+    for &(l, ok) in &results {
+        loss_sum += l;
+        correct += ok as usize;
+    }
     (loss_sum, correct, grad)
+}
+
+/// Coordinate-wise ordered reduction of the per-block gradient buffers:
+/// each coordinate sums its block contributions in block order, fanned
+/// out over `GRAD_CHUNK`-wide coordinate chunks — chunk boundaries are
+/// fixed, so the result is independent of the worker count.
+fn reduce_blocks(block_gs: &[f32], nblocks: usize, param_total: usize) -> Vec<f32> {
+    let mut g = vec![0.0f32; param_total];
+    g.par_chunks_mut(GRAD_CHUNK).enumerate().for_each(|(ci, chunk)| {
+        let base = ci * GRAD_CHUNK;
+        for bi in 0..nblocks {
+            let src = &block_gs[bi * param_total + base..][..chunk.len()];
+            for (dst, s) in chunk.iter_mut().zip(src) {
+                *dst += *s;
+            }
+        }
+    });
+    g
 }
 
 /// An executable DNN (or DNN segment): ops + offset bookkeeping + an
@@ -136,6 +211,8 @@ pub struct LayerGraph {
     /// The loss head — `Some` for full graphs and gateway (top) segments,
     /// `None` for device (bottom) segments.
     head: Option<SoftmaxXent>,
+    /// Which kernel implementation every op of this graph dispatches to.
+    kernel: KernelPath,
 }
 
 impl LayerGraph {
@@ -145,10 +222,19 @@ impl LayerGraph {
     /// convolutions, non-overlapping max pools, and dense layers are
     /// implemented.
     pub fn from_spec(spec: &ModelSpec, classes: usize) -> Result<Self> {
+        Self::from_spec_kernel(spec, classes, KernelPath::default())
+    }
+
+    /// [`Self::from_spec`] with an explicit [`KernelPath`].
+    pub fn from_spec_kernel(
+        spec: &ModelSpec,
+        classes: usize,
+        kernel: KernelPath,
+    ) -> Result<Self> {
         if spec.layers.is_empty() {
             bail!("model {:?} has no layers", spec.name);
         }
-        let g = Self::from_spec_range(spec, classes, 0, spec.depth(), true)?;
+        let g = Self::from_spec_range_kernel(spec, classes, 0, spec.depth(), true, kernel)?;
         if g.param_total == 0 {
             bail!("{}: no parameterized layers", spec.name);
         }
@@ -171,6 +257,20 @@ impl LayerGraph {
         lo: usize,
         hi: usize,
         with_head: bool,
+    ) -> Result<Self> {
+        Self::from_spec_range_kernel(spec, classes, lo, hi, with_head, KernelPath::default())
+    }
+
+    /// [`Self::from_spec_range`] with an explicit [`KernelPath`] — the
+    /// partitioned backend compiles BOTH halves with the same path, so a
+    /// split run's numerics match the equally-configured fused run.
+    pub fn from_spec_range_kernel(
+        spec: &ModelSpec,
+        classes: usize,
+        lo: usize,
+        hi: usize,
+        with_head: bool,
+        kernel: KernelPath,
     ) -> Result<Self> {
         let depth = spec.depth();
         if lo > hi || hi > depth {
@@ -213,7 +313,7 @@ impl LayerGraph {
                             spec.name
                         );
                     }
-                    ops.push(Box::new(Conv2d { ci, co, h: hi, w: wi, kh: hf, kw: wf }));
+                    ops.push(Box::new(Conv2d { ci, co, h: hi, w: wi, kh: hf, kw: wf, kernel }));
                     if act == Activation::Relu {
                         ops.push(Box::new(Relu { n: ho * wo * co }));
                     }
@@ -264,7 +364,7 @@ impl LayerGraph {
                             spec.name
                         );
                     }
-                    ops.push(Box::new(Dense { si, so }));
+                    ops.push(Box::new(Dense { si, so, kernel }));
                     if act == Activation::Relu {
                         ops.push(Box::new(Relu { n: so }));
                     }
@@ -310,7 +410,22 @@ impl LayerGraph {
             input_shape,
             classes,
             head: with_head.then_some(SoftmaxXent { classes }),
+            kernel,
         })
+    }
+
+    /// The kernel path this graph's ops run on.
+    pub fn kernel(&self) -> KernelPath {
+        self.kernel
+    }
+
+    /// Gradient-accumulation block size of the batch executor for this
+    /// graph's kernel path (see `run_blocked`).
+    pub(crate) fn sample_block(&self) -> usize {
+        match self.kernel {
+            KernelPath::Scalar => 1,
+            KernelPath::Vectorized => SAMPLE_BLOCK,
+        }
     }
 
     pub fn param_total(&self) -> usize {
@@ -382,11 +497,19 @@ impl LayerGraph {
         params[t0..t0 + tn].iter().map(|t| t.as_slice()).collect()
     }
 
-    /// Per-sample forward through every op (no loss head): fills and
-    /// returns the activation arena. An empty segment returns an empty
-    /// arena — its output is the input itself (see [`Self::output_slice`]).
-    pub(crate) fn forward_arena(&self, params: &[Vec<f32>], xs: &[f32]) -> Vec<f32> {
-        let mut acts = vec![0.0f32; self.act_total];
+    /// Per-sample forward through every op (no loss head) into a reusable
+    /// arena buffer (grown, never shrunk — no per-sample allocation after
+    /// warm-up); returns the filled `[..act_total]` prefix. An empty
+    /// segment returns an empty arena — its output is the input itself
+    /// (see [`Self::output_slice`]).
+    pub(crate) fn forward_arena_into<'a>(
+        &self,
+        params: &[Vec<f32>],
+        xs: &[f32],
+        acts: &'a mut Vec<f32>,
+    ) -> &'a mut [f32] {
+        kernels::ensure(acts, self.act_total);
+        let acts = &mut acts[..self.act_total];
         for (i, op) in self.ops.iter().enumerate() {
             let (prev, cur) = acts.split_at_mut(self.act_off[i]);
             let input: &[f32] = if i == 0 { xs } else { &prev[self.act_off[i - 1]..] };
@@ -426,9 +549,16 @@ impl LayerGraph {
 
     /// Per-sample backward from the error `dy` at the segment output:
     /// accumulates every op's parameter gradient into `g` (length
-    /// [`Self::param_total`]) and, when `want_dx`, returns the error at
-    /// the segment *input* — the cut gradient a gateway half sends back to
-    /// its device half. An empty segment echoes `dy` (identity).
+    /// [`Self::param_total`]) and, when `want_dx`, leaves the error at
+    /// the segment *input* — the cut gradient a gateway half sends back
+    /// to its device half — in `dx_buf[..in_len]`, returning `true`.
+    /// An empty segment echoes `dy` into `dx_buf` (identity).
+    ///
+    /// `dy_buf`/`dx_buf` are reusable per-worker scratch (the backward
+    /// ping-pong pair); their `Vec` allocations may be swapped with each
+    /// other, but when the result is `true` it is ALWAYS readable from
+    /// the `dx_buf` binding the caller passed.
+    #[allow(clippy::too_many_arguments)]
     pub(crate) fn backward_arena(
         &self,
         params: &[Vec<f32>],
@@ -436,14 +566,19 @@ impl LayerGraph {
         acts: &[f32],
         dy: &[f32],
         g: &mut [f32],
+        dy_buf: &mut Vec<f32>,
+        dx_buf: &mut Vec<f32>,
         want_dx: bool,
-    ) -> Option<Vec<f32>> {
+    ) -> bool {
         let nops = self.ops.len();
+        kernels::ensure(dx_buf, self.max_act.max(dy.len()));
         if nops == 0 {
-            return want_dx.then(|| dy.to_vec());
+            if want_dx {
+                dx_buf[..dy.len()].copy_from_slice(dy);
+            }
+            return want_dx;
         }
-        let mut dy_buf = vec![0.0f32; self.max_act];
-        let mut dx_buf = vec![0.0f32; self.max_act];
+        kernels::ensure(dy_buf, self.max_act);
         dy_buf[..dy.len()].copy_from_slice(dy);
         for i in (0..nops).rev() {
             let op = &self.ops[i];
@@ -451,7 +586,7 @@ impl LayerGraph {
             let (po, pl) = self.param_off[i];
             let dp = &mut g[po..po + pl];
             if i == 0 {
-                return if want_dx {
+                if want_dx {
                     op.backward(
                         &pv,
                         xs,
@@ -459,11 +594,10 @@ impl LayerGraph {
                         Some(&mut dx_buf[..op.in_len()]),
                         dp,
                     );
-                    Some(dx_buf[..op.in_len()].to_vec())
                 } else {
                     op.backward(&pv, xs, &dy_buf[..op.out_len()], None, dp);
-                    None
-                };
+                }
+                return want_dx;
             }
             let off = self.act_off[i - 1];
             let input = &acts[off..off + op.in_len()];
@@ -474,37 +608,43 @@ impl LayerGraph {
                 Some(&mut dx_buf[..op.in_len()]),
                 dp,
             );
-            std::mem::swap(&mut dy_buf, &mut dx_buf);
+            std::mem::swap(dy_buf, dx_buf);
         }
         unreachable!("loop returns at i == 0")
     }
 
-    /// One sample: forward through the arena, loss head, and — when
-    /// `grad_scale` is `Some(1/B)` — backward into a fresh flat gradient.
+    /// One sample on this worker's scratch: forward through the arena,
+    /// loss head, and — when `g` is set — backward, ACCUMULATING the
+    /// sample's parameter gradient into `g` (`grad_scale` must then be
+    /// `Some(1/B)`). No heap allocation after scratch warm-up.
     fn fwd_bwd_sample(
         &self,
         params: &Params,
         xs: &[f32],
         label: usize,
         grad_scale: Option<f32>,
-    ) -> (f64, bool, Option<Vec<f32>>) {
-        let acts = self.forward_arena(params, xs);
-        let logits = self.output_slice(xs, &acts);
-        let mut dz = vec![0.0f32; self.classes];
-        let (loss, ok) = self.head_loss_grad(logits, label, grad_scale, &mut dz);
-        if grad_scale.is_none() {
-            return (loss, ok, None);
-        }
-        let mut g = vec![0.0f32; self.param_total];
-        self.backward_arena(params, xs, &acts, &dz, &mut g, false);
-        (loss, ok, Some(g))
+        g: Option<&mut [f32]>,
+    ) -> (f64, bool) {
+        with_scratch(|s| {
+            let GraphScratch { acts, dy, dx, dz, .. } = s;
+            let acts = self.forward_arena_into(params, xs, acts);
+            let logits = self.output_slice(xs, acts);
+            kernels::ensure(dz, self.classes);
+            let dz = &mut dz[..self.classes];
+            let (loss, ok) = self.head_loss_grad(logits, label, grad_scale, dz);
+            if let Some(g) = g {
+                self.backward_arena(params, xs, acts, dz, g, dy, dx, false);
+            }
+            (loss, ok)
+        })
     }
 
     /// Batched forward (+ optional backward): returns the summed
     /// per-sample loss, the argmax-correct count, and — when requested —
-    /// the flat gradient of the MEAN loss. Samples fan out over rayon;
-    /// reductions preserve sample order, so the result is independent of
-    /// the worker count and byte-identical to a serial run.
+    /// the flat gradient of the MEAN loss. Sample blocks fan out over
+    /// rayon through the blocked executor; both reductions are ordered,
+    /// so the result is independent of the worker count — byte-identical
+    /// across pool sizes on either kernel path.
     pub fn fwd_bwd(
         &self,
         params: &Params,
@@ -514,18 +654,15 @@ impl LayerGraph {
     ) -> (f64, usize, Option<Vec<f32>>) {
         let b = y.len();
         let grad_scale = want_grad.then_some(1.0f32 / b as f32);
-        let per_sample: Vec<(f64, bool, Option<Vec<f32>>)> = (0..b)
-            .into_par_iter()
-            .map(|s| {
-                self.fwd_bwd_sample(
-                    params,
-                    &x[s * self.in_len..(s + 1) * self.in_len],
-                    y[s] as usize,
-                    grad_scale,
-                )
-            })
-            .collect();
-        reduce_batch(per_sample, self.param_total, want_grad)
+        run_blocked(b, self.sample_block(), self.param_total, want_grad, |s, g| {
+            self.fwd_bwd_sample(
+                params,
+                &x[s * self.in_len..(s + 1) * self.in_len],
+                y[s] as usize,
+                grad_scale,
+                g,
+            )
+        })
     }
 }
 
@@ -772,6 +909,36 @@ mod tests {
                 (num - ana).abs() < 2e-3 + 0.05 * ana.abs(),
                 "tensor {t} idx {i}: numeric {num} vs analytic {ana}"
             );
+        }
+    }
+
+    #[test]
+    fn kernel_paths_share_init_bits_and_agree_within_tolerance() {
+        let spec = tiny_cnn_spec();
+        let gv = LayerGraph::from_spec(&spec, 10).unwrap();
+        assert_eq!(gv.kernel(), KernelPath::Vectorized);
+        let gs = LayerGraph::from_spec_kernel(&spec, 10, KernelPath::Scalar).unwrap();
+        // Init touches no kernel arithmetic: identical bits on both paths.
+        let mut p = gs.init_params(12);
+        assert_eq!(p, gv.init_params(12));
+        let mut rng = Rng::new(13);
+        for v in p[2].iter_mut().chain(p[3].iter_mut()) {
+            *v = (rng.normal() * 0.2) as f32;
+        }
+        // Batch size deliberately NOT a multiple of the vectorized
+        // sample block, so the ragged tail block is exercised.
+        let b = 6usize;
+        let x: Vec<f32> =
+            (0..b * gs.in_len()).map(|_| (rng.normal() * 0.6) as f32).collect();
+        let y: Vec<i32> = (0..b).map(|i| (i % 10) as i32).collect();
+        let (ls, cs, grs) = gs.fwd_bwd(&p, &x, &y, true);
+        let (lv, cv, grv) = gv.fwd_bwd(&p, &x, &y, true);
+        assert!((ls - lv).abs() < 1e-4 * (1.0 + ls.abs()), "loss {ls} vs {lv}");
+        assert_eq!(cs, cv);
+        let (grs, grv) = (grs.unwrap(), grv.unwrap());
+        assert_eq!(grs.len(), grv.len());
+        for (i, (a, v)) in grs.iter().zip(&grv).enumerate() {
+            assert!((a - v).abs() < 1e-4 + 2e-3 * a.abs(), "grad[{i}]: {a} vs {v}");
         }
     }
 

@@ -1,0 +1,480 @@
+//! Vectorized compute kernels for the native layer-graph engine.
+//!
+//! One small library of f32 primitives — `axpy`, `dot`, and three
+//! register-blocked matmul variants — that `ops::Dense` and `ops::Conv2d`
+//! dispatch onto when running the [`KernelPath::Vectorized`] path. The
+//! kernels are written as hand-unrolled safe Rust: fixed-width lane
+//! blocks (`LANES` = 8) expressed through `chunks_exact`, which gives
+//! LLVM compile-time-known trip counts to auto-vectorize. No `unsafe`,
+//! no `std::simd` (nightly-only), no `#[target_feature]` — FMA contraction
+//! would make results machine-dependent, and determinism is part of the
+//! engine's contract.
+//!
+//! Determinism policy:
+//! * Every kernel has ONE fixed summation order — `dot` folds its 8
+//!   accumulator lanes in lane order after the main loop, `matmul`
+//!   accumulates along `k` in index order — so a given kernel path is
+//!   byte-reproducible across runs and thread counts.
+//! * The vectorized order is deliberately DIFFERENT from the scalar
+//!   loops' order (that is where the speed comes from). Cross-path
+//!   agreement is therefore bounded by tolerance, not bit equality; the
+//!   scalar path ([`KernelPath::Scalar`]) is kept verbatim as the
+//!   bit-exactness oracle (`rust/tests/kernel_parity.rs`).
+//!
+//! Convolution runs on these kernels via im2col: each output position's
+//! receptive field is gathered into a row of a patch matrix `P` of shape
+//! `[h·w, kh·kw·ci]`, whose column order matches the HWIO weight layout
+//! `[kh·kw·ci, co]` row-major — so `out = P · W` is one `matmul` call,
+//! `dW = Pᵀ · dY` is one [`matmul_tn`], and `dP = dY · Wᵀ` is one
+//! [`matmul_bt`] scattered back through [`col2im_add`]. Patch matrices
+//! live in a per-worker thread-local scratch (the crate-private
+//! `with_conv_scratch`), so the hot path performs no per-sample heap
+//! allocation.
+
+use std::cell::RefCell;
+
+/// Which inner-loop implementation the native engine runs.
+///
+/// `Scalar` is the original per-sample scalar code, kept verbatim: it is
+/// the bit-exactness oracle (the golden mlp test pins it against the
+/// retired fused backend) and reproduces pre-kernel-refactor run bytes
+/// exactly. `Vectorized` (the default) runs the blocked kernels in this
+/// module plus the sample-blocked batch executor — deterministic within
+/// itself, but with a different (faster) summation order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum KernelPath {
+    /// Verbatim scalar loops — the bit-exact compatibility oracle.
+    Scalar,
+    /// Blocked/unrolled kernels — the fast default.
+    #[default]
+    Vectorized,
+}
+
+impl KernelPath {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            KernelPath::Scalar => "scalar",
+            KernelPath::Vectorized => "vectorized",
+        }
+    }
+}
+
+impl std::fmt::Display for KernelPath {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for KernelPath {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "scalar" => Ok(KernelPath::Scalar),
+            "vectorized" => Ok(KernelPath::Vectorized),
+            other => anyhow::bail!(
+                "unknown kernel path {other:?} (expected \"scalar\" or \"vectorized\")"
+            ),
+        }
+    }
+}
+
+/// Unroll width of the inner loops. 8 f32 lanes = one AVX2 register /
+/// two NEON registers; `chunks_exact(LANES)` makes the trip count a
+/// compile-time constant so LLVM vectorizes the lane loop.
+const LANES: usize = 8;
+
+/// Rows of `C` updated together by [`matmul`] — each B-row load is reused
+/// across `MR` accumulator rows (register blocking).
+const MR: usize = 4;
+
+/// `y += a · x` over equal-length slices, 8-wide.
+#[inline]
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let main = x.len() - x.len() % LANES;
+    for (xv, yv) in x[..main].chunks_exact(LANES).zip(y[..main].chunks_exact_mut(LANES)) {
+        for l in 0..LANES {
+            yv[l] += a * xv[l];
+        }
+    }
+    for (xv, yv) in x[main..].iter().zip(y[main..].iter_mut()) {
+        *yv += a * xv;
+    }
+}
+
+/// Dot product with 8 independent accumulator lanes, folded in lane
+/// order (then the scalar tail) — one fixed, input-length-determined
+/// summation order.
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let main = x.len() - x.len() % LANES;
+    let mut lanes = [0.0f32; LANES];
+    for (xv, yv) in x[..main].chunks_exact(LANES).zip(y[..main].chunks_exact(LANES)) {
+        for l in 0..LANES {
+            lanes[l] += xv[l] * yv[l];
+        }
+    }
+    let mut acc = 0.0f32;
+    for l in lanes {
+        acc += l;
+    }
+    for (xv, yv) in x[main..].iter().zip(&y[main..]) {
+        acc += xv * yv;
+    }
+    acc
+}
+
+/// `C += A · B`, all row-major: `A` is `m×k`, `B` is `k×n`, `C` is `m×n`.
+///
+/// Register-blocked over `MR` rows of `C`: one pass over each B row
+/// updates four C rows, so B traffic is amortized 4×. Accumulation along
+/// `k` is in index order for every C coordinate — deterministic.
+pub fn matmul(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    let mut i = 0usize;
+    while i + MR <= m {
+        let (c01, c23) = c[i * n..(i + MR) * n].split_at_mut(2 * n);
+        let (c0, c1) = c01.split_at_mut(n);
+        let (c2, c3) = c23.split_at_mut(n);
+        let a0 = &a[i * k..(i + 1) * k];
+        let a1 = &a[(i + 1) * k..(i + 2) * k];
+        let a2 = &a[(i + 2) * k..(i + 3) * k];
+        let a3 = &a[(i + 3) * k..(i + 4) * k];
+        for p in 0..k {
+            let (x0, x1, x2, x3) = (a0[p], a1[p], a2[p], a3[p]);
+            let brow = &b[p * n..(p + 1) * n];
+            for j in 0..n {
+                let bv = brow[j];
+                c0[j] += x0 * bv;
+                c1[j] += x1 * bv;
+                c2[j] += x2 * bv;
+                c3[j] += x3 * bv;
+            }
+        }
+        i += MR;
+    }
+    while i < m {
+        let crow = &mut c[i * n..(i + 1) * n];
+        let arow = &a[i * k..(i + 1) * k];
+        for p in 0..k {
+            axpy(arow[p], &b[p * n..(p + 1) * n], crow);
+        }
+        i += 1;
+    }
+}
+
+/// `C += Aᵀ · B`: `A` is `m×k` row-major (used transposed), `B` is `m×n`,
+/// `C` is `k×n`. Expressed as `m` rank-1 updates — for each row `p`,
+/// `C[i, :] += A[p, i] · B[p, :]` — so every C coordinate accumulates in
+/// `p` order. Zero A entries skip the update (an exact no-op for finite
+/// operands, and patch matrices are full of padding/ReLU zeros).
+pub fn matmul_tn(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    debug_assert_eq!(c.len(), k * n);
+    for p in 0..m {
+        let arow = &a[p * k..(p + 1) * k];
+        let brow = &b[p * n..(p + 1) * n];
+        for i in 0..k {
+            let av = arow[i];
+            if av != 0.0 {
+                axpy(av, brow, &mut c[i * n..(i + 1) * n]);
+            }
+        }
+    }
+}
+
+/// `C += A · Bᵀ`: `A` is `m×k`, `B` is `n×k` row-major (used transposed),
+/// `C` is `m×n`. Each C coordinate is one [`dot`] of an A row with a B
+/// row — no transpose scratch needed.
+pub fn matmul_bt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for j in 0..n {
+            crow[j] += dot(arow, &b[j * k..(j + 1) * k]);
+        }
+    }
+}
+
+/// Gather a SAME-padded stride-1 convolution input `x` (`[h, w, ci]`
+/// channels-last) into the patch matrix `patches` (`[h·w, kh·kw·ci]`):
+/// row `oh·w + ow` holds output position `(oh, ow)`'s receptive field,
+/// with column `(kr·kw + kc)·ci + ic` matching the HWIO weight row order.
+/// Out-of-image taps are zero (the padding).
+pub fn im2col(
+    x: &[f32],
+    h: usize,
+    w: usize,
+    ci: usize,
+    kh: usize,
+    kw: usize,
+    patches: &mut [f32],
+) {
+    let kk = kh * kw * ci;
+    debug_assert_eq!(x.len(), h * w * ci);
+    debug_assert_eq!(patches.len(), h * w * kk);
+    patches.fill(0.0);
+    let (ph, pw) = ((kh - 1) / 2, (kw - 1) / 2);
+    for oh in 0..h {
+        for ow in 0..w {
+            let prow = &mut patches[(oh * w + ow) * kk..(oh * w + ow + 1) * kk];
+            for kr in 0..kh {
+                let ih = oh + kr;
+                if ih < ph || ih >= h + ph {
+                    continue;
+                }
+                let ih = ih - ph;
+                for kc in 0..kw {
+                    let iw = ow + kc;
+                    if iw < pw || iw >= w + pw {
+                        continue;
+                    }
+                    let iw = iw - pw;
+                    let src = &x[(ih * w + iw) * ci..(ih * w + iw + 1) * ci];
+                    let col = (kr * kw + kc) * ci;
+                    prow[col..col + ci].copy_from_slice(src);
+                }
+            }
+        }
+    }
+}
+
+/// Adjoint of [`im2col`]: scatter-add the patch-space gradient `dpatches`
+/// (`[h·w, kh·kw·ci]`) back onto the input image gradient `dx`
+/// (`[h, w, ci]`, fully written — zero-filled first). Taps that fell in
+/// the padding are dropped.
+pub fn col2im_add(
+    dpatches: &[f32],
+    h: usize,
+    w: usize,
+    ci: usize,
+    kh: usize,
+    kw: usize,
+    dx: &mut [f32],
+) {
+    let kk = kh * kw * ci;
+    debug_assert_eq!(dpatches.len(), h * w * kk);
+    debug_assert_eq!(dx.len(), h * w * ci);
+    dx.fill(0.0);
+    let (ph, pw) = ((kh - 1) / 2, (kw - 1) / 2);
+    for oh in 0..h {
+        for ow in 0..w {
+            let prow = &dpatches[(oh * w + ow) * kk..(oh * w + ow + 1) * kk];
+            for kr in 0..kh {
+                let ih = oh + kr;
+                if ih < ph || ih >= h + ph {
+                    continue;
+                }
+                let ih = ih - ph;
+                for kc in 0..kw {
+                    let iw = ow + kc;
+                    if iw < pw || iw >= w + pw {
+                        continue;
+                    }
+                    let iw = iw - pw;
+                    let dst = &mut dx[(ih * w + iw) * ci..(ih * w + iw + 1) * ci];
+                    let col = (kr * kw + kc) * ci;
+                    for (d, s) in dst.iter_mut().zip(&prow[col..col + ci]) {
+                        *d += *s;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Per-worker im2col scratch: patch and patch-gradient matrices reused
+/// across samples (grow-only, never shrunk). A separate thread-local from
+/// the graph's arena scratch so a conv op running inside a graph pass
+/// never double-borrows.
+#[derive(Default)]
+pub(crate) struct ConvScratch {
+    pub patches: Vec<f32>,
+    pub dpatches: Vec<f32>,
+}
+
+thread_local! {
+    static CONV_SCRATCH: RefCell<ConvScratch> = RefCell::new(ConvScratch::default());
+}
+
+pub(crate) fn with_conv_scratch<R>(f: impl FnOnce(&mut ConvScratch) -> R) -> R {
+    CONV_SCRATCH.with(|s| f(&mut s.borrow_mut()))
+}
+
+/// Grow-only resize of a scratch buffer. Contents beyond a previous use
+/// are stale, never zero — every kernel/op fully writes its outputs, so
+/// no consumer may rely on scratch being cleared.
+#[inline]
+pub(crate) fn ensure(buf: &mut Vec<f32>, n: usize) {
+    if buf.len() < n {
+        buf.resize(n, 0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| (rng.normal() * 0.5) as f32).collect()
+    }
+
+    fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!(
+                (x - y).abs() <= tol + tol * x.abs(),
+                "{what}[{i}]: {x} vs {y}"
+            );
+        }
+    }
+
+    #[test]
+    fn kernel_path_parses_and_prints() {
+        assert_eq!("scalar".parse::<KernelPath>().unwrap(), KernelPath::Scalar);
+        assert_eq!(
+            "vectorized".parse::<KernelPath>().unwrap(),
+            KernelPath::Vectorized
+        );
+        assert!("simd".parse::<KernelPath>().is_err());
+        assert_eq!(KernelPath::default(), KernelPath::Vectorized);
+        assert_eq!(KernelPath::Scalar.to_string(), "scalar");
+        assert_eq!(KernelPath::Vectorized.as_str(), "vectorized");
+    }
+
+    #[test]
+    fn axpy_and_dot_match_naive_at_awkward_lengths() {
+        let mut rng = Rng::new(0xa0);
+        // Lengths straddling the 8-lane boundary, incl. 0, 1, and tails.
+        for n in [0usize, 1, 7, 8, 9, 16, 23, 64, 100] {
+            let x = randv(&mut rng, n);
+            let y0 = randv(&mut rng, n);
+            let a = 0.37f32;
+            let mut y = y0.clone();
+            axpy(a, &x, &mut y);
+            let expect: Vec<f32> = y0.iter().zip(&x).map(|(y, x)| y + a * x).collect();
+            // axpy touches each coordinate once: exactly the naive result.
+            assert_eq!(y, expect, "axpy n={n}");
+
+            let d = dot(&x, &y);
+            let naive: f64 = x.iter().zip(&y).map(|(a, b)| *a as f64 * *b as f64).sum();
+            assert!((d as f64 - naive).abs() < 1e-4 + 1e-4 * naive.abs(), "dot n={n}");
+        }
+    }
+
+    #[test]
+    fn matmul_variants_match_naive_reference() {
+        let mut rng = Rng::new(0xb1);
+        // (m, k, n) shapes hitting the MR tail (m % 4 != 0) and the lane
+        // tail (n % 8 != 0), plus degenerate 1-row/1-col edges.
+        for (m, k, n) in [(1usize, 1usize, 1usize), (3, 5, 7), (4, 8, 8), (6, 9, 13), (5, 1, 9)] {
+            let a = randv(&mut rng, m * k);
+            let b = randv(&mut rng, k * n);
+            let mut naive = vec![0.0f64; m * n];
+            for i in 0..m {
+                for p in 0..k {
+                    for j in 0..n {
+                        naive[i * n + j] += a[i * k + p] as f64 * b[p * n + j] as f64;
+                    }
+                }
+            }
+            let naive32: Vec<f32> = naive.iter().map(|&v| v as f32).collect();
+
+            let mut c = vec![0.0f32; m * n];
+            matmul(&a, &b, &mut c, m, k, n);
+            assert_close(&c, &naive32, 1e-4, &format!("matmul {m}x{k}x{n}"));
+
+            // Aᵀ·B via matmul_tn: feed Aᵀ as the logical A.
+            let mut at = vec![0.0f32; k * m];
+            for i in 0..m {
+                for p in 0..k {
+                    at[p * m + i] = a[i * k + p];
+                }
+            }
+            let mut c = vec![0.0f32; m * n];
+            matmul_tn(&at, &b, &mut c, k, m, n);
+            assert_close(&c, &naive32, 1e-4, &format!("matmul_tn {m}x{k}x{n}"));
+
+            // A·Bᵀ via matmul_bt: feed Bᵀ as the stored B.
+            let mut bt = vec![0.0f32; n * k];
+            for p in 0..k {
+                for j in 0..n {
+                    bt[j * k + p] = b[p * n + j];
+                }
+            }
+            let mut c = vec![0.0f32; m * n];
+            matmul_bt(&a, &bt, &mut c, m, k, n);
+            assert_close(&c, &naive32, 1e-4, &format!("matmul_bt {m}x{k}x{n}"));
+        }
+    }
+
+    #[test]
+    fn matmul_accumulates_into_c() {
+        let a = vec![1.0f32, 2.0];
+        let b = vec![3.0f32, 4.0];
+        let mut c = vec![10.0f32];
+        matmul(&a, &b, &mut c, 1, 2, 1);
+        assert_eq!(c[0], 10.0 + 1.0 * 3.0 + 2.0 * 4.0);
+    }
+
+    #[test]
+    fn im2col_gathers_receptive_fields_with_zero_padding() {
+        // 1-channel 3x3 image, 3x3 kernel: the center row of the patch
+        // matrix is the whole image; corners see 4 padding zeros.
+        let x: Vec<f32> = (1..=9).map(|v| v as f32).collect();
+        let mut p = vec![0.0f32; 9 * 9];
+        im2col(&x, 3, 3, 1, 3, 3, &mut p);
+        let center = &p[4 * 9..5 * 9];
+        assert_eq!(center, x.as_slice());
+        // Top-left output (0,0): only taps (kr,kc) with kr>=1, kc>=1 land
+        // in-image; tap (1,1) is x[0,0] = 1.
+        let corner = &p[0..9];
+        assert_eq!(corner[4], 1.0);
+        assert_eq!(corner[0], 0.0);
+        assert_eq!(corner[1], 0.0);
+        assert_eq!(corner[3], 0.0);
+        // 1x1 kernel: the patch matrix IS the image.
+        let mut p1 = vec![0.0f32; 9];
+        im2col(&x, 3, 3, 1, 1, 1, &mut p1);
+        assert_eq!(p1, x);
+    }
+
+    #[test]
+    fn col2im_is_the_adjoint_of_im2col() {
+        // <im2col(x), P> == <x, col2im(P)> for any P — the defining
+        // adjoint identity the conv backward pass relies on.
+        let mut rng = Rng::new(0xc2);
+        let (h, w, ci, kh, kw) = (4usize, 5usize, 3usize, 3usize, 3usize);
+        let x = randv(&mut rng, h * w * ci);
+        let p = randv(&mut rng, h * w * kh * kw * ci);
+        let mut gx = vec![0.0f32; h * w * kh * kw * ci];
+        im2col(&x, h, w, ci, kh, kw, &mut gx);
+        let lhs: f64 = gx.iter().zip(&p).map(|(a, b)| *a as f64 * *b as f64).sum();
+        let mut back = vec![0.0f32; h * w * ci];
+        col2im_add(&p, h, w, ci, kh, kw, &mut back);
+        let rhs: f64 = back.iter().zip(&x).map(|(a, b)| *a as f64 * *b as f64).sum();
+        assert!((lhs - rhs).abs() < 1e-3 + 1e-4 * lhs.abs(), "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn ensure_grows_and_never_shrinks() {
+        let mut v = Vec::new();
+        ensure(&mut v, 4);
+        assert_eq!(v.len(), 4);
+        v[0] = 7.0;
+        ensure(&mut v, 2);
+        assert_eq!(v.len(), 4);
+        assert_eq!(v[0], 7.0);
+        ensure(&mut v, 8);
+        assert_eq!(v.len(), 8);
+    }
+}

@@ -3,9 +3,13 @@
 //! executable preset trains end-to-end on a fresh checkout.
 //!
 //! Structure:
+//! * [`kernels`] — the vectorized compute layer: blocked f32 matmul
+//!   variants, `axpy`/`dot`, im2col/col2im, and the [`KernelPath`]
+//!   selector (scalar bit-exact oracle vs the fast vectorized default);
 //! * [`ops`] — the op library (`Dense`, `Conv2d`, `MaxPool2d`, `ReLU`,
 //!   `Flatten`, softmax cross-entropy), each a uniform
-//!   forward/backward/param_shapes implementation;
+//!   forward/backward/param_shapes implementation dispatching on the
+//!   graph's [`KernelPath`];
 //! * [`graph`] — [`LayerGraph`], which compiles a `dnn::ModelSpec` (the
 //!   SAME description the scheduler's Table II cost model uses) into an op
 //!   chain — whole, or any contiguous spec-layer segment — and owns all
@@ -22,12 +26,16 @@
 //! weights-then-bias per layer in layer order, `train_step` returns the
 //! loss at the *pre-step* parameters (like `jax.value_and_grad`),
 //! `eval_batch` returns (sum loss, num correct), and `grad` returns the
-//! flat concatenated minibatch gradient. For `mlp`, the graph engine is
-//! bit-identical to the fused dense backend it replaced (He-normal hidden
-//! init, zero head, identical accumulation order) — the golden test below
-//! pins that with a verbatim copy of the retired implementation.
+//! flat concatenated minibatch gradient. For `mlp` on the
+//! [`KernelPath::Scalar`] oracle path, the graph engine is bit-identical
+//! to the fused dense backend it replaced (He-normal hidden init, zero
+//! head, identical accumulation order) — the golden test below pins that
+//! with a verbatim copy of the retired implementation. The default
+//! [`KernelPath::Vectorized`] path is the same math on blocked kernels,
+//! bounded against scalar by tolerance in `rust/tests/kernel_parity.rs`.
 
 pub mod graph;
+pub mod kernels;
 pub mod ops;
 pub mod partition;
 
@@ -38,7 +46,8 @@ use super::meta::ModelMeta;
 use crate::dnn::{models, ModelSpec};
 
 pub use graph::LayerGraph;
-pub use partition::{make_partitioned_stack, PartitionedBackend};
+pub use kernels::KernelPath;
+pub use partition::{make_partitioned_stack, make_partitioned_stack_kernel, PartitionedBackend};
 
 /// Batch shapes shared by every native preset (python/compile/model.py
 /// bakes the same ones into the AOT artifacts).
@@ -162,8 +171,20 @@ impl NativeBackend {
 
     /// Compile any executable `ModelSpec` into a backend — the spec is the
     /// single source of truth shared with the scheduler's cost model.
+    /// Uses the default [`KernelPath`] (vectorized).
     pub fn from_spec(spec: &ModelSpec, init_seed: u64) -> Result<Self> {
-        let graph = LayerGraph::from_spec(spec, NUM_CLASSES)?;
+        Self::from_spec_kernel(spec, init_seed, KernelPath::default())
+    }
+
+    /// [`Self::from_spec`] with an explicit [`KernelPath`] — `Scalar`
+    /// selects the bit-exact oracle loops, `Vectorized` the blocked
+    /// kernels. Init bytes are identical on both paths.
+    pub fn from_spec_kernel(
+        spec: &ModelSpec,
+        init_seed: u64,
+        kernel: KernelPath,
+    ) -> Result<Self> {
+        let graph = LayerGraph::from_spec_kernel(spec, NUM_CLASSES, kernel)?;
         let mut input_train = vec![TRAIN_BATCH];
         input_train.extend_from_slice(graph.input_shape());
         let mut input_eval = vec![EVAL_BATCH];
@@ -180,6 +201,11 @@ impl NativeBackend {
             param_shapes: graph.param_shapes().to_vec(),
         };
         Ok(NativeBackend { meta, graph, init_seed })
+    }
+
+    /// The kernel path this backend's graph runs on.
+    pub fn kernel(&self) -> KernelPath {
+        self.graph.kernel()
     }
 
     fn check_params(&self, params: &Params) -> Result<()> {
@@ -424,13 +450,16 @@ mod tests {
         }
     }
 
-    /// THE refactor-pinning test: the layer-graph mlp must be bit-identical
-    /// to the retired fused implementation — init, losses, gradients, and
-    /// parameters after several SGD steps.
+    /// THE refactor-pinning test: the layer-graph mlp on the SCALAR
+    /// kernel path must be bit-identical to the retired fused
+    /// implementation — init, losses, gradients, and parameters after
+    /// several SGD steps. (The vectorized default reorders summation and
+    /// is tolerance-bounded instead — rust/tests/kernel_parity.rs.)
     #[test]
     fn mlp_graph_matches_fused_reference_bit_for_bit() {
         for seed in [0x6d6c70u64, 7, 12345] {
-            let b = NativeBackend::mlp_seeded(seed);
+            let b = NativeBackend::from_spec_kernel(&models::mlp(), seed, KernelPath::Scalar)
+                .expect("mlp preset is executable");
             let mut p = b.init_params().unwrap();
             let mut rp = golden::init(seed);
             assert_bits_eq(&p, &rp, "init");

@@ -14,12 +14,19 @@
 //! the downstream error into `dx` (every element; ops that scatter, like
 //! max-pool, zero-fill first).
 //!
-//! Numerics note: the Dense loops (bias copy, zero-input skip, k-order
-//! accumulation) reproduce the retired fused mlp backend instruction for
-//! instruction, so the graph engine is bit-identical to it — the golden
-//! test in `super::tests` pins this.
+//! Numerics note: on the [`KernelPath::Scalar`] path the Dense loops
+//! (bias copy, zero-input skip, k-order accumulation) reproduce the
+//! retired fused mlp backend instruction for instruction, so the graph
+//! engine is bit-identical to it — the golden test in `super::tests` pins
+//! this. The [`KernelPath::Vectorized`] path (the default) runs `Dense`
+//! and `Conv2d` on the blocked kernels in [`super::kernels`] — same math,
+//! different (faster) summation order; parity is bounded by tolerance in
+//! `rust/tests/kernel_parity.rs`, and each path is individually
+//! deterministic.
 
 use crate::rng::Rng;
+
+use super::kernels::{self, KernelPath};
 
 /// One executable layer.
 pub trait Op: Send + Sync {
@@ -73,6 +80,7 @@ fn he_normal(rng: &mut Rng, n: usize, fan_in: usize) -> Vec<f32> {
 pub struct Dense {
     pub si: usize,
     pub so: usize,
+    pub kernel: KernelPath,
 }
 
 impl Op for Dense {
@@ -103,12 +111,27 @@ impl Op for Dense {
     fn forward(&self, params: &[&[f32]], x: &[f32], out: &mut [f32]) {
         let (w, b) = (params[0], params[1]);
         out.copy_from_slice(b);
-        for i in 0..self.si {
-            let xi = x[i];
-            if xi != 0.0 {
-                let row = &w[i * self.so..(i + 1) * self.so];
-                for j in 0..self.so {
-                    out[j] += xi * row[j];
+        match self.kernel {
+            KernelPath::Scalar => {
+                for i in 0..self.si {
+                    let xi = x[i];
+                    if xi != 0.0 {
+                        let row = &w[i * self.so..(i + 1) * self.so];
+                        for j in 0..self.so {
+                            out[j] += xi * row[j];
+                        }
+                    }
+                }
+            }
+            KernelPath::Vectorized => {
+                // Same i-order accumulation as the scalar loop (axpy is
+                // per-coordinate), just 8-wide; the zero-input skip is
+                // kept — ReLU outputs make x genuinely sparse.
+                for i in 0..self.si {
+                    let xi = x[i];
+                    if xi != 0.0 {
+                        kernels::axpy(xi, &w[i * self.so..(i + 1) * self.so], out);
+                    }
                 }
             }
         }
@@ -124,22 +147,40 @@ impl Op for Dense {
     ) {
         let w = params[0];
         let (dw, db) = dp.split_at_mut(self.si * self.so);
-        if let Some(dx) = dx {
-            for i in 0..self.si {
-                let row = &w[i * self.so..(i + 1) * self.so];
-                let mut acc = 0.0f32;
-                for j in 0..self.so {
-                    acc += row[j] * dy[j];
+        match self.kernel {
+            KernelPath::Scalar => {
+                if let Some(dx) = dx {
+                    for i in 0..self.si {
+                        let row = &w[i * self.so..(i + 1) * self.so];
+                        let mut acc = 0.0f32;
+                        for j in 0..self.so {
+                            acc += row[j] * dy[j];
+                        }
+                        dx[i] = acc;
+                    }
                 }
-                dx[i] = acc;
+                for i in 0..self.si {
+                    let xi = x[i];
+                    if xi != 0.0 {
+                        let drow = &mut dw[i * self.so..(i + 1) * self.so];
+                        for j in 0..self.so {
+                            drow[j] += xi * dy[j];
+                        }
+                    }
+                }
             }
-        }
-        for i in 0..self.si {
-            let xi = x[i];
-            if xi != 0.0 {
-                let drow = &mut dw[i * self.so..(i + 1) * self.so];
-                for j in 0..self.so {
-                    drow[j] += xi * dy[j];
+            KernelPath::Vectorized => {
+                if let Some(dx) = dx {
+                    // dx = W · dy, one lane-blocked dot per input row.
+                    for i in 0..self.si {
+                        dx[i] = kernels::dot(&w[i * self.so..(i + 1) * self.so], dy);
+                    }
+                }
+                for i in 0..self.si {
+                    let xi = x[i];
+                    if xi != 0.0 {
+                        kernels::axpy(xi, dy, &mut dw[i * self.so..(i + 1) * self.so]);
+                    }
                 }
             }
         }
@@ -163,6 +204,7 @@ pub struct Conv2d {
     pub w: usize,
     pub kh: usize,
     pub kw: usize,
+    pub kernel: KernelPath,
 }
 
 impl Conv2d {
@@ -182,6 +224,59 @@ impl Conv2d {
         let lo = pw.saturating_sub(kc);
         let hi = (self.w + pw).saturating_sub(kc).min(self.w);
         (lo, hi)
+    }
+
+    /// Vectorized forward: gather the receptive fields into a per-worker
+    /// patch matrix `P [h·w, kh·kw·ci]`, then `out = bias + P · W` as one
+    /// register-blocked matmul over the HWIO weight matrix
+    /// `[kh·kw·ci, co]`.
+    fn forward_vectorized(&self, params: &[&[f32]], x: &[f32], out: &mut [f32]) {
+        let (wt, b) = (params[0], params[1]);
+        let (m, kk, co) = (self.h * self.w, self.kh * self.kw * self.ci, self.co);
+        for p in 0..m {
+            out[p * co..(p + 1) * co].copy_from_slice(b);
+        }
+        kernels::with_conv_scratch(|s| {
+            kernels::ensure(&mut s.patches, m * kk);
+            let patches = &mut s.patches[..m * kk];
+            kernels::im2col(x, self.h, self.w, self.ci, self.kh, self.kw, patches);
+            kernels::matmul(patches, wt, out, m, kk, co);
+        });
+    }
+
+    /// Vectorized backward over the same patch matrix: `dW = Pᵀ · dY`
+    /// (rank-1 updates), `dP = dY · Wᵀ` (dot products, no transpose
+    /// scratch) scattered back through the im2col adjoint.
+    fn backward_vectorized(
+        &self,
+        params: &[&[f32]],
+        x: &[f32],
+        dy: &[f32],
+        dx: Option<&mut [f32]>,
+        dp: &mut [f32],
+    ) {
+        let wt = params[0];
+        let (m, kk, co) = (self.h * self.w, self.kh * self.kw * self.ci, self.co);
+        let (dwt, db) = dp.split_at_mut(kk * co);
+        for p in 0..m {
+            let dyrow = &dy[p * co..(p + 1) * co];
+            for oc in 0..co {
+                db[oc] += dyrow[oc];
+            }
+        }
+        kernels::with_conv_scratch(|s| {
+            kernels::ensure(&mut s.patches, m * kk);
+            let patches = &mut s.patches[..m * kk];
+            kernels::im2col(x, self.h, self.w, self.ci, self.kh, self.kw, patches);
+            kernels::matmul_tn(patches, dy, dwt, m, kk, co);
+            if let Some(dx) = dx {
+                kernels::ensure(&mut s.dpatches, m * kk);
+                let dpatches = &mut s.dpatches[..m * kk];
+                dpatches.fill(0.0);
+                kernels::matmul_bt(dy, wt, dpatches, m, co, kk);
+                kernels::col2im_add(dpatches, self.h, self.w, self.ci, self.kh, self.kw, dx);
+            }
+        });
     }
 }
 
@@ -212,6 +307,9 @@ impl Op for Conv2d {
     }
 
     fn forward(&self, params: &[&[f32]], x: &[f32], out: &mut [f32]) {
+        if self.kernel == KernelPath::Vectorized {
+            return self.forward_vectorized(params, x, out);
+        }
         let (wt, b) = (params[0], params[1]);
         let (w, ci, co) = (self.w, self.ci, self.co);
         let (ph, pw) = ((self.kh - 1) / 2, (self.kw - 1) / 2);
@@ -253,6 +351,9 @@ impl Op for Conv2d {
         mut dx: Option<&mut [f32]>,
         dp: &mut [f32],
     ) {
+        if self.kernel == KernelPath::Vectorized {
+            return self.backward_vectorized(params, x, dy, dx, dp);
+        }
         let wt = params[0];
         let (w, ci, co) = (self.w, self.ci, self.co);
         let (ph, pw) = ((self.kh - 1) / 2, (self.kw - 1) / 2);
@@ -602,22 +703,27 @@ mod tests {
 
     #[test]
     fn dense_finite_difference() {
-        let op = Dense { si: 7, so: 5 };
-        let mut rng = Rng::new(1);
-        let params = op.init_params(Some(&mut rng));
-        let x = normal_vec(&mut rng, 7, 0.8);
-        fd_check(&op, &params, &x, 2e-3);
+        // Both kernel paths must satisfy the same analytic gradients.
+        for kernel in [KernelPath::Scalar, KernelPath::Vectorized] {
+            let op = Dense { si: 7, so: 5, kernel };
+            let mut rng = Rng::new(1);
+            let params = op.init_params(Some(&mut rng));
+            let x = normal_vec(&mut rng, 7, 0.8);
+            fd_check(&op, &params, &x, 2e-3);
+        }
     }
 
     #[test]
     fn conv2d_finite_difference() {
-        let op = Conv2d { ci: 2, co: 3, h: 4, w: 4, kh: 3, kw: 3 };
-        let mut rng = Rng::new(2);
-        let mut params = op.init_params(Some(&mut rng));
-        // Non-zero bias so db is exercised away from the init point.
-        params[1] = normal_vec(&mut rng, 3, 0.5);
-        let x = normal_vec(&mut rng, op.in_len(), 0.8);
-        fd_check(&op, &params, &x, 5e-3);
+        for kernel in [KernelPath::Scalar, KernelPath::Vectorized] {
+            let op = Conv2d { ci: 2, co: 3, h: 4, w: 4, kh: 3, kw: 3, kernel };
+            let mut rng = Rng::new(2);
+            let mut params = op.init_params(Some(&mut rng));
+            // Non-zero bias so db is exercised away from the init point.
+            params[1] = normal_vec(&mut rng, 3, 0.5);
+            let x = normal_vec(&mut rng, op.in_len(), 0.8);
+            fd_check(&op, &params, &x, 5e-3);
+        }
     }
 
     #[test]
@@ -680,7 +786,15 @@ mod tests {
     fn conv_init_uses_kernel_fan_in() {
         // fan_in = kh*kw*ci = 27 for the cnn's first conv; the He std is
         // sqrt(2/27) ~ 0.27 — check the sample std lands near it.
-        let op = Conv2d { ci: 3, co: 16, h: 8, w: 8, kh: 3, kw: 3 };
+        let op = Conv2d {
+            ci: 3,
+            co: 16,
+            h: 8,
+            w: 8,
+            kh: 3,
+            kw: 3,
+            kernel: KernelPath::default(),
+        };
         let mut rng = Rng::new(3);
         let p = op.init_params(Some(&mut rng));
         assert_eq!(p[0].len(), 3 * 3 * 3 * 16);

@@ -28,14 +28,14 @@
 //! communication terms observable instead of assumed.
 
 use anyhow::{bail, Result};
-use rayon::prelude::*;
 
 use crate::dnn::ModelSpec;
 use crate::rng::Rng;
 
 use super::super::backend::{Backend, Params};
 use super::super::meta::ModelMeta;
-use super::graph::{reduce_batch, LayerGraph};
+use super::graph::{self, GraphScratch, LayerGraph};
+use super::kernels::{self, KernelPath};
 use super::{
     apply_sgd, check_batch_against, check_params_against, check_samples_against, EVAL_BATCH,
     NUM_CLASSES, TRAIN_BATCH,
@@ -59,14 +59,28 @@ impl PartitionedBackend {
     /// Split `spec` at spec-layer boundary `cut` (`0..=depth`): the bottom
     /// `cut` layers run on the device, the rest (plus the loss head) on
     /// the gateway. Fails when the spec is not natively executable or the
-    /// cut is out of range.
+    /// cut is out of range. Uses the default [`KernelPath`].
     pub fn from_spec(spec: &ModelSpec, cut: usize, init_seed: u64) -> Result<Self> {
+        Self::from_spec_kernel(spec, cut, init_seed, KernelPath::default())
+    }
+
+    /// [`Self::from_spec`] with an explicit [`KernelPath`]: BOTH halves
+    /// compile onto the same path, so split execution stays byte-identical
+    /// to the equally-configured fused engine at every cut.
+    pub fn from_spec_kernel(
+        spec: &ModelSpec,
+        cut: usize,
+        init_seed: u64,
+        kernel: KernelPath,
+    ) -> Result<Self> {
         let depth = spec.depth();
         if cut > depth {
             bail!("{}: partition point {cut} outside 0..={depth}", spec.name);
         }
-        let device = LayerGraph::from_spec_range(spec, NUM_CLASSES, 0, cut, false)?;
-        let gateway = LayerGraph::from_spec_range(spec, NUM_CLASSES, cut, depth, true)?;
+        let device =
+            LayerGraph::from_spec_range_kernel(spec, NUM_CLASSES, 0, cut, false, kernel)?;
+        let gateway =
+            LayerGraph::from_spec_range_kernel(spec, NUM_CLASSES, cut, depth, true, kernel)?;
         if device.out_len() != gateway.in_len() {
             bail!(
                 "{} cut {cut}: halves do not chain ({} != {})",
@@ -100,13 +114,23 @@ impl PartitionedBackend {
     /// through the same preset registry as the fused `NativeBackend` — so
     /// `init_params` is byte-identical to the fused preset's.
     pub fn preset(name: &str, cut: usize) -> Result<Self> {
+        Self::preset_kernel(name, cut, KernelPath::default())
+    }
+
+    /// [`Self::preset`] with an explicit [`KernelPath`].
+    pub fn preset_kernel(name: &str, cut: usize, kernel: KernelPath) -> Result<Self> {
         let (spec, seed) = super::preset_spec_and_seed(name)?;
-        Self::from_spec(&spec, cut, seed)
+        Self::from_spec_kernel(&spec, cut, seed, kernel)
     }
 
     /// The spec-layer partition point this backend executes.
     pub fn cut(&self) -> usize {
         self.cut
+    }
+
+    /// The kernel path both halves run on.
+    pub fn kernel(&self) -> KernelPath {
+        self.device.kernel()
     }
 
     /// MEASURED per-sample element count of the smashed activation the
@@ -141,10 +165,11 @@ impl PartitionedBackend {
         check_batch_against(&self.meta, self.device.in_len(), x, y, batch)
     }
 
-    /// One sample through the split pipeline: device forward → activation
-    /// exchange → gateway forward + head (+ backward → gradient exchange →
-    /// device backward when `grad_scale` is set). The flat gradient is the
-    /// device half's block followed by the gateway half's — the fused ABI.
+    /// One sample through the split pipeline on this worker's scratch:
+    /// device forward → activation exchange → gateway forward + head
+    /// (+ backward → gradient exchange → device backward when `g` is
+    /// set, accumulating into `g`). The flat gradient is the device
+    /// half's block followed by the gateway half's — the fused ABI.
     fn split_sample(
         &self,
         bottom: &[Vec<f32>],
@@ -152,35 +177,46 @@ impl PartitionedBackend {
         xs: &[f32],
         label: usize,
         grad_scale: Option<f32>,
-    ) -> (f64, bool, Option<Vec<f32>>) {
-        // Device: bottom forward to the cut.
-        let dev_acts = self.device.forward_arena(bottom, xs);
-        let cut_act = self.device.output_slice(xs, &dev_acts);
-        // Gateway: top forward + loss head.
-        let gw_acts = self.gateway.forward_arena(top, cut_act);
-        let logits = self.gateway.output_slice(cut_act, &gw_acts);
-        let mut dz = vec![0.0f32; self.meta.num_classes];
-        let (loss, ok) = self.gateway.head_loss_grad(logits, label, grad_scale, &mut dz);
-        if grad_scale.is_none() {
-            return (loss, ok, None);
-        }
-        // Gateway: top backward — yields the top gradients AND the cut
-        // gradient to ship back (skipped when the device half is empty,
-        // matching the fused graph's dx=None at op 0).
-        let mut g = vec![0.0f32; self.meta.param_total];
-        let (g_bottom, g_top) = g.split_at_mut(self.device.param_total());
-        let want_dcut = self.device.num_ops() > 0;
-        let d_cut =
-            self.gateway.backward_arena(top, cut_act, &gw_acts, &dz, g_top, want_dcut);
-        // Device: bottom backward from the gateway's cut gradient.
-        if let Some(d_cut) = d_cut {
-            self.device.backward_arena(bottom, xs, &dev_acts, &d_cut, g_bottom, false);
-        }
-        (loss, ok, Some(g))
+        g: Option<&mut [f32]>,
+    ) -> (f64, bool) {
+        graph::with_scratch(|s| {
+            let GraphScratch { acts, acts2, dy, dx, dz, dcut } = s;
+            // Device: bottom forward to the cut.
+            let dev_acts = self.device.forward_arena_into(bottom, xs, acts);
+            let cut_act = self.device.output_slice(xs, dev_acts);
+            // Gateway: top forward + loss head.
+            let gw_acts = self.gateway.forward_arena_into(top, cut_act, acts2);
+            let logits = self.gateway.output_slice(cut_act, gw_acts);
+            let nc = self.meta.num_classes;
+            kernels::ensure(dz, nc);
+            let dz = &mut dz[..nc];
+            let (loss, ok) = self.gateway.head_loss_grad(logits, label, grad_scale, dz);
+            let Some(g) = g else { return (loss, ok) };
+            // Gateway: top backward — yields the top gradients AND the cut
+            // gradient to ship back (skipped when the device half is empty,
+            // matching the fused graph's dx=None at op 0).
+            let (g_bottom, g_top) = g.split_at_mut(self.device.param_total());
+            let want_dcut = self.device.num_ops() > 0;
+            let has_dcut = self
+                .gateway
+                .backward_arena(top, cut_act, gw_acts, dz, g_top, dy, dx, want_dcut);
+            // Device: bottom backward from the gateway's cut gradient —
+            // staged into its own buffer, since `dx` is about to be
+            // reused as the device half's backward scratch.
+            if has_dcut {
+                let n = self.device.out_len();
+                kernels::ensure(dcut, n);
+                dcut[..n].copy_from_slice(&dx[..n]);
+                self.device
+                    .backward_arena(bottom, xs, dev_acts, &dcut[..n], g_bottom, dy, dx, false);
+            }
+            (loss, ok)
+        })
     }
 
-    /// Batched split execution with the same rayon fan-out and
-    /// order-preserving reduction as the fused engine.
+    /// Batched split execution through the same deterministic blocked
+    /// executor as the fused engine (block size set by the kernel path),
+    /// so split results stay byte-identical to fused ones per path.
     fn split_fwd_bwd(
         &self,
         params: &Params,
@@ -192,19 +228,22 @@ impl PartitionedBackend {
         let in_len = self.device.in_len();
         let grad_scale = want_grad.then_some(1.0f32 / b as f32);
         let (bottom, top) = params.split_at(self.bottom_tensors);
-        let per_sample: Vec<(f64, bool, Option<Vec<f32>>)> = (0..b)
-            .into_par_iter()
-            .map(|s| {
+        graph::run_blocked(
+            b,
+            self.device.sample_block(),
+            self.meta.param_total,
+            want_grad,
+            |s, g| {
                 self.split_sample(
                     bottom,
                     top,
                     &x[s * in_len..(s + 1) * in_len],
                     y[s] as usize,
                     grad_scale,
+                    g,
                 )
-            })
-            .collect();
-        reduce_batch(per_sample, self.meta.param_total, want_grad)
+            },
+        )
     }
 }
 
@@ -270,9 +309,18 @@ impl Backend for PartitionedBackend {
 /// orchestrator dispatches on when `--execute-partition` is set: device
 /// `n`'s local step runs through `stack[plan.partition[n]]`.
 pub fn make_partitioned_stack(preset: &str) -> Result<Vec<PartitionedBackend>> {
+    make_partitioned_stack_kernel(preset, KernelPath::default())
+}
+
+/// [`make_partitioned_stack`] with an explicit [`KernelPath`] for every
+/// backend in the stack.
+pub fn make_partitioned_stack_kernel(
+    preset: &str,
+    kernel: KernelPath,
+) -> Result<Vec<PartitionedBackend>> {
     let (spec, seed) = super::preset_spec_and_seed(preset)?;
     (0..=spec.depth())
-        .map(|cut| PartitionedBackend::from_spec(&spec, cut, seed))
+        .map(|cut| PartitionedBackend::from_spec_kernel(&spec, cut, seed, kernel))
         .collect()
 }
 

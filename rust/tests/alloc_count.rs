@@ -1,0 +1,97 @@
+//! Allocation budget for the hot batch paths: after one warmup step has
+//! grown every per-worker scratch buffer, `train_step` must allocate only
+//! the per-call block-gradient arena + reduced gradient + stepped params
+//! (a few hundred KB each for cnn), NOT a fresh gradient buffer per
+//! sample (the pre-kernel engine allocated ~40 MB per cnn step that way).
+//! Measured with a bytes-counting global allocator, so the whole binary
+//! holds exactly ONE test — a concurrent test would pollute the counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use iiot_fl::rng::Rng;
+use iiot_fl::runtime::{make_backend_kernel, Backend, KernelPath};
+
+/// Counts every allocated byte (frees are ignored: the budget is on
+/// allocation traffic, which is what costs time in the hot loop).
+struct CountingAlloc;
+
+static ALLOCATED: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOCATED.fetch_add(l.size() as u64, Ordering::Relaxed);
+        System.alloc(l)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATED.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(p, l, new_size)
+    }
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        ALLOCATED.fetch_add(l.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(l)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+fn spent() -> u64 {
+    ALLOCATED.load(Ordering::Relaxed)
+}
+
+#[test]
+fn cnn_hot_paths_stay_within_allocation_budget() {
+    // A fixed-size pool bounds how many per-worker scratch sets can ever
+    // be grown, making the budget deterministic across machines.
+    let pool = rayon::ThreadPoolBuilder::new().num_threads(4).build().unwrap();
+    pool.install(|| {
+        let be =
+            make_backend_kernel(std::path::Path::new("artifacts"), "cnn", KernelPath::Vectorized)
+                .unwrap();
+        let meta = be.meta().clone();
+        let mut rng = Rng::new(0xa110c);
+        let dim = meta.sample_dim();
+        let x: Vec<f32> = (0..meta.train_batch * dim).map(|_| rng.normal() as f32 * 0.5).collect();
+        let y: Vec<i32> = (0..meta.train_batch).map(|_| rng.below(10) as i32).collect();
+
+        // Warmup: two steps + one eval grow every thread-local scratch
+        // (arena, ping-pong buffers, im2col patch matrices) to full size.
+        let params = be.init_params().unwrap();
+        let (params, _) = be.train_step(&params, &x, &y, 0.01).unwrap();
+        let (params, _) = be.train_step(&params, &x, &y, 0.01).unwrap();
+        be.eval_partial_batch(&params, &x, &y).unwrap().unwrap();
+
+        // Two measured train steps. Unavoidable per-call traffic: the flat
+        // block-gradient arena (8 blocks x ~624 KB for cnn), the reduced
+        // gradient, the stepped parameter clone, the per-sample loss table
+        // and the small per-op parameter-ref vectors — ~7 MB per step.
+        // A per-sample gradient allocation would cost 64 x 624 KB per step
+        // and blow straight through the bound.
+        let t0 = spent();
+        let (p1, _) = be.train_step(&params, &x, &y, 0.01).unwrap();
+        let (p2, _) = be.train_step(&p1, &x, &y, 0.01).unwrap();
+        let train_bytes = spent() - t0;
+        assert!(p2.len() == params.len());
+        assert!(
+            train_bytes < 32 << 20,
+            "2 cnn train steps allocated {} MB — per-sample buffers are back in the hot path",
+            train_bytes >> 20
+        );
+
+        // Eval allocates no gradient state at all: the budget is a pair of
+        // loss tables plus at most a late-woken worker's scratch set.
+        let e0 = spent();
+        be.eval_partial_batch(&p2, &x, &y).unwrap().unwrap();
+        be.eval_partial_batch(&p2, &x, &y).unwrap().unwrap();
+        let eval_bytes = spent() - e0;
+        assert!(
+            eval_bytes < 8 << 20,
+            "2 cnn eval batches allocated {} MB — eval should reuse per-worker scratch",
+            eval_bytes >> 20
+        );
+    });
+}
