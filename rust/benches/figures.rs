@@ -115,7 +115,7 @@ fn fig2(dataset: &str, rounds: usize) -> Result<()> {
             exp.topo.gateways[m]
                 .members
                 .iter()
-                .map(|&n| exp.shards[n].classes.len().to_string())
+                .map(|&n| exp.shard_class_count(n).to_string())
                 .collect::<Vec<_>>()
                 .join("/"),
         ]);

@@ -5,14 +5,20 @@
 //! end to end. Prints human tables and emits machine-readable
 //! `BENCH_round_engine.json`. Thresholds are NOT asserted (bench, not
 //! test); byte-stability across thread counts IS asserted (it is the
-//! engine's core guarantee and costs nothing to check here).
+//! engine's core guarantee and costs nothing to check here), and so is
+//! flat == hierarchical trajectory parity in the aggregation section
+//! (the same oracle `rust/tests/hierarchy.rs` pins, here in release
+//! numerics).
 //!
 //! Run: `cargo bench --bench round_engine`
+//! Smoke: `cargo bench --bench round_engine -- --smoke` shrinks the
+//! grids to one working point per section (the CI bench-smoke lane) but
+//! still emits every JSON section, including the nation-scale row.
 
 use std::fmt::Write as _;
 use std::time::Instant;
 
-use iiot_fl::config::SimConfig;
+use iiot_fl::config::{Aggregation, SimConfig};
 use iiot_fl::fl::{SchedulerSpec, Session};
 use iiot_fl::runtime::KernelPath;
 
@@ -76,11 +82,13 @@ fn timed_run(
 }
 
 fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let max_threads = std::thread::available_parallelism().map_or(4, |n| n.get());
-    let mut thread_grid: Vec<usize> = [1usize, 2, 4, max_threads]
-        .into_iter()
-        .filter(|&t| t <= max_threads)
-        .collect();
+    let mut thread_grid: Vec<usize> = if smoke {
+        vec![1, max_threads]
+    } else {
+        [1usize, 2, 4, max_threads].into_iter().filter(|&t| t <= max_threads).collect()
+    };
     thread_grid.dedup();
 
     let mut json = String::from("{\n  \"bench\": \"round_engine\",\n");
@@ -96,10 +104,11 @@ fn main() -> anyhow::Result<()> {
         "{:>8} {:>9} {:>8} {:>14} {:>10}",
         "devices", "gateways", "threads", "s/round", "speedup"
     );
-    let sweeps = [(12usize, 6usize, 3usize), (60, 12, 6), (240, 24, 8)];
-    let rounds = 3;
+    let sweeps: &[(usize, usize, usize)] =
+        if smoke { &[(12, 6, 3)] } else { &[(12, 6, 3), (60, 12, 6), (240, 24, 8)] };
+    let rounds = if smoke { 2 } else { 3 };
     let mut first_row = true;
-    for (n, m, j) in sweeps {
+    for &(n, m, j) in sweeps {
         let cfg = scale_cfg(n, m, j);
         let mut serial = None;
         let mut serial_digest = None;
@@ -130,34 +139,38 @@ fn main() -> anyhow::Result<()> {
     }
     json.push_str("\n  ],\n  \"schedulers_n240\": [\n");
 
-    println!("\n== paired schedulers at N=240 (plant scale, {max_threads} threads) ==");
-    println!("{:>16} {:>14} {:>12}", "scheme", "s/round", "train_loss");
-    let cfg = scale_cfg(240, 24, 8);
-    // One Session::run_paired call: every scheduler faces identical
-    // environment streams over ONE experiment, the DDSRA family shares a
-    // single Γ estimation, and per-run wall time comes back per entry.
-    let paired = {
-        let pool = rayon::ThreadPoolBuilder::new().num_threads(max_threads).build()?;
-        pool.install(|| -> anyhow::Result<_> {
-            let session = Session::builder(cfg.clone()).rounds(2).eval_every(0).build()?;
-            session.run_paired(&SchedulerSpec::all())
-        })?
-    };
-    for (i, run) in paired.iter().enumerate() {
-        let per_round = run.wall_secs / 2.0;
-        let loss = run.log.records.iter().rev().find_map(|r| r.train_loss);
-        let loss_s = loss.map_or("-".into(), |l| format!("{l:.4}"));
-        println!("{:>16} {:>12.1}ms {loss_s:>12}", run.label, per_round * 1e3);
-        if i > 0 {
-            json.push_str(",\n");
+    // The paired all-schedulers run (DDSRA's Γ estimation dominates) is
+    // the slow section; the smoke lane emits an empty array instead.
+    if !smoke {
+        println!("\n== paired schedulers at N=240 (plant scale, {max_threads} threads) ==");
+        println!("{:>16} {:>14} {:>12}", "scheme", "s/round", "train_loss");
+        let cfg = scale_cfg(240, 24, 8);
+        // One Session::run_paired call: every scheduler faces identical
+        // environment streams over ONE experiment, the DDSRA family shares a
+        // single Γ estimation, and per-run wall time comes back per entry.
+        let paired = {
+            let pool = rayon::ThreadPoolBuilder::new().num_threads(max_threads).build()?;
+            pool.install(|| -> anyhow::Result<_> {
+                let session = Session::builder(cfg.clone()).rounds(2).eval_every(0).build()?;
+                session.run_paired(&SchedulerSpec::all())
+            })?
+        };
+        for (i, run) in paired.iter().enumerate() {
+            let per_round = run.wall_secs / 2.0;
+            let loss = run.log.records.iter().rev().find_map(|r| r.train_loss);
+            let loss_s = loss.map_or("-".into(), |l| format!("{l:.4}"));
+            println!("{:>16} {:>12.1}ms {loss_s:>12}", run.label, per_round * 1e3);
+            if i > 0 {
+                json.push_str(",\n");
+            }
+            let _ = write!(
+                json,
+                "    {{\"scheme\": \"{}\", \"devices\": 240, \"threads\": {max_threads}, \
+                 \"sec_per_round\": {per_round:.6}, \"final_train_loss\": {}}}",
+                run.label,
+                loss.map_or("null".into(), |l| format!("{l:.6}"))
+            );
         }
-        let _ = write!(
-            json,
-            "    {{\"scheme\": \"{}\", \"devices\": 240, \"threads\": {max_threads}, \
-             \"sec_per_round\": {per_round:.6}, \"final_train_loss\": {}}}",
-            run.label,
-            loss.map_or("null".into(), |l| format!("{l:.6}"))
-        );
     }
     json.push_str("\n  ],\n  \"fault_injection\": [\n");
 
@@ -196,6 +209,59 @@ fn main() -> anyhow::Result<()> {
              \"sec_per_round\": {per_round:.6}}}"
         );
     }
+    json.push_str("\n  ],\n  \"aggregation_modes\": [\n");
+
+    // Flat vs hierarchical phase-5 fold at plant scale — and, asserted in
+    // passing in RELEASE numerics, the parity oracle itself: both modes
+    // must produce byte-identical trajectories (`rust/tests/hierarchy.rs`
+    // pins the same property in the test profile).
+    println!("\n== aggregation: flat vs hierarchical (240 devices, 6 clusters) ==");
+    println!("{:>14} {:>8} {:>14}", "aggregation", "threads", "s/round");
+    let mut agg_cfg = scale_cfg(240, 24, 8);
+    agg_cfg.num_clusters = 6;
+    let mut first_row = true;
+    let mut digests = Vec::new();
+    for agg in [Aggregation::Flat, Aggregation::Hierarchical] {
+        let mut cfg = agg_cfg.clone();
+        cfg.aggregation = agg;
+        let (per_round, _, digest) =
+            timed_run(&cfg, &SchedulerSpec::RoundRobin, rounds, max_threads)?;
+        digests.push(digest);
+        println!("{:>14} {max_threads:>8} {:>12.1}ms", agg.to_string(), per_round * 1e3);
+        if !first_row {
+            json.push_str(",\n");
+        }
+        first_row = false;
+        let _ = write!(
+            json,
+            "    {{\"aggregation\": \"{agg}\", \"devices\": 240, \"clusters\": 6, \
+             \"threads\": {max_threads}, \"sec_per_round\": {per_round:.6}}}"
+        );
+    }
+    assert_eq!(
+        digests[0], digests[1],
+        "hierarchical fold changed the flat trajectory bytes"
+    );
+
+    // Nation-scale smoke: 10^5 devices behind 2000 gateways, lazy shard
+    // storage, hierarchical fold — one round end to end. Budgets opened
+    // like every other bench point so the scheduled floors really train.
+    let mut nation = SimConfig::default();
+    nation.apply_scenario("nation")?;
+    nation.device_energy_max = 500.0;
+    nation.gw_energy_max = 5000.0;
+    let (per_round, _, _) = timed_run(&nation, &SchedulerSpec::RoundRobin, 1, max_threads)?;
+    println!(
+        "{:>14} {max_threads:>8} {:>12.1}ms   (nation: 100000 devices, 1 round)",
+        "nation", per_round * 1e3
+    );
+    json.push_str(",\n");
+    let _ = write!(
+        json,
+        "    {{\"scenario\": \"nation\", \"aggregation\": \"hierarchical\", \
+         \"devices\": 100000, \"clusters\": 40, \"threads\": {max_threads}, \
+         \"sec_per_round\": {per_round:.6}}}"
+    );
     json.push_str("\n  ]\n}\n");
 
     std::fs::write("BENCH_round_engine.json", &json)?;

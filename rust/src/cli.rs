@@ -154,6 +154,9 @@ impl Args {
         if let Some(k) = self.get("kernel") {
             cfg.kernel = k.parse()?;
         }
+        if let Some(a) = self.get("aggregation") {
+            cfg.aggregation = a.parse()?;
+        }
         if self.has("execute-partition") {
             cfg.execute_partition = true;
         }
@@ -278,6 +281,27 @@ mod tests {
         assert_eq!(c.sim_config().unwrap().kernel, KernelPath::Vectorized);
         // An unknown path name is a loud parse error, not a default.
         let bad = Args::parse(&sv(&["train", "--kernel", "avx512"])).unwrap();
+        assert!(bad.sim_config().is_err());
+    }
+
+    #[test]
+    fn aggregation_flag_and_set_key_flow_through() {
+        use crate::config::Aggregation;
+        let a = Args::parse(&sv(&["train", "--aggregation", "hierarchical"])).unwrap();
+        assert_eq!(a.sim_config().unwrap().aggregation, Aggregation::Hierarchical);
+        let b = Args::parse(&sv(&["train", "--set", "aggregation=hierarchical"])).unwrap();
+        assert_eq!(b.sim_config().unwrap().aggregation, Aggregation::Hierarchical);
+        // The direct flag lands after --set, like every other direct flag.
+        let c = Args::parse(&sv(&[
+            "train",
+            "--set",
+            "aggregation=hierarchical",
+            "--aggregation",
+            "flat",
+        ]))
+        .unwrap();
+        assert_eq!(c.sim_config().unwrap().aggregation, Aggregation::Flat);
+        let bad = Args::parse(&sv(&["train", "--aggregation", "pyramidal"])).unwrap();
         assert!(bad.sim_config().is_err());
     }
 

@@ -15,6 +15,40 @@ use anyhow::{bail, Context};
 
 use crate::runtime::KernelPath;
 
+/// Phase-5 aggregation topology. `Flat` folds every surviving update
+/// through one cloud-side `WeightedAccum` in plan order — the original
+/// path and the bit-exactness oracle. `Hierarchical` folds each gateway's
+/// members through the gateway's own accumulator, merges gateway
+/// summaries per edge cluster, and merges cluster summaries at the cloud
+/// (`fl::hierarchy`), so only tier summaries ever move up.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Aggregation {
+    #[default]
+    Flat,
+    Hierarchical,
+}
+
+impl std::str::FromStr for Aggregation {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "flat" => Ok(Aggregation::Flat),
+            "hierarchical" => Ok(Aggregation::Hierarchical),
+            other => bail!("unknown aggregation {other:?} (known: flat, hierarchical)"),
+        }
+    }
+}
+
+impl std::fmt::Display for Aggregation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Aggregation::Flat => "flat",
+            Aggregation::Hierarchical => "hierarchical",
+        })
+    }
+}
+
 /// Deterministic-adversity knobs (`fault.*` config keys): Dirichlet
 /// non-IID sharding, stragglers, mid-round device dropout, and gateway
 /// outages. All default to "off" so the benign paper environment stays
@@ -69,6 +103,9 @@ pub struct SimConfig {
     pub num_gateways: usize, // M
     pub num_devices: usize,  // N (distributed evenly across gateways)
     pub num_channels: usize, // J
+    /// Edge clusters the gateways partition into (contiguous, draw-free).
+    /// 1 = the flat two-tier topology of the paper.
+    pub num_clusters: usize,
 
     // ---- devices ----
     pub dataset_min: usize, // D_n ~ U(dataset_min, dataset_max]
@@ -139,6 +176,24 @@ pub struct SimConfig {
     pub non_iid_degree: f64,
     /// Test-set size (multiple of the eval batch).
     pub test_size: usize,
+    /// Evaluate on a per-round deterministic sample of this many test
+    /// points instead of the full test set (`STREAM_EVAL` domain).
+    /// 0 (default) or >= `test_size` = full evaluation, byte-identical to
+    /// the pre-knob behaviour.
+    pub eval_sample: usize,
+    /// Synthesize each device's shard on demand instead of materializing
+    /// all N up front. Byte-identical to eager sharding (the same
+    /// per-device `Rng::stream` replays); mandatory at nation scale where
+    /// eager shards would need tens of GB.
+    pub lazy_shards: bool,
+    /// Phase-5 aggregation topology (`flat` or `hierarchical`).
+    pub aggregation: Aggregation,
+    /// Relay/Ψ energy coefficient (J per uplink bit) for hierarchical
+    /// aggregation: partial aggregates are relayed tier-by-tier, and the
+    /// scheduler charges Ψ·Γ against each scheduled gateway's energy
+    /// budget (Hashempour et al., PAPERS.md). 0 (default) = off with
+    /// byte-identical scheduler costs.
+    pub relay_psi: f64,
 
     /// Deterministic-adversity block (`fault.*` keys). Benign by default.
     pub fault: FaultConfig,
@@ -152,6 +207,7 @@ impl Default for SimConfig {
             num_gateways: 6,
             num_devices: 12,
             num_channels: 3,
+            num_clusters: 1,
             dataset_min: 200,
             dataset_max: 2000,
             device_energy_max: 5.0,
@@ -190,6 +246,10 @@ impl Default for SimConfig {
             dataset: "svhn".into(),
             non_iid_degree: 1.0,
             test_size: 2048,
+            eval_sample: 0,
+            lazy_shards: false,
+            aggregation: Aggregation::Flat,
+            relay_psi: 0.0,
             fault: FaultConfig::default(),
             seed: 2022,
         }
@@ -257,6 +317,7 @@ impl SimConfig {
             "num_gateways" => self.num_gateways = num!(),
             "num_devices" => self.num_devices = num!(),
             "num_channels" => self.num_channels = num!(),
+            "num_clusters" => self.num_clusters = num!(),
             "dataset_min" => self.dataset_min = num!(),
             "dataset_max" => self.dataset_max = num!(),
             "device_energy_max" => self.device_energy_max = num!(),
@@ -304,6 +365,17 @@ impl SimConfig {
             "dataset" => self.dataset = val.into(),
             "non_iid_degree" => self.non_iid_degree = num!(),
             "test_size" => self.test_size = num!(),
+            "eval_sample" => self.eval_sample = num!(),
+            "lazy_shards" => {
+                self.lazy_shards = match val {
+                    "true" | "1" => true,
+                    "false" | "0" => false,
+                    other => bail!("expected true/false/1/0, got {other:?}"),
+                }
+            }
+            // Validated at parse time: only "flat" / "hierarchical" exist.
+            "aggregation" => self.aggregation = val.parse()?,
+            "relay_psi" => self.relay_psi = num!(),
             "fault.dirichlet_alpha" => self.fault.dirichlet_alpha = num!(),
             "fault.straggler_prob" => self.fault.straggler_prob = num!(),
             "fault.straggler_slowdown" => self.fault.straggler_slowdown = num!(),
@@ -327,6 +399,15 @@ impl SimConfig {
     /// | `plant`  | 24 | 240 | 8 | (32, 256] |
     /// | `campus` | 48 | 960 | 12 | (32, 128] |
     /// | `metro`  | 96 | 2880 | 16 | (16, 64] |
+    /// | `nation` | 2000 | 100&thinsp;000 | 8 | (16, 64] |
+    /// | `nation-xl` | 20&thinsp;000 | 1&thinsp;000&thinsp;000 | 8 | (16, 64] |
+    ///
+    /// The two `nation`-class presets go beyond `metro` by switching the
+    /// machinery the tentpole layers provide: hierarchical aggregation
+    /// over edge clusters (`aggregation = hierarchical`, `num_clusters`),
+    /// lazy on-demand shards (`lazy_shards`, eager shards would need tens
+    /// of GB), sampled evaluation (`eval_sample`), and the relay/Ψ energy
+    /// term (`relay_psi`) that prices tier-summary relaying.
     ///
     /// Two adversity presets layer a `FaultConfig` on top of a scale
     /// working point (every fault drawn from dedicated RNG streams, so
@@ -369,6 +450,28 @@ impl SimConfig {
                 self.dataset_max = 64;
                 self.test_size = 256;
             }
+            // Nation-class working points: hierarchical aggregation over
+            // edge clusters, lazy shards, sampled eval, and the relay/Ψ
+            // energy term — the beyond-metro configuration in one knob.
+            "nation" => {
+                self.num_gateways = 2000;
+                self.num_devices = 100_000;
+                self.num_channels = 8;
+                self.num_clusters = 40;
+                self.dataset_min = 16;
+                self.dataset_max = 64;
+                self.test_size = 512;
+                self.eval_sample = 128;
+                self.lazy_shards = true;
+                self.aggregation = Aggregation::Hierarchical;
+                self.relay_psi = 1e-8;
+            }
+            "nation-xl" => {
+                self.apply_scenario("nation")?;
+                self.num_gateways = 20_000;
+                self.num_devices = 1_000_000;
+                self.num_clusters = 200;
+            }
             // Adversity presets: a scale base plus an armed fault block.
             // A mid-size flaky plant — moderate skew, occasional floor
             // outages — and a metro deployment with heavy churn.
@@ -394,7 +497,7 @@ impl SimConfig {
             }
             other => bail!(
                 "unknown scenario {other:?} (known: paper, plant, campus, metro, \
-                 flaky-plant, churn-metro)"
+                 nation, nation-xl, flaky-plant, churn-metro)"
             ),
         }
         Ok(())
@@ -422,6 +525,31 @@ impl SimConfig {
         }
         if self.num_channels > self.num_gateways {
             bail!("C3 requires J <= M (every channel assigned to a distinct gateway)");
+        }
+        if self.num_clusters == 0 || self.num_clusters > self.num_gateways {
+            bail!(
+                "num_clusters ({}) must be in 1..=num_gateways ({})",
+                self.num_clusters,
+                self.num_gateways
+            );
+        }
+        // Eager shards hold every device's images in memory at once; past
+        // a few GB that is a configuration error, not a workload.
+        let eager_shard_bytes = self.num_devices as u64
+            * self.dataset_max as u64
+            * (crate::data::synth::IMG_DIM as u64)
+            * 4;
+        if !self.lazy_shards && eager_shard_bytes > 8 << 30 {
+            bail!(
+                "eager shards for num_devices = {} x dataset_max = {} would need \
+                 ~{} GiB; set lazy_shards = true (byte-identical, on-demand shards)",
+                self.num_devices,
+                self.dataset_max,
+                eager_shard_bytes >> 30
+            );
+        }
+        if !(self.relay_psi >= 0.0 && self.relay_psi.is_finite()) {
+            bail!("relay_psi must be finite and >= 0 (J per relayed bit), got {}", self.relay_psi);
         }
         if !(0.0 < self.sample_ratio && self.sample_ratio <= 1.0) {
             bail!("sample_ratio must be in (0, 1]");
@@ -533,6 +661,8 @@ mod tests {
             ("plant", 240, 24, 8),
             ("campus", 960, 48, 12),
             ("metro", 2880, 96, 16),
+            ("nation", 100_000, 2000, 8),
+            ("nation-xl", 1_000_000, 20_000, 8),
         ] {
             let mut c = SimConfig::default();
             c.apply_scenario(name).unwrap();
@@ -548,6 +678,76 @@ mod tests {
         c.set("num_devices", "480").unwrap();
         c.validate().unwrap();
         assert_eq!(c.devices_per_gateway(), 20);
+    }
+
+    #[test]
+    fn hierarchy_knobs_default_off_and_parse() {
+        let c = SimConfig::default();
+        assert_eq!(c.aggregation, Aggregation::Flat);
+        assert_eq!(c.num_clusters, 1);
+        assert_eq!(c.eval_sample, 0);
+        assert!(!c.lazy_shards);
+        assert_eq!(c.relay_psi, 0.0);
+        c.validate().unwrap();
+
+        let cfg = SimConfig::from_str_cfg(
+            "aggregation = \"hierarchical\"\nnum_clusters = 3\neval_sample = 64\n\
+             lazy_shards = true\nrelay_psi = 1e-8\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.aggregation, Aggregation::Hierarchical);
+        assert_eq!(cfg.num_clusters, 3);
+        assert_eq!(cfg.eval_sample, 64);
+        assert!(cfg.lazy_shards);
+        assert_eq!(cfg.relay_psi, 1e-8);
+        cfg.validate().unwrap();
+
+        // Typos fail at parse time, not mid-run.
+        assert!(SimConfig::from_str_cfg("aggregation = pyramid\n").is_err());
+        assert!(SimConfig::from_str_cfg("lazy_shards = maybe\n").is_err());
+        // The 0/1 style works like every other boolean key.
+        assert!(SimConfig::from_str_cfg("lazy_shards = 1\n").unwrap().lazy_shards);
+    }
+
+    #[test]
+    fn hierarchy_knob_validation_rejects_bad_values() {
+        let mut c = SimConfig::default();
+        c.num_clusters = 0;
+        assert!(c.validate().unwrap_err().to_string().contains("num_clusters"));
+        let mut c = SimConfig::default();
+        c.num_clusters = 7; // > num_gateways = 6
+        assert!(c.validate().is_err());
+        let mut c = SimConfig::default();
+        c.relay_psi = -1.0;
+        assert!(c.validate().unwrap_err().to_string().contains("relay_psi"));
+        let mut c = SimConfig::default();
+        c.relay_psi = f64::NAN;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn nation_presets_arm_the_hierarchy_machinery() {
+        let mut c = SimConfig::default();
+        c.apply_scenario("nation").unwrap();
+        assert_eq!((c.num_devices, c.num_gateways, c.num_channels), (100_000, 2000, 8));
+        assert_eq!(c.aggregation, Aggregation::Hierarchical);
+        assert_eq!(c.num_clusters, 40);
+        assert_eq!(c.eval_sample, 128);
+        assert!(c.lazy_shards);
+        assert!(c.relay_psi > 0.0);
+        c.validate().unwrap();
+
+        // Eager shards at nation scale are a configuration error, caught
+        // up front with a pointer at the fix.
+        c.lazy_shards = false;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("lazy_shards"), "{err}");
+
+        let mut xl = SimConfig::default();
+        xl.apply_scenario("nation-xl").unwrap();
+        assert_eq!((xl.num_devices, xl.num_gateways), (1_000_000, 20_000));
+        assert_eq!(xl.num_clusters, 200);
+        xl.validate().unwrap();
     }
 
     #[test]

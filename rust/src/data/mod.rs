@@ -7,5 +7,5 @@
 pub mod shard;
 pub mod synth;
 
-pub use shard::{shard_non_iid, DeviceShard};
+pub use shard::{shard_non_iid, DeviceShard, ShardPlan, ShardStore};
 pub use synth::{DatasetFlavor, SynthData};

@@ -14,13 +14,15 @@
 //! Per-device streams keep generation embarrassingly parallel and
 //! byte-identical across thread counts, same as the menu path.
 
+use std::borrow::Cow;
+
 use rayon::prelude::*;
 
 use crate::config::SimConfig;
 use crate::data::synth::{SynthData, IMG_DIM, NUM_CLASSES};
 use crate::fl::fault::STREAM_FAULT_SHARD;
 use crate::rng::Rng;
-use crate::topo::Topology;
+use crate::topo::{Device, Topology};
 
 /// One device's local dataset.
 #[derive(Clone)]
@@ -43,100 +45,171 @@ impl DeviceShard {
     }
 }
 
+/// Deferred sharding: everything the sharder draws SEQUENTIALLY from the
+/// caller's generator (the per-gateway class menus, the per-device stream
+/// base) captured up front, so any device's shard can be materialized
+/// independently — and arbitrarily late — afterwards.
+///
+/// [`ShardPlan::new`] consumes EXACTLY the draws eager sharding consumes
+/// (menus then base in menu mode; just the base in Dirichlet mode), so a
+/// run that builds a plan and defers materialization leaves the caller's
+/// generator — and therefore every later draw in the experiment build —
+/// byte-identical to an eager run.
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    /// Per-gateway class menus; `None` in Dirichlet mode, where each
+    /// device draws its own class proportions instead.
+    menus: Option<Vec<Vec<usize>>>,
+    /// Base seed of the stateless per-device [`Rng::stream`] closures.
+    base: u64,
+    non_iid_degree: f64,
+    dirichlet_alpha: f64,
+}
+
+impl ShardPlan {
+    /// Capture the sequential draws of the sharding scheme `cfg` selects.
+    pub fn new(cfg: &SimConfig, topo: &Topology, rng: &mut Rng) -> Self {
+        if cfg.fault.dirichlet_alpha > 0.0 {
+            return ShardPlan {
+                menus: None,
+                base: rng.next_u64(),
+                non_iid_degree: cfg.non_iid_degree,
+                dirichlet_alpha: cfg.fault.dirichlet_alpha,
+            };
+        }
+        // Per-gateway class menus.
+        let mut menus: Vec<Vec<usize>> = Vec::with_capacity(topo.num_gateways());
+        for m in 0..topo.num_gateways() {
+            let q_m = if m == 0 {
+                NUM_CLASSES
+            } else {
+                1 + rng.below(NUM_CLASSES)
+            };
+            menus.push(rng.choose_k(NUM_CLASSES, q_m));
+        }
+        ShardPlan {
+            menus: Some(menus),
+            base: rng.next_u64(),
+            non_iid_degree: cfg.non_iid_degree,
+            dirichlet_alpha: 0.0,
+        }
+    }
+
+    /// Materialize device `dev`'s shard. Pure in `(plan, dev, data)`: the
+    /// per-device closure replays from its stateless stream, so lazy and
+    /// eager materialization — in any order, on any thread — produce
+    /// byte-identical shards.
+    pub fn materialize(&self, dev: &Device, data: &SynthData) -> DeviceShard {
+        match &self.menus {
+            Some(menus) => {
+                let mut drng = Rng::stream(self.base, &[dev.id as u64]);
+                let menu = &menus[dev.gateway];
+                let all: Vec<usize> = (0..NUM_CLASSES).collect();
+                let n = dev.dataset_size;
+                let n_noniid = (self.non_iid_degree * n as f64).round() as usize;
+                let (mut images, mut labels) = data.generate(menu, n_noniid, &mut drng);
+                if n_noniid < n {
+                    let (xi, yi) = data.generate(&all, n - n_noniid, &mut drng);
+                    images.extend(xi);
+                    labels.extend(yi);
+                }
+                DeviceShard {
+                    device: dev.id,
+                    classes: menu.clone(),
+                    images,
+                    labels,
+                }
+            }
+            None => {
+                let mut drng = Rng::stream(self.base, &[STREAM_FAULT_SHARD, dev.id as u64]);
+                let props = dirichlet(self.dirichlet_alpha, NUM_CLASSES, &mut drng);
+                let n = dev.dataset_size;
+                let mut images = vec![0.0f32; n * IMG_DIM];
+                let mut labels = Vec::with_capacity(n);
+                for i in 0..n {
+                    // CDF inversion over the proportions; the final class
+                    // absorbs any floating-point shortfall.
+                    let u = drng.f64();
+                    let mut c = NUM_CLASSES - 1;
+                    let mut acc = 0.0;
+                    for (k, &p) in props.iter().enumerate() {
+                        acc += p;
+                        if u < acc {
+                            c = k;
+                            break;
+                        }
+                    }
+                    data.sample_into(c, &mut drng, &mut images[i * IMG_DIM..(i + 1) * IMG_DIM]);
+                    labels.push(c as i32);
+                }
+                let mut classes: Vec<usize> = labels.iter().map(|&y| y as usize).collect();
+                classes.sort_unstable();
+                classes.dedup();
+                DeviceShard { device: dev.id, classes, images, labels }
+            }
+        }
+    }
+
+    /// Materialize every device's shard (the eager path). Embarrassingly
+    /// parallel and byte-identical across thread counts: each device
+    /// replays its own stateless stream.
+    pub fn materialize_all(&self, topo: &Topology, data: &SynthData) -> Vec<DeviceShard> {
+        topo.devices.par_iter().map(|dev| self.materialize(dev, data)).collect()
+    }
+}
+
+/// The experiment's shard storage, behind the `lazy_shards` config knob.
+///
+/// `Eager` holds every device's materialized shard — the original layout,
+/// O(N · D̃_n · IMG_DIM) resident floats. `Lazy` holds only the
+/// [`ShardPlan`] plus the synthetic source and regenerates a device's
+/// shard on demand, so resident memory never scales with the device
+/// count — the enabler for the nation-class (10⁵–10⁶ device) scenarios,
+/// which would otherwise need hundreds of GiB of shards for the handful
+/// of devices actually scheduled per round. The two stores are
+/// byte-identical sample-for-sample (same per-device stream closure);
+/// lazy trades regeneration CPU on every access for that memory bound.
+pub enum ShardStore {
+    Eager(Vec<DeviceShard>),
+    Lazy { plan: ShardPlan, data: SynthData },
+}
+
+impl ShardStore {
+    /// Build the store `lazy` selects, consuming the synthetic source
+    /// (eager materializes all shards and drops it).
+    pub fn build(lazy: bool, plan: ShardPlan, topo: &Topology, data: SynthData) -> Self {
+        if lazy {
+            ShardStore::Lazy { plan, data }
+        } else {
+            ShardStore::Eager(plan.materialize_all(topo, &data))
+        }
+    }
+
+    /// Device `dev`'s shard: borrowed from the eager store, regenerated
+    /// (owned) from the lazy one.
+    pub fn shard(&self, dev: &Device) -> Cow<'_, DeviceShard> {
+        match self {
+            ShardStore::Eager(shards) => Cow::Borrowed(&shards[dev.id]),
+            ShardStore::Lazy { plan, data } => Cow::Owned(plan.materialize(dev, data)),
+        }
+    }
+}
+
 /// Shard the synthetic source across all devices per the paper's scheme.
 ///
 /// Per-device generation is embarrassingly parallel: each device draws
 /// from a stateless [`Rng::stream`] keyed by its id, so hundreds to
 /// thousands of shards generate concurrently and the result is
 /// byte-identical regardless of thread count (only the cheap per-gateway
-/// menus consume the caller's sequential generator).
+/// menus consume the caller's sequential generator). Thin wrapper over
+/// [`ShardPlan`] — plan capture then immediate materialization.
 pub fn shard_non_iid(
     cfg: &SimConfig,
     topo: &Topology,
     data: &SynthData,
     rng: &mut Rng,
 ) -> Vec<DeviceShard> {
-    if cfg.fault.dirichlet_alpha > 0.0 {
-        return shard_dirichlet(cfg, topo, data, rng);
-    }
-    // Per-gateway class menus.
-    let mut menus: Vec<Vec<usize>> = Vec::with_capacity(topo.num_gateways());
-    for m in 0..topo.num_gateways() {
-        let q_m = if m == 0 {
-            NUM_CLASSES
-        } else {
-            1 + rng.below(NUM_CLASSES)
-        };
-        menus.push(rng.choose_k(NUM_CLASSES, q_m));
-    }
-
-    let all: Vec<usize> = (0..NUM_CLASSES).collect();
-    let base = rng.next_u64();
-    topo.devices
-        .par_iter()
-        .map(|dev| {
-            let mut drng = Rng::stream(base, &[dev.id as u64]);
-            let menu = &menus[dev.gateway];
-            let n = dev.dataset_size;
-            let n_noniid = (cfg.non_iid_degree * n as f64).round() as usize;
-            let (mut images, mut labels) = data.generate(menu, n_noniid, &mut drng);
-            if n_noniid < n {
-                let (xi, yi) = data.generate(&all, n - n_noniid, &mut drng);
-                images.extend(xi);
-                labels.extend(yi);
-            }
-            DeviceShard {
-                device: dev.id,
-                classes: menu.clone(),
-                images,
-                labels,
-            }
-        })
-        .collect()
-}
-
-/// Dirichlet(α) non-IID sharding (`fault.dirichlet_alpha > 0`): device n
-/// draws class proportions p ~ Dir(α·1) and then its D_n labels i.i.d.
-/// from p, all from the stateless `[STREAM_FAULT_SHARD, n]` stream —
-/// deterministic, order-independent, thread-count-invariant.
-fn shard_dirichlet(
-    cfg: &SimConfig,
-    topo: &Topology,
-    data: &SynthData,
-    rng: &mut Rng,
-) -> Vec<DeviceShard> {
-    let alpha = cfg.fault.dirichlet_alpha;
-    let base = rng.next_u64();
-    topo.devices
-        .par_iter()
-        .map(|dev| {
-            let mut drng = Rng::stream(base, &[STREAM_FAULT_SHARD, dev.id as u64]);
-            let props = dirichlet(alpha, NUM_CLASSES, &mut drng);
-            let n = dev.dataset_size;
-            let mut images = vec![0.0f32; n * IMG_DIM];
-            let mut labels = Vec::with_capacity(n);
-            for i in 0..n {
-                // CDF inversion over the proportions; the final class
-                // absorbs any floating-point shortfall.
-                let u = drng.f64();
-                let mut c = NUM_CLASSES - 1;
-                let mut acc = 0.0;
-                for (k, &p) in props.iter().enumerate() {
-                    acc += p;
-                    if u < acc {
-                        c = k;
-                        break;
-                    }
-                }
-                data.sample_into(c, &mut drng, &mut images[i * IMG_DIM..(i + 1) * IMG_DIM]);
-                labels.push(c as i32);
-            }
-            let mut classes: Vec<usize> = labels.iter().map(|&y| y as usize).collect();
-            classes.sort_unstable();
-            classes.dedup();
-            DeviceShard { device: dev.id, classes, images, labels }
-        })
-        .collect()
+    ShardPlan::new(cfg, topo, rng).materialize_all(topo, data)
 }
 
 /// Gamma(α, 1) via Marsaglia–Tsang squeeze (only `normal()`/`f64()`
@@ -344,5 +417,59 @@ mod tests {
             }
         }
         assert!(found_outside);
+    }
+
+    fn assert_shards_bitwise_eq(a: &DeviceShard, b: &DeviceShard) {
+        assert_eq!(a.device, b.device);
+        assert_eq!(a.classes, b.classes);
+        assert_eq!(a.labels, b.labels);
+        let same = a.images.iter().zip(&b.images).all(|(x, y)| x.to_bits() == y.to_bits());
+        assert!(same, "device {} images diverged", a.device);
+    }
+
+    #[test]
+    fn plan_consumes_identical_draws_as_eager_sharding() {
+        // A deferred plan must leave the caller's generator exactly where
+        // eager sharding leaves it, in BOTH sharding modes — that is what
+        // makes lazy_shards byte-invisible to every later draw.
+        let (mut cfg, topo, data, _) = fixtures();
+        for alpha in [0.0, 0.5] {
+            cfg.fault.dirichlet_alpha = alpha;
+            let mut eager_rng = Rng::new(77);
+            let mut plan_rng = Rng::new(77);
+            shard_non_iid(&cfg, &topo, &data, &mut eager_rng);
+            ShardPlan::new(&cfg, &topo, &mut plan_rng);
+            assert_eq!(eager_rng.next_u64(), plan_rng.next_u64(), "alpha = {alpha}");
+        }
+    }
+
+    #[test]
+    fn lazy_store_matches_eager_store_bitwise() {
+        let (mut cfg, topo, data, _) = fixtures();
+        for alpha in [0.0, 0.5] {
+            cfg.fault.dirichlet_alpha = alpha;
+            let eager = ShardStore::build(
+                false,
+                ShardPlan::new(&cfg, &topo, &mut Rng::new(77)),
+                &topo,
+                data.clone(),
+            );
+            let lazy = ShardStore::build(
+                true,
+                ShardPlan::new(&cfg, &topo, &mut Rng::new(77)),
+                &topo,
+                data.clone(),
+            );
+            assert!(matches!(eager, ShardStore::Eager(_)));
+            assert!(matches!(lazy, ShardStore::Lazy { .. }));
+            // Access out of order and repeatedly: lazy materialization is
+            // pure, so every access agrees with the eager shard bitwise.
+            for dev in topo.devices.iter().rev() {
+                let e = eager.shard(dev);
+                let l = lazy.shard(dev);
+                assert_shards_bitwise_eq(&e, &l);
+                assert_shards_bitwise_eq(&l, &lazy.shard(dev));
+            }
+        }
     }
 }

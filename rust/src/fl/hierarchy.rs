@@ -1,0 +1,253 @@
+//! Hierarchical multi-tier aggregation: device → gateway
+//! partial-aggregate → edge cluster → cloud.
+//!
+//! The flat phase-5 fold streams every surviving update through ONE
+//! cloud-side [`WeightedAccum`]; at nation scale that makes the cloud
+//! tier the single aggregation hot spot. The hierarchical path
+//! ([`HierFold`]) instead folds each scheduled gateway's members through
+//! the gateway's OWN accumulator, merges gateway summaries per edge
+//! cluster, and merges cluster summaries at the cloud — only tier
+//! summaries (one parameter-shaped buffer each) ever move up, so the
+//! per-tier fold cost is O(members of that tier), never O(N). The
+//! relaying of those summaries is what the scheduler's relay/Ψ energy
+//! term prices (`relay_psi`, per Hashempour et al., PAPERS.md).
+//!
+//! ## Fold order, determinism, and the flat oracle
+//!
+//! The fold order is FIXED at every tier: units fold into their gateway
+//! in plan order (members ascending within a gateway), gateway summaries
+//! merge in ascending gateway index within their cluster, and cluster
+//! summaries merge in ascending cluster index (`Topology::clusters` is a
+//! validated ascending contiguous partition). No ordering depends on
+//! wall-clock or worker interleaving, so hierarchical runs are
+//! byte-identical across thread counts exactly like flat runs.
+//!
+//! Against the flat oracle: both paths fold the SAME (update, D̃_n)
+//! multiset, and for schedulers whose plans list gateways in ascending
+//! order (round-robin, delay-driven, DDSRA) the per-gateway add
+//! sequences coincide term-for-term with the flat fold's — the two paths
+//! differ only in where gateway/cluster boundaries associate the f64
+//! partial sums. Each folded term `D̃_n · p` is exactly representable
+//! (24-bit f32 significand × a small integer weight), and the per-
+//! coordinate exponent spread across one round's updates is small (every
+//! device starts the round from the same global model), so the partial
+//! sums stay inside f64's 53-bit window and the regrouped sum is the
+//! same exact value — `rust/tests/hierarchy.rs` pins flat == hierarchical
+//! bytes on the `paper` and `plant` scenarios end to end.
+
+use crate::config::Aggregation;
+use crate::fl::vecmath::WeightedAccum;
+use crate::runtime::Params;
+use crate::topo::Topology;
+
+/// The gateway tier of one round's aggregation: one [`WeightedAccum`]
+/// per gateway (lazily allocated — an unscheduled gateway's slot is an
+/// empty accumulator and costs no parameter buffer), merged tier-by-tier
+/// at [`HierFold::finish`].
+#[derive(Debug, Default)]
+pub struct HierFold {
+    gateways: Vec<WeightedAccum>,
+}
+
+impl HierFold {
+    pub fn new(num_gateways: usize) -> Self {
+        HierFold { gateways: (0..num_gateways).map(|_| WeightedAccum::new()).collect() }
+    }
+
+    /// Fold one device update into its gateway's partial aggregate.
+    pub fn add(&mut self, gateway: usize, p: &Params, w: f64) {
+        self.gateways[gateway].add(p, w);
+    }
+
+    /// Updates folded into gateway `m` so far.
+    pub fn gateway_count(&self, m: usize) -> usize {
+        self.gateways[m].count()
+    }
+
+    /// Total updates folded across all gateways.
+    pub fn count(&self) -> usize {
+        self.gateways.iter().map(|a| a.count()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.gateways.iter().all(|a| a.is_empty())
+    }
+
+    /// Merge the tiers upward and finish: gateway summaries fold per
+    /// edge cluster (ascending gateway index), cluster summaries fold at
+    /// the cloud (ascending cluster index). `None` when nothing was
+    /// folded anywhere — the round then leaves the global model
+    /// unchanged, exactly like the flat path.
+    pub fn finish(self, topo: &Topology) -> Option<Params> {
+        debug_assert_eq!(self.gateways.len(), topo.num_gateways());
+        let mut gateways = self.gateways;
+        let mut cloud = WeightedAccum::new();
+        for cluster in &topo.clusters {
+            let mut edge = WeightedAccum::new();
+            for &m in &cluster.gateways {
+                let summary = std::mem::take(&mut gateways[m]);
+                if !summary.is_empty() {
+                    edge.merge(summary);
+                }
+            }
+            if !edge.is_empty() {
+                cloud.merge(edge);
+            }
+        }
+        cloud.finish()
+    }
+}
+
+/// The phase-5 fold behind the `aggregation` config knob: `Flat` is the
+/// original single-accumulator path (the byte-exactness oracle),
+/// `Hierarchical` is the tiered path. Both receive the identical
+/// `(gateway, update, weight)` stream from phase 4; `Flat` simply
+/// ignores the gateway.
+#[derive(Debug)]
+pub enum AggFold {
+    Flat(WeightedAccum),
+    Hierarchical(HierFold),
+}
+
+impl AggFold {
+    /// The fold the config asks for.
+    pub fn for_config(aggregation: Aggregation, num_gateways: usize) -> Self {
+        match aggregation {
+            Aggregation::Flat => AggFold::Flat(WeightedAccum::new()),
+            Aggregation::Hierarchical => AggFold::Hierarchical(HierFold::new(num_gateways)),
+        }
+    }
+
+    /// Fold one device update in (phase-4 plan order).
+    pub fn add(&mut self, gateway: usize, p: &Params, w: f64) {
+        match self {
+            AggFold::Flat(acc) => acc.add(p, w),
+            AggFold::Hierarchical(h) => h.add(gateway, p, w),
+        }
+    }
+
+    /// Updates folded in so far.
+    pub fn count(&self) -> usize {
+        match self {
+            AggFold::Flat(acc) => acc.count(),
+            AggFold::Hierarchical(h) => h.count(),
+        }
+    }
+
+    /// The round's aggregate; `None` when no update survived to fold.
+    pub fn finish(self, topo: &Topology) -> Option<Params> {
+        match self {
+            AggFold::Flat(acc) => acc.finish(),
+            AggFold::Hierarchical(h) => h.finish(topo),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::rng::Rng;
+    use crate::topo::Topology;
+
+    fn topo(clusters: usize) -> Topology {
+        let mut cfg = SimConfig::default();
+        cfg.num_clusters = clusters;
+        let t = Topology::generate(&cfg, &mut Rng::new(1));
+        t.validate().unwrap();
+        t
+    }
+
+    /// Dyadic values + small integer weights keep every product and
+    /// partial sum exactly representable, so flat and hierarchical folds
+    /// compute the same exact sum and byte equality is deterministic.
+    fn dyadic_params(n: u64) -> Params {
+        let mut rng = Rng::new(100 + n);
+        (0..2)
+            .map(|_| (0..6).map(|_| (rng.below(64) as f32 - 32.0) / 8.0).collect())
+            .collect()
+    }
+
+    #[test]
+    fn hierarchical_matches_flat_fold_bitwise_on_exact_inputs() {
+        for clusters in [1usize, 2, 3, 6] {
+            let topo = topo(clusters);
+            let mut flat = WeightedAccum::new();
+            let mut hier = HierFold::new(topo.num_gateways());
+            // Units arrive gateway-contiguous in ascending gateway order —
+            // the plan order the round engine feeds both paths.
+            for m in 0..topo.num_gateways() {
+                for (i, &n) in topo.gateways[m].members.iter().enumerate() {
+                    let p = dyadic_params(n as u64);
+                    let w = (2 + i) as f64;
+                    flat.add(&p, w);
+                    hier.add(m, &p, w);
+                }
+            }
+            assert_eq!(hier.count(), flat.count());
+            let (f, h) = (flat.finish().unwrap(), hier.finish(&topo).unwrap());
+            for (tf, th) in f.iter().zip(&h) {
+                for (vf, vh) in tf.iter().zip(th) {
+                    assert_eq!(vf.to_bits(), vh.to_bits(), "clusters = {clusters}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unscheduled_gateways_contribute_nothing() {
+        let topo = topo(3);
+        let mut hier = HierFold::new(topo.num_gateways());
+        let mut only = HierFold::new(topo.num_gateways());
+        // Gateway 2 folds in both; gateway 4's extra updates only in one.
+        for &n in &topo.gateways[2].members {
+            let p = dyadic_params(n as u64);
+            hier.add(2, &p, 3.0);
+            only.add(2, &p, 3.0);
+        }
+        for &n in &topo.gateways[4].members {
+            hier.add(4, &dyadic_params(n as u64), 5.0);
+        }
+        assert_eq!(only.gateway_count(4), 0);
+        assert_eq!(only.gateway_count(2), topo.gateways[2].members.len());
+        // An empty gateway slot is invisible to the merge: dropping
+        // gateway 4 entirely gives the gateway-2-only aggregate.
+        let with4 = hier.finish(&topo).unwrap();
+        let without4 = only.finish(&topo).unwrap();
+        assert_ne!(with4, without4, "gateway 4's fold must actually matter");
+        let mut solo = WeightedAccum::new();
+        for &n in &topo.gateways[2].members {
+            solo.add(&dyadic_params(n as u64), 3.0);
+        }
+        let expect = solo.finish().unwrap();
+        for (a, b) in without4.iter().zip(&expect) {
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn empty_fold_leaves_model_unchanged() {
+        let topo = topo(2);
+        assert!(HierFold::new(topo.num_gateways()).finish(&topo).is_none());
+        let empty = AggFold::for_config(Aggregation::Hierarchical, topo.num_gateways());
+        assert_eq!(empty.count(), 0);
+        assert!(empty.finish(&topo).is_none());
+    }
+
+    #[test]
+    fn agg_fold_routes_by_config() {
+        let topo = topo(1);
+        let p = dyadic_params(7);
+        let mut flat = AggFold::for_config(Aggregation::Flat, topo.num_gateways());
+        let mut hier = AggFold::for_config(Aggregation::Hierarchical, topo.num_gateways());
+        flat.add(0, &p, 2.0);
+        hier.add(0, &p, 2.0);
+        assert_eq!(flat.count(), 1);
+        assert_eq!(hier.count(), 1);
+        // A single update averages to itself on both paths.
+        assert_eq!(flat.finish(&topo).unwrap(), p);
+        assert_eq!(hier.finish(&topo).unwrap(), p);
+    }
+}

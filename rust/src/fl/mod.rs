@@ -1,11 +1,13 @@
 //! Federated learning core: FedAvg aggregation (streaming accumulators in
-//! [`vecmath`]), the §IV device-specific participation-rate machinery, the
-//! experiment orchestrator, the parallel streaming [`round`] engine that
-//! executes the communication rounds, and the [`session`] API — typed run
-//! builder, scheduler specs, and the observer/sink layer — that everything
-//! (CLI, benches, examples, tests) drives runs through.
+//! [`vecmath`], tier folds in [`hierarchy`]), the §IV device-specific
+//! participation-rate machinery, the experiment orchestrator, the parallel
+//! streaming [`round`] engine that executes the communication rounds, and
+//! the [`session`] API — typed run builder, scheduler specs, and the
+//! observer/sink layer — that everything (CLI, benches, examples, tests)
+//! drives runs through.
 
 pub mod fault;
+pub mod hierarchy;
 pub mod orchestrator;
 pub mod participation;
 pub mod round;
@@ -13,6 +15,7 @@ pub mod session;
 pub mod vecmath;
 
 pub use fault::{FaultPlan, RoundFaults};
+pub use hierarchy::{AggFold, HierFold};
 pub use orchestrator::{Experiment, GatewayMask, RoundRecord, RunLog};
 pub use participation::{gamma_rates, phi_m, GradStats};
 pub use round::RoundEngine;

@@ -32,7 +32,7 @@ use anyhow::{Context, Result};
 
 use crate::config::SimConfig;
 use crate::data::synth::{DatasetFlavor, SynthData, IMG_DIM};
-use crate::data::{shard_non_iid, DeviceShard};
+use crate::data::{ShardPlan, ShardStore};
 use crate::dnn::models;
 use crate::dnn::ModelSpec;
 use crate::fl::fault::RoundFaults;
@@ -177,7 +177,10 @@ pub struct Experiment {
     /// Cost-model DNN the scheduler plans with.
     pub cost_model: ModelSpec,
     pub chan: ChannelModel,
-    pub shards: Vec<DeviceShard>,
+    /// Per-device local datasets: fully materialized by default, a
+    /// regenerate-on-demand [`ShardStore::Lazy`] under `lazy_shards`
+    /// (nation-scale runs, where resident shards would not fit).
+    pub shards: ShardStore,
     pub test_x: Vec<f32>,
     pub test_y: Vec<i32>,
     pub engine: Box<dyn Backend>,
@@ -207,8 +210,12 @@ impl Experiment {
             .with_context(|| format!("unknown dataset {:?}", cfg.dataset))?;
         let mut data_rng = rng.fork(3);
         let data = SynthData::new(flavor, &mut data_rng);
-        let shards = shard_non_iid(&cfg, &topo, &data, &mut data_rng);
+        // The plan captures exactly the sequential draws eager sharding
+        // consumes, so the test-set draws below — and every later stream —
+        // are byte-identical whether shards are eager or lazy.
+        let plan = ShardPlan::new(&cfg, &topo, &mut data_rng);
         let (test_x, test_y) = data.test_set(cfg.test_size, &mut data_rng);
+        let shards = ShardStore::build(cfg.lazy_shards, plan, &topo, data);
         let cost_model = models::by_name(&cfg.cost_model)
             .with_context(|| format!("unknown cost model {:?}", cfg.cost_model))?;
         let engine = make_backend_kernel(artifacts, &cfg.exec_model, cfg.kernel)?;
@@ -274,7 +281,7 @@ impl Experiment {
     /// can draw any device's batches independently.
     pub(crate) fn sample_batch(&self, n: usize, rng: &mut Rng) -> (Vec<f32>, Vec<i32>) {
         let b = self.engine.meta().train_batch;
-        let shard = &self.shards[n];
+        let shard = self.shards.shard(&self.topo.devices[n]);
         let mut x = Vec::with_capacity(b * IMG_DIM);
         let mut y = Vec::with_capacity(b);
         for _ in 0..b {
@@ -283,6 +290,13 @@ impl Experiment {
             y.push(shard.labels[i]);
         }
         (x, y)
+    }
+
+    /// Number of classes device n's shard draws from (CLI and figure
+    /// participation tables). Materializes the shard under `lazy_shards`,
+    /// so callers should reach for it only at table-printing scale.
+    pub fn shard_class_count(&self, n: usize) -> usize {
+        self.shards.shard(&self.topo.devices[n]).classes.len()
     }
 
     /// K local SGD iterations for device n from `start`; returns the

@@ -7,8 +7,11 @@
 //!   2 schedule           the Scheduler picks J gateways + resources X(t)
 //!   3 feasibility        C7–C10 — infeasible plans fail, train nothing
 //!   4 local training     K local SGD steps per device, rayon fan-out
-//!   5 aggregation        streaming weighted FedAvg (WeightedAccum)
-//!   6 evaluation         periodic IID test-set eval
+//!   5 aggregation        streaming weighted FedAvg — flat (one
+//!                        WeightedAccum) or hierarchical tier folds
+//!                        (fl::hierarchy), per `cfg.aggregation`
+//!   6 evaluation         periodic IID test-set eval (full, or a
+//!                        deterministic `eval_sample` subsample)
 //! ```
 //!
 //! A [`FaultPlan`] (the `fault.*` config block, see `fl::fault`) injects
@@ -34,6 +37,7 @@
 //! | [`STREAM_SHADOW`] | `[dom, round, iter, device]` | centralized-GD shadow minibatches |
 //! | [`STREAM_PROBE`] | `[dom, device]` | §IV gradient-probe minibatches |
 //! | [`STREAM_SMOOTH`] | `[dom, device]` | §IV L_n perturbation direction |
+//! | [`STREAM_EVAL`] | `[dom, round]` | sampled-eval test subset (phase 6, only when `eval_sample` is armed) |
 //! | [`STREAM_FAULT_STRAGGLER`] | `[dom, round, device]` | straggler delay multiplier (phase 2) |
 //! | [`STREAM_FAULT_DROPOUT`] | `[dom, round, device]` | mid-round device dropout (phases 3-4) |
 //! | [`STREAM_FAULT_OUTAGE`] | `[dom, round, gateway]` | whole-floor gateway outage (phase 3) |
@@ -86,6 +90,7 @@ use crate::fl::fault::{FaultPlan, RoundFaults};
 pub use crate::fl::fault::{
     STREAM_FAULT_DROPOUT, STREAM_FAULT_OUTAGE, STREAM_FAULT_SHARD, STREAM_FAULT_STRAGGLER,
 };
+use crate::fl::hierarchy::AggFold;
 use crate::fl::participation::GradStats;
 use crate::fl::session::{RoundObserver, RunMeta, RunOpts, RunSummary, StopCause};
 use crate::fl::vecmath::{self, FlatWeightedAccum, WeightedAccum};
@@ -111,6 +116,10 @@ pub const STREAM_SHADOW: u64 = 0x54AD;
 pub const STREAM_PROBE: u64 = 0x9D0B;
 /// Stream domain: per-device §IV smoothness-probe perturbation.
 pub const STREAM_SMOOTH: u64 = 0x5100;
+/// Stream domain: per-round sampled-evaluation test subset (phase 6).
+/// Consulted ONLY when `cfg.eval_sample` is armed, so full-eval runs
+/// draw nothing and keep their bytes.
+pub const STREAM_EVAL: u64 = 0xE7A1;
 
 /// Devices trained concurrently per streaming wave of phase 4: wide
 /// enough to keep every rayon worker busy, narrow enough that only
@@ -131,9 +140,10 @@ struct TrainUnit {
 }
 
 /// Phase-4 output: the aggregate state of local training with every
-/// model update already folded away.
+/// model update already folded away. The fold is flat or hierarchical
+/// per `cfg.aggregation`; the loss tallies are identical either way.
 struct TrainOutcome {
-    accum: WeightedAccum,
+    agg: AggFold,
     floor_loss: Vec<f64>,
     floor_count: Vec<usize>,
     loss_sum: f64,
@@ -263,7 +273,7 @@ impl<'a> RoundEngine<'a> {
         let seed = exp.cfg.seed;
         let mm = exp.topo.num_gateways();
         let mut out = TrainOutcome {
-            accum: WeightedAccum::new(),
+            agg: AggFold::for_config(exp.cfg.aggregation, mm),
             floor_loss: vec![0.0; mm],
             floor_count: vec![0; mm],
             loss_sum: 0.0,
@@ -280,8 +290,10 @@ impl<'a> RoundEngine<'a> {
             for (u, res) in wave.iter().zip(results) {
                 let (w, loss) = res?;
                 // FedAvg weight: D̃_n (`Device::fedavg_weight`), the one
-                // weighting shared with the shadow and probe folds.
-                out.accum.add(&w, exp.topo.devices[u.device].fedavg_weight());
+                // weighting shared with the shadow and probe folds. Units
+                // arrive gateway-contiguous in plan order, so the flat
+                // and hierarchical folds see identical add sequences.
+                out.agg.add(u.gateway, &w, exp.topo.devices[u.device].fedavg_weight());
                 out.floor_loss[u.gateway] += loss;
                 out.floor_count[u.gateway] += 1;
                 out.loss_sum += loss;
@@ -289,6 +301,34 @@ impl<'a> RoundEngine<'a> {
             }
         }
         Ok(out)
+    }
+
+    /// Phase 6: evaluate the model — on the full IID test set, or (with
+    /// `cfg.eval_sample` in `(0, test_size)`) on a per-round
+    /// deterministic subsample drawn from the dedicated [`STREAM_EVAL`]
+    /// stream keyed `[dom, round]`. Every phase-6 call sites here (the
+    /// periodic gate AND the stopping round's final-eval patch), so a
+    /// sampled run never mixes sampled and full evals. The stream is
+    /// consulted only when sampling is armed: `eval_sample = 0` (and
+    /// `>= test_size`, where sampling would be a no-op) runs the full
+    /// eval with unchanged bytes.
+    fn eval_model(&self, t: usize, params: &Params) -> Result<(f64, f64)> {
+        let exp = self.exp;
+        let total = exp.test_y.len();
+        let k = exp.cfg.eval_sample;
+        if k == 0 || k >= total {
+            return exp.engine.eval_full(params, &exp.test_x, &exp.test_y);
+        }
+        let mut rng = Rng::stream(exp.cfg.seed, &[STREAM_EVAL, t as u64]);
+        let idx = rng.choose_k(total, k);
+        let dim = exp.test_x.len() / total;
+        let mut x = Vec::with_capacity(k * dim);
+        let mut y = Vec::with_capacity(k);
+        for &i in &idx {
+            x.extend_from_slice(&exp.test_x[i * dim..(i + 1) * dim]);
+            y.push(exp.test_y[i]);
+        }
+        exp.engine.eval_full(params, &x, &y)
     }
 
     /// Buffer a full run into the back-compat [`RunLog`] via a
@@ -410,9 +450,11 @@ impl<'a> RoundEngine<'a> {
 
             // Phase 5: global FedAvg (§III-A step 3). Weighting by D̃_n
             // makes the two-stage (floor, then BS) aggregation a single
-            // weighted average; the accumulator already holds Σ w·p.
+            // weighted average; the fold already holds Σ w·p — flat in
+            // one accumulator, or hierarchical with gateway partials
+            // merged per edge cluster then at the cloud (`fl::hierarchy`).
             if let Some(o) = outcome {
-                if let Some(new_params) = o.accum.finish() {
+                if let Some(new_params) = o.agg.finish(&exp.topo) {
                     params = new_params;
                 }
             }
@@ -424,7 +466,7 @@ impl<'a> RoundEngine<'a> {
                 && opts.train
                 && (t % opts.eval_every == opts.eval_every - 1 || t + 1 == opts.rounds)
             {
-                let (l, a) = exp.engine.eval_full(&params, &exp.test_x, &exp.test_y)?;
+                let (l, a) = self.eval_model(t, &params)?;
                 (Some(l), Some(a))
             } else {
                 (None, None)
@@ -475,7 +517,7 @@ impl<'a> RoundEngine<'a> {
                 // `on_record`), so the on_record stream of a stopped run
                 // stays a byte-identical prefix of the uninterrupted run.
                 if record.test_acc.is_none() && opts.train && opts.eval_every > 0 {
-                    let (l, a) = exp.engine.eval_full(&params, &exp.test_x, &exp.test_y)?;
+                    let (l, a) = self.eval_model(t, &params)?;
                     let mut fin = record.clone();
                     fin.test_loss = Some(l);
                     fin.test_acc = Some(a);
@@ -673,7 +715,8 @@ impl Experiment {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::SimConfig;
+    use crate::config::{Aggregation, SimConfig};
+    use crate::fl::hierarchy::HierFold;
     use crate::sched::RoundRobin;
 
     /// THE dropout aggregation pin: a dropped device contributes nothing
@@ -757,7 +800,7 @@ mod tests {
                 acc.add(&w, exp.topo.devices[u.device].fedavg_weight());
             }
             let manual = acc.finish().unwrap();
-            let folded = out.accum.finish().unwrap();
+            let folded = out.agg.finish(&exp.topo).unwrap();
             assert_eq!(manual.len(), folded.len());
             for (a, b) in manual.iter().zip(&folded) {
                 for (x, y) in a.iter().zip(b) {
@@ -767,5 +810,76 @@ mod tests {
             return;
         }
         panic!("no round with both dropped devices and survivors in 20 rounds at p=0.5");
+    }
+
+    /// THE outage × hierarchy pin: a fully-outaged gateway contributes
+    /// nothing to its cluster's fold — its tier accumulator never sees an
+    /// add, and the engine's hierarchical aggregate equals a from-scratch
+    /// `HierFold` over exactly the surviving units, bitwise.
+    #[test]
+    fn outaged_gateway_contributes_nothing_to_its_clusters_fold_bitwise() {
+        let mut cfg = SimConfig::default();
+        cfg.test_size = 256;
+        cfg.dataset_max = 400;
+        cfg.device_energy_max = 500.0;
+        cfg.gw_energy_max = 5000.0;
+        cfg.aggregation = Aggregation::Hierarchical;
+        cfg.num_clusters = 3;
+        cfg.fault.gateway_outage_prob = 0.5;
+        let exp = Experiment::new(cfg).unwrap();
+        let engine = RoundEngine::new(&exp);
+        let mm = exp.topo.num_gateways();
+        let mut sched = RoundRobin::new();
+
+        for t in 0..20usize {
+            let (state, arrivals) = engine.draw_env(t);
+            let ctx = RoundCtx {
+                cfg: &exp.cfg,
+                topo: &exp.topo,
+                model: &exp.cost_model,
+                chan: &exp.chan,
+                state: &state,
+                arrivals: &arrivals,
+                round: t,
+            };
+            let decision = sched.schedule(&ctx);
+            let (mut sel, mut fail) = (vec![false; mm], vec![false; mm]);
+            let mut faults = Some(RoundFaults::new(mm));
+            let units =
+                engine.feasibility(t, &decision, &ctx, &mut sel, &mut fail, &mut faults).unwrap();
+            let outages = faults.unwrap().outages;
+            let out_gws: Vec<usize> = (0..mm).filter(|&m| outages.get(m)).collect();
+            // Need a realization with at least one outage AND survivors.
+            if out_gws.is_empty() || units.is_empty() {
+                continue;
+            }
+            // An outaged floor is failed and fields no units.
+            for &m in &out_gws {
+                assert!(fail[m], "round {t}: outaged gateway {m} not marked failed");
+            }
+            assert!(units.iter().all(|u| !outages.get(u.gateway)));
+
+            let params = exp.engine.init_params().unwrap();
+            let out = engine.local_training(t, &units, &params).unwrap();
+            let mut hier = HierFold::new(mm);
+            for u in &units {
+                let mut rng =
+                    Rng::stream(exp.cfg.seed, &[STREAM_TRAIN, t as u64, u.device as u64]);
+                let (w, _) = exp.local_train(u.device, u.cut, &params, &mut rng).unwrap();
+                hier.add(u.gateway, &w, exp.topo.devices[u.device].fedavg_weight());
+            }
+            for &m in &out_gws {
+                assert_eq!(hier.gateway_count(m), 0, "outaged gateway {m} must fold nothing");
+            }
+            let manual = hier.finish(&exp.topo).unwrap();
+            let folded = out.agg.finish(&exp.topo).unwrap();
+            for (a, b) in manual.iter().zip(&folded) {
+                for (x, y) in a.iter().zip(b) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "round {t}: tier fold bytes diverged");
+                }
+            }
+            return;
+        }
+        panic!("no round with both an outage and survivors in 20 rounds at p=0.5");
     }
 }

@@ -102,6 +102,32 @@ impl WeightedAccum {
         self.count += 1;
     }
 
+    /// Fold another accumulator in: Σ-sums add element-wise, weights and
+    /// counts add. This is the tier-merge primitive of the hierarchical
+    /// aggregation path (`fl::hierarchy`): a gateway folds its members
+    /// through its own accumulator, then only the summary moves up via
+    /// `merge`. Merging partial accumulators in a fixed order is as
+    /// deterministic as streaming `add` calls in a fixed order — the
+    /// result depends only on the merge sequence. Panics when both sides
+    /// are non-empty with different tensor layouts.
+    pub fn merge(&mut self, other: Self) {
+        match (&mut self.sum, other.sum) {
+            (_, None) => {}
+            (None, Some(osum)) => self.sum = Some(osum),
+            (Some(sum), Some(osum)) => {
+                assert_eq!(sum.len(), osum.len(), "FedAvg tensor count differs across tiers");
+                for (st, ot) in sum.iter_mut().zip(osum) {
+                    assert_eq!(st.len(), ot.len(), "FedAvg tensor shape differs across tiers");
+                    for (sv, ov) in st.iter_mut().zip(ot) {
+                        *sv += ov;
+                    }
+                }
+            }
+        }
+        self.total += other.total;
+        self.count += other.count;
+    }
+
     /// Σ w_i·p_i / Σ w_i. `None` when nothing was folded in; panics when
     /// the folded weights sum to zero (FedAvg is undefined there).
     pub fn finish(self) -> Option<Params> {
@@ -157,6 +183,24 @@ impl FlatWeightedAccum {
         }
         self.total += w;
         self.count += 1;
+    }
+
+    /// Fold another accumulator in — the flat-vector analogue of
+    /// [`WeightedAccum::merge`]. Panics when both sides are non-empty
+    /// with different lengths.
+    pub fn merge(&mut self, other: Self) {
+        match (&mut self.sum, other.sum) {
+            (_, None) => {}
+            (None, Some(osum)) => self.sum = Some(osum),
+            (Some(sum), Some(osum)) => {
+                assert_eq!(sum.len(), osum.len(), "flat vector length differs across merges");
+                for (s, o) in sum.iter_mut().zip(osum) {
+                    *s += o;
+                }
+            }
+        }
+        self.total += other.total;
+        self.count += other.count;
     }
 
     /// Σ w_i·v_i / Σ w_i; `None` when nothing was folded in.
@@ -312,6 +356,87 @@ mod tests {
             acc.add(&p(&[&[1.0, 2.0, 3.0]]), 1.0);
         }));
         assert!(bad.is_err(), "shape change mid-stream must panic");
+    }
+
+    #[test]
+    fn merge_of_ordered_partials_matches_single_fold_bitwise() {
+        // Dyadic values and small integer weights keep every product and
+        // partial sum exactly representable in f64, so the split fold and
+        // the single fold compute the same exact sum regardless of
+        // association — byte equality is deterministic here.
+        let sets = [
+            (p(&[&[1.5, -2.25], &[0.5]]), 2.0),
+            (p(&[&[3.0, 0.25], &[-1.5]]), 5.0),
+            (p(&[&[-0.75, 4.0], &[2.0]]), 3.0),
+            (p(&[&[0.125, -8.0], &[1.25]]), 1.0),
+        ];
+        let mut single = WeightedAccum::new();
+        for (params, w) in &sets {
+            single.add(params, *w);
+        }
+        let mut lo = WeightedAccum::new();
+        lo.add(&sets[0].0, sets[0].1);
+        lo.add(&sets[1].0, sets[1].1);
+        let mut hi = WeightedAccum::new();
+        hi.add(&sets[2].0, sets[2].1);
+        hi.add(&sets[3].0, sets[3].1);
+        let mut merged = WeightedAccum::new();
+        merged.merge(lo);
+        merged.merge(hi);
+        assert_eq!(merged.count(), single.count());
+        assert_eq!(merged.total_weight().to_bits(), single.total_weight().to_bits());
+        let (a, b) = (merged.finish().unwrap(), single.finish().unwrap());
+        for (ta, tb) in a.iter().zip(&b) {
+            for (va, vb) in ta.iter().zip(tb) {
+                assert_eq!(va.to_bits(), vb.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn merge_empty_sides_are_identities() {
+        let params = p(&[&[1.0, 2.0]]);
+        let mut acc = WeightedAccum::new();
+        acc.merge(WeightedAccum::new()); // empty + empty
+        assert!(acc.is_empty());
+        let mut filled = WeightedAccum::new();
+        filled.add(&params, 3.0);
+        acc.merge(filled); // empty + filled takes the partial wholesale
+        assert_eq!(acc.count(), 1);
+        acc.merge(WeightedAccum::new()); // filled + empty is a no-op
+        assert_eq!(acc.count(), 1);
+        assert_eq!(acc.finish().unwrap(), params);
+    }
+
+    #[test]
+    fn merge_shape_guard_panics() {
+        let mut a = WeightedAccum::new();
+        a.add(&p(&[&[1.0, 2.0]]), 1.0);
+        let mut b = WeightedAccum::new();
+        b.add(&p(&[&[1.0, 2.0, 3.0]]), 1.0);
+        let bad = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            a.merge(b);
+        }));
+        assert!(bad.is_err(), "cross-tier shape mismatch must panic");
+    }
+
+    #[test]
+    fn flat_merge_matches_single_fold_bitwise() {
+        let a = [0.5f32, -1.0, 2.0];
+        let b = [4.0f32, 0.25, -3.0];
+        let mut single = FlatWeightedAccum::new();
+        single.add(&a, 2.0);
+        single.add(&b, 3.0);
+        let mut left = FlatWeightedAccum::new();
+        left.add(&a, 2.0);
+        let mut right = FlatWeightedAccum::new();
+        right.add(&b, 3.0);
+        left.merge(right);
+        assert_eq!(left.count(), 2);
+        let (x, y) = (left.finish().unwrap(), single.finish().unwrap());
+        for (va, vb) in x.iter().zip(&y) {
+            assert_eq!(va.to_bits(), vb.to_bits());
+        }
     }
 
     #[test]

@@ -34,6 +34,7 @@ const COMMON_FLAGS: &[&str] = &[
     "preset",
     "cost-model",
     "kernel",
+    "aggregation",
     "execute-partition",
 ];
 
@@ -91,9 +92,12 @@ fn print_help() {
          \u{20}                --preset mlp|cnn --cost-model vgg11|cnn|mlp\n\
          \u{20}                --kernel vectorized|scalar (native compute path;\n\
          \u{20}                scalar = the bit-exact oracle loops)\n\
-         \u{20}                --scenario paper|plant|campus|metro|\n\
-         \u{20}                flaky-plant|churn-metro (scale/adversity preset,\n\
-         \u{20}                applied before --set overrides)\n\
+         \u{20}                --aggregation flat|hierarchical (phase-5 fold:\n\
+         \u{20}                flat = one cloud accumulator, hierarchical =\n\
+         \u{20}                gateway -> edge cluster -> cloud tier folds)\n\
+         \u{20}                --scenario paper|plant|campus|metro|nation|\n\
+         \u{20}                nation-xl|flaky-plant|churn-metro (scale/adversity\n\
+         \u{20}                preset, applied before --set overrides)\n\
          \u{20}                --set key=value (any config key) --config file\n\
          train flags:  --scheme ddsra|participation|random|round_robin|\n\
          \u{20}                loss_driven|delay_driven\n\
@@ -195,16 +199,29 @@ fn cmd_train(args: &Args) -> Result<()> {
         &["round", "cum_delay_s", "train_loss", "test_acc"],
         &rows,
     );
-    let prow: Vec<Vec<String>> = (0..exp.topo.num_gateways())
-        .map(|m| {
-            vec![
-                format!("gw{m}"),
-                format!("{:.3}", log.participation[m]),
-                format!("{:.3}", log.effective_participation[m]),
-            ]
-        })
-        .collect();
-    print_table("participation", &["gateway", "selected", "effective"], &prow);
+    // Per-gateway rows stop being a table anyone reads past metro scale
+    // (nation has thousands of gateways) — summarize instead.
+    let m_total = exp.topo.num_gateways();
+    if m_total <= 128 {
+        let prow: Vec<Vec<String>> = (0..m_total)
+            .map(|m| {
+                vec![
+                    format!("gw{m}"),
+                    format!("{:.3}", log.participation[m]),
+                    format!("{:.3}", log.effective_participation[m]),
+                ]
+            })
+            .collect();
+        print_table("participation", &["gateway", "selected", "effective"], &prow);
+    } else {
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+        println!(
+            "participation: {m_total} gateways — mean selected {:.4}, mean effective {:.4} \
+             (per-gateway table suppressed beyond 128 gateways)",
+            mean(&log.participation),
+            mean(&log.effective_participation)
+        );
+    }
     Ok(())
 }
 
@@ -229,7 +246,7 @@ fn cmd_participation(args: &Args) -> Result<()> {
                 format!("{:.4}", gammas[m]),
                 members
                     .iter()
-                    .map(|&n| exp.shards[n].classes.len().to_string())
+                    .map(|&n| exp.shard_class_count(n).to_string())
                     .collect::<Vec<_>>()
                     .join("/"),
             ]

@@ -106,7 +106,15 @@ pub fn plan_cost(ctx: &RoundCtx, plan: &GatewayPlan) -> PlanCost {
     let tau_down = ctx.chan.tau_down(ctx.state, m, plan.channel, gamma);
     let tau_up = ctx.chan.tau_up(ctx.state, m, plan.channel, plan.power, gamma);
     let e_up = ctx.chan.energy_up(ctx.state, m, plan.channel, plan.power, gamma);
-    let gateway_energy = gw_train_energy + e_up;
+    let mut gateway_energy = gw_train_energy + e_up;
+    // Relay/Ψ term (hierarchical aggregation): the gateway's partial
+    // aggregate — Γ model bits — is relayed up the tier chain, charged at
+    // Ψ J/bit against the gateway's energy budget (relay-assisted
+    // aggregation, Hashempour et al., PAPERS.md). Gated so the default
+    // Ψ = 0 leaves every scheduler cost byte untouched.
+    if ctx.cfg.relay_psi > 0.0 {
+        gateway_energy += ctx.cfg.relay_psi * gamma;
+    }
     if gateway_energy > ctx.arrivals.gateway[m] {
         violations.push(Violation::GatewayEnergy);
     }

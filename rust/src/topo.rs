@@ -3,6 +3,14 @@
 //!
 //! The deployment matrix `a_{n,m}` is realised as `Device::gateway` plus
 //! the per-gateway member lists — both views the paper uses.
+//!
+//! On top of the paper's two tiers sits an optional **edge-cluster
+//! layer** (`Topology::clusters`): gateways are grouped into
+//! `cfg.num_clusters` contiguous clusters purely arithmetically — the
+//! partition consumes NO random draws, so adding clusters never shifts
+//! any existing stream and a `num_clusters = 1` topology is byte-for-byte
+//! the old one. The hierarchical aggregation path (`fl::hierarchy`) folds
+//! gateway summaries per cluster and cluster summaries at the cloud.
 
 use crate::config::SimConfig;
 use crate::rng::Rng;
@@ -60,11 +68,24 @@ pub struct Gateway {
     pub power_max: f64,
 }
 
-/// The full two-tier deployment.
+/// One edge cluster: a contiguous run of gateway indices whose partial
+/// aggregates are folded together before moving up to the cloud.
+#[derive(Clone, Debug)]
+pub struct Cluster {
+    pub id: usize,
+    /// Gateways in this cluster (ascending indices into
+    /// `Topology::gateways`; contiguous by construction).
+    pub gateways: Vec<usize>,
+}
+
+/// The full deployment: two paper tiers plus the edge-cluster layer.
 #[derive(Clone, Debug)]
 pub struct Topology {
     pub devices: Vec<Device>,
     pub gateways: Vec<Gateway>,
+    /// Edge clusters over the gateways; always non-empty (a single
+    /// cluster when `num_clusters = 1`, the default).
+    pub clusters: Vec<Cluster>,
 }
 
 impl Topology {
@@ -103,7 +124,22 @@ impl Topology {
                 });
             }
         }
-        Topology { devices, gateways }
+        // The cluster layer is derived arithmetically (balanced contiguous
+        // partition), never drawn: the RNG state after `generate` is
+        // independent of `num_clusters`, so every downstream stream keeps
+        // its bytes.
+        let clusters = Self::partition_clusters(cfg.num_gateways, cfg.num_clusters);
+        Topology { devices, gateways, clusters }
+    }
+
+    /// Balanced contiguous partition of `m` gateways into `c` clusters:
+    /// cluster `k` owns gateways `[k*m/c, (k+1)*m/c)`. Draw-free and
+    /// deterministic in `(m, c)` alone.
+    fn partition_clusters(m: usize, c: usize) -> Vec<Cluster> {
+        let c = c.clamp(1, m.max(1));
+        (0..c)
+            .map(|k| Cluster { id: k, gateways: (k * m / c..(k + 1) * m / c).collect() })
+            .collect()
     }
 
     /// Structural invariants the round engine divides by: every gateway
@@ -145,6 +181,36 @@ impl Topology {
         }
         if let Some(n) = deployed.iter().position(|&d| !d) {
             anyhow::bail!("device {n} belongs to no gateway");
+        }
+        // Cluster layer: every gateway in exactly one cluster, clusters
+        // non-empty and in ascending gateway order — the fixed fold order
+        // the hierarchical aggregation's byte-determinism leans on.
+        if self.clusters.is_empty() {
+            anyhow::bail!("topology must contain at least one edge cluster");
+        }
+        let mut next_gateway = 0usize;
+        for (k, c) in self.clusters.iter().enumerate() {
+            if c.id != k {
+                anyhow::bail!("cluster ids must be sequential (cluster {k} has id {})", c.id);
+            }
+            if c.gateways.is_empty() {
+                anyhow::bail!("cluster {k} has no member gateways");
+            }
+            for &m in &c.gateways {
+                if m != next_gateway {
+                    anyhow::bail!(
+                        "cluster layer must cover gateways contiguously in ascending \
+                         order (cluster {k} lists gateway {m}, expected {next_gateway})"
+                    );
+                }
+                next_gateway += 1;
+            }
+        }
+        if next_gateway != self.gateways.len() {
+            anyhow::bail!(
+                "cluster layer covers {next_gateway} of {} gateways",
+                self.gateways.len()
+            );
         }
         Ok(())
     }
@@ -250,6 +316,52 @@ mod tests {
         assert_eq!(big.num_devices(), 240);
         assert_eq!(big.num_gateways(), 24);
         big.validate().unwrap();
+    }
+
+    #[test]
+    fn cluster_layer_partitions_gateways_contiguously_and_draw_free() {
+        // num_clusters = 1 (default): one cluster owning every gateway.
+        let t = topo();
+        assert_eq!(t.clusters.len(), 1);
+        assert_eq!(t.clusters[0].gateways, (0..6).collect::<Vec<_>>());
+
+        // A non-dividing partition stays balanced (sizes differ by <= 1)
+        // and contiguous.
+        let mut cfg = SimConfig::default();
+        cfg.num_clusters = 4;
+        let t4 = Topology::generate(&cfg, &mut Rng::new(1));
+        assert_eq!(t4.clusters.len(), 4);
+        let sizes: Vec<usize> = t4.clusters.iter().map(|c| c.gateways.len()).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 6);
+        assert!(sizes.iter().all(|&s| s == 1 || s == 2), "{sizes:?}");
+        t4.validate().unwrap();
+
+        // Draw-free: the device/gateway draws are byte-identical no
+        // matter how many clusters partition them.
+        for (a, b) in t.devices.iter().zip(&t4.devices) {
+            assert_eq!(a.dataset_size, b.dataset_size);
+            assert_eq!(a.freq.to_bits(), b.freq.to_bits());
+        }
+        for (a, b) in t.gateways.iter().zip(&t4.gateways) {
+            assert_eq!(a.distance.to_bits(), b.distance.to_bits());
+        }
+    }
+
+    #[test]
+    fn validate_rejects_broken_cluster_layers() {
+        let mut gap = topo();
+        gap.clusters[0].gateways.remove(2);
+        let err = gap.validate().unwrap_err().to_string();
+        assert!(err.contains("contiguously"), "{err}");
+
+        let mut missing = topo();
+        missing.clusters[0].gateways.pop();
+        let err = missing.validate().unwrap_err().to_string();
+        assert!(err.contains("covers"), "{err}");
+
+        let mut none = topo();
+        none.clusters.clear();
+        assert!(none.validate().is_err());
     }
 
     #[test]

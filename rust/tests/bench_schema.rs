@@ -1,0 +1,78 @@
+//! Schema guard for the committed bench emissions: `scripts/bench_compare`
+//! must round-trip BOTH committed `BENCH_*.json` files (self-compare),
+//! find their timed sections, and keep its report-only exit-0 contract —
+//! so a bench refactor that silently breaks the JSON shape (or the
+//! comparer's walker) fails here instead of in a CI log nobody reads.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+fn repo_root() -> &'static Path {
+    // The workspace Cargo.toml sits at the repo root, next to the
+    // committed bench files and `scripts/`.
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn python3_available() -> bool {
+    Command::new("python3")
+        .arg("--version")
+        .output()
+        .map(|o| o.status.success())
+        .unwrap_or(false)
+}
+
+fn run_compare(base: &PathBuf, cur: &PathBuf) -> (String, String, bool) {
+    let out = Command::new("python3")
+        .arg(repo_root().join("scripts").join("bench_compare"))
+        .arg(base)
+        .arg(cur)
+        .output()
+        .expect("spawn scripts/bench_compare");
+    (
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+        out.status.success(),
+    )
+}
+
+#[test]
+fn bench_compare_round_trips_the_committed_bench_files() {
+    if !python3_available() {
+        eprintln!("skipping: python3 unavailable on this machine");
+        return;
+    }
+    for name in ["BENCH_runtime.json", "BENCH_round_engine.json"] {
+        let file = repo_root().join(name);
+        assert!(file.exists(), "{name} missing from the repo root");
+        let (stdout, stderr, ok) = run_compare(&file, &file);
+        assert!(ok, "bench_compare failed on {name}: {stderr}\n{stdout}");
+        // The walker must actually find timed sections — a schema drift
+        // that hides every row would otherwise pass silently.
+        assert!(
+            stdout.contains("== "),
+            "{name}: bench_compare found no timed sections:\n{stdout}"
+        );
+        // A file can never regress against itself (bootstrap placeholders
+        // with null timings surface as NEW rows, which is also clean).
+        assert!(
+            stdout.contains("no regressions beyond noise threshold"),
+            "{name} self-compare reported regressions:\n{stdout}"
+        );
+    }
+}
+
+#[test]
+fn bench_compare_reports_unreadable_input_without_failing() {
+    if !python3_available() {
+        eprintln!("skipping: python3 unavailable on this machine");
+        return;
+    }
+    // Report-only contract: a missing file is diagnosed on stdout and the
+    // tool still exits 0, so a CI lane wiring mistake never masquerades
+    // as a perf regression.
+    let good = repo_root().join("BENCH_round_engine.json");
+    let missing = repo_root().join("BENCH_does_not_exist.json");
+    let (stdout, stderr, ok) = run_compare(&good, &missing);
+    assert!(ok, "report-only tool must exit 0: {stderr}");
+    assert!(stdout.contains("cannot read"), "missing-file diagnosis absent:\n{stdout}");
+}

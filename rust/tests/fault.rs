@@ -1,6 +1,7 @@
 //! Fault-injection guarantees: an adversity-preset run replays
 //! byte-identically across rayon thread counts (faults draw from
-//! per-(round, device) `STREAM_FAULT_*` streams), an armed-but-inert
+//! per-(round, device) `STREAM_FAULT_*` streams) — with the flat AND the
+//! hierarchical phase-5 fold —, an armed-but-inert
 //! `FaultPlan` leaves every engine byte identical to the benign engine,
 //! loss-driven schedules are identical with and without `--divergence`
 //! (the probe must never leak into scheduler feedback), and the §IV
@@ -57,6 +58,50 @@ fn flaky_plant_run_is_byte_identical_across_thread_counts() {
         })
     };
     assert_eq!(run_with(1), run_with(8), "thread count changed the faulted round bytes");
+}
+
+/// Hierarchical aggregation under adversity: the tiered fold composes
+/// with the full flaky-plant fault battery (stragglers, dropout, gateway
+/// outages, Dirichlet shards) without costing thread-count invariance —
+/// fold order is fixed per tier, so 1 worker and 8 workers produce the
+/// same bytes. A fully-outaged gateway's accumulator stays empty and its
+/// cluster folds on without it (the fold-level pin lives in
+/// `fl::round`'s in-file tests; this is the end-to-end run).
+#[test]
+fn hierarchical_flaky_plant_run_is_byte_identical_across_thread_counts() {
+    let mut cfg = SimConfig::default();
+    cfg.apply_scenario("flaky-plant").unwrap(); // N=240, M=24, J=8 + faults
+    cfg.dataset_min = 16;
+    cfg.dataset_max = 48;
+    cfg.test_size = 256;
+    cfg.local_iters = 1;
+    cfg.rounds = 2;
+    cfg.device_energy_max = 500.0;
+    cfg.gw_energy_max = 5000.0;
+    cfg.aggregation = iiot_fl::config::Aggregation::Hierarchical;
+    cfg.num_clusters = 6; // 24 gateways -> 6 edge clusters of 4
+    cfg.validate().unwrap();
+    let run_with = |threads: usize| {
+        let pool = rayon::ThreadPoolBuilder::new().num_threads(threads).build().unwrap();
+        pool.install(|| {
+            let session = Session::builder(cfg.clone()).rounds(2).eval_every(2).build().unwrap();
+            let log = session.run(&SchedulerSpec::RoundRobin).unwrap();
+            assert!(
+                log.records.iter().any(|r| r.faults.is_some()),
+                "flaky-plant must realize at least one fault in two rounds"
+            );
+            assert!(
+                log.records.iter().any(|r| r.train_loss.is_some()),
+                "the faulted hierarchical run must still train its survivors"
+            );
+            serialize(&log)
+        })
+    };
+    assert_eq!(
+        run_with(1),
+        run_with(8),
+        "thread count changed the hierarchical faulted round bytes"
+    );
 }
 
 /// THE `FaultPlan::none()` parity pin, at runtime: an ARMED fault block

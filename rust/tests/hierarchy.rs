@@ -1,0 +1,206 @@
+//! Hierarchical-aggregation guarantees — the acceptance pins of the
+//! multi-tier fold:
+//!
+//! - THE parity oracle: `aggregation = hierarchical` produces
+//!   byte-identical round logs to the flat fold on the `paper` and
+//!   `plant` scenarios, for every cluster layout tried and for every
+//!   scheduler whose plans list gateways in ascending order;
+//! - hierarchical runs replay byte-identically across rayon thread
+//!   counts, like every other engine mode;
+//! - `lazy_shards` regenerate-on-demand storage is byte-invisible: lazy
+//!   and eager runs serialize identically;
+//! - sampled evaluation (`eval_sample`) short-circuits to full eval at
+//!   `k = 0` and `k >= test_size`, replays deterministically below it,
+//!   and draws only from its own `STREAM_EVAL` domain;
+//! - the nation-class presets validate (and the eager-shard memory guard
+//!   rejects a nation config stripped of `lazy_shards`);
+//! - a prohibitive relay Ψ prices every scheduled gateway out of its
+//!   energy budget (the Hashempour-style summary-relay term).
+
+mod common;
+
+use common::serialize;
+use iiot_fl::config::{Aggregation, SimConfig};
+use iiot_fl::fl::{SchedulerSpec, Session};
+
+/// Paper-scale config with small shards/test set for fast real training.
+fn paper_cfg() -> SimConfig {
+    let mut cfg = SimConfig::default();
+    cfg.exec_model = "mlp".into();
+    cfg.test_size = 256;
+    cfg.dataset_max = 400;
+    cfg
+}
+
+/// Plant-scale (N=240, M=24) config shrunk for test time, budgets open
+/// so scheduled floors really train.
+fn plant_cfg() -> SimConfig {
+    let mut cfg = SimConfig::default();
+    cfg.apply_scenario("plant").unwrap();
+    cfg.dataset_min = 16;
+    cfg.dataset_max = 48;
+    cfg.test_size = 256;
+    cfg.local_iters = 1;
+    cfg.device_energy_max = 500.0;
+    cfg.gw_energy_max = 5000.0;
+    cfg
+}
+
+fn run_bytes(mut cfg: SimConfig, spec: &SchedulerSpec, rounds: usize) -> String {
+    cfg.rounds = rounds;
+    cfg.validate().unwrap();
+    let session = Session::builder(cfg).rounds(rounds).eval_every(2).build().unwrap();
+    let log = session.run(spec).unwrap();
+    assert!(
+        log.records.iter().any(|r| r.train_loss.is_some()),
+        "the run must actually train"
+    );
+    serialize(&log)
+}
+
+/// THE acceptance pin: flat and hierarchical aggregation produce
+/// byte-identical round logs. Both paths fold the same (update, D̃_n)
+/// stream in the same within-gateway order; the tier boundaries only
+/// regroup f64 partial sums whose terms are exact, so the bytes match —
+/// across cluster layouts and across the ascending-plan schedulers.
+#[test]
+fn hierarchical_matches_flat_bytes_on_paper_scenario() {
+    for clusters in [1usize, 2, 3] {
+        for spec in [SchedulerSpec::RoundRobin, SchedulerSpec::DelayDriven] {
+            let mut flat = paper_cfg();
+            flat.num_clusters = clusters;
+            let mut hier = flat.clone();
+            hier.aggregation = Aggregation::Hierarchical;
+            assert_eq!(
+                run_bytes(flat, &spec, 4),
+                run_bytes(hier, &spec, 4),
+                "flat vs hierarchical diverged: paper, {clusters} clusters, {spec:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn hierarchical_matches_flat_bytes_on_plant_scenario() {
+    let mut flat = plant_cfg();
+    flat.num_clusters = 6; // 24 gateways -> 6 edge clusters of 4
+    let mut hier = flat.clone();
+    hier.aggregation = Aggregation::Hierarchical;
+    assert_eq!(
+        run_bytes(flat, &SchedulerSpec::RoundRobin, 2),
+        run_bytes(hier, &SchedulerSpec::RoundRobin, 2),
+        "flat vs hierarchical diverged on the plant scenario"
+    );
+}
+
+/// Hierarchical runs keep the thread-count replay guarantee: fold order
+/// is fixed per tier (members ascending within gateways, gateways
+/// ascending within clusters, clusters ascending), never wall-clock.
+#[test]
+fn hierarchical_run_is_byte_identical_across_thread_counts() {
+    let mut cfg = plant_cfg();
+    cfg.num_clusters = 6;
+    cfg.aggregation = Aggregation::Hierarchical;
+    let run_with = |threads: usize| {
+        let pool = rayon::ThreadPoolBuilder::new().num_threads(threads).build().unwrap();
+        pool.install(|| run_bytes(cfg.clone(), &SchedulerSpec::RoundRobin, 2))
+    };
+    assert_eq!(
+        run_with(1),
+        run_with(8),
+        "thread count changed the hierarchical round bytes"
+    );
+}
+
+/// `lazy_shards` is byte-invisible: the deferred plan consumes exactly
+/// the draws eager sharding consumes and regenerates each shard from the
+/// same per-device stream, so the whole run serializes identically.
+#[test]
+fn lazy_shards_run_is_byte_identical_to_eager() {
+    let eager = paper_cfg();
+    let mut lazy = paper_cfg();
+    lazy.lazy_shards = true;
+    assert_eq!(
+        run_bytes(eager, &SchedulerSpec::RoundRobin, 3),
+        run_bytes(lazy, &SchedulerSpec::RoundRobin, 3),
+        "lazy shard storage changed the run bytes"
+    );
+}
+
+/// Sampled evaluation: `eval_sample >= test_size` (and 0) short-circuit
+/// to the full eval bytes; a genuine subsample replays deterministically
+/// and actually changes the eval numbers (it IS a different estimator).
+#[test]
+fn eval_sample_short_circuits_and_replays() {
+    let full = paper_cfg();
+    let mut capped = paper_cfg();
+    capped.eval_sample = capped.test_size; // >= test set: full eval
+    let mut oversized = paper_cfg();
+    oversized.eval_sample = 10_000;
+    let full_bytes = run_bytes(full, &SchedulerSpec::RoundRobin, 3);
+    assert_eq!(
+        full_bytes,
+        run_bytes(capped, &SchedulerSpec::RoundRobin, 3),
+        "eval_sample == test_size must be the full evaluation"
+    );
+    assert_eq!(
+        full_bytes,
+        run_bytes(oversized, &SchedulerSpec::RoundRobin, 3),
+        "eval_sample > test_size must be the full evaluation"
+    );
+    let mut sampled = paper_cfg();
+    sampled.eval_sample = 64;
+    let a = run_bytes(sampled.clone(), &SchedulerSpec::RoundRobin, 3);
+    assert_eq!(
+        a,
+        run_bytes(sampled, &SchedulerSpec::RoundRobin, 3),
+        "sampled evaluation must replay deterministically"
+    );
+    assert_ne!(
+        a, full_bytes,
+        "a 64-of-256 subsample estimator should not reproduce the full-eval bytes"
+    );
+}
+
+/// The nation-class presets validate as shipped, and the eager-shard
+/// memory guard refuses a nation config stripped of `lazy_shards`
+/// instead of letting it attempt hundreds of GiB of resident shards.
+#[test]
+fn nation_presets_validate_and_require_lazy_shards() {
+    for name in ["nation", "nation-xl"] {
+        let mut cfg = SimConfig::default();
+        cfg.apply_scenario(name).unwrap();
+        assert!(cfg.lazy_shards, "{name} must arm lazy shard storage");
+        assert_eq!(cfg.aggregation, Aggregation::Hierarchical, "{name}");
+        assert!(cfg.eval_sample > 0, "{name} must arm sampled evaluation");
+        cfg.validate().unwrap();
+        cfg.lazy_shards = false;
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("lazy_shards"), "{name}: {err}");
+    }
+}
+
+/// A prohibitive relay Ψ charges each scheduled gateway more summary-
+/// relay energy than any round's arrival: every selection becomes a
+/// C10 violation, so every scheduled gateway fails and nothing trains.
+#[test]
+fn prohibitive_relay_psi_prices_gateways_out_of_budget() {
+    let mut cfg = paper_cfg();
+    cfg.relay_psi = 1e3; // Ψ · Γ_bits dwarfs any harvested arrival
+    cfg.aggregation = Aggregation::Hierarchical;
+    cfg.num_clusters = 2;
+    cfg.rounds = 2;
+    cfg.validate().unwrap();
+    let session = Session::builder(cfg).rounds(2).eval_every(2).build().unwrap();
+    let log = session.run(&SchedulerSpec::RoundRobin).unwrap();
+    for r in &log.records {
+        assert!(r.selected.count() > 0, "round {} selected nobody", r.round);
+        assert_eq!(
+            r.failed.to_vec(),
+            r.selected.to_vec(),
+            "round {}: every scheduled gateway must fail its energy budget",
+            r.round
+        );
+        assert!(r.train_loss.is_none(), "round {} trained through a violation", r.round);
+    }
+}

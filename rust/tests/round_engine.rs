@@ -153,15 +153,18 @@ fn scale_scenarios_validate() {
         ("plant", 240, 24),
         ("campus", 960, 48),
         ("metro", 2880, 96),
+        ("nation", 100_000, 2000),
+        ("nation-xl", 1_000_000, 20_000),
         ("flaky-plant", 240, 24),
         ("churn-metro", 2880, 96),
     ] {
         let mut cfg = SimConfig::default();
         cfg.apply_scenario(name).unwrap();
         assert_eq!((cfg.num_devices, cfg.num_gateways), (n, m), "{name}");
+        let adversity = matches!(name, "flaky-plant" | "churn-metro");
         assert_eq!(
             cfg.fault.is_benign(),
-            !name.contains('-'),
+            !adversity,
             "{name}: adversity presets (and only they) arm the fault block"
         );
         cfg.validate().unwrap();

@@ -1,0 +1,198 @@
+//! Property-style suite for the FedAvg accumulators — the aggregation
+//! substrate both phase-5 folds (flat and hierarchical) stand on.
+//!
+//! The guarantees pinned here, on exact (dyadic) inputs so float
+//! association can never excuse a mismatch:
+//! - ordered-fold determinism: the SEQUENCE of `add` calls alone fixes
+//!   the result bytes;
+//! - split-fold parity: partial accumulators merged in fold order are
+//!   bitwise the single straight-line fold, at EVERY split point — the
+//!   algebraic core of the flat == hierarchical parity story;
+//! - degenerate folds: a single device averages to itself, a zero-weight
+//!   member is invisible, an empty fold yields `None`, and an all-zero
+//!   weight total is rejected loudly.
+
+use iiot_fl::fl::vecmath::{FlatWeightedAccum, WeightedAccum};
+use iiot_fl::rng::Rng;
+use iiot_fl::runtime::Params;
+
+/// Dyadic values (multiples of 1/8 in [-4, 4)): every product with a
+/// small integer weight and every partial sum is exactly representable
+/// in f64, so any regrouping of the fold computes the same exact sum.
+fn dyadic_params(seed: u64) -> Params {
+    let mut rng = Rng::new(900 + seed);
+    (0..3)
+        .map(|_| (0..5).map(|_| (rng.below(64) as f32 - 32.0) / 8.0).collect())
+        .collect()
+}
+
+fn weights(n: usize) -> Vec<f64> {
+    let mut rng = Rng::new(77);
+    (0..n).map(|_| (1 + rng.below(9)) as f64).collect()
+}
+
+fn assert_params_bitwise_eq(a: &Params, b: &Params, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: tensor count");
+    for (ta, tb) in a.iter().zip(b) {
+        for (va, vb) in ta.iter().zip(tb) {
+            assert_eq!(va.to_bits(), vb.to_bits(), "{what}");
+        }
+    }
+}
+
+#[test]
+fn ordered_fold_is_deterministic() {
+    // Same add sequence, fresh accumulators: identical bytes every time.
+    let updates: Vec<(Params, f64)> =
+        (0..12).map(|i| (dyadic_params(i), weights(12)[i as usize])).collect();
+    let fold = || {
+        let mut acc = WeightedAccum::new();
+        for (p, w) in &updates {
+            acc.add(p, *w);
+        }
+        acc.finish().unwrap()
+    };
+    assert_params_bitwise_eq(&fold(), &fold(), "repeated ordered fold");
+}
+
+#[test]
+fn split_fold_matches_single_fold_bitwise_at_every_split_point() {
+    // Split the update stream at every position k, fold the halves into
+    // separate partial accumulators, merge in order — bitwise the single
+    // fold. This is exactly what a gateway/cluster boundary does to the
+    // hierarchical fold, so parity here is parity there.
+    let n = 10;
+    let ws = weights(n);
+    let updates: Vec<(Params, f64)> =
+        (0..n).map(|i| (dyadic_params(i as u64), ws[i])).collect();
+    let mut single = WeightedAccum::new();
+    for (p, w) in &updates {
+        single.add(p, *w);
+    }
+    let expect = single.finish().unwrap();
+    for k in 0..=n {
+        let mut lo = WeightedAccum::new();
+        for (p, w) in &updates[..k] {
+            lo.add(p, *w);
+        }
+        let mut hi = WeightedAccum::new();
+        for (p, w) in &updates[k..] {
+            hi.add(p, *w);
+        }
+        let mut merged = WeightedAccum::new();
+        merged.merge(lo);
+        merged.merge(hi);
+        assert_eq!(merged.count(), n);
+        assert_params_bitwise_eq(&merged.finish().unwrap(), &expect, &format!("split at {k}"));
+    }
+}
+
+#[test]
+fn nested_three_way_split_matches_single_fold_bitwise() {
+    // Two tier boundaries (gateway -> cluster -> cloud shape): partials
+    // of partials merged in order still reproduce the straight fold.
+    let n = 9;
+    let ws = weights(n);
+    let updates: Vec<(Params, f64)> =
+        (0..n).map(|i| (dyadic_params(40 + i as u64), ws[i])).collect();
+    let mut single = WeightedAccum::new();
+    for (p, w) in &updates {
+        single.add(p, *w);
+    }
+    let mut tiers = WeightedAccum::new();
+    for chunk in updates.chunks(3) {
+        let mut tier = WeightedAccum::new();
+        for (p, w) in chunk {
+            tier.add(p, *w);
+        }
+        tiers.merge(tier);
+    }
+    assert_params_bitwise_eq(
+        &tiers.finish().unwrap(),
+        &single.finish().unwrap(),
+        "three-way tiered fold",
+    );
+}
+
+#[test]
+fn single_device_fold_averages_to_itself() {
+    let p = dyadic_params(3);
+    let mut acc = WeightedAccum::new();
+    acc.add(&p, 7.0);
+    assert_eq!(acc.count(), 1);
+    assert_params_bitwise_eq(&acc.finish().unwrap(), &p, "single-device fold");
+}
+
+#[test]
+fn zero_weight_member_is_invisible_to_the_fold() {
+    // A scheduled-but-weightless member must not move a bit, wherever it
+    // lands in the sequence. (Values here are strictly positive, so the
+    // 0·v = +0.0 contributions are exact additive identities.)
+    let a = vec![vec![1.5f32, 2.0, 0.25]];
+    let b = vec![vec![4.0f32, 0.5, 8.0]];
+    let ghost = vec![vec![3.0f32, 3.0, 3.0]];
+    let mut without = WeightedAccum::new();
+    without.add(&a, 2.0);
+    without.add(&b, 5.0);
+    let expect = without.finish().unwrap();
+    for position in 0..3 {
+        let mut with = WeightedAccum::new();
+        for (i, (p, w)) in [(&a, 2.0), (&b, 5.0)].iter().enumerate() {
+            if i == position {
+                with.add(&ghost, 0.0);
+            }
+            with.add(p, *w);
+        }
+        if position == 2 {
+            with.add(&ghost, 0.0);
+        }
+        assert_eq!(with.count(), 3, "zero-weight adds still count as folded updates");
+        assert_params_bitwise_eq(
+            &with.finish().unwrap(),
+            &expect,
+            &format!("ghost at {position}"),
+        );
+    }
+}
+
+#[test]
+fn empty_fold_is_none_and_zero_total_is_rejected() {
+    // Nothing folded: `None`, the round leaves the model unchanged.
+    assert!(WeightedAccum::new().finish().is_none());
+    assert!(FlatWeightedAccum::new().finish().is_none());
+    // Folded-but-weightless: FedAvg is undefined, and the accumulator
+    // says so loudly instead of dividing by zero.
+    let mut acc = WeightedAccum::new();
+    acc.add(&dyadic_params(1), 0.0);
+    let bad = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| acc.finish()));
+    assert!(bad.is_err(), "zero-total finish must panic");
+}
+
+#[test]
+fn flat_accum_mirrors_the_params_accum_properties() {
+    let mut rng = Rng::new(5);
+    let vecs: Vec<Vec<f32>> = (0..8)
+        .map(|_| (0..6).map(|_| (rng.below(64) as f32 - 32.0) / 8.0).collect())
+        .collect();
+    let ws = weights(8);
+    let mut single = FlatWeightedAccum::new();
+    for (v, w) in vecs.iter().zip(&ws) {
+        single.add(v, *w);
+    }
+    let expect = single.finish().unwrap();
+    for k in 0..=vecs.len() {
+        let mut lo = FlatWeightedAccum::new();
+        for (v, w) in vecs[..k].iter().zip(&ws[..k]) {
+            lo.add(v, *w);
+        }
+        let mut hi = FlatWeightedAccum::new();
+        for (v, w) in vecs[k..].iter().zip(&ws[k..]) {
+            hi.add(v, *w);
+        }
+        lo.merge(hi);
+        let merged = lo.finish().unwrap();
+        for (x, y) in merged.iter().zip(&expect) {
+            assert_eq!(x.to_bits(), y.to_bits(), "flat split at {k}");
+        }
+    }
+}
