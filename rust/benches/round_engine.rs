@@ -19,8 +19,14 @@ use std::fmt::Write as _;
 use std::time::Instant;
 
 use iiot_fl::config::{Aggregation, SimConfig};
+use iiot_fl::dnn::models;
+use iiot_fl::energy::EnergyArrivals;
 use iiot_fl::fl::{SchedulerSpec, Session};
+use iiot_fl::net::ChannelModel;
+use iiot_fl::rng::Rng;
 use iiot_fl::runtime::KernelPath;
+use iiot_fl::sched::{Ddsra, RoundCtx, SchedPath, Scheduler};
+use iiot_fl::topo::Topology;
 
 /// `git describe --always --dirty`, or "unknown" outside a git checkout —
 /// tags the emitted JSON so two bench files can be attributed to commits.
@@ -50,6 +56,52 @@ fn scale_cfg(devices: usize, gateways: usize, channels: usize) -> SimConfig {
     cfg.device_energy_max = 500.0;
     cfg.gw_energy_max = 5000.0;
     cfg
+}
+
+/// Time the SCHEDULING phase alone: DDSRA rounds (Λ matrix + λ-sweep +
+/// queue update) against a generated topology/channel world, no training
+/// engine. Returns (seconds per round, a bit-exact decision digest) —
+/// the digest lets the caller assert sweep/incremental parity in release
+/// numerics, the same oracle `rust/tests/sched_parity.rs` pins.
+fn timed_schedule(
+    cfg: &SimConfig,
+    path: SchedPath,
+    rounds: usize,
+    threads: usize,
+) -> anyhow::Result<(f64, String)> {
+    let pool = rayon::ThreadPoolBuilder::new().num_threads(threads).build()?;
+    pool.install(|| {
+        let mut rng = Rng::new(cfg.seed ^ 0x5c4ed);
+        let topo = Topology::generate(cfg, &mut rng);
+        let chan = ChannelModel::new(cfg, &topo, &mut rng);
+        let model = models::by_name(&cfg.cost_model)
+            .ok_or_else(|| anyhow::anyhow!("unknown cost model {:?}", cfg.cost_model))?;
+        let mut sched = Ddsra::new(cfg.lyapunov_v, vec![0.5; topo.num_gateways()]);
+        sched.parallel = true;
+        sched.sched_path = path;
+        let mut digest = String::new();
+        let t0 = Instant::now();
+        for round in 0..rounds {
+            let state = chan.draw(&mut rng);
+            let arrivals = EnergyArrivals::draw(cfg, &mut rng);
+            let ctx = RoundCtx {
+                cfg,
+                topo: &topo,
+                model: &model,
+                chan: &chan,
+                state: &state,
+                arrivals: &arrivals,
+                round,
+            };
+            let dec = sched.schedule(&ctx);
+            let _ = write!(digest, "{:016x}!", dec.round_delay().to_bits());
+            for p in &dec.plans {
+                let _ = write!(digest, "{}:{}:{:016x};", p.gateway, p.channel, p.lambda.to_bits());
+            }
+        }
+        let per_round = t0.elapsed().as_secs_f64() / rounds as f64;
+        Ok((per_round, digest))
+    })
 }
 
 /// One timed run inside a dedicated rayon pool: returns (seconds per
@@ -262,6 +314,61 @@ fn main() -> anyhow::Result<()> {
          \"devices\": 100000, \"clusters\": 40, \"threads\": {max_threads}, \
          \"sec_per_round\": {per_round:.6}}}"
     );
+    json.push_str("\n  ],\n  \"schedule_phase\": [\n");
+
+    // The scheduling phase alone (the tentpole of the incremental λ-sweep
+    // work): DDSRA rounds with no training engine, per scenario and
+    // sched_path. Where both paths run, their decision digests must agree
+    // bit for bit — the release-numerics face of the parity oracle.
+    println!("\n== schedule phase: DDSRA λ-sweep, sweep vs incremental ==");
+    println!("{:>8} {:>9} {:>9} {:>13} {:>14}", "scenario", "gateways", "channels", "sched_path", "s/round");
+    let grid: &[(&str, usize, bool)] = if smoke {
+        // Plant pins parity; nation shows the scale the incremental
+        // path exists for without paying 16 000 Hungarian solves in CI.
+        &[("plant", 2, true), ("nation", 1, false)]
+    } else {
+        &[("plant", 3, true), ("metro", 2, true), ("nation", 1, true)]
+    };
+    let mut first_row = true;
+    for &(name, rounds, run_sweep) in grid {
+        let mut cfg = SimConfig::default();
+        cfg.apply_scenario(name)?;
+        cfg.device_energy_max = 500.0;
+        cfg.gw_energy_max = 5000.0;
+        let paths: &[SchedPath] = if run_sweep {
+            &[SchedPath::Sweep, SchedPath::Incremental]
+        } else {
+            &[SchedPath::Incremental]
+        };
+        let mut digests: Vec<String> = Vec::new();
+        for &path in paths {
+            let (per_round, digest) = timed_schedule(&cfg, path, rounds, max_threads)?;
+            digests.push(digest);
+            println!(
+                "{name:>8} {:>9} {:>9} {path:>13} {:>12.1}ms",
+                cfg.num_gateways,
+                cfg.num_channels,
+                per_round * 1e3
+            );
+            if !first_row {
+                json.push_str(",\n");
+            }
+            first_row = false;
+            let _ = write!(
+                json,
+                "    {{\"scenario\": \"{name}\", \"gateways\": {}, \"channels\": {}, \
+                 \"sched_path\": \"{path}\", \"threads\": {max_threads}, \
+                 \"sec_per_round\": {per_round:.6}}}",
+                cfg.num_gateways, cfg.num_channels
+            );
+        }
+        if digests.len() == 2 {
+            assert_eq!(
+                digests[0], digests[1],
+                "{name}: incremental λ-sweep diverged from the sweep oracle"
+            );
+        }
+    }
     json.push_str("\n  ]\n}\n");
 
     std::fs::write("BENCH_round_engine.json", &json)?;

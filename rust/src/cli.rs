@@ -154,6 +154,9 @@ impl Args {
         if let Some(k) = self.get("kernel") {
             cfg.kernel = k.parse()?;
         }
+        if let Some(s) = self.get("sched-path") {
+            cfg.sched_path = s.parse()?;
+        }
         if let Some(a) = self.get("aggregation") {
             cfg.aggregation = a.parse()?;
         }
@@ -281,6 +284,28 @@ mod tests {
         assert_eq!(c.sim_config().unwrap().kernel, KernelPath::Vectorized);
         // An unknown path name is a loud parse error, not a default.
         let bad = Args::parse(&sv(&["train", "--kernel", "avx512"])).unwrap();
+        assert!(bad.sim_config().is_err());
+    }
+
+    #[test]
+    fn sched_path_flag_and_set_key_flow_through() {
+        use crate::sched::SchedPath;
+        let a = Args::parse(&sv(&["train", "--sched-path", "sweep"])).unwrap();
+        assert_eq!(a.sim_config().unwrap().sched_path, SchedPath::Sweep);
+        let b = Args::parse(&sv(&["train", "--set", "sched_path=sweep"])).unwrap();
+        assert_eq!(b.sim_config().unwrap().sched_path, SchedPath::Sweep);
+        // The direct flag lands after --set, like every other direct flag.
+        let c = Args::parse(&sv(&[
+            "train",
+            "--set",
+            "sched_path=sweep",
+            "--sched-path",
+            "incremental",
+        ]))
+        .unwrap();
+        assert_eq!(c.sim_config().unwrap().sched_path, SchedPath::Incremental);
+        // An unknown path name is a loud parse error, not a default.
+        let bad = Args::parse(&sv(&["train", "--sched-path", "hungarian"])).unwrap();
         assert!(bad.sim_config().is_err());
     }
 

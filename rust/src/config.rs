@@ -14,6 +14,7 @@ use std::path::Path;
 use anyhow::{bail, Context};
 
 use crate::runtime::KernelPath;
+use crate::sched::SchedPath;
 
 /// Phase-5 aggregation topology. `Flat` folds every surviving update
 /// through one cloud-side `WeightedAccum` in plan order — the original
@@ -170,6 +171,12 @@ pub struct SimConfig {
     /// the bit-exactness oracle). Applies to the native layer-graph
     /// engine only; a PJRT build with artifacts ignores it.
     pub kernel: KernelPath,
+    /// DDSRA λ-sweep path: `incremental` (ascending-cap augmenting-path
+    /// matching, the default) or `sweep` (the verbatim per-cap Hungarian
+    /// re-solve, kept as the decision-parity oracle). Both produce
+    /// bit-identical decisions; only the per-round scheduling cost
+    /// differs. Ignored by the non-DDSRA baseline schedulers.
+    pub sched_path: SchedPath,
     /// Synthetic dataset flavour: "svhn" (easier) or "cifar" (harder).
     pub dataset: String,
     /// Non-IID degree chi (proportion of q_m-class-restricted samples).
@@ -243,6 +250,7 @@ impl Default for SimConfig {
             exec_model: "mlp".into(),
             execute_partition: false,
             kernel: KernelPath::default(),
+            sched_path: SchedPath::default(),
             dataset: "svhn".into(),
             non_iid_degree: 1.0,
             test_size: 2048,
@@ -362,6 +370,8 @@ impl SimConfig {
             }
             // Validated at parse time: only "scalar" / "vectorized" exist.
             "kernel" => self.kernel = val.parse()?,
+            // Validated at parse time: only "sweep" / "incremental" exist.
+            "sched_path" => self.sched_path = val.parse()?,
             "dataset" => self.dataset = val.into(),
             "non_iid_degree" => self.non_iid_degree = num!(),
             "test_size" => self.test_size = num!(),
@@ -859,6 +869,22 @@ mod tests {
 
         // Typos fail loudly instead of silently running the wrong path.
         assert!(SimConfig::from_str_cfg("kernel = simd\n").is_err());
+    }
+
+    #[test]
+    fn sched_path_knob_defaults_incremental_and_parses() {
+        let c = SimConfig::default();
+        assert_eq!(c.sched_path, SchedPath::Incremental);
+        c.validate().unwrap();
+
+        let cfg = SimConfig::from_str_cfg("sched_path = \"sweep\"\n").unwrap();
+        assert_eq!(cfg.sched_path, SchedPath::Sweep);
+        cfg.validate().unwrap();
+        let cfg = SimConfig::from_str_cfg("sched_path = incremental\n").unwrap();
+        assert_eq!(cfg.sched_path, SchedPath::Incremental);
+
+        // Typos fail loudly instead of silently running the wrong path.
+        assert!(SimConfig::from_str_cfg("sched_path = hungarian\n").is_err());
     }
 
     #[test]

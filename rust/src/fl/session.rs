@@ -289,11 +289,18 @@ impl SchedulerSpec {
                 .with_context(|| format!("{} needs the Γ_m participation rates", self.label()))?
                 .to_vec())
         };
+        // Production DDSRA runs the rayon row solves (§V-C) and the
+        // config's λ-sweep path; the serial/sweep combination stays
+        // reachable through `Ddsra::new` for the parity tests.
+        let ddsra = |v: f64| -> Result<Box<dyn Scheduler>> {
+            let mut d = Ddsra::new(v, need_gamma()?);
+            d.parallel = true;
+            d.sched_path = exp.cfg.sched_path;
+            Ok(Box::new(d))
+        };
         Ok(match self {
-            SchedulerSpec::Ddsra { v } => {
-                Box::new(Ddsra::new(v.unwrap_or(exp.cfg.lyapunov_v), need_gamma()?))
-            }
-            SchedulerSpec::Participation => Box::new(Ddsra::new(0.0, need_gamma()?)),
+            SchedulerSpec::Ddsra { v } => ddsra(v.unwrap_or(exp.cfg.lyapunov_v))?,
+            SchedulerSpec::Participation => ddsra(0.0)?,
             SchedulerSpec::Random => Box::new(RandomSched::new(exp.cfg.seed ^ 0xaa11)),
             SchedulerSpec::RoundRobin => Box::new(RoundRobin::new()),
             SchedulerSpec::LossDriven => {

@@ -34,6 +34,7 @@ const COMMON_FLAGS: &[&str] = &[
     "preset",
     "cost-model",
     "kernel",
+    "sched-path",
     "aggregation",
     "execute-partition",
 ];
@@ -92,6 +93,8 @@ fn print_help() {
          \u{20}                --preset mlp|cnn --cost-model vgg11|cnn|mlp\n\
          \u{20}                --kernel vectorized|scalar (native compute path;\n\
          \u{20}                scalar = the bit-exact oracle loops)\n\
+         \u{20}                --sched-path incremental|sweep (DDSRA λ-sweep:\n\
+         \u{20}                sweep = the per-cap Hungarian re-solve oracle)\n\
          \u{20}                --aggregation flat|hierarchical (phase-5 fold:\n\
          \u{20}                flat = one cloud accumulator, hierarchical =\n\
          \u{20}                gateway -> edge cluster -> cloud tier folds)\n\

@@ -106,6 +106,249 @@ fn kuhn_munkres(cost: &[Vec<f64>], n: usize, m: usize) -> (Vec<usize>, f64) {
     (assign, total)
 }
 
+/// Incremental max-weight bipartite matching over a *growing* edge set —
+/// the augmenting-path core of DDSRA's incremental λ-sweep
+/// (`sched_path = incremental`).
+///
+/// The λ-sweep's per-cap assignment has special structure: every
+/// admissible (gateway, channel) edge of row `r` carries the same value
+/// (the queue weight `Q_r`), and raising the cap only ever ADDS edges.
+/// The optimal per-cap objective can therefore change only at caps where
+/// (a) a perfect matching of all columns first exists, or (b) the
+/// maximum total row weight over perfect matchings strictly increases —
+/// and this matcher reports exactly those caps. Feed it the edges in
+/// ascending cap order, one batch per distinct cap value; `add_edges`
+/// returns `true` precisely when one of those two events occurs, which
+/// is the caller's cue to run the verbatim per-cap evaluation.
+///
+/// Matched rows form a base of the transversal matroid induced by the
+/// edge set. The base is kept maximum-weight by exact single exchanges:
+/// an unmatched row `p` displaces the minimum-weight matched row
+/// reachable from `p` via an alternating path whenever `p` is strictly
+/// heavier (the matroid exchange theorem makes "no improving single
+/// exchange" equivalent to global optimality). Columns live in a `u64`
+/// bitmask, so at most 64 columns — J ≤ 16 in every scenario.
+pub struct IncrementalMatcher {
+    /// Per row: bitmask of admissible columns seen so far.
+    adj: Vec<u64>,
+    /// Per row: its exchange weight (DDSRA: the virtual queue Q_m).
+    weight: Vec<f64>,
+    /// Per column: the row currently holding it.
+    col_row: Vec<Option<usize>>,
+    /// Per row: the column it currently holds.
+    row_col: Vec<Option<usize>>,
+    /// Unmatched rows with at least one edge that may still enter the
+    /// matching (not yet pruned).
+    pending: Vec<usize>,
+    in_pending: Vec<bool>,
+    /// Permanently out: once all columns are matched, a row no heavier
+    /// than the lightest matched row can never displace anyone (the
+    /// minimum matched weight is non-decreasing from that point on).
+    pruned: Vec<bool>,
+    matched: usize,
+    cols: usize,
+    /// Latch: has the matching ever been perfect? The perfection event
+    /// fires exactly once, on the batch that completes the matching.
+    was_perfect: bool,
+}
+
+impl IncrementalMatcher {
+    /// `weights[r]` is row r's exchange weight; `cols` ≤ 64.
+    pub fn new(weights: &[f64], cols: usize) -> Self {
+        assert!(cols <= 64, "IncrementalMatcher supports at most 64 columns, got {cols}");
+        IncrementalMatcher {
+            adj: vec![0; weights.len()],
+            weight: weights.to_vec(),
+            col_row: vec![None; cols],
+            row_col: vec![None; weights.len()],
+            pending: Vec::new(),
+            in_pending: vec![false; weights.len()],
+            pruned: vec![false; weights.len()],
+            matched: 0,
+            cols,
+            was_perfect: false,
+        }
+    }
+
+    /// All columns matched?
+    pub fn is_perfect(&self) -> bool {
+        self.matched == self.cols
+    }
+
+    /// Row currently matched to column `c` (test/diagnostic accessor).
+    pub fn holder(&self, c: usize) -> Option<usize> {
+        self.col_row[c]
+    }
+
+    /// Add one batch of edges that become admissible simultaneously (all
+    /// edges of one cap value). Returns `true` when the matching crossed
+    /// an objective-relevant boundary: the matching first became perfect,
+    /// or a strictly heavier row displaced a matched one while perfect.
+    pub fn add_edges(&mut self, batch: &[(usize, usize)]) -> bool {
+        for &(r, c) in batch {
+            debug_assert!(c < self.cols);
+            self.adj[r] |= 1 << c;
+            if self.row_col[r].is_none() && !self.in_pending[r] && !self.pruned[r] {
+                self.in_pending[r] = true;
+                self.pending.push(r);
+            }
+        }
+
+        let mut event = false;
+
+        // Cardinality phase: grow the matching by plain augmenting paths
+        // until no pending row can be matched. New edges on already
+        // matched rows can unlock paths for older pending rows, so sweep
+        // the whole pending list until a full pass makes no progress.
+        while self.matched < self.cols {
+            let mut progress = false;
+            let mut i = 0;
+            while i < self.pending.len() {
+                let p = self.pending[i];
+                let mut visited = 0u64;
+                if self.try_augment(p, &mut visited) {
+                    self.matched += 1;
+                    self.in_pending[p] = false;
+                    self.pending.swap_remove(i);
+                    progress = true;
+                } else {
+                    i += 1;
+                }
+            }
+            if !progress {
+                break;
+            }
+        }
+        if self.is_perfect() && !self.was_perfect {
+            self.was_perfect = true;
+            event = true;
+        }
+
+        // Weight phase: with every column held, pending rows can only
+        // enter by displacing a strictly lighter reachable row. Repeat
+        // until no improving exchange remains — the base is then the
+        // maximum-weight one, so an exchange here means the optimal
+        // weight strictly increased at exactly this cap.
+        if self.is_perfect() {
+            loop {
+                let mut improved = false;
+                let mut i = 0;
+                while i < self.pending.len() {
+                    let p = self.pending[i];
+                    if let Some(q) = self.min_reachable(p) {
+                        if self.weight[p] > self.weight[q] {
+                            self.exchange(p, q);
+                            self.in_pending[p] = false;
+                            self.pending.swap_remove(i);
+                            if !self.in_pending[q] && !self.pruned[q] {
+                                self.in_pending[q] = true;
+                                self.pending.push(q);
+                            }
+                            improved = true;
+                            event = true;
+                            continue;
+                        }
+                    }
+                    i += 1;
+                }
+                if !improved {
+                    break;
+                }
+            }
+            self.prune_pending();
+        }
+        event
+    }
+
+    /// Standard Kuhn augmenting DFS from `root` over `visited` columns.
+    fn try_augment(&mut self, root: usize, visited: &mut u64) -> bool {
+        let mut cands = self.adj[root] & !*visited;
+        while cands != 0 {
+            let c = cands.trailing_zeros() as usize;
+            cands &= cands - 1;
+            *visited |= 1 << c;
+            match self.col_row[c] {
+                None => {
+                    self.col_row[c] = Some(root);
+                    self.row_col[root] = Some(c);
+                    return true;
+                }
+                Some(q) => {
+                    if self.try_augment(q, visited) {
+                        self.col_row[c] = Some(root);
+                        self.row_col[root] = Some(c);
+                        return true;
+                    }
+                }
+            }
+        }
+        false
+    }
+
+    /// Minimum-weight matched row reachable from unmatched row `p` via
+    /// an alternating path (edge to a column, then that column's holder,
+    /// and so on). With every column matched, these are exactly the rows
+    /// `q` for which base − q + p is again a base.
+    fn min_reachable(&self, p: usize) -> Option<usize> {
+        let mut seen = 0u64;
+        let mut frontier = self.adj[p];
+        let mut best: Option<usize> = None;
+        while frontier != 0 {
+            seen |= frontier;
+            let mut next = 0u64;
+            let mut bits = frontier;
+            while bits != 0 {
+                let c = bits.trailing_zeros() as usize;
+                bits &= bits - 1;
+                if let Some(q) = self.col_row[c] {
+                    if best.is_none_or(|b| self.weight[q] < self.weight[b]) {
+                        best = Some(q);
+                    }
+                    next |= self.adj[q];
+                }
+            }
+            frontier = next & !seen;
+        }
+        best
+    }
+
+    /// Evict `q` and re-match `p`: the column `q` held is reachable from
+    /// `p`, so the augmentation is guaranteed to succeed (restored
+    /// defensively if it somehow does not).
+    fn exchange(&mut self, p: usize, q: usize) {
+        let freed = self.row_col[q].expect("exchange target must be matched");
+        self.col_row[freed] = None;
+        self.row_col[q] = None;
+        let mut visited = 0u64;
+        if !self.try_augment(p, &mut visited) {
+            self.col_row[freed] = Some(q);
+            self.row_col[q] = Some(freed);
+            debug_assert!(false, "reachable eviction must re-augment");
+        }
+    }
+
+    /// Drop pending rows that can never displace anyone again: the
+    /// minimum matched weight only rises from here on.
+    fn prune_pending(&mut self) {
+        let min_w = self
+            .col_row
+            .iter()
+            .filter_map(|h| h.map(|q| self.weight[q]))
+            .fold(f64::INFINITY, f64::min);
+        let mut i = 0;
+        while i < self.pending.len() {
+            let p = self.pending[i];
+            if self.weight[p] <= min_w {
+                self.pruned[p] = true;
+                self.in_pending[p] = false;
+                self.pending.swap_remove(i);
+            } else {
+                i += 1;
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -291,6 +534,116 @@ mod tests {
         let (a, c) = hungarian_min(&cost);
         assert_eq!(c, -9.0);
         assert_eq!(a, vec![Some(0), Some(1)]);
+    }
+
+    /// Reference for the incremental matcher: per-batch from-scratch
+    /// Hungarian over the edges seen so far (−w admissible, Ψ otherwise).
+    /// Returns (perfect matching exists, max total weight when it does).
+    fn hungarian_reference(adj: &[u64], weights: &[f64], cols: usize) -> (bool, f64) {
+        const PSI: f64 = 1e15;
+        let cost: Vec<Vec<f64>> = adj
+            .iter()
+            .enumerate()
+            .map(|(r, &mask)| {
+                (0..cols)
+                    .map(|c| if mask & (1 << c) != 0 { -weights[r] } else { PSI })
+                    .collect()
+            })
+            .collect();
+        let (_, total) = hungarian_min(&cost);
+        if total >= PSI / 2.0 {
+            (false, 0.0)
+        } else {
+            (true, -total)
+        }
+    }
+
+    /// The matcher's contract, against brute force: `add_edges` returns
+    /// true exactly when a perfect matching first exists or the optimal
+    /// perfect-matching weight strictly increases. Integer weights keep
+    /// every total exact, so equality comparisons are safe.
+    #[test]
+    fn incremental_matcher_events_match_hungarian_reference() {
+        let mut rng = Rng::new(77);
+        for case in 0..300 {
+            let rows = 1 + rng.below(9);
+            let cols = 1 + rng.below(6);
+            let weights: Vec<f64> = (0..rows).map(|_| rng.below(40) as f64).collect();
+            let mut m = IncrementalMatcher::new(&weights, cols);
+            let mut adj = vec![0u64; rows];
+            let (mut was_perfect, mut best_w) = (false, 0.0);
+            for _batch in 0..12 {
+                let n_edges = 1 + rng.below(3);
+                let batch: Vec<(usize, usize)> = (0..n_edges)
+                    .map(|_| (rng.below(rows), rng.below(cols)))
+                    .collect();
+                let event = m.add_edges(&batch);
+                for &(r, c) in &batch {
+                    adj[r] |= 1 << c;
+                }
+                let (perfect, w) = hungarian_reference(&adj, &weights, cols);
+                let expect = perfect && (!was_perfect || w > best_w);
+                assert_eq!(
+                    event, expect,
+                    "case {case}: event {event} vs expected {expect} \
+                     (perfect {perfect}, w {w}, prev {best_w}, adj {adj:?}, weights {weights:?})"
+                );
+                assert_eq!(m.is_perfect(), perfect, "case {case}");
+                if perfect {
+                    // The matched base must itself be maximum-weight.
+                    let got: f64 = (0..cols).map(|c| weights[m.holder(c).unwrap()]).sum();
+                    assert_eq!(got, w, "case {case}: base weight {got} != optimal {w}");
+                    was_perfect = true;
+                    best_w = w;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn incremental_matcher_known_sequence() {
+        // 4 rows (weights 10, 2, 8, 5), 2 columns.
+        let mut m = IncrementalMatcher::new(&[10.0, 2.0, 8.0, 5.0], 2);
+        // Row 1 on col 0: not perfect yet — no event.
+        assert!(!m.add_edges(&[(1, 0)]));
+        // Row 3 on col 1: perfect for the first time — event.
+        assert!(m.add_edges(&[(3, 1)]));
+        assert!(m.is_perfect());
+        // Row 2 can take col 0 from row 1 (8 > 2) — weight rose, event.
+        assert!(m.add_edges(&[(2, 0)]));
+        assert_eq!(m.holder(0), Some(2));
+        // A lighter row gains an edge: no displacement, no event.
+        assert!(!m.add_edges(&[(1, 1)]));
+        // Row 0 reaches col 1 only; evicts row 3 (10 > 5) — event. Row 3
+        // has no other column, and the displaced chain stops there.
+        assert!(m.add_edges(&[(0, 1)]));
+        assert_eq!(m.holder(1), Some(0));
+        // Duplicate edges change nothing.
+        assert!(!m.add_edges(&[(0, 1), (2, 0)]));
+    }
+
+    #[test]
+    fn incremental_matcher_eviction_cascades_via_alternating_path() {
+        // Base {5 on c0, 3 on c1}; row of weight 10 sees only c0. The
+        // exchange must evict the reachable minimum (the 5 — the 3 is
+        // NOT reachable), and the evicted row must return to pending so
+        // a later edge lets it displace the 3.
+        let mut m = IncrementalMatcher::new(&[5.0, 3.0, 10.0], 2);
+        assert!(m.add_edges(&[(0, 0), (1, 1)]));
+        assert!(m.add_edges(&[(2, 0)]));
+        assert_eq!(m.holder(0), Some(2));
+        // Evicted row 0 (weight 5) later reaches c1: displaces the 3.
+        assert!(m.add_edges(&[(0, 1)]));
+        assert_eq!(m.holder(1), Some(0));
+    }
+
+    #[test]
+    fn incremental_matcher_never_perfect_when_columns_unreachable() {
+        // Column 1 never gains an edge: no event, ever.
+        let mut m = IncrementalMatcher::new(&[4.0, 7.0, 1.0], 2);
+        assert!(!m.add_edges(&[(0, 0)]));
+        assert!(!m.add_edges(&[(1, 0), (2, 0)]));
+        assert!(!m.is_perfect());
     }
 
     #[test]

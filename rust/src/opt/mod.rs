@@ -6,5 +6,5 @@
 pub mod hungarian;
 pub mod scalar;
 
-pub use hungarian::hungarian_min;
+pub use hungarian::{hungarian_min, IncrementalMatcher};
 pub use scalar::{bisect_decreasing, bisect_root};

@@ -16,6 +16,54 @@ use crate::energy::EnergyArrivals;
 use crate::net::{ChannelModel, ChannelState};
 use crate::topo::Topology;
 
+/// Which λ-sweep implementation DDSRA's channel-assignment step runs.
+///
+/// `Sweep` is the original Eq. 26–31 machinery kept verbatim: a fresh
+/// Θ cost matrix and an O(n³) Hungarian solve for every candidate cap —
+/// the decision-parity oracle. `Incremental` (the default) walks the
+/// caps in ascending order maintaining a max-weight matching over the
+/// growing admissibility graph via augmenting paths, and only runs the
+/// verbatim per-cap evaluation at the few caps where the matching
+/// actually changes. Both paths produce bit-identical [`Decision`]s
+/// (`rust/tests/sched_parity.rs`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum SchedPath {
+    /// Verbatim per-cap Hungarian re-solve — the decision-parity oracle.
+    Sweep,
+    /// Ascending-cap augmenting-path matching — the fast default.
+    #[default]
+    Incremental,
+}
+
+impl SchedPath {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SchedPath::Sweep => "sweep",
+            SchedPath::Incremental => "incremental",
+        }
+    }
+}
+
+impl std::fmt::Display for SchedPath {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for SchedPath {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "sweep" => Ok(SchedPath::Sweep),
+            "incremental" => Ok(SchedPath::Incremental),
+            other => anyhow::bail!(
+                "unknown sched path {other:?} (expected \"sweep\" or \"incremental\")"
+            ),
+        }
+    }
+}
+
 /// Everything a scheduler may observe at the start of round t.
 pub struct RoundCtx<'a> {
     pub cfg: &'a SimConfig,

@@ -1,0 +1,108 @@
+//! Allocation budget for the DDSRA scheduling hot path: one warm
+//! plant-scale (M = 24, J = 8, N = 240) `schedule()` call must stay
+//! within a small fixed budget. The per-gateway [`GatewayCtx`] tables,
+//! the row-shared solve scratch and the incremental λ-sweep keep the
+//! round to O(M) modest buffers — the pre-refactor solver allocated a
+//! fresh frequency vector for every one of the ~80 bisection probes of
+//! every BCD iteration of every (m, j) pair, plus a Hungarian cost
+//! matrix per candidate cap (M·J of them). Measured with a
+//! bytes-counting global allocator, so the whole binary holds exactly
+//! ONE test — a concurrent test would pollute the counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use iiot_fl::config::SimConfig;
+use iiot_fl::dnn::models;
+use iiot_fl::energy::EnergyArrivals;
+use iiot_fl::net::ChannelModel;
+use iiot_fl::rng::Rng;
+use iiot_fl::sched::{Ddsra, RoundCtx, SchedPath, Scheduler};
+use iiot_fl::topo::Topology;
+
+/// Counts every allocated byte (frees are ignored: the budget is on
+/// allocation traffic, which is what costs time in the hot loop).
+struct CountingAlloc;
+
+static ALLOCATED: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOCATED.fetch_add(l.size() as u64, Ordering::Relaxed);
+        System.alloc(l)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATED.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(p, l, new_size)
+    }
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        ALLOCATED.fetch_add(l.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(l)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+fn spent() -> u64 {
+    ALLOCATED.load(Ordering::Relaxed)
+}
+
+#[test]
+fn plant_scale_schedule_stays_within_allocation_budget() {
+    let mut cfg = SimConfig::default();
+    cfg.apply_scenario("plant").unwrap(); // N = 240, M = 24, J = 8
+    let mut rng = Rng::new(0xa110c);
+    let topo = Topology::generate(&cfg, &mut rng);
+    let chan = ChannelModel::new(&cfg, &topo, &mut rng);
+    let model = models::by_name(&cfg.cost_model).unwrap();
+
+    // Serial solves: the budget targets the algorithm's own traffic, not
+    // rayon's per-task bookkeeping (parity with the parallel path is
+    // pinned elsewhere).
+    let mut d = Ddsra::new(cfg.lyapunov_v, vec![0.5; topo.num_gateways()]);
+    assert_eq!(d.sched_path, SchedPath::Incremental);
+
+    // Warmup round: faults any lazily initialized runtime state.
+    let state = chan.draw(&mut rng);
+    let arr = EnergyArrivals::draw(&cfg, &mut rng);
+    let warm = RoundCtx {
+        cfg: &cfg,
+        topo: &topo,
+        model: &model,
+        chan: &chan,
+        state: &state,
+        arrivals: &arr,
+        round: 0,
+    };
+    let _ = d.schedule(&warm);
+
+    // One measured round. Expected traffic: 24 GatewayCtx table sets
+    // (~10 KB each), one scratch set + the per-iterate plan clones per
+    // row, the edge list, and a Θ matrix per matcher EVENT (≈ J·ln(M/J),
+    // not per cap) — a few hundred KB in total. The historical per-probe
+    // frequency vectors alone were ~46 000 allocations per round.
+    let state = chan.draw(&mut rng);
+    let arr = EnergyArrivals::draw(&cfg, &mut rng);
+    let round = RoundCtx {
+        cfg: &cfg,
+        topo: &topo,
+        model: &model,
+        chan: &chan,
+        state: &state,
+        arrivals: &arr,
+        round: 1,
+    };
+    let t0 = spent();
+    let dec = d.schedule(&round);
+    let bytes = spent() - t0;
+    assert!(dec.plans.len() <= cfg.num_channels);
+    assert!(
+        bytes < 2 << 20,
+        "one plant-scale schedule() allocated {bytes} bytes (> 2 MB) — \
+         per-probe or per-cap buffers are back in the hot path"
+    );
+}

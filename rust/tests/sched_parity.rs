@@ -1,0 +1,148 @@
+//! λ-sweep path parity: DDSRA's `incremental` channel assignment must
+//! make BIT-identical decisions to the verbatim per-cap `sweep` oracle —
+//! same (gateway, channel) selections, same Λ bits, same queue
+//! trajectories. Pinned three ways:
+//!
+//! * a randomized property suite over synthetic Λ/queue matrices
+//!   (duplicate caps, infeasible pairs, all-infeasible rounds, V = 0 and
+//!   huge-V regimes, rows > cols);
+//! * whole-run parity on the `paper` scenario through the real session
+//!   engine (schedule-only, both paths, byte-identical logs);
+//! * a nation-scale (M = 2000, J = 8) schedule smoke on the default
+//!   incremental path — the scale the incremental sweep exists for.
+
+mod common;
+
+use common::serialize;
+use iiot_fl::config::SimConfig;
+use iiot_fl::dnn::models;
+use iiot_fl::energy::EnergyArrivals;
+use iiot_fl::fl::{SchedulerSpec, Session};
+use iiot_fl::net::ChannelModel;
+use iiot_fl::rng::Rng;
+use iiot_fl::sched::{Ddsra, Decision, GatewayPlan, RoundCtx, SchedPath, Scheduler};
+use iiot_fl::topo::Topology;
+
+/// Decision fingerprint: selection order AND exact Λ bits.
+fn key(d: &Decision) -> Vec<(usize, usize, u64)> {
+    d.plans.iter().map(|p| (p.gateway, p.channel, p.lambda.to_bits())).collect()
+}
+
+fn synthetic_plan(m: usize, j: usize, lambda: f64) -> GatewayPlan {
+    GatewayPlan { gateway: m, channel: j, power: 1.0, partition: vec![], freq: vec![], lambda }
+}
+
+/// Random Λ matrices with duplicate caps and infeasible holes: both paths
+/// must pick the exact same assignment, for every V regime.
+#[test]
+fn randomized_synthetic_assignments_agree_bit_for_bit() {
+    let mut rng = Rng::new(0x5eed);
+    let vs = [0.0, 0.5, 100.0, 1e12];
+    for case in 0..400 {
+        let mm = 1 + rng.below(10);
+        let jj = 1 + rng.below(mm.min(6));
+        let v = vs[case % vs.len()];
+        let queues: Vec<f64> = (0..mm).map(|_| rng.uniform(0.0, 20.0)).collect();
+
+        // Λ pool with deliberate repeats so caps collide into one batch
+        // exactly as `caps.dedup()` merges them on the oracle side.
+        let pool: Vec<f64> = (0..4).map(|_| rng.uniform(0.1, 50.0)).collect();
+        let all_infeasible = case % 50 == 49;
+        let plans: Vec<Vec<Option<GatewayPlan>>> = (0..mm)
+            .map(|m| {
+                (0..jj)
+                    .map(|j| {
+                        if all_infeasible || rng.f64() < 0.35 {
+                            return None;
+                        }
+                        let lambda = if rng.f64() < 0.4 {
+                            pool[rng.below(pool.len())]
+                        } else {
+                            rng.uniform(0.1, 50.0)
+                        };
+                        Some(synthetic_plan(m, j, lambda))
+                    })
+                    .collect()
+            })
+            .collect();
+
+        let mut sweep = Ddsra::new(v, vec![0.0; mm]);
+        sweep.sched_path = SchedPath::Sweep;
+        sweep.queues = queues.clone();
+        let mut inc = Ddsra::new(v, vec![0.0; mm]);
+        inc.queues = queues;
+        assert_eq!(inc.sched_path, SchedPath::Incremental);
+
+        let ds = sweep.assign(plans.clone());
+        let di = inc.assign(plans);
+        assert_eq!(key(&ds), key(&di), "case {case}: v={v} M={mm} J={jj}");
+        if all_infeasible {
+            assert!(ds.plans.is_empty(), "case {case}: expected an empty decision");
+        }
+    }
+}
+
+/// Whole-run parity through the real engine: `paper` scenario,
+/// schedule-only, 8 rounds — the sweep-path and incremental-path logs
+/// must serialize to the same bytes (delays, selections, queues and all).
+#[test]
+fn paper_scenario_runs_are_byte_identical_across_paths() {
+    let run = |path: SchedPath| {
+        let mut cfg = SimConfig::default();
+        cfg.apply_scenario("paper").unwrap();
+        cfg.sched_path = path;
+        cfg.rounds = 8;
+        let session =
+            Session::builder(cfg).rounds(8).eval_every(8).schedule_only().build().unwrap();
+        serialize(&session.run(&SchedulerSpec::ddsra()).unwrap())
+    };
+    assert_eq!(
+        run(SchedPath::Sweep),
+        run(SchedPath::Incremental),
+        "sweep and incremental λ-sweep paths diverged over a full paper run"
+    );
+}
+
+/// Nation-scale schedule smoke: one DDSRA round at M = 2000, J = 8 on the
+/// default (incremental, rayon-parallel) production path. The generous
+/// energy budgets keep the round feasible, as in the CI nation smoke.
+#[test]
+fn nation_scale_schedule_round_on_default_path() {
+    let mut cfg = SimConfig::default();
+    cfg.apply_scenario("nation").unwrap();
+    cfg.device_energy_max = 500.0;
+    cfg.gw_energy_max = 5000.0;
+    cfg.validate().unwrap();
+    let mut rng = Rng::new(99);
+    let topo = Topology::generate(&cfg, &mut rng);
+    let chan = ChannelModel::new(&cfg, &topo, &mut rng);
+    let model = models::by_name(&cfg.cost_model).unwrap();
+    let state = chan.draw(&mut rng);
+    let arr = EnergyArrivals::draw(&cfg, &mut rng);
+    let ctx = RoundCtx {
+        cfg: &cfg,
+        topo: &topo,
+        model: &model,
+        chan: &chan,
+        state: &state,
+        arrivals: &arr,
+        round: 0,
+    };
+
+    let mut d = Ddsra::new(cfg.lyapunov_v, vec![0.5; topo.num_gateways()]);
+    d.parallel = true;
+    assert_eq!(d.sched_path, SchedPath::Incremental);
+    let dec = d.schedule(&ctx);
+    assert!(!dec.plans.is_empty(), "nation round scheduled nothing");
+    assert!(dec.plans.len() <= cfg.num_channels);
+    let mut gws: Vec<_> = dec.plans.iter().map(|p| p.gateway).collect();
+    let mut chs: Vec<_> = dec.plans.iter().map(|p| p.channel).collect();
+    gws.sort_unstable();
+    chs.sort_unstable();
+    let (gl, cl) = (gws.len(), chs.len());
+    gws.dedup();
+    chs.dedup();
+    assert_eq!(gws.len(), gl, "gateway selected twice");
+    assert_eq!(chs.len(), cl, "channel assigned twice");
+    assert!(dec.round_delay().is_finite() && dec.round_delay() > 0.0);
+}
