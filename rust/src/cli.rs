@@ -160,6 +160,12 @@ impl Args {
         if let Some(a) = self.get("aggregation") {
             cfg.aggregation = a.parse()?;
         }
+        if let Some(t) = self.get("transport") {
+            cfg.transport = t.parse()?;
+        }
+        if let Some(a) = self.get("gateway-addr") {
+            cfg.gateway_addr = a.to_string();
+        }
         if self.has("execute-partition") {
             cfg.execute_partition = true;
         }
@@ -327,6 +333,49 @@ mod tests {
         .unwrap();
         assert_eq!(c.sim_config().unwrap().aggregation, Aggregation::Flat);
         let bad = Args::parse(&sv(&["train", "--aggregation", "pyramidal"])).unwrap();
+        assert!(bad.sim_config().is_err());
+    }
+
+    #[test]
+    fn transport_flag_and_set_key_flow_through() {
+        use crate::config::Transport;
+        // tcp needs an executed partition with matching models to validate.
+        let a = Args::parse(&sv(&[
+            "train",
+            "--transport",
+            "tcp",
+            "--gateway-addr",
+            "127.0.0.1:9901",
+            "--execute-partition",
+            "--preset",
+            "mlp",
+            "--cost-model",
+            "mlp",
+        ]))
+        .unwrap();
+        let cfg = a.sim_config().unwrap();
+        assert_eq!(cfg.transport, Transport::Tcp);
+        assert_eq!(cfg.gateway_addr, "127.0.0.1:9901");
+        let b = Args::parse(&sv(&[
+            "train",
+            "--set",
+            "transport=tcp",
+            "--set",
+            "execute_partition=1",
+            "--set",
+            "cost_model=mlp",
+            "--set",
+            "wire_timeout_ms=750",
+        ]))
+        .unwrap();
+        let cfg = b.sim_config().unwrap();
+        assert_eq!(cfg.transport, Transport::Tcp);
+        assert_eq!(cfg.wire_timeout_ms, 750);
+        // tcp without --execute-partition is rejected at validation...
+        let bad = Args::parse(&sv(&["train", "--transport", "tcp"])).unwrap();
+        assert!(bad.sim_config().is_err());
+        // ...and an unknown transport is a loud parse error.
+        let bad = Args::parse(&sv(&["train", "--transport", "udp"])).unwrap();
         assert!(bad.sim_config().is_err());
     }
 

@@ -50,6 +50,40 @@ impl std::fmt::Display for Aggregation {
     }
 }
 
+/// Split-execution transport. `Inproc` runs both halves in this process
+/// through `PartitionedBackend` — the original path and the byte-parity
+/// oracle. `Tcp` runs the device half here and the gateway half behind a
+/// `net::serve` gateway service over the length-prefixed wire protocol
+/// (`net::wire`); a loopback tcp run is byte-identical to the inproc run
+/// at every cut (`rust/tests/wire.rs`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Transport {
+    #[default]
+    Inproc,
+    Tcp,
+}
+
+impl std::str::FromStr for Transport {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "inproc" => Ok(Transport::Inproc),
+            "tcp" => Ok(Transport::Tcp),
+            other => bail!("unknown transport {other:?} (known: inproc, tcp)"),
+        }
+    }
+}
+
+impl std::fmt::Display for Transport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Transport::Inproc => "inproc",
+            Transport::Tcp => "tcp",
+        })
+    }
+}
+
 /// Deterministic-adversity knobs (`fault.*` config keys): Dirichlet
 /// non-IID sharding, stragglers, mid-round device dropout, and gateway
 /// outages. All default to "off" so the benign paper environment stays
@@ -171,6 +205,18 @@ pub struct SimConfig {
     /// the bit-exactness oracle). Applies to the native layer-graph
     /// engine only; a PJRT build with artifacts ignores it.
     pub kernel: KernelPath,
+    /// Split-execution transport (`inproc` or `tcp`). `tcp` requires
+    /// `execute_partition` (the wire carries the split exchange), flat
+    /// aggregation (the gateway service hosts one `WeightedAccum` fold),
+    /// and a reachable `gateway_addr`.
+    pub transport: Transport,
+    /// Gateway-service address a `tcp` run dials (and the default listen
+    /// address of `serve-gateway`).
+    pub gateway_addr: String,
+    /// Dial/read/write timeout for wire exchanges, milliseconds. On
+    /// expiry the peer counts as lost and the device maps onto the
+    /// `FaultPlan` dropout path.
+    pub wire_timeout_ms: u64,
     /// DDSRA λ-sweep path: `incremental` (ascending-cap augmenting-path
     /// matching, the default) or `sweep` (the verbatim per-cap Hungarian
     /// re-solve, kept as the decision-parity oracle). Both produce
@@ -250,6 +296,9 @@ impl Default for SimConfig {
             exec_model: "mlp".into(),
             execute_partition: false,
             kernel: KernelPath::default(),
+            transport: Transport::Inproc,
+            gateway_addr: "127.0.0.1:7700".into(),
+            wire_timeout_ms: 5000,
             sched_path: SchedPath::default(),
             dataset: "svhn".into(),
             non_iid_degree: 1.0,
@@ -370,6 +419,10 @@ impl SimConfig {
             }
             // Validated at parse time: only "scalar" / "vectorized" exist.
             "kernel" => self.kernel = val.parse()?,
+            // Validated at parse time: only "inproc" / "tcp" exist.
+            "transport" => self.transport = val.parse()?,
+            "gateway_addr" => self.gateway_addr = val.into(),
+            "wire_timeout_ms" => self.wire_timeout_ms = num!(),
             // Validated at parse time: only "sweep" / "incremental" exist.
             "sched_path" => self.sched_path = val.parse()?,
             "dataset" => self.dataset = val.into(),
@@ -587,6 +640,27 @@ impl SimConfig {
                 self.cost_model,
                 self.exec_model
             );
+        }
+        if self.transport == Transport::Tcp {
+            if !self.execute_partition {
+                bail!(
+                    "transport = tcp requires execute_partition: the wire carries the \
+                     split exchange (smashed activations / cut gradients), so there must \
+                     be a partition to execute"
+                );
+            }
+            if self.aggregation != Aggregation::Flat {
+                bail!(
+                    "transport = tcp requires aggregation = flat: the gateway service \
+                     hosts a single flat WeightedAccum fold"
+                );
+            }
+            if self.gateway_addr.is_empty() {
+                bail!("transport = tcp requires a non-empty gateway_addr");
+            }
+        }
+        if self.wire_timeout_ms == 0 {
+            bail!("wire_timeout_ms must be > 0 (it is the peer-lost detection horizon)");
         }
         let f = &self.fault;
         if !(f.dirichlet_alpha >= 0.0 && f.dirichlet_alpha.is_finite()) {
@@ -869,6 +943,52 @@ mod tests {
 
         // Typos fail loudly instead of silently running the wrong path.
         assert!(SimConfig::from_str_cfg("kernel = simd\n").is_err());
+    }
+
+    #[test]
+    fn transport_knob_defaults_inproc_and_parses() {
+        let c = SimConfig::default();
+        assert_eq!(c.transport, Transport::Inproc);
+        assert_eq!(c.gateway_addr, "127.0.0.1:7700");
+        assert_eq!(c.wire_timeout_ms, 5000);
+        c.validate().unwrap();
+
+        let cfg = SimConfig::from_str_cfg(
+            "transport = \"tcp\"\ngateway_addr = \"127.0.0.1:9901\"\n\
+             wire_timeout_ms = 750\nexecute_partition = true\n\
+             cost_model = \"mlp\"\nexec_model = \"mlp\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.transport, Transport::Tcp);
+        assert_eq!(cfg.gateway_addr, "127.0.0.1:9901");
+        assert_eq!(cfg.wire_timeout_ms, 750);
+        cfg.validate().unwrap();
+
+        // Typos fail loudly instead of silently running in-process.
+        assert!(SimConfig::from_str_cfg("transport = udp\n").is_err());
+    }
+
+    #[test]
+    fn transport_tcp_validation_requires_split_and_flat_fold() {
+        // tcp without a partition to execute is meaningless.
+        let mut c = SimConfig::default();
+        c.transport = Transport::Tcp;
+        assert!(c.validate().unwrap_err().to_string().contains("execute_partition"));
+        // Armed correctly it validates...
+        c.execute_partition = true;
+        c.cost_model = "mlp".into();
+        c.validate().unwrap();
+        // ...but not over a hierarchical fold,
+        c.aggregation = Aggregation::Hierarchical;
+        assert!(c.validate().unwrap_err().to_string().contains("flat"));
+        c.aggregation = Aggregation::Flat;
+        // nor with nowhere to dial,
+        c.gateway_addr.clear();
+        assert!(c.validate().unwrap_err().to_string().contains("gateway_addr"));
+        c.gateway_addr = "127.0.0.1:7700".into();
+        // nor with a zero peer-lost horizon.
+        c.wire_timeout_ms = 0;
+        assert!(c.validate().unwrap_err().to_string().contains("wire_timeout_ms"));
     }
 
     #[test]

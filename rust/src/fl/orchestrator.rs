@@ -43,6 +43,7 @@ use crate::net::ChannelModel;
 use crate::rng::Rng;
 use crate::runtime::{
     make_backend_kernel, make_partitioned_stack_kernel, Backend, Params, PartitionedBackend,
+    RemoteBackend,
 };
 use crate::sched::Scheduler;
 use crate::topo::Topology;
@@ -189,6 +190,14 @@ pub struct Experiment {
     /// round loop dispatches device n's local step to
     /// `partitioned[plan.partition[n]]`.
     pub partitioned: Vec<PartitionedBackend>,
+    /// Wire-level split execution (`cfg.transport == tcp`): the shared
+    /// connection pool to the gateway service. `Some` also routes the
+    /// phase-5 fold through the gateway ([`crate::net::transport::FoldSession`]).
+    pub(crate) wire: Option<std::sync::Arc<crate::net::transport::ConnPool>>,
+    /// Remote split backends indexed by partition point, mirroring
+    /// `partitioned` (built only under `transport = tcp`). Local steps
+    /// dispatch here first when non-empty.
+    pub(crate) remote: Vec<RemoteBackend>,
 }
 
 impl Experiment {
@@ -254,7 +263,40 @@ impl Experiment {
         } else {
             Vec::new()
         };
-        Ok(Experiment { cfg, topo, cost_model, chan, shards, test_x, test_y, engine, partitioned })
+        // Wire-level split (`transport = tcp`): one shared pool to the
+        // gateway service, and a RemoteBackend per cut wrapping a second
+        // stack (device-half math + metadata live in the wrapped backend;
+        // the gateway half executes behind the wire). Validation already
+        // pinned execute_partition, so `partitioned` above is non-empty
+        // and stays THE in-process byte-parity oracle.
+        let (wire, remote) = if cfg.transport == crate::config::Transport::Tcp {
+            let pool = std::sync::Arc::new(crate::net::transport::ConnPool::new(
+                &cfg.gateway_addr,
+                cfg.wire_timeout_ms,
+                &cfg.exec_model,
+                cfg.kernel,
+            ));
+            let remote = make_partitioned_stack_kernel(&cfg.exec_model, cfg.kernel)?
+                .into_iter()
+                .map(|b| RemoteBackend::new(b, pool.clone()))
+                .collect();
+            (Some(pool), remote)
+        } else {
+            (None, Vec::new())
+        };
+        Ok(Experiment {
+            cfg,
+            topo,
+            cost_model,
+            chan,
+            shards,
+            test_x,
+            test_y,
+            engine,
+            partitioned,
+            wire,
+            remote,
+        })
     }
 
     /// Γ_m participation rates (Eq. 13) from a fresh §IV gradient-probe
@@ -320,6 +362,18 @@ impl Experiment {
     ) -> Result<(Params, f64)> {
         let k = self.cfg.local_iters;
         let backend: &dyn Backend = match cut {
+            // Wire-level split first: under `transport = tcp` the cut
+            // steps cross the network to the gateway service. Cut-less
+            // callers (divergence probe, eval) stay on the local engine.
+            Some(l) if !self.remote.is_empty() => {
+                let stack = &self.remote;
+                stack.get(l).map(|b| b as &dyn Backend).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "partition point {l} outside the executable model's 0..={}",
+                        stack.len() - 1
+                    )
+                })?
+            }
             Some(l) if !self.partitioned.is_empty() => {
                 let stack = &self.partitioned;
                 stack.get(l).map(|b| b as &dyn Backend).ok_or_else(|| {

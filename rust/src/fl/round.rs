@@ -22,6 +22,12 @@
 //! FedAvg fold. Realized faults ride on `RoundRecord::faults`. A benign
 //! plan draws nothing and leaves every byte unchanged.
 //!
+//! Wire-level runs (`transport = tcp`, see `net::transport`) map REAL
+//! faults onto the same semantics: a device whose gateway connection is
+//! refused, times out, or dies mid-round lands in
+//! `RoundRecord::faults.dropped` and contributes nothing to the fold —
+//! the run continues. Protocol/version skew still aborts.
+//!
 //! ## RNG stream map
 //!
 //! Every random draw comes from a stateless stream derived with
@@ -95,10 +101,12 @@ use crate::fl::participation::GradStats;
 use crate::fl::session::{RoundObserver, RunMeta, RunOpts, RunSummary, StopCause};
 use crate::fl::vecmath::{self, FlatWeightedAccum, WeightedAccum};
 use crate::metrics::MemorySink;
+use crate::net::transport::{is_peer_lost, FoldSession};
 use crate::net::ChannelState;
 use crate::rng::Rng;
 use crate::runtime::Params;
 use crate::sched::{plan_cost, Decision, RoundCtx, RoundFeedback, Scheduler};
+use crate::topo::Topology;
 
 use super::orchestrator::{Experiment, GatewayMask, RoundRecord, RunLog};
 
@@ -143,11 +151,49 @@ struct TrainUnit {
 /// model update already folded away. The fold is flat or hierarchical
 /// per `cfg.aggregation`; the loss tallies are identical either way.
 struct TrainOutcome {
-    agg: AggFold,
+    agg: RoundFold,
     floor_loss: Vec<f64>,
     floor_count: Vec<usize>,
     loss_sum: f64,
     loss_count: usize,
+}
+
+/// Where the phase-5 fold runs: in this process (flat or hierarchical
+/// [`AggFold`]) or on the gateway service over the wire
+/// ([`FoldSession`], `transport = tcp`). The wire fold drives the SAME
+/// order-sensitive `WeightedAccum` the flat local fold uses — adds
+/// arrive over one connection in device order — so tcp and inproc runs
+/// stay byte-identical (config validation pins tcp to flat
+/// aggregation).
+enum RoundFold {
+    Local(AggFold),
+    Remote(FoldSession),
+}
+
+impl RoundFold {
+    fn for_experiment(exp: &Experiment, gateways: usize) -> Self {
+        match &exp.wire {
+            Some(pool) => RoundFold::Remote(FoldSession::new(pool.clone())),
+            None => RoundFold::Local(AggFold::for_config(exp.cfg.aggregation, gateways)),
+        }
+    }
+
+    fn add(&mut self, gateway: usize, p: &Params, w: f64) -> Result<()> {
+        match self {
+            RoundFold::Local(acc) => {
+                acc.add(gateway, p, w);
+                Ok(())
+            }
+            RoundFold::Remote(session) => session.add(p, w),
+        }
+    }
+
+    fn finish(self, topo: &Topology) -> Result<Option<Params>> {
+        match self {
+            RoundFold::Local(acc) => Ok(acc.finish(topo)),
+            RoundFold::Remote(session) => session.finish(),
+        }
+    }
 }
 
 /// Executes communication rounds for one [`Experiment`].
@@ -263,17 +309,27 @@ impl<'a> RoundEngine<'a> {
     /// training in streaming waves. Each wave's results fold into the
     /// weighted accumulator in device order and are dropped, so live
     /// parameter copies stay O(wave) instead of O(N).
+    ///
+    /// Wire fault seam (`transport = tcp`): a device whose local steps
+    /// lose the gateway — connection refused, timeout, mid-round
+    /// disconnect — degrades onto the SAME dropout path as an injected
+    /// `FaultPlan` dropout: the device is recorded in `faults.dropped`
+    /// and contributes nothing to the fold; the round (and the run)
+    /// continues. Any non-I/O error — handshake skew, a protocol
+    /// violation, a gateway-side `Err` frame — still aborts: silent
+    /// numeric divergence is worse than a crash.
     fn local_training(
         &self,
         t: usize,
         units: &[TrainUnit],
         params: &Params,
+        faults: &mut Option<RoundFaults>,
     ) -> Result<TrainOutcome> {
         let exp = self.exp;
         let seed = exp.cfg.seed;
         let mm = exp.topo.num_gateways();
         let mut out = TrainOutcome {
-            agg: AggFold::for_config(exp.cfg.aggregation, mm),
+            agg: RoundFold::for_experiment(exp, mm),
             floor_loss: vec![0.0; mm],
             floor_count: vec![0; mm],
             loss_sum: 0.0,
@@ -288,12 +344,25 @@ impl<'a> RoundEngine<'a> {
                 })
                 .collect();
             for (u, res) in wave.iter().zip(results) {
-                let (w, loss) = res?;
+                let (w, loss) = match res {
+                    Ok(r) => r,
+                    Err(e) if is_peer_lost(&e) => {
+                        // The benign-run report is lazily materialized so
+                        // wire dropouts surface on records even with no
+                        // fault knob armed.
+                        faults
+                            .get_or_insert_with(|| RoundFaults::new(mm))
+                            .dropped
+                            .push(u.device);
+                        continue;
+                    }
+                    Err(e) => return Err(e),
+                };
                 // FedAvg weight: D̃_n (`Device::fedavg_weight`), the one
                 // weighting shared with the shadow and probe folds. Units
                 // arrive gateway-contiguous in plan order, so the flat
                 // and hierarchical folds see identical add sequences.
-                out.agg.add(u.gateway, &w, exp.topo.devices[u.device].fedavg_weight());
+                out.agg.add(u.gateway, &w, exp.topo.devices[u.device].fedavg_weight())?;
                 out.floor_loss[u.gateway] += loss;
                 out.floor_count[u.gateway] += 1;
                 out.loss_sum += loss;
@@ -417,9 +486,10 @@ impl<'a> RoundEngine<'a> {
                 eff_counts[m] += (selected[m] && !failed[m]) as usize;
             }
 
-            // Phase 4: parallel local training (streaming folds).
+            // Phase 4: parallel local training (streaming folds). Wire
+            // peer-loss surfaces as additional `faults.dropped` entries.
             let outcome = if opts.train && !units.is_empty() {
-                Some(self.local_training(t, &units, &params)?)
+                Some(self.local_training(t, &units, &params, &mut faults)?)
             } else {
                 None
             };
@@ -454,7 +524,7 @@ impl<'a> RoundEngine<'a> {
             // one accumulator, or hierarchical with gateway partials
             // merged per edge cluster then at the cloud (`fl::hierarchy`).
             if let Some(o) = outcome {
-                if let Some(new_params) = o.agg.finish(&exp.topo) {
+                if let Some(new_params) = o.agg.finish(&exp.topo)? {
                     params = new_params;
                 }
             }
@@ -791,7 +861,7 @@ mod tests {
 
             // Fold parity, bit for bit.
             let params = exp.engine.init_params().unwrap();
-            let out = engine.local_training(t, &units_armed, &params).unwrap();
+            let out = engine.local_training(t, &units_armed, &params, &mut None).unwrap();
             let mut acc = WeightedAccum::new();
             for u in &units_armed {
                 let mut rng =
@@ -800,7 +870,7 @@ mod tests {
                 acc.add(&w, exp.topo.devices[u.device].fedavg_weight());
             }
             let manual = acc.finish().unwrap();
-            let folded = out.agg.finish(&exp.topo).unwrap();
+            let folded = out.agg.finish(&exp.topo).unwrap().unwrap();
             assert_eq!(manual.len(), folded.len());
             for (a, b) in manual.iter().zip(&folded) {
                 for (x, y) in a.iter().zip(b) {
@@ -860,7 +930,7 @@ mod tests {
             assert!(units.iter().all(|u| !outages.get(u.gateway)));
 
             let params = exp.engine.init_params().unwrap();
-            let out = engine.local_training(t, &units, &params).unwrap();
+            let out = engine.local_training(t, &units, &params, &mut None).unwrap();
             let mut hier = HierFold::new(mm);
             for u in &units {
                 let mut rng =
@@ -872,7 +942,7 @@ mod tests {
                 assert_eq!(hier.gateway_count(m), 0, "outaged gateway {m} must fold nothing");
             }
             let manual = hier.finish(&exp.topo).unwrap();
-            let folded = out.agg.finish(&exp.topo).unwrap();
+            let folded = out.agg.finish(&exp.topo).unwrap().unwrap();
             for (a, b) in manual.iter().zip(&folded) {
                 for (x, y) in a.iter().zip(b) {
                     assert_eq!(x.to_bits(), y.to_bits(), "round {t}: tier fold bytes diverged");

@@ -33,6 +33,15 @@
 //! [`RoundObserver::on_final_eval`] — so an early-stopped run never ends
 //! with `test_acc = None`, without perturbing the prefix property.
 //!
+//! Transport is invisible here by design: `transport = tcp` in
+//! [`SimConfig`] routes every split local step and the phase-5 fold
+//! over the wire to a `serve-gateway` process, but it does so behind
+//! the [`Backend`](crate::runtime::Backend) trait
+//! ([`RemoteBackend`](crate::runtime::RemoteBackend)) and the round
+//! engine's fold seam — the Session API, its observers, and the
+//! prefix/early-stop guarantees above are unchanged, and loopback runs
+//! are byte-identical to in-process ones (`rust/tests/wire.rs`).
+//!
 //! # Example
 //!
 //! ```no_run

@@ -21,6 +21,10 @@
 //!   presets cut into a device half and a gateway half at the partition
 //!   point the DDSRA scheduler selects (byte-identical to fused
 //!   execution) — enable with `--execute-partition`;
+//! - wire-level split: [`runtime::RemoteBackend`] drives the same split
+//!   over TCP to a `serve-gateway` process speaking the length-prefixed
+//!   [`net::wire`] protocol (byte-identical to the in-process split at
+//!   every cut) — enable with `--transport tcp`;
 //! - feature `pjrt`: `runtime::Engine` executes the AOT-compiled
 //!   JAX/Pallas HLO artifacts on the PJRT CPU client (requires the `xla`
 //!   crate to be supplied — see Cargo.toml — plus `make artifacts`).
@@ -28,7 +32,8 @@
 //! Module map (see DESIGN.md for the full system inventory):
 //! - [`dnn`] — layer-level FLOPs/memory model (paper Table II) + model zoo
 //! - [`topo`] — devices / gateways / shop floors / deployment matrix
-//! - [`net`] — block-fading wireless channels (Eq. 6–8)
+//! - [`net`] — block-fading wireless channels (Eq. 6–8) + the wire
+//!   protocol / transport / gateway service of `--transport tcp`
 //! - [`energy`] — energy-harvesting arrivals + consumption (Eq. 2, 3, 9)
 //! - [`opt`] — Hungarian assignment + scalar bisection substrates
 //! - [`sched`] — DDSRA (§V) and the four baseline schedulers

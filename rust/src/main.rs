@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   train          run one scheduler for T rounds with real training
 //!                  (pure-Rust NativeBackend; PJRT with --features pjrt)
+//!   serve-gateway  host the gateway half of split execution + the
+//!                  FedAvg fold as a TCP service (for --transport tcp)
 //!   participation  estimate Γ_m (Eq. 13) for the current config
 //!   info           print the cost-model layer table (Table II view)
 //!
@@ -11,6 +13,8 @@
 //!   iiot-fl train --scheme round_robin --rounds 50 --out results/rr.csv
 //!   iiot-fl train --scheme ddsra --until-acc 0.5 --jsonl results/run.jsonl
 //!   iiot-fl train --scenario metro --progress 10 --max-delay 3600
+//!   iiot-fl serve-gateway --listen 127.0.0.1:7700 --preset mlp
+//!   iiot-fl train --transport tcp --execute-partition --cost-model mlp
 //!   iiot-fl participation --dataset cifar
 //!   iiot-fl info --cost-model vgg11
 
@@ -36,6 +40,8 @@ const COMMON_FLAGS: &[&str] = &[
     "kernel",
     "sched-path",
     "aggregation",
+    "transport",
+    "gateway-addr",
     "execute-partition",
 ];
 
@@ -66,6 +72,10 @@ fn main() -> Result<()> {
             args.expect_known(&allowed(TRAIN_FLAGS))?;
             cmd_train(&args)
         }
+        "serve-gateway" => {
+            args.expect_known(&allowed(&["listen"]))?;
+            cmd_serve_gateway(&args)
+        }
         "participation" => {
             args.expect_known(&allowed(&[]))?;
             cmd_participation(&args)
@@ -88,7 +98,7 @@ fn main() -> Result<()> {
 fn print_help() {
     println!(
         "iiot-fl — Low-latency FL with DNN Partition (DDSRA)\n\
-         commands: train | participation | info\n\
+         commands: train | serve-gateway | participation | info\n\
          common flags: --rounds N --v V --seed S --dataset svhn|cifar\n\
          \u{20}                --preset mlp|cnn --cost-model vgg11|cnn|mlp\n\
          \u{20}                --kernel vectorized|scalar (native compute path;\n\
@@ -113,6 +123,10 @@ fn print_help() {
          \u{20}                --execute-partition (run each device's local step\n\
          \u{20}                SPLIT at the scheduler's chosen cut; needs\n\
          \u{20}                --cost-model == --preset)\n\
+         \u{20}                --transport inproc|tcp (tcp drives the split over\n\
+         \u{20}                the wire to a serve-gateway process; needs\n\
+         \u{20}                --execute-partition) --gateway-addr HOST:PORT\n\
+         serve-gateway flags: --listen HOST:PORT (default: gateway_addr)\n\
          unknown flags are rejected with a \"did you mean\" hint"
     );
 }
@@ -138,13 +152,18 @@ fn cmd_train(args: &Args) -> Result<()> {
     let session = builder.build()?;
     let exp = session.experiment();
     eprintln!(
-        "[train] scheme={} rounds={} dataset={} exec={} cost={}{}",
+        "[train] scheme={} rounds={} dataset={} exec={} cost={}{}{}",
         spec.label(),
         session.opts().rounds,
         exp.cfg.dataset,
         exp.cfg.exec_model,
         exp.cfg.cost_model,
-        if exp.cfg.execute_partition { " split-execution=on" } else { "" }
+        if exp.cfg.execute_partition { " split-execution=on" } else { "" },
+        if exp.cfg.transport == iiot_fl::config::Transport::Tcp {
+            format!(" transport=tcp gateway={}", exp.cfg.gateway_addr)
+        } else {
+            String::new()
+        }
     );
 
     // Sinks: records stream to every requested emitter DURING the run;
@@ -225,6 +244,24 @@ fn cmd_train(args: &Args) -> Result<()> {
             mean(&log.effective_participation)
         );
     }
+    Ok(())
+}
+
+/// Host the gateway half of split execution (plus the FedAvg fold) as a
+/// TCP service; `train --transport tcp` processes dial it. Serves until
+/// killed.
+fn cmd_serve_gateway(args: &Args) -> Result<()> {
+    let cfg = args.sim_config()?;
+    let listen = args.get_or("listen", &cfg.gateway_addr);
+    let server = iiot_fl::net::serve::GatewayServer::new(&cfg.exec_model, cfg.kernel)?;
+    let handle = server.spawn(listen)?;
+    eprintln!(
+        "[serve-gateway] preset={} kernel={} listening on {}",
+        cfg.exec_model,
+        cfg.kernel,
+        handle.addr()
+    );
+    handle.join();
     Ok(())
 }
 

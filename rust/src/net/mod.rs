@@ -1,7 +1,21 @@
-//! Wireless communication model (§III-C): IID block-fading channels
-//! between the BS and the gateways, OFDM with J orthogonal channels,
-//! co-channel interference from neighbouring deployments.
+//! Networking: the modelled radio layer and the real wire layer.
+//!
+//! * [`channel`] — wireless communication model (§III-C): IID
+//!   block-fading channels between the BS and the gateways, OFDM with J
+//!   orthogonal channels, co-channel interference from neighbouring
+//!   deployments.
+//! * [`wire`] — versioned, length-prefixed binary message protocol for
+//!   split execution (smashed activations ⇡, cut gradients ⇣, FedAvg
+//!   folds, round control) with an explicit little-endian codec.
+//! * [`transport`] — dialing/handshake, connection pooling, and the
+//!   `PeerLost` fault classification that maps wire failures onto
+//!   `FaultPlan` dropout semantics.
+//! * [`serve`] — the threaded TCP gateway service hosting the gateway
+//!   half of the split plus the FedAvg fold.
 
 pub mod channel;
+pub mod serve;
+pub mod transport;
+pub mod wire;
 
 pub use channel::{ChannelModel, ChannelState};

@@ -1,0 +1,298 @@
+//! The gateway service: a threaded TCP server hosting the gateway half
+//! of split execution (§II-B) and the FedAvg fold (§III-A step 3).
+//!
+//! Pure `std::net` — the crate's zero-heavy-deps policy rules out an
+//! async runtime. One OS thread per accepted connection runs the frame
+//! loop; the actual math inside `PartitionedBackend::gateway_split_batch`
+//! (crate-private) rides a DEDICATED rayon pool through the SAME blocked
+//! executors the in-process path uses, which is why a loopback tcp run
+//! is byte-identical to the in-process oracle (`rust/tests/wire.rs`) —
+//! and why one never deadlocks: see the `compute` field.
+//!
+//! Per-connection state is exactly one optional in-progress
+//! `WeightedAccum` fold; split requests are stateless. A protocol
+//! violation tears down its own connection (after a best-effort
+//! [`Msg::Err`] frame) and the service keeps accepting; a client that
+//! disappears mid-fold takes its partial fold with it.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread;
+
+use anyhow::{bail, Context, Result};
+
+use crate::fl::vecmath::WeightedAccum;
+use crate::runtime::native::check_params_against;
+use crate::runtime::{make_partitioned_stack_kernel, Backend, KernelPath, PartitionedBackend};
+
+use super::wire::{self, FrameError, Msg, MAGIC, VERSION};
+
+/// A gateway service for one preset/kernel pair: hosts the full split
+/// stack (one gateway half per legal cut), so clients may request any
+/// partition point the scheduler assigns.
+pub struct GatewayServer {
+    preset: String,
+    kernel: KernelPath,
+    stack: Arc<Vec<PartitionedBackend>>,
+    /// Service-wide budget of SplitReq frames to serve before SEVERING
+    /// the connection of every later one — the deterministic fault
+    /// injection hook behind the mid-round-disconnect test (the client
+    /// must degrade to the `FaultPlan` dropout path, not abort). Fold
+    /// frames are unaffected, so surviving devices still aggregate.
+    /// `usize::MAX` (the default) never fires.
+    split_budget: Arc<AtomicUsize>,
+    /// The service's OWN rayon pool for the gateway math. In a loopback
+    /// run the CLIENT parks global-pool workers on frame I/O while they
+    /// await replies; if the gateway math also queued on the global pool
+    /// (handler threads are plain OS threads — their `par_*` calls
+    /// inject into it), a single-process loopback run would deadlock
+    /// until the read timeout fired and every device "dropped". A
+    /// dedicated pool changes scheduling only, never bytes: the blocked
+    /// executors' fold order is worker-count independent.
+    compute: Arc<rayon::ThreadPool>,
+}
+
+impl GatewayServer {
+    /// Compile the split stack for `preset` on `kernel`.
+    pub fn new(preset: &str, kernel: KernelPath) -> Result<Self> {
+        let stack = make_partitioned_stack_kernel(preset, kernel)?;
+        let compute = rayon::ThreadPoolBuilder::new()
+            .build()
+            .context("building the gateway compute pool")?;
+        Ok(GatewayServer {
+            preset: preset.to_string(),
+            kernel,
+            stack: Arc::new(stack),
+            split_budget: Arc::new(AtomicUsize::new(usize::MAX)),
+            compute: Arc::new(compute),
+        })
+    }
+
+    /// Test hook (see `split_budget`): serve only `served` split
+    /// requests, then drop the connection of every subsequent one.
+    pub fn fail_splits_after(&mut self, served: usize) {
+        self.split_budget = Arc::new(AtomicUsize::new(served));
+    }
+
+    /// Bind `addr` (`:0` picks an ephemeral port — how the tests run
+    /// client and service in one process) and serve on a background
+    /// accept thread until the returned handle stops or is dropped.
+    pub fn spawn(self, addr: &str) -> Result<GatewayHandle> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding gateway on {addr}"))?;
+        let local = listener.local_addr().context("gateway local_addr")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept_stop = stop.clone();
+        let join = thread::spawn(move || {
+            for conn in listener.incoming() {
+                if accept_stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = conn else { continue };
+                let stack = self.stack.clone();
+                let preset = self.preset.clone();
+                let kernel = self.kernel;
+                let budget = self.split_budget.clone();
+                let compute = self.compute.clone();
+                thread::spawn(move || {
+                    let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
+                    if let Err(e) = handle_conn(&stream, &stack, &preset, kernel, &budget, &compute)
+                    {
+                        eprintln!("[gateway] connection {peer}: {e:#}");
+                    }
+                });
+            }
+        });
+        Ok(GatewayHandle { addr: local, stop, join: Some(join) })
+    }
+}
+
+/// Handle on a spawned [`GatewayServer`]: the bound address plus stop /
+/// join control. Dropping the handle stops the service.
+pub struct GatewayHandle {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<thread::JoinHandle<()>>,
+}
+
+impl GatewayHandle {
+    /// The bound address (with `:0` binds resolved to the real port).
+    pub fn addr(&self) -> String {
+        self.addr.to_string()
+    }
+
+    /// Block until the accept loop exits — a `serve-gateway` process
+    /// serves until killed.
+    pub fn join(mut self) {
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+
+    /// Stop accepting and join the accept loop. Handler threads finish
+    /// their current connection on their own.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        let Some(join) = self.join.take() else { return };
+        self.stop.store(true, Ordering::SeqCst);
+        // Wake the blocking accept with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        let _ = join.join();
+    }
+}
+
+impl Drop for GatewayHandle {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn reply(stream: &TcpStream, msg: &Msg) -> Result<()> {
+    wire::write_msg(&mut (&*stream), msg)
+        .with_context(|| format!("replying {}", msg.name()))
+}
+
+/// Best-effort `Err` frame; the connection is about to close anyway.
+fn refuse(stream: &TcpStream, reason: &str) {
+    let _ = reply(stream, &Msg::Err { reason: reason.to_string() });
+}
+
+fn handle_conn(
+    stream: &TcpStream,
+    stack: &[PartitionedBackend],
+    preset: &str,
+    kernel: KernelPath,
+    split_budget: &AtomicUsize,
+    compute: &rayon::ThreadPool,
+) -> Result<()> {
+    let _ = stream.set_nodelay(true);
+    let mut reader = stream;
+    // ---- handshake: magic, version, preset, kernel must all agree.
+    let hello = match wire::read_msg(&mut reader) {
+        Ok(m) => m,
+        // Connect-and-close probes (incl. the stop() wakeup) are normal.
+        Err(FrameError::Io(_)) => return Ok(()),
+        Err(FrameError::Protocol(p)) => {
+            refuse(stream, &p);
+            bail!("handshake: {p}");
+        }
+    };
+    let Msg::Hello { magic, version, preset: their_preset, kernel: their_kernel } = hello else {
+        refuse(stream, "expected Hello");
+        bail!("handshake: got {} before Hello", hello.name());
+    };
+    if magic != MAGIC {
+        refuse(stream, &format!("bad magic {magic:#010x}"));
+        bail!("handshake: bad magic {magic:#010x}");
+    }
+    if version != VERSION {
+        let why = format!("protocol version {version} not supported (gateway speaks {VERSION})");
+        refuse(stream, &why);
+        bail!("handshake: {why}");
+    }
+    if their_preset != preset {
+        let why = format!("gateway serves preset {preset:?}, client runs {their_preset:?}");
+        refuse(stream, &why);
+        bail!("handshake: {why}");
+    }
+    if their_kernel != kernel.as_str() {
+        let why =
+            format!("gateway runs kernel {:?}, client runs {their_kernel:?}", kernel.as_str());
+        refuse(stream, &why);
+        bail!("handshake: {why}");
+    }
+    reply(stream, &Msg::HelloOk)?;
+
+    // ---- frame loop: split requests + at most one in-progress fold.
+    let mut fold: Option<WeightedAccum> = None;
+    loop {
+        let msg = match wire::read_msg(&mut reader) {
+            Ok(m) => m,
+            // The client went away; its partial fold (if any) dies here.
+            Err(FrameError::Io(_)) => return Ok(()),
+            Err(FrameError::Protocol(p)) => {
+                refuse(stream, &p);
+                bail!("{p}");
+            }
+        };
+        match msg {
+            Msg::SplitReq { cut, want_grad, labels, top_params, acts } => {
+                // Fault-injection hook: budget exhausted → sever the
+                // connection mid-round, exactly like a dying peer.
+                let alive = split_budget
+                    .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| v.checked_sub(1));
+                if alive.is_err() {
+                    return Ok(());
+                }
+                let Some(backend) = stack.get(cut as usize) else {
+                    let why = format!(
+                        "partition point {cut} outside the served model's 0..={}",
+                        stack.len() - 1
+                    );
+                    refuse(stream, &why);
+                    bail!("SplitReq: {why}");
+                };
+                match compute
+                    .install(|| backend.gateway_split_batch(&top_params, &acts, &labels, want_grad))
+                {
+                    Ok((loss_sum, correct, g_top, dcut)) => reply(
+                        stream,
+                        &Msg::SplitResp { loss_sum, correct: correct as u64, dcut, g_top },
+                    )?,
+                    Err(e) => {
+                        refuse(stream, &format!("{e:#}"));
+                        bail!("SplitReq: {e:#}");
+                    }
+                }
+            }
+            Msg::FoldBegin => {
+                fold = Some(WeightedAccum::new());
+                reply(stream, &Msg::FoldOk)?;
+            }
+            Msg::FoldAdd { weight, params } => {
+                let Some(acc) = fold.as_mut() else {
+                    refuse(stream, "FoldAdd before FoldBegin");
+                    bail!("FoldAdd before FoldBegin");
+                };
+                // Validate BEFORE WeightedAccum::add — its layout checks
+                // are assertions, and a skewed client must not panic a
+                // handler thread.
+                if let Err(e) = check_fold_add(stack, &params, weight) {
+                    refuse(stream, &format!("{e:#}"));
+                    bail!("FoldAdd: {e:#}");
+                }
+                acc.add(&params, weight);
+                reply(stream, &Msg::FoldOk)?;
+            }
+            Msg::FoldFinish => {
+                let Some(acc) = fold.take() else {
+                    refuse(stream, "FoldFinish before FoldBegin");
+                    bail!("FoldFinish before FoldBegin");
+                };
+                reply(stream, &Msg::FoldResult { params: acc.finish() })?;
+            }
+            Msg::Shutdown => return Ok(()),
+            other => {
+                let why = format!("unexpected {}", other.name());
+                refuse(stream, &why);
+                bail!("{why}");
+            }
+        }
+    }
+}
+
+/// A `FoldAdd` must carry the served model's exact tensor layout and a
+/// finite non-negative FedAvg weight.
+fn check_fold_add(stack: &[PartitionedBackend], params: &crate::runtime::Params, w: f64) -> Result<()> {
+    if !(w.is_finite() && w >= 0.0) {
+        bail!("bad FedAvg weight {w}");
+    }
+    // Every preset has at least the cut-0 backend, and all cuts share
+    // the fused parameter ABI.
+    let meta = stack.first().expect("non-empty split stack").meta();
+    check_params_against(meta, params)
+}

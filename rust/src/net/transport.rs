@@ -1,0 +1,254 @@
+//! Transport layer over the wire protocol: dialing + handshake,
+//! connection pooling, fault classification, and the client half of the
+//! gateway-hosted FedAvg fold.
+//!
+//! # Fault policy (the `FaultPlan` dropout mapping)
+//!
+//! Every I/O-class failure — connection refused, dial/read/write
+//! timeout, a stream severed mid-frame — carries a [`PeerLost`] marker
+//! in its error chain. The round engine tests for it with
+//! [`is_peer_lost`] and maps an affected DEVICE onto the exact dropout
+//! semantics of [`crate::fl::fault`]: the device contributes nothing to
+//! the round's fold, the fault is recorded on the round's
+//! `RoundFaults`, and the run continues. Anything else — version or
+//! preset skew at the handshake, a malformed frame, an `Err` frame from
+//! the gateway — is a plain error and aborts the run: silent numeric
+//! divergence is worse than a crash, and a refused handshake would
+//! otherwise masquerade as 100% dropout.
+//!
+//! Connections are fail-stop: [`ConnPool::with_conn`] returns a healthy
+//! connection to the idle pool and DROPS one whose operation failed, so
+//! the next use redials lazily. A gateway that comes back between
+//! rounds is picked up automatically; one that stays dead keeps
+//! resolving to dropout.
+
+use std::fmt;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::runtime::{KernelPath, Params};
+
+use super::wire::{self, FrameError, Msg, MAGIC, VERSION};
+
+/// Marker error: the remote peer is gone (refused, timed out, or went
+/// away mid-conversation). See the module docs for how the round engine
+/// maps this onto the `FaultPlan` dropout path.
+#[derive(Debug)]
+pub struct PeerLost(pub String);
+
+impl fmt::Display for PeerLost {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "peer lost: {}", self.0)
+    }
+}
+
+impl std::error::Error for PeerLost {}
+
+/// Does `err`'s chain contain a [`PeerLost`]? (`context(..)` wrapping
+/// keeps the marker reachable through `err.chain()`.)
+pub fn is_peer_lost(err: &anyhow::Error) -> bool {
+    err.chain().any(|c| c.downcast_ref::<PeerLost>().is_some())
+}
+
+fn lost(what: String) -> anyhow::Error {
+    anyhow::Error::new(PeerLost(what))
+}
+
+/// One handshaken connection to a gateway service.
+pub struct Conn {
+    stream: TcpStream,
+}
+
+impl Conn {
+    /// Connect to `addr` and complete the version/preset/kernel
+    /// handshake. Failures meaning "nobody is (responsively) there"
+    /// carry [`PeerLost`]; a REACHABLE gateway refusing the handshake
+    /// (protocol or model skew) is a plain error — skew must abort the
+    /// run, not degrade into dropout.
+    pub fn dial(addr: &str, timeout_ms: u64, preset: &str, kernel: KernelPath) -> Result<Conn> {
+        let timeout = Duration::from_millis(timeout_ms.max(1));
+        let sa = addr
+            .to_socket_addrs()
+            .with_context(|| format!("cannot resolve gateway address {addr:?}"))?
+            .next()
+            .ok_or_else(|| anyhow!("gateway address {addr:?} resolves to nothing"))?;
+        let stream = TcpStream::connect_timeout(&sa, timeout)
+            .map_err(|e| lost(format!("connect {addr}: {e}")))?;
+        // Frames are whole request/response units; never Nagle-delay them.
+        let _ = stream.set_nodelay(true);
+        stream.set_read_timeout(Some(timeout)).map_err(|e| lost(format!("{addr}: {e}")))?;
+        stream.set_write_timeout(Some(timeout)).map_err(|e| lost(format!("{addr}: {e}")))?;
+        let mut conn = Conn { stream };
+        conn.send(&Msg::Hello {
+            magic: MAGIC,
+            version: VERSION,
+            preset: preset.to_string(),
+            kernel: kernel.as_str().to_string(),
+        })?;
+        match conn.recv().with_context(|| format!("gateway {addr} handshake"))? {
+            Msg::HelloOk => Ok(conn),
+            other => bail!("gateway {addr} handshake: unexpected {}", other.name()),
+        }
+    }
+
+    /// Send one message. I/O failures carry [`PeerLost`].
+    pub fn send(&mut self, msg: &Msg) -> Result<()> {
+        wire::write_msg(&mut (&self.stream), msg)
+            .map_err(|e| lost(format!("sending {}: {e}", msg.name())))
+    }
+
+    /// Read one message. I/O failures carry [`PeerLost`]; an [`Msg::Err`]
+    /// frame or malformed bytes are plain (fatal) errors.
+    pub fn recv(&mut self) -> Result<Msg> {
+        match wire::read_msg(&mut (&self.stream)) {
+            Ok(Msg::Err { reason }) => bail!("gateway error: {reason}"),
+            Ok(msg) => Ok(msg),
+            Err(FrameError::Io(e)) => Err(lost(format!("receiving: {e}"))),
+            Err(FrameError::Protocol(p)) => bail!("wire protocol violation: {p}"),
+        }
+    }
+
+    /// One request/response exchange.
+    pub fn request(&mut self, msg: &Msg) -> Result<Msg> {
+        self.send(msg)?;
+        self.recv()
+    }
+}
+
+/// A pool of handshaken connections to ONE gateway address. The round
+/// engine fans train steps over rayon, so several connections may be
+/// checked out at once; each worker's exchange is a self-contained
+/// request/response pair, so any idle connection serves any step.
+pub struct ConnPool {
+    addr: String,
+    timeout_ms: u64,
+    preset: String,
+    kernel: KernelPath,
+    idle: Mutex<Vec<Conn>>,
+}
+
+impl ConnPool {
+    pub fn new(addr: &str, timeout_ms: u64, preset: &str, kernel: KernelPath) -> Self {
+        ConnPool {
+            addr: addr.to_string(),
+            timeout_ms,
+            preset: preset.to_string(),
+            kernel,
+            idle: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// The gateway address this pool dials.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    fn checkout(&self) -> Result<Conn> {
+        if let Some(c) = self.idle.lock().expect("pool lock").pop() {
+            return Ok(c);
+        }
+        Conn::dial(&self.addr, self.timeout_ms, &self.preset, self.kernel)
+    }
+
+    /// Run `f` with a pooled connection (dialing lazily when none is
+    /// idle). The connection returns to the pool on success and is
+    /// dropped on failure — fail-stop, lazy reconnect on next use.
+    pub fn with_conn<T>(&self, f: impl FnOnce(&mut Conn) -> Result<T>) -> Result<T> {
+        let mut conn = self.checkout()?;
+        let out = f(&mut conn);
+        if out.is_ok() {
+            self.idle.lock().expect("pool lock").push(conn);
+        }
+        out
+    }
+}
+
+/// Client half of the gateway-hosted FedAvg fold (§III-A step 3 over
+/// the wire). `FoldBegin` is sent lazily on the first [`FoldSession::add`];
+/// each add is a synchronous acknowledged `FoldAdd`, so the caller's
+/// add ORDER is the gateway's fold order — the gateway folds with the
+/// same order-sensitive f64 `WeightedAccum` the in-process flat path
+/// uses, which is what keeps tcp and inproc rounds byte-identical.
+///
+/// A session with zero adds never touches the network and finishes
+/// `None`, exactly like the empty in-process fold — so a gateway whose
+/// every device already dropped still lets the round complete with the
+/// global model unchanged.
+pub struct FoldSession {
+    pool: Arc<ConnPool>,
+    conn: Option<Conn>,
+    count: usize,
+}
+
+impl FoldSession {
+    pub fn new(pool: Arc<ConnPool>) -> Self {
+        FoldSession { pool, conn: None, count: 0 }
+    }
+
+    /// Updates folded in so far.
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// Fold one weighted parameter set in (order-sensitive).
+    pub fn add(&mut self, p: &Params, w: f64) -> Result<()> {
+        if self.conn.is_none() {
+            let mut c = self.pool.checkout().context("opening the FedAvg fold")?;
+            match c.request(&Msg::FoldBegin)? {
+                Msg::FoldOk => {}
+                other => bail!("FoldBegin: unexpected {}", other.name()),
+            }
+            self.conn = Some(c);
+        }
+        let c = self.conn.as_mut().expect("fold connection just opened");
+        match c.request(&Msg::FoldAdd { weight: w, params: p.clone() })? {
+            Msg::FoldOk => {
+                self.count += 1;
+                Ok(())
+            }
+            other => bail!("FoldAdd: unexpected {}", other.name()),
+        }
+    }
+
+    /// Close the fold and fetch the aggregate (`None` when nothing was
+    /// added). Returns the connection to the pool on success.
+    pub fn finish(mut self) -> Result<Option<Params>> {
+        let Some(mut c) = self.conn.take() else { return Ok(None) };
+        match c.request(&Msg::FoldFinish)? {
+            Msg::FoldResult { params } => {
+                self.pool.idle.lock().expect("pool lock").push(c);
+                Ok(params)
+            }
+            other => bail!("FoldFinish: unexpected {}", other.name()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peer_lost_survives_context_wrapping() {
+        let e = lost("connect 127.0.0.1:1: refused".into()).context("during local step");
+        assert!(is_peer_lost(&e));
+        let plain = anyhow!("version skew").context("during handshake");
+        assert!(!is_peer_lost(&plain));
+    }
+
+    #[test]
+    fn dialing_a_dead_port_is_peer_lost_not_fatal() {
+        // Bind an ephemeral port, then drop the listener so the port is
+        // known-dead; the dial must classify as PeerLost (the dropout
+        // path), not as a hard protocol error.
+        let dead = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let err = Conn::dial(&dead, 300, "mlp", KernelPath::Vectorized).unwrap_err();
+        assert!(is_peer_lost(&err), "got: {err:#}");
+    }
+}

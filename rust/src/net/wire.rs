@@ -1,0 +1,563 @@
+//! The wire protocol of the distributed split runtime: versioned,
+//! length-prefixed binary frames with an explicit little-endian codec.
+//!
+//! Everything the device ↔ gateway boundary of §II-B exchanges travels
+//! in one frame grammar:
+//!
+//! ```text
+//!   frame   := len:u32  payload          (len = payload bytes, LE)
+//!   payload := tag:u8   fields…          (tag = message type)
+//! ```
+//!
+//! Numbers are little-endian. A tensor is `count:u32` followed by raw
+//! LE f32 words; a parameter set is `tensors:u32` followed by that many
+//! tensors in ABI order. The codec is spelled out by hand — no serde,
+//! no derive — because the byte layout IS the compatibility contract:
+//! LE f32/f64 round-trips are exact, which is one link in the chain
+//! that pins a loopback tcp run byte-identical to the in-process oracle
+//! (`rust/tests/wire.rs`).
+//!
+//! A session opens with [`Msg::Hello`] carrying magic, protocol
+//! version, preset and kernel path; the gateway answers [`Msg::HelloOk`]
+//! or an [`Msg::Err`] naming the mismatch. After the handshake the
+//! client drives request/response pairs: [`Msg::SplitReq`] (smashed
+//! activations ⇡) answered by [`Msg::SplitResp`] (loss, top gradients
+//! and per-sample cut gradients ⇣), and the FedAvg fold sequence
+//! `FoldBegin`, `FoldAdd`*, `FoldFinish` answered by `FoldOk`s and a
+//! final `FoldResult`.
+//!
+//! Decoding is fail-closed: every declared length is validated against
+//! the bytes actually present BEFORE anything is allocated, frames are
+//! capped at [`MAX_FRAME`], and trailing payload bytes are an error.
+//! Classifying failures (which ones mean "peer lost" — the dropout
+//! path — vs a protocol bug that must abort) is the transport layer's
+//! job ([`crate::net::transport`]); this module only distinguishes
+//! [`FrameError::Io`] from [`FrameError::Protocol`].
+
+use std::fmt;
+use std::io::{self, Read, Write};
+
+use anyhow::{bail, Result};
+
+use crate::runtime::Params;
+
+/// Handshake magic: the bytes `IIFL` read as a little-endian u32.
+pub const MAGIC: u32 = 0x4C46_4949;
+
+/// Protocol version this build speaks. Bump on ANY frame-layout change;
+/// the gateway refuses mismatched [`Msg::Hello`]s rather than guessing.
+pub const VERSION: u16 = 1;
+
+/// Hard cap on one frame's payload (bytes). Large enough for a full
+/// cnn parameter set or a train batch of smashed activations with an
+/// order of magnitude to spare; small enough that a corrupt length
+/// prefix cannot balloon into an absurd allocation.
+pub const MAX_FRAME: usize = 1 << 28;
+
+const TAG_HELLO: u8 = 1;
+const TAG_HELLO_OK: u8 = 2;
+const TAG_ERR: u8 = 3;
+const TAG_SPLIT_REQ: u8 = 4;
+const TAG_SPLIT_RESP: u8 = 5;
+const TAG_FOLD_BEGIN: u8 = 6;
+const TAG_FOLD_ADD: u8 = 7;
+const TAG_FOLD_OK: u8 = 8;
+const TAG_FOLD_FINISH: u8 = 9;
+const TAG_FOLD_RESULT: u8 = 10;
+const TAG_SHUTDOWN: u8 = 11;
+
+/// One wire message. See the module docs for the session grammar.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Msg {
+    /// Client → gateway session opener: magic + version + the model
+    /// preset and kernel path the client executes. The gateway half and
+    /// the device half MUST agree on all four for split execution to be
+    /// byte-meaningful, so skew is refused at the door.
+    Hello { magic: u32, version: u16, preset: String, kernel: String },
+    /// Gateway → client: handshake accepted.
+    HelloOk,
+    /// Gateway → client: the request (or handshake) was refused. Always
+    /// a hard error on the client — genuine peer loss never produces a
+    /// well-formed frame.
+    Err { reason: String },
+    /// Device → gateway: one batch of smashed activations at `cut`,
+    /// with labels and the gateway half's parameter tensors. When
+    /// `want_grad`, the gateway also runs its half backward.
+    SplitReq { cut: u32, want_grad: bool, labels: Vec<i32>, top_params: Params, acts: Vec<f32> },
+    /// Gateway → device: summed batch loss + correct count (the same
+    /// sequential fold as the in-process executor), the per-sample cut
+    /// gradients (`batch · cut width`; empty when not applicable) and
+    /// the gateway half's flat gradient (empty unless `want_grad`).
+    SplitResp { loss_sum: f64, correct: u64, dcut: Vec<f32>, g_top: Vec<f32> },
+    /// Device → gateway: open a FedAvg fold on this connection.
+    FoldBegin,
+    /// Device → gateway: fold one weighted parameter set in. Adds are
+    /// acknowledged one by one so the caller controls the exact fold
+    /// order — `WeightedAccum` is order-sensitive f64 accumulation.
+    FoldAdd { weight: f64, params: Params },
+    /// Gateway → device: fold step accepted.
+    FoldOk,
+    /// Device → gateway: close the fold and return the aggregate.
+    FoldFinish,
+    /// Gateway → device: the folded parameters (`None` when nothing was
+    /// added — the round then leaves the global model unchanged).
+    FoldResult { params: Option<Params> },
+    /// Device → gateway: clean goodbye; the gateway closes this
+    /// connection and keeps serving others.
+    Shutdown,
+}
+
+impl Msg {
+    /// Message name for error messages and logs.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Msg::Hello { .. } => "Hello",
+            Msg::HelloOk => "HelloOk",
+            Msg::Err { .. } => "Err",
+            Msg::SplitReq { .. } => "SplitReq",
+            Msg::SplitResp { .. } => "SplitResp",
+            Msg::FoldBegin => "FoldBegin",
+            Msg::FoldAdd { .. } => "FoldAdd",
+            Msg::FoldOk => "FoldOk",
+            Msg::FoldFinish => "FoldFinish",
+            Msg::FoldResult { .. } => "FoldResult",
+            Msg::Shutdown => "Shutdown",
+        }
+    }
+
+    /// Serialize into one frame payload (tag byte + fields).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut b = Vec::new();
+        match self {
+            Msg::Hello { magic, version, preset, kernel } => {
+                b.push(TAG_HELLO);
+                put_u32(&mut b, *magic);
+                put_u16(&mut b, *version);
+                put_str(&mut b, preset);
+                put_str(&mut b, kernel);
+            }
+            Msg::HelloOk => b.push(TAG_HELLO_OK),
+            Msg::Err { reason } => {
+                b.push(TAG_ERR);
+                put_str(&mut b, reason);
+            }
+            Msg::SplitReq { cut, want_grad, labels, top_params, acts } => {
+                b.push(TAG_SPLIT_REQ);
+                put_u32(&mut b, *cut);
+                b.push(*want_grad as u8);
+                put_i32s(&mut b, labels);
+                put_params(&mut b, top_params);
+                put_f32s(&mut b, acts);
+            }
+            Msg::SplitResp { loss_sum, correct, dcut, g_top } => {
+                b.push(TAG_SPLIT_RESP);
+                put_f64(&mut b, *loss_sum);
+                put_u64(&mut b, *correct);
+                put_f32s(&mut b, dcut);
+                put_f32s(&mut b, g_top);
+            }
+            Msg::FoldBegin => b.push(TAG_FOLD_BEGIN),
+            Msg::FoldAdd { weight, params } => {
+                b.push(TAG_FOLD_ADD);
+                put_f64(&mut b, *weight);
+                put_params(&mut b, params);
+            }
+            Msg::FoldOk => b.push(TAG_FOLD_OK),
+            Msg::FoldFinish => b.push(TAG_FOLD_FINISH),
+            Msg::FoldResult { params } => {
+                b.push(TAG_FOLD_RESULT);
+                match params {
+                    Some(p) => {
+                        b.push(1);
+                        put_params(&mut b, p);
+                    }
+                    None => b.push(0),
+                }
+            }
+            Msg::Shutdown => b.push(TAG_SHUTDOWN),
+        }
+        b
+    }
+
+    /// Parse one frame payload. Rejects unknown tags, truncated fields,
+    /// lengths that overrun the payload, and trailing bytes.
+    pub fn decode(payload: &[u8]) -> Result<Msg> {
+        let mut r = Reader::new(payload);
+        let tag = r.u8()?;
+        let msg = match tag {
+            TAG_HELLO => Msg::Hello {
+                magic: r.u32()?,
+                version: r.u16()?,
+                preset: r.string()?,
+                kernel: r.string()?,
+            },
+            TAG_HELLO_OK => Msg::HelloOk,
+            TAG_ERR => Msg::Err { reason: r.string()? },
+            TAG_SPLIT_REQ => Msg::SplitReq {
+                cut: r.u32()?,
+                want_grad: r.flag()?,
+                labels: r.i32s()?,
+                top_params: r.params()?,
+                acts: r.f32s()?,
+            },
+            TAG_SPLIT_RESP => Msg::SplitResp {
+                loss_sum: r.f64()?,
+                correct: r.u64()?,
+                dcut: r.f32s()?,
+                g_top: r.f32s()?,
+            },
+            TAG_FOLD_BEGIN => Msg::FoldBegin,
+            TAG_FOLD_ADD => Msg::FoldAdd { weight: r.f64()?, params: r.params()? },
+            TAG_FOLD_OK => Msg::FoldOk,
+            TAG_FOLD_FINISH => Msg::FoldFinish,
+            TAG_FOLD_RESULT => {
+                let params = if r.flag()? { Some(r.params()?) } else { None };
+                Msg::FoldResult { params }
+            }
+            TAG_SHUTDOWN => Msg::Shutdown,
+            other => bail!("unknown message tag {other}"),
+        };
+        r.finish()?;
+        Ok(msg)
+    }
+}
+
+// ------------------------------------------------------------- LE writers
+
+fn put_u16(b: &mut Vec<u8>, v: u16) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(b: &mut Vec<u8>, v: u32) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(b: &mut Vec<u8>, v: u64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(b: &mut Vec<u8>, v: f64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(b: &mut Vec<u8>, s: &str) {
+    put_u32(b, s.len() as u32);
+    b.extend_from_slice(s.as_bytes());
+}
+
+fn put_f32s(b: &mut Vec<u8>, xs: &[f32]) {
+    put_u32(b, xs.len() as u32);
+    b.reserve(xs.len() * 4);
+    for &v in xs {
+        b.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn put_i32s(b: &mut Vec<u8>, xs: &[i32]) {
+    put_u32(b, xs.len() as u32);
+    b.reserve(xs.len() * 4);
+    for &v in xs {
+        b.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn put_params(b: &mut Vec<u8>, p: &Params) {
+    put_u32(b, p.len() as u32);
+    for t in p {
+        put_f32s(b, t);
+    }
+}
+
+// ------------------------------------------------------------- LE reader
+
+/// Bounds-checked payload cursor: every read validates against the bytes
+/// remaining, and declared element counts are checked (with overflow-safe
+/// multiplication) BEFORE any buffer is allocated.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if n > self.remaining() {
+            bail!("truncated payload: need {n} bytes, {} left", self.remaining());
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn flag(&mut self) -> Result<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            other => bail!("bad flag byte {other} (expected 0 or 1)"),
+        }
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().expect("2-byte slice")))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4-byte slice")))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8-byte slice")))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().expect("8-byte slice")))
+    }
+
+    /// Read a `u32` element count and validate that `count·elem_bytes`
+    /// fits in the remaining payload.
+    fn len32(&mut self, elem_bytes: usize, what: &str) -> Result<usize> {
+        let n = self.u32()? as usize;
+        match n.checked_mul(elem_bytes) {
+            Some(bytes) if bytes <= self.remaining() => Ok(n),
+            _ => bail!(
+                "{what} declares {n} elements ({elem_bytes} B each) but only {} payload bytes remain",
+                self.remaining()
+            ),
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        let n = self.len32(1, "string")?;
+        Ok(std::str::from_utf8(self.take(n)?)?.to_string())
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.len32(4, "f32 tensor")?;
+        let raw = self.take(n * 4)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().expect("4-byte chunk"))).collect())
+    }
+
+    fn i32s(&mut self) -> Result<Vec<i32>> {
+        let n = self.len32(4, "i32 tensor")?;
+        let raw = self.take(n * 4)?;
+        Ok(raw.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().expect("4-byte chunk"))).collect())
+    }
+
+    fn params(&mut self) -> Result<Params> {
+        // Each tensor costs at least its own 4-byte count header, so the
+        // tensor count itself is bounded by the remaining bytes.
+        let n = self.len32(4, "param set")?;
+        (0..n).map(|_| self.f32s()).collect()
+    }
+
+    fn finish(self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!("{} trailing bytes after message", self.buf.len() - self.pos);
+        }
+        Ok(())
+    }
+}
+
+// -------------------------------------------------------------- frame I/O
+
+/// Why reading a frame failed: an I/O-class failure (the peer is gone —
+/// the transport layer maps this onto the dropout path) vs a protocol
+/// violation (malformed bytes or an oversized length — a bug or version
+/// skew, which must surface as a hard error instead).
+#[derive(Debug)]
+pub enum FrameError {
+    Io(io::Error),
+    Protocol(String),
+}
+
+impl fmt::Display for FrameError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FrameError::Io(e) => write!(f, "i/o: {e}"),
+            FrameError::Protocol(p) => write!(f, "protocol: {p}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+impl From<io::Error> for FrameError {
+    fn from(e: io::Error) -> Self {
+        FrameError::Io(e)
+    }
+}
+
+/// Write one message as a length-prefixed frame and flush it.
+pub fn write_msg<W: Write>(w: &mut W, msg: &Msg) -> io::Result<()> {
+    let payload = msg.encode();
+    debug_assert!(payload.len() <= MAX_FRAME, "oversized outbound frame");
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(&payload)?;
+    w.flush()
+}
+
+/// Read one length-prefixed frame and decode its message. A zero-length
+/// or over-[`MAX_FRAME`] length prefix is rejected before any payload
+/// allocation; a stream that ends mid-frame surfaces as
+/// [`FrameError::Io`] (`UnexpectedEof`).
+pub fn read_msg<R: Read>(r: &mut R) -> Result<Msg, FrameError> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len)?;
+    let len = u32::from_le_bytes(len) as usize;
+    if len == 0 {
+        return Err(FrameError::Protocol("zero-length frame".into()));
+    }
+    if len > MAX_FRAME {
+        return Err(FrameError::Protocol(format!(
+            "frame of {len} bytes exceeds the {MAX_FRAME}-byte cap"
+        )));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Msg::decode(&payload).map_err(|e| FrameError::Protocol(format!("{e:#}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(msg: &Msg) {
+        let payload = msg.encode();
+        let back = Msg::decode(&payload).expect("decode");
+        assert_eq!(&back, msg);
+        // And through the frame layer.
+        let mut buf = Vec::new();
+        write_msg(&mut buf, msg).unwrap();
+        assert_eq!(buf.len(), payload.len() + 4);
+        let framed = read_msg(&mut &buf[..]).expect("framed decode");
+        assert_eq!(&framed, msg);
+    }
+
+    #[test]
+    fn every_message_roundtrips() {
+        let msgs = vec![
+            Msg::Hello {
+                magic: MAGIC,
+                version: VERSION,
+                preset: "mlp".into(),
+                kernel: "vectorized".into(),
+            },
+            Msg::HelloOk,
+            Msg::Err { reason: "no".into() },
+            Msg::SplitReq {
+                cut: 2,
+                want_grad: true,
+                labels: vec![0, 9, 3],
+                top_params: vec![vec![1.0, -2.5], vec![], vec![f32::MIN_POSITIVE]],
+                acts: vec![0.25; 7], // deliberately not a multiple of 8
+            },
+            Msg::SplitResp {
+                loss_sum: 12.75,
+                correct: 3,
+                dcut: vec![-1.0; 13],
+                g_top: vec![],
+            },
+            Msg::FoldBegin,
+            Msg::FoldAdd { weight: 0.125, params: vec![vec![3.0; 5]] },
+            Msg::FoldOk,
+            Msg::FoldFinish,
+            Msg::FoldResult { params: Some(vec![vec![], vec![1.0]]) },
+            Msg::FoldResult { params: None },
+            Msg::Shutdown,
+        ];
+        for msg in &msgs {
+            roundtrip(msg);
+        }
+    }
+
+    #[test]
+    fn awkward_tensor_sizes_roundtrip_exactly() {
+        // Empty tensors, 1-element, non-multiple-of-8 lengths, and a
+        // large frame; bit patterns (incl. -0.0, inf, NaN payloads via
+        // bits) must survive the LE round trip untouched.
+        for n in [0usize, 1, 7, 9, 63, 100_003] {
+            let t: Vec<f32> = (0..n).map(|i| f32::from_bits(0x3f00_0000 ^ i as u32)).collect();
+            let msg = Msg::SplitResp { loss_sum: -0.0, correct: u64::MAX, dcut: t, g_top: vec![-0.0] };
+            let back = Msg::decode(&msg.encode()).unwrap();
+            let (Msg::SplitResp { dcut: a, loss_sum: ls, .. }, Msg::SplitResp { dcut: b, .. }) =
+                (&msg, &back)
+            else {
+                panic!("variant changed");
+            };
+            assert_eq!(ls.to_bits(), (-0.0f64).to_bits());
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_frames_and_payloads_are_rejected() {
+        let msg = Msg::FoldAdd { weight: 1.0, params: vec![vec![1.0, 2.0, 3.0]] };
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &msg).unwrap();
+        // Cutting the stream anywhere before the end must error, never
+        // panic and never yield a message.
+        for k in 0..buf.len() {
+            let r = read_msg(&mut &buf[..k]);
+            match r {
+                Err(FrameError::Io(e)) => {
+                    assert_eq!(e.kind(), std::io::ErrorKind::UnexpectedEof, "cut at {k}")
+                }
+                Err(FrameError::Protocol(_)) => panic!("cut at {k}: truncation is an I/O error"),
+                Ok(m) => panic!("cut at {k} decoded {}", m.name()),
+            }
+        }
+        // Payload-level truncation (a length that overruns the frame) is
+        // a protocol error and must not allocate the declared size.
+        let mut payload = msg.encode();
+        payload.truncate(payload.len() - 2);
+        assert!(Msg::decode(&payload).is_err());
+        let huge = [TAG_SPLIT_RESP].iter().copied()
+            .chain(0u64.to_le_bytes())
+            .chain(0u64.to_le_bytes())
+            .chain(u32::MAX.to_le_bytes()) // dcut claims 4 billion floats
+            .collect::<Vec<u8>>();
+        assert!(Msg::decode(&huge).is_err());
+    }
+
+    #[test]
+    fn oversized_zero_and_trailing_frames_are_rejected() {
+        // Length prefix over the cap: rejected before allocation.
+        let mut buf = ((MAX_FRAME + 1) as u32).to_le_bytes().to_vec();
+        buf.extend_from_slice(&[0u8; 16]);
+        assert!(matches!(read_msg(&mut &buf[..]), Err(FrameError::Protocol(_))));
+        // Zero-length frame: protocol error, not EOF.
+        let zero = 0u32.to_le_bytes();
+        assert!(matches!(read_msg(&mut &zero[..]), Err(FrameError::Protocol(_))));
+        // Trailing bytes after a complete message: rejected.
+        let mut payload = Msg::HelloOk.encode();
+        payload.push(0);
+        assert!(Msg::decode(&payload).is_err());
+        // Unknown tag: rejected.
+        assert!(Msg::decode(&[0xEE]).is_err());
+        // Bad bool byte: rejected.
+        let mut req = Msg::SplitReq {
+            cut: 0,
+            want_grad: false,
+            labels: vec![],
+            top_params: vec![],
+            acts: vec![],
+        }
+        .encode();
+        req[5] = 7; // the want_grad flag byte
+        assert!(Msg::decode(&req).is_err());
+    }
+}

@@ -12,6 +12,9 @@
 //!   same presets as a device/gateway pair cut at any spec-layer boundary
 //!   — the paper's DNN partition executed for real, byte-identical to the
 //!   fused engine at every cut point.
+//! * Wire-level split: [`RemoteBackend`] (`remote`) drives the same split
+//!   over a TCP connection to a `net::serve` gateway service, with the
+//!   in-process [`PartitionedBackend`] as its byte-parity oracle.
 //! * Feature `pjrt`: `Engine` loads the AOT HLO-text artifacts produced
 //!   by `make artifacts` and executes them on the PJRT CPU client (Python
 //!   is never on this path — artifacts compile once at `Engine::load`).
@@ -23,8 +26,10 @@ pub mod backend;
 pub mod engine;
 pub mod meta;
 pub mod native;
+pub mod remote;
 
 pub use backend::{make_backend, make_backend_kernel, Backend, Params};
+pub use remote::RemoteBackend;
 #[cfg(feature = "pjrt")]
 pub use engine::Engine;
 pub use meta::ModelMeta;

@@ -168,6 +168,67 @@ where
     (loss_sum, correct, grad)
 }
 
+/// [`run_blocked`] with a per-sample output sink: `per_sample(s, g, out)`
+/// additionally fills `out` — the sample's `out_stride`-wide slice of
+/// `out` (the gateway uses this to collect per-sample cut gradients ⇣
+/// for the wire). The sink slices are disjoint per-block partitions
+/// zipped into the same rayon fan-out, so this stays safe Rust and the
+/// loss/gradient arithmetic is EXACTLY `run_blocked`'s: same block
+/// boundaries, same sample order within a block, same coordinate-wise
+/// block-order reduction. Gradients are always requested; with
+/// `param_total == 0` (a head-only gateway at the deepest cut) the
+/// returned gradient is empty, mirroring `run_blocked`'s no-grad branch.
+pub(crate) fn run_blocked_sink<F>(
+    b: usize,
+    block: usize,
+    param_total: usize,
+    out_stride: usize,
+    out: &mut [f32],
+    per_sample: F,
+) -> (f64, usize, Vec<f32>)
+where
+    F: Fn(usize, Option<&mut [f32]>, &mut [f32]) -> (f64, bool) + Sync,
+{
+    debug_assert!(out_stride > 0);
+    debug_assert_eq!(out.len(), b * out_stride);
+    let nblocks = b.div_ceil(block);
+    let mut results: Vec<(f64, bool)> = vec![(0.0, false); b];
+    let grad = if param_total > 0 {
+        let mut block_gs = vec![0.0f32; nblocks * param_total];
+        results
+            .par_chunks_mut(block)
+            .zip(block_gs.par_chunks_mut(param_total))
+            .zip(out.par_chunks_mut(block * out_stride))
+            .enumerate()
+            .for_each(|(bi, ((chunk, g), o))| {
+                for (k, slot) in chunk.iter_mut().enumerate() {
+                    let sink = &mut o[k * out_stride..(k + 1) * out_stride];
+                    *slot = per_sample(bi * block + k, Some(&mut *g), sink);
+                }
+            });
+        reduce_blocks(&block_gs, nblocks, param_total)
+    } else {
+        results
+            .par_chunks_mut(block)
+            .zip(out.par_chunks_mut(block * out_stride))
+            .enumerate()
+            .for_each(|(bi, (chunk, o))| {
+                for (k, slot) in chunk.iter_mut().enumerate() {
+                    let sink = &mut o[k * out_stride..(k + 1) * out_stride];
+                    *slot = per_sample(bi * block + k, None, sink);
+                }
+            });
+        Vec::new()
+    };
+    let mut loss_sum = 0.0f64;
+    let mut correct = 0usize;
+    for &(l, ok) in &results {
+        loss_sum += l;
+        correct += ok as usize;
+    }
+    (loss_sum, correct, grad)
+}
+
 /// Coordinate-wise ordered reduction of the per-block gradient buffers:
 /// each coordinate sums its block contributions in block order, fanned
 /// out over `GRAD_CHUNK`-wide coordinate chunks — chunk boundaries are

@@ -28,6 +28,7 @@
 //! communication terms observable instead of assumed.
 
 use anyhow::{bail, Result};
+use rayon::prelude::*;
 
 use crate::dnn::ModelSpec;
 use crate::rng::Rng;
@@ -244,6 +245,180 @@ impl PartitionedBackend {
                 )
             },
         )
+    }
+
+    // ------------------------------------------------------------------
+    // Wire halves (`net::serve` / `runtime::remote`): the SAME device and
+    // gateway graphs exposed as standalone batch operations so the two
+    // halves can run in different processes. The in-process methods above
+    // stay untouched — they are THE byte-parity oracle the wire path is
+    // pinned against (`rust/tests/wire.rs`).
+    // ------------------------------------------------------------------
+
+    /// Op count of the device (bottom) half — zero at cut 0, where no cut
+    /// gradient flows back (matching `split_sample`'s `want_dcut`).
+    pub(crate) fn device_num_ops(&self) -> usize {
+        self.device.num_ops()
+    }
+
+    /// Device half, forward only: fill `out` with the batch's smashed
+    /// activations (`b × cut_activation_elems`, sample-major). Pure
+    /// per-sample computation, so the rayon fan-out order is irrelevant.
+    pub(crate) fn device_forward_batch(&self, bottom: &[Vec<f32>], x: &[f32], out: &mut [f32]) {
+        let in_len = self.device.in_len();
+        let n_cut = self.device.out_len();
+        debug_assert_eq!(x.len() * n_cut, out.len() * in_len);
+        out.par_chunks_mut(n_cut).zip(x.par_chunks(in_len)).for_each(|(o, xs)| {
+            graph::with_scratch(|s| {
+                let dev_acts = self.device.forward_arena_into(bottom, xs, &mut s.acts);
+                o.copy_from_slice(self.device.output_slice(xs, dev_acts));
+            })
+        });
+    }
+
+    /// The gateway portion of [`Self::split_sample`], verbatim arithmetic:
+    /// top forward + loss head, optionally top backward with the cut
+    /// gradient staged into `dcut_out` instead of flowing straight into a
+    /// co-located device half.
+    fn gateway_sample(
+        &self,
+        top: &[Vec<f32>],
+        cut_act: &[f32],
+        label: usize,
+        grad_scale: Option<f32>,
+        g_top: Option<&mut [f32]>,
+        dcut_out: Option<&mut [f32]>,
+    ) -> (f64, bool) {
+        graph::with_scratch(|s| {
+            let GraphScratch { acts2, dy, dx, dz, .. } = s;
+            let gw_acts = self.gateway.forward_arena_into(top, cut_act, acts2);
+            let logits = self.gateway.output_slice(cut_act, gw_acts);
+            let nc = self.meta.num_classes;
+            kernels::ensure(dz, nc);
+            let dz = &mut dz[..nc];
+            let (loss, ok) = self.gateway.head_loss_grad(logits, label, grad_scale, dz);
+            if g_top.is_none() && dcut_out.is_none() {
+                return (loss, ok);
+            }
+            // A head-only gateway (deepest cut) owns no parameters; give
+            // the backward pass an empty accumulator in that case.
+            let mut no_params: [f32; 0] = [];
+            let g_top = g_top.unwrap_or(&mut no_params);
+            let want_dcut = dcut_out.is_some();
+            let has_dcut =
+                self.gateway.backward_arena(top, cut_act, gw_acts, dz, g_top, dy, dx, want_dcut);
+            if let Some(out) = dcut_out {
+                debug_assert!(has_dcut);
+                out.copy_from_slice(&dx[..out.len()]);
+            }
+            (loss, ok)
+        })
+    }
+
+    /// Serve one wire split request: loss/accuracy over the uploaded
+    /// smashed activations and, when `want_grad`, the gateway-half
+    /// gradient plus the per-sample cut gradients ⇣ to ship back. Runs the
+    /// SAME blocked executors as [`Self::split_fwd_bwd`] with the same
+    /// block size and gateway-computed `grad_scale`, so the loss fold and
+    /// `g_top` are bit-identical to the in-process step's.
+    ///
+    /// Returns `(loss_sum, correct, g_top, dcut)`; `dcut` is empty when
+    /// the device half has no ops (cut 0) or no gradient was requested.
+    pub(crate) fn gateway_split_batch(
+        &self,
+        top: &Params,
+        acts: &[f32],
+        y: &[i32],
+        want_grad: bool,
+    ) -> Result<(f64, usize, Vec<f32>, Vec<f32>)> {
+        let b = y.len();
+        let n_cut = self.device.out_len();
+        if b == 0 {
+            bail!("empty split batch");
+        }
+        if acts.len() != b * n_cut {
+            bail!(
+                "smashed activations: {} elements != batch {b} x cut width {n_cut}",
+                acts.len()
+            );
+        }
+        let shapes = &self.meta.param_shapes[self.bottom_tensors..];
+        if top.len() != shapes.len() {
+            bail!("expected {} gateway param tensors, got {}", shapes.len(), top.len());
+        }
+        for (i, (buf, shape)) in top.iter().zip(shapes).enumerate() {
+            let want: usize = shape.iter().product();
+            if buf.len() != want {
+                bail!("gateway param tensor {i}: {} elements, expected {want}", buf.len());
+            }
+        }
+        for &l in y {
+            if l < 0 || l as usize >= self.meta.num_classes {
+                bail!("label {l} outside 0..{}", self.meta.num_classes);
+            }
+        }
+        let grad_scale = want_grad.then_some(1.0f32 / b as f32);
+        let block = self.device.sample_block();
+        let act = |s: usize| &acts[s * n_cut..(s + 1) * n_cut];
+        if !want_grad {
+            let (loss_sum, correct, _) = graph::run_blocked(b, block, 0, false, |s, _| {
+                self.gateway_sample(top, act(s), y[s] as usize, grad_scale, None, None)
+            });
+            return Ok((loss_sum, correct, Vec::new(), Vec::new()));
+        }
+        let gw_total = self.gateway.param_total();
+        if self.device.num_ops() == 0 {
+            // Cut 0: nothing below the cut wants a gradient.
+            let (loss_sum, correct, grad) = graph::run_blocked(b, block, gw_total, true, |s, g| {
+                self.gateway_sample(top, act(s), y[s] as usize, grad_scale, g, None)
+            });
+            return Ok((loss_sum, correct, grad.expect("gradient requested"), Vec::new()));
+        }
+        let mut dcut = vec![0.0f32; b * n_cut];
+        let (loss_sum, correct, g_top) =
+            graph::run_blocked_sink(b, block, gw_total, n_cut, &mut dcut, |s, g, o| {
+                self.gateway_sample(top, act(s), y[s] as usize, grad_scale, g, Some(o))
+            });
+        Ok((loss_sum, correct, g_top, dcut))
+    }
+
+    /// Device half, backward: fold the gateway's per-sample cut gradients
+    /// into the device-half flat gradient through the same blocked
+    /// executor — bit-identical to the device-half coordinates of the
+    /// in-process step's fused gradient.
+    pub(crate) fn device_backward_batch(
+        &self,
+        bottom: &[Vec<f32>],
+        x: &[f32],
+        dcut: &[f32],
+        b: usize,
+    ) -> Vec<f32> {
+        let in_len = self.device.in_len();
+        let n_cut = self.device.out_len();
+        debug_assert_eq!(x.len(), b * in_len);
+        debug_assert_eq!(dcut.len(), b * n_cut);
+        let (_, _, grad) =
+            graph::run_blocked(b, self.device.sample_block(), self.device.param_total(), true, |s, g| {
+                if let Some(g) = g {
+                    graph::with_scratch(|sc| {
+                        let GraphScratch { acts, dy, dx, .. } = sc;
+                        let xs = &x[s * in_len..(s + 1) * in_len];
+                        let dev_acts = self.device.forward_arena_into(bottom, xs, acts);
+                        self.device.backward_arena(
+                            bottom,
+                            xs,
+                            dev_acts,
+                            &dcut[s * n_cut..(s + 1) * n_cut],
+                            g,
+                            dy,
+                            dx,
+                            false,
+                        );
+                    });
+                }
+                (0.0, false)
+            });
+        grad.expect("gradient requested")
     }
 }
 

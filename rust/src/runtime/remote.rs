@@ -1,0 +1,167 @@
+//! [`RemoteBackend`]: the device side of wire-level split execution.
+//!
+//! Implements the existing [`Backend`] trait over a [`ConnPool`] to a
+//! gateway service (`net::serve`), so the orchestrator and `Session`
+//! layers are untouched — a device's K local steps dispatch through
+//! `Box<dyn Backend>`/`&dyn Backend` exactly as before, but each step's
+//! gateway half now crosses a real network boundary:
+//!
+//! ```text
+//!   device (this process)                    gateway (net::serve)
+//!   ─────────────────────                    ────────────────────
+//!   bottom forward ── SplitReq{acts ⇡} ────▶ top fwd + head + bwd
+//!   bottom backward ◀─ SplitResp{dcut ⇣, g_top}
+//!   SGD on the fused gradient
+//! ```
+//!
+//! Every method wraps the in-process [`PartitionedBackend`] for the
+//! device half, metadata, input validation, and `init_params` — w(0)
+//! never crosses the wire, both ends derive it from the same
+//! `Rng::stream` draws. The numerics are bit-identical to the
+//! in-process split step (pinned by `rust/tests/wire.rs`): the gateway
+//! runs the same blocked executors with the same block size, and the
+//! device folds the returned per-sample cut gradients through the same
+//! ordered reduction the fused gradient uses.
+//!
+//! I/O failures surface as [`PeerLost`]-marked errors from the
+//! transport layer; the round engine maps them onto `FaultPlan` dropout
+//! (see `net::transport` module docs).
+//!
+//! [`PeerLost`]: crate::net::transport::PeerLost
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::net::transport::ConnPool;
+use crate::net::wire::Msg;
+
+use super::backend::{Backend, Params};
+use super::meta::ModelMeta;
+use super::native::{
+    apply_sgd, check_batch_against, check_params_against, check_samples_against,
+    PartitionedBackend,
+};
+
+/// A device/gateway split where the gateway half lives behind a wire.
+pub struct RemoteBackend {
+    /// The in-process split at the same cut: device-half math + ABI
+    /// metadata. Its gateway half is only used for `init_params`.
+    local: PartitionedBackend,
+    pool: Arc<ConnPool>,
+}
+
+impl RemoteBackend {
+    pub fn new(local: PartitionedBackend, pool: Arc<ConnPool>) -> Self {
+        RemoteBackend { local, pool }
+    }
+
+    /// The partition point this backend executes.
+    pub fn cut(&self) -> usize {
+        self.local.cut()
+    }
+
+    /// One split exchange: bottom forward locally, ship the smashed
+    /// activations, receive loss/accuracy (+ gradients when requested),
+    /// finish backward locally. Returns `(loss_sum, correct, grad)` with
+    /// `grad` in the fused ABI (device coordinates then gateway's).
+    fn split_round_trip(
+        &self,
+        params: &Params,
+        x: &[f32],
+        y: &[i32],
+        want_grad: bool,
+    ) -> Result<(f64, usize, Option<Vec<f32>>)> {
+        let b = y.len();
+        let n_cut = self.local.cut_activation_elems();
+        let (bottom, top) = params.split_at(self.local.device_tensor_count());
+        let mut acts = vec![0.0f32; b * n_cut];
+        self.local.device_forward_batch(bottom, x, &mut acts);
+        let req = Msg::SplitReq {
+            cut: self.local.cut() as u32,
+            want_grad,
+            labels: y.to_vec(),
+            top_params: top.to_vec(),
+            acts,
+        };
+        let resp = self.pool.with_conn(|c| c.request(&req))?;
+        let Msg::SplitResp { loss_sum, correct, dcut, g_top } = resp else {
+            bail!("unexpected {} in reply to SplitReq", resp.name())
+        };
+        if !want_grad {
+            if !dcut.is_empty() || !g_top.is_empty() {
+                bail!("unsolicited gradients in SplitResp");
+            }
+            return Ok((loss_sum, correct as usize, None));
+        }
+        let gw_total = self.local.meta().param_total - self.local.device_param_total();
+        if g_top.len() != gw_total {
+            bail!("gateway gradient {} != expected {gw_total}", g_top.len());
+        }
+        let mut g = if self.local.device_num_ops() > 0 {
+            if dcut.len() != b * n_cut {
+                bail!("cut gradient {} != batch {b} x cut width {n_cut}", dcut.len());
+            }
+            self.local.device_backward_batch(bottom, x, &dcut, b)
+        } else {
+            // Cut 0: the device half is empty; its (zero-length) gradient
+            // block still leads the fused ABI.
+            if !dcut.is_empty() {
+                bail!("unsolicited cut gradient for an op-less device half");
+            }
+            vec![0.0f32; self.local.device_param_total()]
+        };
+        g.extend_from_slice(&g_top);
+        Ok((loss_sum, correct as usize, Some(g)))
+    }
+}
+
+impl Backend for RemoteBackend {
+    fn meta(&self) -> &ModelMeta {
+        self.local.meta()
+    }
+
+    /// Deterministic and LOCAL: both ends derive w(0) from the preset's
+    /// seed, so initial parameters never cross the wire.
+    fn init_params(&self) -> Result<Params> {
+        self.local.init_params()
+    }
+
+    fn train_step(&self, params: &Params, x: &[f32], y: &[i32], lr: f32) -> Result<(Params, f32)> {
+        let meta = self.local.meta();
+        check_params_against(meta, params)?;
+        check_batch_against(meta, meta.sample_dim(), x, y, meta.train_batch)?;
+        let (loss_sum, _, grad) = self.split_round_trip(params, x, y, true)?;
+        let g = grad.expect("gradient requested");
+        Ok((apply_sgd(params, &g, lr), (loss_sum / y.len() as f64) as f32))
+    }
+
+    fn eval_batch(&self, params: &Params, x: &[f32], y: &[i32]) -> Result<(f64, f64)> {
+        let meta = self.local.meta();
+        check_params_against(meta, params)?;
+        check_batch_against(meta, meta.sample_dim(), x, y, meta.eval_batch)?;
+        let (loss_sum, correct, _) = self.split_round_trip(params, x, y, false)?;
+        Ok((loss_sum, correct as f64))
+    }
+
+    fn eval_partial_batch(
+        &self,
+        params: &Params,
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<Option<(f64, f64)>> {
+        let meta = self.local.meta();
+        check_params_against(meta, params)?;
+        check_samples_against(meta, meta.sample_dim(), x, y)?;
+        let (loss_sum, correct, _) = self.split_round_trip(params, x, y, false)?;
+        Ok(Some((loss_sum, correct as f64)))
+    }
+
+    fn grad(&self, params: &Params, x: &[f32], y: &[i32]) -> Result<Vec<f32>> {
+        let meta = self.local.meta();
+        check_params_against(meta, params)?;
+        check_batch_against(meta, meta.sample_dim(), x, y, meta.train_batch)?;
+        let (_, _, grad) = self.split_round_trip(params, x, y, true)?;
+        Ok(grad.expect("gradient requested"))
+    }
+}

@@ -1,0 +1,373 @@
+//! Wire-level split execution suite: a loopback tcp run through the
+//! gateway service must be BYTE-identical to the in-process split
+//! runtime — which partition.rs already pins against the fused engine —
+//! at every legal cut, across backend calls and whole multi-round FL
+//! runs alike. Plus the protocol edges: handshake skew is refused with
+//! a hard error (never dropout), malformed/truncated frames are
+//! rejected, and a peer that dies mid-round degrades onto the exact
+//! `FaultPlan` dropout semantics instead of aborting the run.
+
+mod common;
+
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use common::serialize;
+use iiot_fl::config::{SimConfig, Transport};
+use iiot_fl::dnn::models;
+use iiot_fl::fl::{SchedulerSpec, Session};
+use iiot_fl::net::serve::GatewayServer;
+use iiot_fl::net::transport::{is_peer_lost, Conn, ConnPool};
+use iiot_fl::net::wire::{self, FrameError, Msg, MAGIC, VERSION};
+use iiot_fl::rng::Rng;
+use iiot_fl::runtime::{Backend, KernelPath, Params, PartitionedBackend, RemoteBackend};
+
+fn batch(seed: u64, n: usize, dim: usize) -> (Vec<f32>, Vec<i32>) {
+    let mut rng = Rng::new(seed);
+    let x: Vec<f32> = (0..n * dim).map(|_| rng.normal() as f32 * 0.5).collect();
+    let y: Vec<i32> = (0..n).map(|_| rng.below(10) as i32).collect();
+    (x, y)
+}
+
+fn assert_bits_eq(a: &Params, b: &Params, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: tensor count");
+    for (t, (ta, tb)) in a.iter().zip(b).enumerate() {
+        assert_eq!(ta.len(), tb.len(), "{what}: tensor {t} len");
+        for (i, (va, vb)) in ta.iter().zip(tb).enumerate() {
+            assert_eq!(va.to_bits(), vb.to_bits(), "{what}: tensor {t} idx {i}: {va} vs {vb}");
+        }
+    }
+}
+
+/// The partition.rs base config, shared by every whole-run test here:
+/// split execution on, scheduler planning the net it trains.
+fn split_cfg() -> SimConfig {
+    let mut cfg = SimConfig::default();
+    cfg.exec_model = "mlp".into();
+    cfg.cost_model = "mlp".into();
+    cfg.execute_partition = true;
+    cfg.test_size = 512;
+    cfg.dataset_max = 500;
+    cfg
+}
+
+// ------------------------------------------------------------ handshake
+
+/// A client speaking a future protocol version is refused with an `Err`
+/// frame that names the version — never silently served, never treated
+/// as peer loss.
+#[test]
+fn version_skew_is_refused_with_a_named_err_frame() {
+    let handle =
+        GatewayServer::new("mlp", KernelPath::default()).unwrap().spawn("127.0.0.1:0").unwrap();
+    let stream = TcpStream::connect(handle.addr()).unwrap();
+    wire::write_msg(
+        &mut (&stream),
+        &Msg::Hello {
+            magic: MAGIC,
+            version: VERSION + 1,
+            preset: "mlp".into(),
+            kernel: KernelPath::default().as_str().into(),
+        },
+    )
+    .unwrap();
+    match wire::read_msg(&mut (&stream)).unwrap() {
+        Msg::Err { reason } => {
+            assert!(reason.contains("version"), "reason must name the skew: {reason}");
+        }
+        other => panic!("expected Err frame, got {}", other.name()),
+    }
+}
+
+/// Bad magic: refused at the door, reason names the magic.
+#[test]
+fn bad_magic_is_refused() {
+    let handle =
+        GatewayServer::new("mlp", KernelPath::default()).unwrap().spawn("127.0.0.1:0").unwrap();
+    let stream = TcpStream::connect(handle.addr()).unwrap();
+    wire::write_msg(
+        &mut (&stream),
+        &Msg::Hello {
+            magic: 0xDEAD_BEEF,
+            version: VERSION,
+            preset: "mlp".into(),
+            kernel: KernelPath::default().as_str().into(),
+        },
+    )
+    .unwrap();
+    match wire::read_msg(&mut (&stream)).unwrap() {
+        Msg::Err { reason } => assert!(reason.contains("magic"), "{reason}"),
+        other => panic!("expected Err frame, got {}", other.name()),
+    }
+}
+
+/// Model/kernel skew through the real dialer: a REACHABLE gateway
+/// refusing the handshake is a plain error — it must NOT classify as
+/// peer loss, or a misconfigured fleet would masquerade as 100% dropout.
+#[test]
+fn preset_and_kernel_skew_abort_instead_of_degrading_to_dropout() {
+    let handle =
+        GatewayServer::new("mlp", KernelPath::default()).unwrap().spawn("127.0.0.1:0").unwrap();
+    let addr = handle.addr();
+
+    let err = Conn::dial(&addr, 2000, "cnn", KernelPath::default()).unwrap_err();
+    assert!(!is_peer_lost(&err), "preset skew must not be peer loss: {err:#}");
+    assert!(format!("{err:#}").contains("preset"), "{err:#}");
+
+    let err = Conn::dial(&addr, 2000, "mlp", KernelPath::Scalar).unwrap_err();
+    assert!(!is_peer_lost(&err), "kernel skew must not be peer loss: {err:#}");
+    assert!(format!("{err:#}").contains("kernel"), "{err:#}");
+
+    // And the matching handshake still succeeds afterwards — refused
+    // connections never poison the service.
+    Conn::dial(&addr, 2000, "mlp", KernelPath::default()).unwrap();
+}
+
+// ---------------------------------------------------------------- codec
+
+/// Frame-layer rejection: truncation at any byte is an I/O-class error
+/// (the dropout path), while a length prefix past `MAX_FRAME` — or zero
+/// — is a protocol violation (the abort path). The distinction is
+/// load-bearing: an oversized frame must never silently become dropout.
+#[test]
+fn truncated_frames_are_io_and_oversized_prefixes_are_protocol() {
+    let msg = Msg::SplitResp {
+        loss_sum: 1.25,
+        correct: 3,
+        dcut: vec![0.5, -0.0, f32::MIN_POSITIVE],
+        g_top: vec![],
+    };
+    let mut buf = Vec::new();
+    wire::write_msg(&mut buf, &msg).unwrap();
+    for cut in 0..buf.len() {
+        match wire::read_msg(&mut &buf[..cut]) {
+            Err(FrameError::Io(_)) => {}
+            other => panic!("truncation at {cut}: expected Io, got {other:?}"),
+        }
+    }
+
+    let oversized = (wire::MAX_FRAME as u32 + 1).to_le_bytes();
+    assert!(matches!(wire::read_msg(&mut &oversized[..]), Err(FrameError::Protocol(_))));
+    let zero = 0u32.to_le_bytes();
+    assert!(matches!(wire::read_msg(&mut &zero[..]), Err(FrameError::Protocol(_))));
+}
+
+/// Awkward payload shapes survive the codec exactly: empty tensors,
+/// lengths nowhere near a multiple of 8, sign-of-zero bit patterns, and
+/// a `FoldResult` carrying `None`.
+#[test]
+fn awkward_shapes_roundtrip_bit_exactly() {
+    let msgs = vec![
+        Msg::SplitReq {
+            cut: 0,
+            want_grad: false,
+            labels: vec![],
+            top_params: vec![vec![], vec![-0.0, 0.0, f32::NAN]],
+            acts: (0..13).map(|i| i as f32 * 0.1).collect(),
+        },
+        Msg::FoldAdd { weight: 0.0, params: vec![vec![1.0; 7], vec![], vec![-0.0]] },
+        Msg::FoldResult { params: None },
+        Msg::FoldResult { params: Some(vec![vec![]]) },
+    ];
+    for msg in msgs {
+        let mut buf = Vec::new();
+        wire::write_msg(&mut buf, &msg).unwrap();
+        let back = wire::read_msg(&mut &buf[..]).unwrap();
+        // Compare re-encoded bytes: NaN breaks PartialEq but not bits.
+        assert_eq!(back.encode(), msg.encode(), "{} changed bytes", msg.name());
+    }
+}
+
+// ----------------------------------------------------- per-cut parity
+
+/// THE backend-level acceptance test: at EVERY legal mlp cut, the
+/// remote backend driving a loopback gateway reproduces the in-process
+/// split backend bit for bit — SGD trajectories, ragged-test-set eval
+/// (full batches + a trailing partial batch over the wire), and the
+/// flat minibatch gradient. partition.rs pins the in-process split to
+/// the fused engine, so transitivity pins the wire to the fused engine.
+#[test]
+fn remote_backend_matches_inproc_split_at_every_mlp_cut() {
+    let handle =
+        GatewayServer::new("mlp", KernelPath::default()).unwrap().spawn("127.0.0.1:0").unwrap();
+    let pool =
+        Arc::new(ConnPool::new(&handle.addr(), 5000, "mlp", KernelPath::default()));
+    let depth = models::by_name("mlp").unwrap().depth();
+
+    for cut in 0..=depth {
+        let local = PartitionedBackend::preset("mlp", cut).unwrap();
+        let remote =
+            RemoteBackend::new(PartitionedBackend::preset("mlp", cut).unwrap(), pool.clone());
+        assert_eq!(remote.cut(), cut);
+        let meta = local.meta().clone();
+        let dim = meta.sample_dim();
+
+        let mut wl = local.init_params().unwrap();
+        let mut wr = remote.init_params().unwrap();
+        assert_bits_eq(&wr, &wl, &format!("cut {cut} init"));
+        for step in 0..2usize {
+            let (x, y) = batch(0x71e5 ^ ((step as u64) << 8), meta.train_batch, dim);
+            let (nl, ll) = local.train_step(&wl, &x, &y, 0.05).unwrap();
+            let (nr, lr) = remote.train_step(&wr, &x, &y, 0.05).unwrap();
+            assert_eq!(lr.to_bits(), ll.to_bits(), "cut {cut} step {step} loss");
+            assert_bits_eq(&nr, &nl, &format!("cut {cut} step {step} params"));
+            wl = nl;
+            wr = nr;
+        }
+
+        // 300 samples: full eval batches plus a trailing partial batch.
+        let (xe, ye) = batch(0xe7a1, 300, dim);
+        let (el, ea) = local.eval_full(&wl, &xe, &ye).unwrap();
+        let (rl, ra) = remote.eval_full(&wr, &xe, &ye).unwrap();
+        assert_eq!(rl.to_bits(), el.to_bits(), "cut {cut} eval loss");
+        assert_eq!(ra.to_bits(), ea.to_bits(), "cut {cut} eval acc");
+
+        let (xg, yg) = batch(0x96ad, meta.train_batch, dim);
+        let gl = local.grad(&wl, &xg, &yg).unwrap();
+        let gr = remote.grad(&wr, &xg, &yg).unwrap();
+        assert_eq!(gl.len(), gr.len());
+        for (i, (a, b)) in gl.iter().zip(&gr).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "cut {cut} grad[{i}]");
+        }
+    }
+}
+
+/// cnn spot-check at the two structurally extreme cuts: the deepest cut
+/// (head-only gateway — zero gateway parameters, the `g_top = []` path)
+/// and a mid cut with conv layers on both sides.
+#[test]
+fn remote_backend_matches_inproc_split_on_cnn_extreme_cuts() {
+    let handle =
+        GatewayServer::new("cnn", KernelPath::default()).unwrap().spawn("127.0.0.1:0").unwrap();
+    let pool =
+        Arc::new(ConnPool::new(&handle.addr(), 10_000, "cnn", KernelPath::default()));
+    let depth = models::by_name("cnn").unwrap().depth();
+
+    for cut in [depth / 2, depth] {
+        let local = PartitionedBackend::preset("cnn", cut).unwrap();
+        let remote =
+            RemoteBackend::new(PartitionedBackend::preset("cnn", cut).unwrap(), pool.clone());
+        let meta = local.meta().clone();
+        let dim = meta.sample_dim();
+        let w = local.init_params().unwrap();
+
+        let (x, y) = batch(0xc4, meta.train_batch, dim);
+        let (nl, ll) = local.train_step(&w, &x, &y, 0.05).unwrap();
+        let (nr, lr) = remote.train_step(&w, &x, &y, 0.05).unwrap();
+        assert_eq!(lr.to_bits(), ll.to_bits(), "cnn cut {cut} loss");
+        assert_bits_eq(&nr, &nl, &format!("cnn cut {cut} params"));
+
+        let (xe, ye) = batch(0xe7, meta.eval_batch, dim);
+        let (el, ea) = local.eval_batch(&nl, &xe, &ye).unwrap();
+        let (rl, ra) = remote.eval_batch(&nr, &xe, &ye).unwrap();
+        assert_eq!(rl.to_bits(), el.to_bits(), "cnn cut {cut} eval loss");
+        assert_eq!(ra.to_bits(), ea.to_bits(), "cnn cut {cut} eval acc");
+    }
+}
+
+// --------------------------------------------------- whole-run parity
+
+/// THE system-level acceptance test: a full multi-round FL run over
+/// loopback tcp — split local steps through the gateway service AND the
+/// phase-5 FedAvg fold on the gateway's `WeightedAccum` — serializes
+/// byte-identically to the in-process run, under both a fixed-plan
+/// baseline and DDSRA's per-device per-round cuts.
+#[test]
+fn loopback_tcp_run_is_byte_identical_to_inproc() {
+    let handle =
+        GatewayServer::new("mlp", KernelPath::default()).unwrap().spawn("127.0.0.1:0").unwrap();
+    let addr = handle.addr();
+
+    let run = |spec: &SchedulerSpec, rounds: usize, tcp: bool| -> String {
+        let mut cfg = split_cfg();
+        cfg.rounds = rounds;
+        if tcp {
+            cfg.transport = Transport::Tcp;
+            cfg.gateway_addr = addr.clone();
+        }
+        let session = Session::builder(cfg).rounds(rounds).eval_every(rounds).build().unwrap();
+        let log = session.run(spec).unwrap();
+        assert!(log.records.iter().any(|r| r.train_loss.is_some()), "must train");
+        assert!(
+            log.records.iter().all(|r| r.faults.is_none()),
+            "a healthy loopback run must not record wire faults"
+        );
+        serialize(&log)
+    };
+
+    assert_eq!(
+        run(&SchedulerSpec::RoundRobin, 3, false),
+        run(&SchedulerSpec::RoundRobin, 3, true),
+        "round-robin tcp run diverged from inproc"
+    );
+    assert_eq!(
+        run(&SchedulerSpec::ddsra(), 2, false),
+        run(&SchedulerSpec::ddsra(), 2, true),
+        "DDSRA tcp run diverged from inproc"
+    );
+}
+
+// ------------------------------------------------------- fault mapping
+
+/// Mid-round peer death: the gateway severs connections after a fixed
+/// split-request budget; affected devices must land on the `FaultPlan`
+/// dropout path (recorded in `faults.dropped`, excluded from the fold)
+/// and the run must complete every round.
+#[test]
+fn mid_round_disconnect_degrades_to_dropout() {
+    let mut server = GatewayServer::new("mlp", KernelPath::default()).unwrap();
+    server.fail_splits_after(5);
+    let handle = server.spawn("127.0.0.1:0").unwrap();
+
+    let mut cfg = split_cfg();
+    cfg.transport = Transport::Tcp;
+    cfg.gateway_addr = handle.addr();
+    cfg.local_iters = 2;
+    cfg.rounds = 2;
+    let session = Session::builder(cfg).rounds(2).eval_every(2).build().unwrap();
+    let log = session.run(&SchedulerSpec::RoundRobin).unwrap();
+
+    assert_eq!(log.records.len(), 2, "the run must survive the disconnects");
+    let dropped: Vec<usize> = log
+        .records
+        .iter()
+        .filter_map(|r| r.faults.as_ref())
+        .flat_map(|f| f.dropped.iter().copied())
+        .collect();
+    assert!(!dropped.is_empty(), "severed devices must surface as dropout");
+    assert!(log.records.last().unwrap().test_acc.is_some(), "final eval must still run");
+}
+
+/// A gateway that is down from the start: every device's dial is
+/// refused, every device drops, every fold is empty — so the global
+/// model never changes and the final eval equals the init-parameter
+/// eval bit for bit. The run still completes.
+#[test]
+fn dead_gateway_drops_every_device_and_leaves_the_model_unchanged() {
+    // Bind an ephemeral port, then free it: a known-dead address.
+    let dead = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    };
+    let mut cfg = split_cfg();
+    cfg.transport = Transport::Tcp;
+    cfg.gateway_addr = dead;
+    cfg.wire_timeout_ms = 500;
+    cfg.rounds = 2;
+    let session = Session::builder(cfg).rounds(2).eval_every(2).build().unwrap();
+    let exp = session.experiment();
+    let init = exp.engine.init_params().unwrap();
+    let (init_loss, init_acc) =
+        exp.engine.eval_full(&init, &exp.test_x, &exp.test_y).unwrap();
+
+    let log = session.run(&SchedulerSpec::RoundRobin).unwrap();
+    assert_eq!(log.records.len(), 2, "the run must survive a dead gateway");
+    for r in &log.records {
+        assert!(r.train_loss.is_none(), "round {}: no device may train", r.round);
+        let f = r.faults.as_ref().expect("every round must record drops");
+        assert!(!f.dropped.is_empty(), "round {}: drops must be recorded", r.round);
+    }
+    let last = log.records.last().unwrap();
+    assert_eq!(last.test_loss.unwrap().to_bits(), init_loss.to_bits(), "model changed");
+    assert_eq!(last.test_acc.unwrap().to_bits(), init_acc.to_bits(), "model changed");
+}
